@@ -1,0 +1,52 @@
+//! Quickstart: load the AOT artifacts, start the serving engine, and run a
+//! handful of requests against the dense and DSA variants.
+//!
+//! ```bash
+//! make artifacts          # once: trains + AOT-compiles the models
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
+use dsa_serve::runtime::registry::Manifest;
+use dsa_serve::workload::{Workload, WorkloadConfig};
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let manifest = Manifest::open(&artifacts)?;
+    println!(
+        "manifest: task seq_len={} classes={} variants={:?} buckets={:?}",
+        manifest.task_seq_len, manifest.task_classes, manifest.variants, manifest.batch_buckets
+    );
+
+    // One engine per variant (each preloads its own executables).
+    for variant in ["dense", "dsa90"] {
+        let engine = Engine::start(
+            manifest.clone(),
+            EngineConfig {
+                default_variant: variant.to_string(),
+                policy: BatchPolicy::default(),
+                preload: true,
+            },
+        )?;
+        let mut wl = Workload::new(WorkloadConfig {
+            seq_len: engine.seq_len(),
+            seed: 42,
+            ..Default::default()
+        });
+        let mut correct = 0;
+        let n = 16;
+        for _ in 0..n {
+            let r = wl.next_request();
+            let resp = engine.infer(r.tokens, None)?;
+            if resp.pred as i32 == r.label {
+                correct += 1;
+            }
+        }
+        println!(
+            "[{variant}] {correct}/{n} correct; metrics:\n{}",
+            engine.metrics.report()
+        );
+    }
+    Ok(())
+}

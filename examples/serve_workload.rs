@@ -1,0 +1,138 @@
+//! End-to-end serving driver (the repository's E2E validation run, recorded
+//! in EXPERIMENTS.md): loads the trained model artifacts, serves an
+//! open-loop Poisson workload through the full stack — TCP server →
+//! dynamic batcher → PJRT executable — for every model variant, and
+//! reports accuracy, latency percentiles and throughput.
+//!
+//! ```bash
+//! cargo run --release --example serve_workload -- [artifacts] [requests] [rate]
+//! ```
+
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
+use dsa_serve::runtime::registry::Manifest;
+use dsa_serve::server;
+use dsa_serve::util::json::Json;
+use dsa_serve::util::stats::Summary;
+use dsa_serve::workload::{Arrival, Workload, WorkloadConfig};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let artifacts = args.first().cloned().unwrap_or_else(|| "artifacts".into());
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(120.0);
+
+    let manifest = Manifest::open(&artifacts)?;
+    let variants: Vec<String> = manifest.variants.clone();
+    println!(
+        "E2E serving: {} requests/variant, Poisson {:.0} req/s, seq_len={}",
+        n, rate, manifest.task_seq_len
+    );
+    println!(
+        "{:<8} {:>8} {:>9} {:>9} {:>9} {:>11} {:>9}",
+        "variant", "acc", "p50 ms", "p95 ms", "p99 ms", "thr req/s", "occup"
+    );
+
+    let mut rows = Vec::new();
+    for variant in &variants {
+        let engine = Arc::new(Engine::start(
+            manifest.clone(),
+            EngineConfig {
+                default_variant: variant.clone(),
+                policy: BatchPolicy::default(),
+                preload: true,
+            },
+        )?);
+
+        // Full-stack phase: run a real TCP round trip first to prove the
+        // wire protocol composes (a handful of requests).
+        let addr = "127.0.0.1:7793";
+        {
+            let srv_engine = engine.clone();
+            let addr2 = addr.to_string();
+            let _srv = std::thread::spawn(move || {
+                let _ = server::serve(srv_engine, &addr2);
+            });
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            let mut client = server::Client::connect(addr)?;
+            let mut wl = Workload::new(WorkloadConfig {
+                seq_len: manifest.task_seq_len,
+                seed: 7,
+                ..Default::default()
+            });
+            for _ in 0..3 {
+                let r = wl.next_request();
+                let resp = client.infer(&r.tokens, Some(variant))?;
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "tcp infer failed");
+            }
+            // Ask the server to stop so the next variant can rebind.
+            let _ = client.call(&Json::obj(vec![("op", Json::str("shutdown"))]));
+            // Unblock the accept loop.
+            let _ = std::net::TcpStream::connect(addr);
+        }
+
+        // Measurement phase: open-loop Poisson arrivals into the engine.
+        let mut wl = Workload::new(WorkloadConfig {
+            seq_len: manifest.task_seq_len,
+            rate_rps: rate,
+            arrival: Arrival::Poisson,
+            seed: 1234,
+        });
+        let trace = wl.trace(n);
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for r in trace {
+            std::thread::sleep(r.delay);
+            labels.push(r.label);
+            rxs.push(engine.submit(r.tokens, None)?);
+        }
+        let mut lat = Summary::new();
+        let mut correct = 0usize;
+        for (rx, label) in rxs.into_iter().zip(labels) {
+            let resp = rx.recv()?;
+            lat.add(resp.latency.as_secs_f64());
+            if resp.pred as i32 == label {
+                correct += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let occup = {
+            let j = engine.metrics.to_json();
+            j.get("mean_occupancy").and_then(|v| v.as_f64()).unwrap_or(0.0)
+        };
+        let acc = correct as f64 / n as f64;
+        let thr = n as f64 / wall;
+        println!(
+            "{:<8} {:>8.3} {:>9.2} {:>9.2} {:>9.2} {:>11.1} {:>9.2}",
+            variant,
+            acc,
+            lat.percentile(50.0) * 1e3,
+            lat.percentile(95.0) * 1e3,
+            lat.percentile(99.0) * 1e3,
+            thr,
+            occup
+        );
+        rows.push(Json::obj(vec![
+            ("variant", Json::str(variant.clone())),
+            ("accuracy", Json::num(acc)),
+            ("p50_ms", Json::num(lat.percentile(50.0) * 1e3)),
+            ("p95_ms", Json::num(lat.percentile(95.0) * 1e3)),
+            ("p99_ms", Json::num(lat.percentile(99.0) * 1e3)),
+            ("throughput_rps", Json::num(thr)),
+            ("mean_occupancy", Json::num(occup)),
+            ("requests", Json::num(n as f64)),
+            ("rate_rps", Json::num(rate)),
+        ]));
+    }
+
+    std::fs::create_dir_all("results")?;
+    let mut f = std::fs::File::create("results/e2e_serving.json")?;
+    writeln!(f, "{}", Json::Arr(rows).to_string())?;
+    println!("\nwrote results/e2e_serving.json");
+    Ok(())
+}

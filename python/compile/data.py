@@ -1,0 +1,161 @@
+"""Synthetic Long-Range-Arena-style tasks.
+
+The paper evaluates on LRA Text (byte-level IMDb, l=2000/4000), Retrieval
+(byte-level ACL-AAN, l=4000) and Image (flattened CIFAR-10, l=1024). Those
+datasets are not available in this sandbox, so we build synthetic tasks
+that preserve the *properties the paper's method depends on*:
+
+* long sequences with byte-level vocab (256),
+* labels decided by a small set of content-dependent "important" tokens at
+  input-dependent positions (this is exactly the dynamic sparsity DSA
+  predicts — a static local window cannot solve them),
+* the same three modalities: single-sequence classification, dual-sequence
+  retrieval, flattened-image classification.
+
+See DESIGN.md "substitutions" for the full rationale.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, NamedTuple
+
+import numpy as np
+
+
+class Task(NamedTuple):
+    name: str
+    seq_len: int
+    n_classes: int
+    dual: bool
+    vocab: int = 256
+
+
+def text_task(seq_len: int = 256) -> Task:
+    return Task("text", seq_len, 2, False)
+
+
+def retrieval_task(seq_len: int = 256) -> Task:
+    return Task("retrieval", seq_len, 2, True)
+
+
+def image_task(side: int = 32) -> Task:
+    return Task("image", side * side, 4, False)
+
+
+def make_task(name: str, seq_len: int) -> Task:
+    if name == "text":
+        return text_task(seq_len)
+    if name == "retrieval":
+        return retrieval_task(seq_len)
+    if name == "image":
+        side = int(round(seq_len**0.5))
+        return image_task(side)
+    raise ValueError(f"unknown task {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# text: needle-counting — the first byte is a query token; the label is
+# whether it recurs in the body more than a threshold number of times.
+# Important positions = the (input-dependent) needle occurrences.
+# ---------------------------------------------------------------------------
+
+
+def gen_text(rng: np.random.Generator, n: int, seq_len: int):
+    x = rng.integers(1, 255, size=(n, seq_len), dtype=np.int64)
+    y = rng.integers(0, 2, size=(n,), dtype=np.int64)
+    hi = max(8, seq_len // 16)  # positive: many needle recurrences
+    lo = max(2, hi // 4)  # negative: few — margin keeps the task learnable
+    for i in range(n):
+        needle = int(rng.integers(1, 255))
+        x[i, 0] = needle
+        # Scrub accidental occurrences, then plant a controlled count.
+        body = x[i, 1:]
+        body[body == needle] = (needle % 254) + 1 if needle != 255 else 1
+        count = (
+            int(rng.integers(hi, 2 * hi))
+            if y[i] == 1
+            else int(rng.integers(0, lo))
+        )
+        pos = rng.choice(seq_len - 1, size=count, replace=False)
+        body[pos] = needle
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# retrieval: each document carries an 8-byte motif at a random offset;
+# a pair matches iff the motifs are identical.
+# ---------------------------------------------------------------------------
+
+MOTIF_LEN = 8
+
+
+def gen_retrieval(rng: np.random.Generator, n: int, seq_len: int):
+    x = rng.integers(1, 255, size=(n, 2, seq_len), dtype=np.int64)
+    y = rng.integers(0, 2, size=(n,), dtype=np.int64)
+    for i in range(n):
+        m1 = rng.integers(1, 255, size=MOTIF_LEN)
+        if y[i] == 1:
+            m2 = m1.copy()
+        else:
+            m2 = rng.integers(1, 255, size=MOTIF_LEN)
+            if np.array_equal(m2, m1):
+                m2[0] = (m2[0] % 254) + 1
+        for doc, motif in ((0, m1), (1, m2)):
+            off = int(rng.integers(0, seq_len - MOTIF_LEN))
+            x[i, doc, off : off + MOTIF_LEN] = motif
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# image: grayscale shapes (rect outline, filled rect, ellipse, cross) with
+# noise, flattened to a pixel sequence. 4 classes.
+# ---------------------------------------------------------------------------
+
+
+def _draw_shape(rng: np.random.Generator, side: int, cls: int) -> np.ndarray:
+    img = rng.normal(32.0, 12.0, size=(side, side))
+    cx, cy = rng.integers(side // 4, 3 * side // 4, size=2)
+    r = int(rng.integers(side // 8, side // 4))
+    yy, xx = np.mgrid[0:side, 0:side]
+    lo = 180.0
+    if cls == 0:  # rectangle outline
+        box = (np.abs(xx - cx) <= r) & (np.abs(yy - cy) <= r)
+        inner = (np.abs(xx - cx) <= r - 2) & (np.abs(yy - cy) <= r - 2)
+        img[box & ~inner] = lo
+    elif cls == 1:  # filled rectangle
+        img[(np.abs(xx - cx) <= r) & (np.abs(yy - cy) <= r)] = lo
+    elif cls == 2:  # ellipse
+        d = ((xx - cx) / max(r, 1)) ** 2 + ((yy - cy) / max(r // 2, 1)) ** 2
+        img[d <= 1.0] = lo
+    else:  # cross
+        img[(np.abs(xx - cx) <= 1) & (np.abs(yy - cy) <= r)] = lo
+        img[(np.abs(yy - cy) <= 1) & (np.abs(xx - cx) <= r)] = lo
+    return np.clip(img + rng.normal(0, 8.0, size=img.shape), 0, 255)
+
+
+def gen_image(rng: np.random.Generator, n: int, seq_len: int):
+    side = int(round(seq_len**0.5))
+    y = rng.integers(0, 4, size=(n,), dtype=np.int64)
+    x = np.stack(
+        [_draw_shape(rng, side, int(c)).astype(np.int64).reshape(-1) for c in y]
+    )
+    return x, y
+
+
+GENERATORS = {"text": gen_text, "retrieval": gen_retrieval, "image": gen_image}
+
+
+def batches(
+    task: Task, batch_size: int, seed: int = 0
+) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Infinite stream of (tokens, labels) batches for ``task``."""
+    rng = np.random.default_rng(seed)
+    gen = GENERATORS[task.name]
+    while True:
+        yield gen(rng, batch_size, task.seq_len)
+
+
+def eval_set(task: Task, n: int, seed: int = 10_000):
+    """Fixed held-out evaluation set (disjoint seed space from training)."""
+    rng = np.random.default_rng(seed)
+    return GENERATORS[task.name](rng, n, task.seq_len)

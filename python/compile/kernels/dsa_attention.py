@@ -1,0 +1,139 @@
+"""L1 Pallas kernels: fused (masked) attention.
+
+The paper's GPU implementation splits sparse attention into SDDMM (masked
+QK^T) -> sparse softmax -> SpMM (A V). On TPU the natural formulation is a
+single fused, row-tiled kernel: each grid step owns a ``block_q`` panel of
+rows, streams K/V through VMEM, applies the dynamic mask additively
+(Eq. (4)), normalizes, and accumulates the output panel. Whole-tile skips
+(the TPU analogue of vector-level structural sparsity — see DESIGN.md
+§Hardware-Adaptation) show up as masked MXU passes.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls. Correctness is asserted against
+``kernels.ref`` by pytest; TPU performance is *estimated* from the BlockSpec
+footprint in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MASK_NEG
+
+#: Default row-panel height. 128 matches the MXU systolic dimension; for
+#: short sequences the panel clamps to l.
+DEFAULT_BLOCK_Q = 128
+
+
+def _pick_block(l: int, block_q: int | None) -> int:
+    bq = block_q or DEFAULT_BLOCK_Q
+    bq = min(bq, l)
+    while l % bq != 0:  # BlockSpec requires an exact grid
+        bq -= 1
+    return max(bq, 1)
+
+
+def _dense_attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """One row panel of standard attention: softmax(q k^T * scale) v."""
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = (jnp.dot(p, v, preferred_element_type=jnp.float32) / denom).astype(
+        o_ref.dtype
+    )
+
+
+def _masked_attn_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, scale: float):
+    """One row panel of DSA attention, Eq. (4): softmax(S - c(1-M)) V."""
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    mask = m_ref[...]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = s - MASK_NEG * (1.0 - mask)
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - mx)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = (jnp.dot(p, v, preferred_element_type=jnp.float32) / denom).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def dense_attention(q, k, v, *, block_q: int | None = None):
+    """Row-tiled dense attention. q,k: [l, dk]; v: [l, dv] -> [l, dv]."""
+    l, dk = q.shape
+    dv = v.shape[-1]
+    bq = _pick_block(l, block_q)
+    scale = 1.0 / (dk**0.5)
+    return pl.pallas_call(
+        functools.partial(_dense_attn_kernel, scale=scale),
+        grid=(l // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, dk), lambda i: (i, 0)),  # Q panel: one per step
+            pl.BlockSpec((l, dk), lambda i: (0, 0)),  # K: resident across steps
+            pl.BlockSpec((l, dv), lambda i: (0, 0)),  # V: resident across steps
+        ],
+        out_specs=pl.BlockSpec((bq, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, dv), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def masked_attention(q, k, v, mask, *, block_q: int | None = None):
+    """Row-tiled DSA sparse attention with a dynamic binary mask [l, l]."""
+    l, dk = q.shape
+    dv = v.shape[-1]
+    bq = _pick_block(l, block_q)
+    scale = 1.0 / (dk**0.5)
+    return pl.pallas_call(
+        functools.partial(_masked_attn_kernel, scale=scale),
+        grid=(l // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, dk), lambda i: (i, 0)),
+            pl.BlockSpec((l, dk), lambda i: (0, 0)),
+            pl.BlockSpec((l, dv), lambda i: (0, 0)),
+            pl.BlockSpec((bq, l), lambda i: (i, 0)),  # mask panel follows Q rows
+        ],
+        out_specs=pl.BlockSpec((bq, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, dv), q.dtype),
+        interpret=True,
+    )(q, k, v, mask.astype(q.dtype))
+
+
+def _sparse_softmax_kernel(s_ref, m_ref, o_ref):
+    """Row panel of masked softmax: exp only over kept entries."""
+    s = s_ref[...]
+    mask = m_ref[...]
+    sm = jnp.where(mask > 0, s, -MASK_NEG)
+    mx = jnp.max(sm, axis=-1, keepdims=True)
+    p = jnp.exp(sm - mx) * (mask > 0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o_ref[...] = (p / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def sparse_softmax(s, mask, *, block_q: int | None = None):
+    """Row-tiled sparse softmax over scores [l, l] with mask [l, l]."""
+    l = s.shape[0]
+    bq = _pick_block(l, block_q)
+    return pl.pallas_call(
+        _sparse_softmax_kernel,
+        grid=(l // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, s.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((bq, s.shape[1]), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, s.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(s.shape, s.dtype),
+        interpret=True,
+    )(s, mask.astype(s.dtype))

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: the DSA prediction path (Sec. 3.1).
+
+Computes the approximate score matrix ``S~ = Q~ K~^T`` where
+``Q~ = XP W~q`` and ``K~ = XP W~k`` (Eq. (5)). The random projection
+``XP`` and the tiny ``k x k`` weight GEMMs are cheap (O(l d k) with
+k = sigma*d); the l x l product dominates, so that is what we tile.
+
+Quantization: operands arrive *pre-fake-quantized* (per-tensor scales need
+a global absmax reduction, which belongs in L2 — see quant.fake_quant);
+the kernel itself is precision-agnostic. On a real TPU the int8/int4 grid
+operands would ride the MXU's int8 mode; see DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dsa_attention import _pick_block
+
+
+def _pred_scores_kernel(qt_ref, kt_ref, o_ref):
+    """One row panel of S~ = Q~ K~^T."""
+    o_ref[...] = jnp.dot(
+        qt_ref[...], kt_ref[...].T, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def predictor_scores(qt, kt, *, block_q: int | None = None):
+    """Row-tiled S~ = qt @ kt.T. qt, kt: [l, kdim] -> [l, l]."""
+    l, kdim = qt.shape
+    bq = _pick_block(l, block_q)
+    return pl.pallas_call(
+        _pred_scores_kernel,
+        grid=(l // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, kdim), lambda i: (i, 0)),
+            pl.BlockSpec((l, kdim), lambda i: (0, 0)),  # K~ resident in VMEM
+        ],
+        out_specs=pl.BlockSpec((bq, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, l), qt.dtype),
+        interpret=True,
+    )(qt, kt)
+
+
+def _threshold_mask_kernel(s_ref, th_ref, o_ref):
+    """Binary mask panel: s >= row-threshold (top-k threshold from L2)."""
+    s = s_ref[...]
+    th = th_ref[...]
+    o_ref[...] = (s >= th).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def threshold_mask(s, thresholds, *, block_q: int | None = None):
+    """Mask M = (S~ >= theta_row), thresholds: [l, 1] -> mask [l, l].
+
+    The row thresholds come from top-k selection (jax.lax.top_k in L2 or
+    tuned constants per Sec. 3.1); the elementwise compare is the part that
+    scales with l^2, so it is the part implemented as a kernel.
+    """
+    l = s.shape[0]
+    bq = _pick_block(l, block_q)
+    return pl.pallas_call(
+        _threshold_mask_kernel,
+        grid=(l // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, l), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(s.shape, s.dtype),
+        interpret=True,
+    )(s, thresholds)

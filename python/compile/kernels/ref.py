@@ -1,0 +1,108 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest (python/tests/) asserts the
+Pallas kernels (interpret=True) match these references with hypothesis-driven
+shape/dtype sweeps. Keep them dead simple — clarity beats speed here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Additive mask constant c in Eq. (4): masked scores get score - c.
+MASK_NEG = 1e4
+
+
+def dense_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Standard scaled dot-product attention, Eq. (1)-(3).
+
+    q: [l, dk], k: [l, dk], v: [l, dv] -> [l, dv]
+    """
+    dk = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.asarray(dk, q.dtype))
+    a = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    a = a / jnp.sum(a, axis=-1, keepdims=True)
+    return a @ v
+
+
+def attention_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Scaled scores S = QK^T / sqrt(dk)."""
+    dk = q.shape[-1]
+    return (q @ k.T) / jnp.sqrt(jnp.asarray(dk, q.dtype))
+
+
+def masked_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """DSA sparse attention, Eq. (4): softmax(S - c(1-M)) V.
+
+    mask: [l, l] in {0,1}; rows that keep nothing still softmax safely
+    (uniform over the -c plateau) — matches the paper's formulation where
+    top-k guarantees non-empty rows.
+    """
+    s = attention_scores(q, k) - MASK_NEG * (1.0 - mask.astype(q.dtype))
+    a = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    a = a / jnp.sum(a, axis=-1, keepdims=True)
+    return a @ v
+
+
+def masked_attention_weights(
+    q: jnp.ndarray, k: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Sparse attention weights A-bar (before the @V), for tests/dumps."""
+    s = attention_scores(q, k) - MASK_NEG * (1.0 - mask.astype(q.dtype))
+    a = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    return a / jnp.sum(a, axis=-1, keepdims=True)
+
+
+def predictor_scores(
+    x: jnp.ndarray,
+    proj: jnp.ndarray,
+    wq: jnp.ndarray,
+    wk: jnp.ndarray,
+) -> jnp.ndarray:
+    """Approximate scores S~ = (XP Wq~)(XP Wk~)^T, Eq. (5), no quantization.
+
+    x: [l, d], proj: [d, kdim], wq/wk: [kdim, kdim] -> [l, l]
+    """
+    xp = x @ proj
+    qt = xp @ wq
+    kt = xp @ wk
+    return qt @ kt.T
+
+
+def topk_mask(scores: jnp.ndarray, keep: int) -> jnp.ndarray:
+    """Row-wise top-k binary mask over scores [l, l]; keep entries = 1."""
+    l = scores.shape[-1]
+    keep = max(1, min(keep, l))
+    # kth largest per row as threshold; ties broken by >= (may keep extra
+    # equal-valued entries — matches the rust sparse::topk semantics).
+    kth = jnp.sort(scores, axis=-1)[:, l - keep]
+    return (scores >= kth[:, None]).astype(jnp.float32)
+
+
+def columnvec_mask(scores: jnp.ndarray, keep: int, vec: int) -> jnp.ndarray:
+    """Column-vector structural mask (Fig. 9), granularity ``vec`` rows.
+
+    Scores are grouped into [l/vec, vec, l] panels; each vec-row group
+    pools column scores (sum of |.|) and keeps the top ``keep`` columns for
+    the whole group, so selected entries form vec-tall column vectors
+    aligned to the group. Requires l % vec == 0.
+    """
+    l = scores.shape[-1]
+    g = scores.reshape(l // vec, vec, l)
+    pooled = jnp.sum(jnp.abs(g), axis=1)  # [l/vec, l]
+    keep = max(1, min(keep, l))
+    kth = jnp.sort(pooled, axis=-1)[:, l - keep]
+    gm = (pooled >= kth[:, None]).astype(jnp.float32)  # [l/vec, l]
+    return jnp.repeat(gm, vec, axis=0)
+
+
+def sparse_softmax(s: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Row softmax computed only over mask==1 entries; zeros elsewhere."""
+    neg = jnp.asarray(-MASK_NEG, s.dtype)
+    sm = jnp.where(mask > 0, s, neg)
+    a = jnp.exp(sm - jnp.max(sm, axis=-1, keepdims=True))
+    a = a * (mask > 0)
+    denom = jnp.maximum(jnp.sum(a, axis=-1, keepdims=True), 1e-30)
+    return a / denom

@@ -1,0 +1,320 @@
+"""L2 model: LRA-style vanilla Transformer classifier with pluggable attention.
+
+Pure JAX (no flax/optax in this sandbox): parameters are nested dicts,
+``init_params`` builds them, ``apply`` runs the forward pass for a single
+sequence (vmap over the batch lives in train.py / aot.py).
+
+Architecture mirrors the LRA vanilla transformer the paper builds on:
+token embedding + learned positional embedding, N pre-LN encoder blocks
+(MHA -> FFN), mean pooling, dense classifier. The attention inside each
+head is swappable between dense, DSA and the Table-2 baseline zoo
+(attention.py). The retrieval task uses a dual-encoder with a concat head,
+as in LRA.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .attention import DsaConfig
+
+
+class ModelConfig(NamedTuple):
+    """Static model + attention configuration."""
+
+    vocab: int = 256
+    seq_len: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 256
+    n_classes: int = 2
+    attn_kind: str = "transformer"  # one of attention.ALL_BASELINES
+    dsa: DsaConfig = DsaConfig()
+    dual: bool = False  # dual-encoder (retrieval task)
+    pool: str = "first"  # "first" = CLS-style (text/retrieval), "mean" = image
+    oracle_theta: float = 0.0  # attn_kind="oracle": Table 1 threshold
+    # baseline hyper-parameters (window sizes etc. scale with seq_len/16)
+    window: int = 16
+    n_global: int = 8
+    n_rand: int = 8
+    chunk: int = 32
+    lin_k: int = 32
+    perf_m: int = 32
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, n_in, n_out):
+    w = jax.random.normal(key, (n_in, n_out)) * (n_in**-0.5)
+    return {"w": w, "b": jnp.zeros((n_out,))}
+
+
+def _ln_init(d):
+    return {"g": jnp.ones((d,)), "b": jnp.zeros((d,))}
+
+
+def init_params(key, cfg: ModelConfig) -> dict[str, Any]:
+    """Build the full parameter pytree (model + prediction path if DSA)."""
+    keys = jax.random.split(key, 4 + cfg.n_layers)
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "pos": jax.random.normal(keys[1], (cfg.seq_len, cfg.d_model)) * 0.02,
+        "cls": _dense_init(
+            keys[2], cfg.d_model * (2 if cfg.dual else 1), cfg.n_classes
+        ),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[4 + i], 12)
+        layer = {
+            "ln1": _ln_init(cfg.d_model),
+            "ln2": _ln_init(cfg.d_model),
+            "wq": _dense_init(lk[0], cfg.d_model, cfg.d_model),
+            "wk": _dense_init(lk[1], cfg.d_model, cfg.d_model),
+            "wv": _dense_init(lk[2], cfg.d_model, cfg.d_model),
+            "wo": _dense_init(lk[3], cfg.d_model, cfg.d_model),
+            "ff1": _dense_init(lk[4], cfg.d_model, cfg.d_ff),
+            "ff2": _dense_init(lk[5], cfg.d_ff, cfg.d_model),
+        }
+        if cfg.attn_kind == "dsa":
+            # Shared random projection per layer; per-head trainable W~q/W~k.
+            pred = attn.init_predictor(lk[6], cfg.d_model, cfg.dsa.sigma)
+            kdim = pred["proj"].shape[1]
+            hk = jax.random.split(lk[7], cfg.n_heads * 2)
+            layer["pred"] = {
+                "proj": pred["proj"],
+                "wq": jnp.stack(
+                    [
+                        jax.random.normal(hk[2 * h], (kdim, kdim)) / jnp.sqrt(kdim)
+                        for h in range(cfg.n_heads)
+                    ]
+                ),
+                "wk": jnp.stack(
+                    [
+                        jax.random.normal(hk[2 * h + 1], (kdim, kdim)) / jnp.sqrt(kdim)
+                        for h in range(cfg.n_heads)
+                    ]
+                ),
+            }
+        elif cfg.attn_kind == "linformer":
+            layer["lin"] = {
+                "E": jax.random.normal(lk[6], (cfg.lin_k, cfg.seq_len))
+                * (cfg.seq_len**-0.5),
+                "F": jax.random.normal(lk[7], (cfg.lin_k, cfg.seq_len))
+                * (cfg.seq_len**-0.5),
+            }
+        elif cfg.attn_kind == "performer":
+            layer["perf"] = {
+                "omega": jax.random.normal(lk[6], (cfg.d_head, cfg.perf_m))
+            }
+        elif cfg.attn_kind == "sinkhorn":
+            layer["sink"] = {
+                "Wb": jax.random.normal(lk[6], (cfg.d_head, cfg.d_head))
+                * (cfg.d_head**-0.5)
+            }
+        elif cfg.attn_kind == "synthesizer":
+            layer["synth"] = {
+                "R": jax.random.normal(lk[6], (cfg.seq_len, cfg.seq_len)) * 0.02
+            }
+        params["layers"].append(layer)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _ln(p, x):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6) * p["g"] + p["b"]
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _split_heads(x, n_heads):
+    l, d = x.shape
+    return x.reshape(l, n_heads, d // n_heads).transpose(1, 0, 2)  # [h, l, dh]
+
+
+def _head_attention(layer, xin, q, k, v, head: int, cfg: ModelConfig):
+    """Dispatch one head to its attention mechanism. q,k,v: [l, dh]."""
+    kind = cfg.attn_kind
+    if kind == "transformer":
+        if cfg.dsa.use_pallas:
+            # Export path: route the hot-spot through the L1 Pallas kernel so
+            # it lowers into the same HLO module (see aot.py).
+            from .kernels import dsa_attention as kern
+
+            return kern.dense_attention(q, k, v), {}
+        return attn.dense(q, k, v)
+    if kind == "oracle":
+        # Table 1 regime: drop post-softmax weights < theta at inference.
+        return attn.oracle_threshold(q, k, v, cfg.oracle_theta)
+    if kind == "dsa":
+        pp = {
+            "proj": layer["pred"]["proj"],
+            "wq": layer["pred"]["wq"][head],
+            "wk": layer["pred"]["wk"][head],
+        }
+        return attn.dsa(pp, xin, q, k, v, cfg.dsa)
+    if kind == "local":
+        return attn.local_attention(q, k, v, window=cfg.window)
+    if kind == "sparse_trans":
+        return attn.sparse_transformer(q, k, v, window=cfg.window, stride=cfg.chunk)
+    if kind == "longformer":
+        return attn.longformer(q, k, v, window=cfg.window, n_global=cfg.n_global)
+    if kind == "bigbird":
+        key = jax.random.PRNGKey(head)  # static per-head random blocks
+        return attn.bigbird(
+            q, k, v, key=key, window=cfg.window, n_global=cfg.n_global,
+            n_rand=cfg.n_rand,
+        )
+    if kind == "linformer":
+        return attn.linformer(layer["lin"], q, k, v, kdim=cfg.lin_k)
+    if kind == "linear_trans":
+        return attn.linear_transformer(q, k, v)
+    if kind == "performer":
+        return attn.performer(layer["perf"], q, k, v)
+    if kind == "reformer":
+        return attn.reformer_lite(q, k, v, n_hashes=4, chunk=cfg.chunk)
+    if kind == "sinkhorn":
+        return attn.sinkhorn_lite(layer["sink"], q, k, v, chunk=cfg.chunk)
+    if kind == "synthesizer":
+        return attn.synthesizer(layer["synth"], q, k, v)
+    raise ValueError(f"unknown attention kind {kind!r}")
+
+
+def encoder_block(layer, x, cfg: ModelConfig, collect_aux: bool):
+    """Pre-LN transformer block; returns (x, aux_per_head)."""
+    xin = _ln(layer["ln1"], x)
+    q = _split_heads(_dense(layer["wq"], xin), cfg.n_heads)
+    k = _split_heads(_dense(layer["wk"], xin), cfg.n_heads)
+    v = _split_heads(_dense(layer["wv"], xin), cfg.n_heads)
+    outs, auxes = [], []
+    for h in range(cfg.n_heads):
+        o, aux = _head_attention(layer, xin, q[h], k[h], v[h], h, cfg)
+        outs.append(o)
+        auxes.append(aux if collect_aux else {})
+    o = jnp.concatenate(outs, axis=-1)
+    x = x + _dense(layer["wo"], o)
+    y = _ln(layer["ln2"], x)
+    y = jax.nn.gelu(_dense(layer["ff1"], y))
+    x = x + _dense(layer["ff2"], y)
+    return x, auxes
+
+
+def encode(params, tokens, cfg: ModelConfig, collect_aux: bool = False):
+    """tokens: [l] int32 -> (pooled [d_model], aux per layer)."""
+    x = params["embed"][tokens] + params["pos"][: tokens.shape[0]]
+    aux_all = []
+    for layer in params["layers"]:
+        x, aux = encoder_block(layer, x, cfg, collect_aux)
+        aux_all.append(aux)
+    pooled = x[0] if cfg.pool == "first" else jnp.mean(x, axis=0)
+    return pooled, aux_all
+
+
+def apply(params, tokens, cfg: ModelConfig, collect_aux: bool = False):
+    """Single-example forward.
+
+    tokens: [l] (classification) or [2, l] (retrieval, dual=True).
+    Returns (logits [n_classes], aux).
+    """
+    if cfg.dual:
+        e1, a1 = encode(params, tokens[0], cfg, collect_aux)
+        e2, a2 = encode(params, tokens[1], cfg, collect_aux)
+        pooled = jnp.concatenate([e1, e2], axis=-1)
+        aux = a1 + a2
+    else:
+        pooled, aux = encode(params, tokens, cfg, collect_aux)
+    return _dense(params["cls"], pooled), aux
+
+
+def batched_apply(params, tokens, cfg: ModelConfig):
+    """vmap over the batch; drops aux (training collects it separately)."""
+    return jax.vmap(lambda t: apply(params, t, cfg)[0])(tokens)
+
+
+def smart_init_predictor(params, cfg: ModelConfig):
+    """Re-initialize prediction-path weights from the model's Q/K weights.
+
+    Sets ``W~q ≈ pinv(P) Wq_h`` (and likewise for K) so that
+    ``XP W~q ≈ X P P⁺ Wq_h`` — the projection of the true query transform
+    onto span(P). A randomly initialized predictor produces random masks
+    that destroy a pretrained model before joint training can recover
+    (observed empirically; see EXPERIMENTS.md); this gives the prediction
+    path a warm start matching the paper's premise that S~ approximates S
+    from the beginning of model adaptation. In-place; returns ``params``.
+    """
+    dh = cfg.d_head
+    scale = (1.0 / jnp.sqrt(dh)) ** 0.5
+    for layer in params["layers"]:
+        if "pred" not in layer:
+            continue
+        proj = layer["pred"]["proj"]
+        kdim = proj.shape[1]
+        pinv = jnp.linalg.pinv(proj)
+        cols = min(dh, kdim)
+        wqs, wks = [], []
+        for h in range(cfg.n_heads):
+            wq_h = layer["wq"]["w"][:, h * dh : (h + 1) * dh]
+            wk_h = layer["wk"]["w"][:, h * dh : (h + 1) * dh]
+            wq = jnp.zeros((kdim, kdim)).at[:, :cols].set((pinv @ wq_h * scale)[:, :cols])
+            wk = jnp.zeros((kdim, kdim)).at[:, :cols].set((pinv @ wk_h * scale)[:, :cols])
+            wqs.append(wq)
+            wks.append(wk)
+        layer["pred"]["wq"] = jnp.stack(wqs)
+        layer["pred"]["wk"] = jnp.stack(wks)
+    return params
+
+
+def mse_loss_from_aux(aux_all) -> jnp.ndarray:
+    """L_MSE (Eq. (6)): mean over layers/heads of ||S - S~||^2 (mean-sq)."""
+    losses = []
+    for layer_aux in aux_all:
+        for head_aux in layer_aux:
+            if "approx_scores" in head_aux:
+                d = head_aux["scores"] - head_aux["approx_scores"]
+                losses.append(jnp.mean(d * d))
+    if not losses:
+        return jnp.asarray(0.0)
+    return jnp.mean(jnp.stack(losses))
+
+
+def prediction_accuracy_from_aux(aux_all, keep: int):
+    """Fig. 6 metric per layer: |predicted top-k ∩ oracle top-k| / k."""
+    per_layer = []
+    for layer_aux in aux_all:
+        accs = []
+        for head_aux in layer_aux:
+            if "approx_scores" not in head_aux:
+                continue
+            s, st = head_aux["scores"], head_aux["approx_scores"]
+            om = attn.topk_mask_from_scores(s, keep)
+            pm = head_aux["mask"]
+            inter = jnp.sum(om * pm, axis=-1)
+            # Paper's definition is over an exact-k predictor; our masks keep
+            # threshold ties, so normalize by the larger of k and the row's
+            # actual selection — over-selection (e.g. INT2's quantization
+            # ties) must not inflate the score.
+            denom = jnp.maximum(jnp.sum(pm, axis=-1), float(keep))
+            accs.append(jnp.mean(inter / denom))
+        if accs:
+            per_layer.append(jnp.mean(jnp.stack(accs)))
+    return per_layer

@@ -1,0 +1,63 @@
+"""Fake-quantization primitives for the DSA prediction path.
+
+The paper computes the prediction path (Sec. 3.1) in reduced precision —
+INT8/INT4 (and a degraded INT2 case) — on tensor cores or a dedicated
+low-precision PE array. On this testbed we *fake-quantize*: operands are
+snapped to the integer grid (symmetric, per-tensor scale) and the arithmetic
+runs in f32. The information content of the operands is identical to true
+integer math at these bit widths, which is what the accuracy experiments
+(Table 3, Fig. 6) measure. See DESIGN.md "substitutions".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: Supported precision labels, mirroring Table 3 of the paper.
+PRECISIONS = ("fp32", "int16", "int8", "int4", "int2")
+
+
+def bits_of(precision: str) -> int:
+    """Bit width of a precision label; fp32 -> 32."""
+    if precision == "fp32":
+        return 32
+    if not precision.startswith("int"):
+        raise ValueError(f"unknown precision {precision!r}")
+    return int(precision[3:])
+
+
+def fake_quant(x: jnp.ndarray, precision: str) -> jnp.ndarray:
+    """Symmetric per-tensor fake quantization.
+
+    Maps ``x`` onto a ``2^(b-1) - 1``-level symmetric grid scaled by the
+    per-tensor absmax, then back to float. ``fp32`` is the identity.
+    A straight-through estimator is used so the op is differentiable
+    (needed when the predictor is trained jointly, Sec. 3.2).
+    """
+    if precision == "fp32":
+        return x
+    b = bits_of(precision)
+    qmax = float(2 ** (b - 1) - 1)  # e.g. int4 -> 7, int2 -> 1
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax) * scale
+    # Straight-through estimator: forward q, backward identity.
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def quant_mac_energy_factor(precision: str) -> float:
+    """Relative energy of one MAC at ``precision`` vs an FP32 MAC.
+
+    45nm projections in the style of the Neurometer/Horowitz numbers the
+    paper references (Fig. 8): energy scales roughly quadratically in
+    multiplier width. Mirrored by the Rust cost model
+    (rust/src/costmodel/energy.rs) — keep the two tables in sync.
+    """
+    table = {
+        "fp32": 1.0,
+        "int16": 0.35,
+        "int8": 0.12,
+        "int4": 0.045,
+        "int2": 0.02,
+    }
+    return table[precision]

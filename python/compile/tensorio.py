@@ -1,0 +1,69 @@
+"""Tiny binary tensor interchange format (``.tns``).
+
+Python writes, Rust reads (rust/src/util/tensorio.rs — keep in sync).
+Layout (little-endian):
+
+    magic   4 bytes  b"TNS1"
+    dtype   u8       0=f32 1=i32 2=u8 3=f64 4=i64
+    ndim    u8
+    dims    ndim x u32
+    data    row-major payload
+
+Used to hand real tensors (predicted masks, attention matrices, example
+batches) from the JAX side to the Rust simulator and benches without
+needing numpy/npz parsing in Rust.
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"TNS1"
+
+_DTYPES: list[tuple[int, np.dtype]] = [
+    (0, np.dtype("<f4")),
+    (1, np.dtype("<i4")),
+    (2, np.dtype("u1")),
+    (3, np.dtype("<f8")),
+    (4, np.dtype("<i8")),
+]
+_CODE_OF = {dt: code for code, dt in _DTYPES}
+_DTYPE_OF = {code: dt for code, dt in _DTYPES}
+
+
+def write_tensor(path: str | Path, arr: np.ndarray) -> None:
+    """Write ``arr`` as a .tns file (creates parent dirs)."""
+    arr = np.ascontiguousarray(arr)
+    dt = arr.dtype.newbyteorder("<")
+    if dt not in _CODE_OF:
+        # Normalize common aliases (float64/int64 from python ints, bools).
+        if arr.dtype == np.bool_:
+            arr, dt = arr.astype("u1"), np.dtype("u1")
+        elif np.issubdtype(arr.dtype, np.floating):
+            arr, dt = arr.astype("<f4"), np.dtype("<f4")
+        elif np.issubdtype(arr.dtype, np.integer):
+            arr, dt = arr.astype("<i4"), np.dtype("<i4")
+        else:
+            raise TypeError(f"unsupported dtype {arr.dtype}")
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<BB", _CODE_OF[dt], arr.ndim))
+        f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+        f.write(arr.astype(dt).tobytes())
+
+
+def read_tensor(path: str | Path) -> np.ndarray:
+    """Read a .tns file back (round-trip check in tests)."""
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        code, ndim = struct.unpack("<BB", f.read(2))
+        dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+        dt = _DTYPE_OF[code]
+        data = np.frombuffer(f.read(), dtype=dt)
+    return data.reshape(dims)

@@ -1,0 +1,236 @@
+"""Pure-JAX trainer: Adam + warmup, joint L_model + lambda * L_MSE (Eq. (7)).
+
+Replicates the paper's two training regimes (Appendix A):
+
+* ``finetune`` — start from a trained dense checkpoint, enable the DSA
+  sparsity constraint, and jointly update model + predictor parameters
+  (Fig. 3 regime).
+* ``scratch`` — phase 1 trains the dense model from random init (predictor
+  frozen / mask disabled), phase 2 enables the mask and optimizes jointly
+  (Table 2 regime).
+
+No optax in this sandbox, so Adam is implemented inline.
+"""
+
+from __future__ import annotations
+
+import pickle
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from .model import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.asarray(0)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree.map(
+        lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p),
+        params,
+        mh,
+        vh,
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def warmup_rsqrt(step, base_lr, warmup):
+    """LRA-style schedule: linear warmup then inverse-sqrt decay."""
+    step = jnp.maximum(step, 1)
+    return base_lr * jnp.minimum(step / warmup, jnp.sqrt(warmup / step))
+
+
+# ---------------------------------------------------------------------------
+# loss / step
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(cfg: ModelConfig, lam: float):
+    """Batch loss: mean CE + lam * L_MSE (aux collected only when DSA)."""
+    collect = cfg.attn_kind == "dsa" and lam > 0
+
+    def single(params, tokens, label):
+        logits, aux = model_mod.apply(params, tokens, cfg, collect_aux=collect)
+        logp = jax.nn.log_softmax(logits)
+        ce = -logp[label]
+        mse = model_mod.mse_loss_from_aux(aux) if collect else jnp.asarray(0.0)
+        return ce, mse
+
+    def loss_fn(params, tokens, labels):
+        ce, mse = jax.vmap(lambda t, y: single(params, t, y))(tokens, labels)
+        return jnp.mean(ce) + lam * jnp.mean(mse), (jnp.mean(ce), jnp.mean(mse))
+
+    return loss_fn
+
+
+def _zero_non_pred_grads(grads):
+    """Keep gradients only for the prediction-path parameters."""
+    out = jax.tree.map(jnp.zeros_like, grads)
+    for zl, gl in zip(out["layers"], grads["layers"]):
+        if "pred" in gl:
+            zl["pred"] = gl["pred"]
+    return out
+
+
+def make_train_step(
+    cfg: ModelConfig, lam: float, base_lr: float, warmup: int, pred_only: bool = False
+):
+    loss_fn = make_loss_fn(cfg, lam)
+
+    @jax.jit
+    def step(params, opt, tokens, labels):
+        (loss, (ce, mse)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, tokens, labels
+        )
+        if pred_only:
+            grads = _zero_non_pred_grads(grads)
+        lr = warmup_rsqrt(opt["t"] + 1, base_lr, warmup)
+        params, opt = adam_update(params, grads, opt, lr, wd=1e-4)
+        return params, opt, loss, ce, mse
+
+    return step
+
+
+@jax.jit
+def _count_correct(logits, labels):
+    return jnp.sum(jnp.argmax(logits, axis=-1) == labels)
+
+
+def evaluate(params, cfg: ModelConfig, task, n: int = 512, batch: int = 32) -> float:
+    """Accuracy on the fixed held-out set."""
+    x, y = data_mod.eval_set(task, n)
+    correct = 0
+    fwd = jax.jit(lambda p, t: model_mod.batched_apply(p, t, cfg))
+    for i in range(0, n, batch):
+        logits = fwd(params, jnp.asarray(x[i : i + batch]))
+        correct += int(_count_correct(logits, jnp.asarray(y[i : i + batch])))
+    return correct / n
+
+
+# ---------------------------------------------------------------------------
+# training driver
+# ---------------------------------------------------------------------------
+
+
+def train(
+    cfg: ModelConfig,
+    task,
+    steps: int,
+    *,
+    params: dict[str, Any] | None = None,
+    batch: int = 16,
+    lr: float = 1e-3,
+    warmup: int = 100,
+    lam: float = 0.01,
+    dense_steps: int = 0,
+    pred_warmup: int = 0,
+    pred_lr: float = 3e-3,
+    seed: int = 0,
+    log_every: int = 50,
+    verbose: bool = True,
+):
+    """Train ``cfg`` on ``task``.
+
+    Phases (DSA only):
+      1. ``dense_steps`` — plain dense training (from-scratch regime,
+         Appendix A: "the first 15K steps are the same as training a dense
+         baseline").
+      2. ``pred_warmup`` — predictor-only regression: masks disabled, only
+         the prediction-path parameters receive gradients, loss dominated
+         by L_MSE. Without this, a randomly-initialized predictor produces
+         random masks that destroy a pretrained model before it can adapt.
+      3. remaining steps — joint optimization under the sparsity
+         constraint (Eq. (7)).
+    Returns (params, history).
+    """
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = model_mod.init_params(key, cfg)
+    stream = data_mod.batches(task, batch, seed=seed + 1)
+    history: list[dict[str, float]] = []
+
+    phases = []  # (cfg, steps, lam, pred_only, lr)
+    if cfg.attn_kind == "dsa":
+        joint = steps - dense_steps - pred_warmup
+        assert joint > 0, "no steps left for joint optimization"
+        if dense_steps > 0:
+            phases.append(
+                (cfg._replace(attn_kind="transformer"), dense_steps, 0.0, False, lr)
+            )
+        if pred_warmup > 0:
+            warm_cfg = cfg._replace(dsa=cfg.dsa._replace(apply_mask=False))
+            phases.append((warm_cfg, pred_warmup, 1.0, True, pred_lr))
+        phases.append((cfg, joint, lam, False, lr))
+    else:
+        phases.append((cfg, steps, 0.0, False, lr))
+
+    t0 = time.time()
+    global_step = 0
+    smart_inited = False
+    for phase_cfg, phase_steps, phase_lam, pred_only, phase_lr in phases:
+        if phase_cfg.attn_kind == "dsa" and not smart_inited:
+            # Warm-start the prediction path from the (now possibly trained)
+            # Q/K weights — see smart_init_predictor. Runs after the dense
+            # phase in the from-scratch regime, immediately when fine-tuning.
+            params = model_mod.smart_init_predictor(params, phase_cfg)
+            smart_inited = True
+        step_fn = make_train_step(phase_cfg, phase_lam, phase_lr, warmup, pred_only)
+        opt = adam_init(params)
+        for _ in range(phase_steps):
+            x, y = next(stream)
+            params, opt, loss, ce, mse = step_fn(
+                params, opt, jnp.asarray(x), jnp.asarray(y)
+            )
+            global_step += 1
+            if global_step % log_every == 0 or global_step == 1:
+                rec = {
+                    "step": global_step,
+                    "loss": float(loss),
+                    "ce": float(ce),
+                    "mse": float(mse),
+                    "wall": time.time() - t0,
+                }
+                history.append(rec)
+                if verbose:
+                    print(
+                        f"[{cfg.attn_kind}/{task.name}] step {global_step:5d} "
+                        f"loss {rec['loss']:.4f} ce {rec['ce']:.4f} "
+                        f"mse {rec['mse']:.4f} ({rec['wall']:.0f}s)"
+                    )
+    return params, history
+
+
+# ---------------------------------------------------------------------------
+# checkpoints
+# ---------------------------------------------------------------------------
+
+
+def save_params(params, path: str | Path) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        pickle.dump(jax.tree.map(np.asarray, params), f)
+
+
+def load_params(path: str | Path):
+    with open(path, "rb") as f:
+        return jax.tree.map(jnp.asarray, pickle.load(f))

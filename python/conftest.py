@@ -1,0 +1,6 @@
+"""Make `compile` importable when pytest runs from the repository root."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))

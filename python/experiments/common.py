@@ -1,0 +1,85 @@
+"""Shared helpers for the experiment scripts (one script per paper
+table/figure; each writes results/<name>.json consumed by EXPERIMENTS.md).
+
+All experiments run at the testbed scale recorded in DESIGN.md
+(seq_len 128–256, d_model 64–128) — CPU-only budget; EXPERIMENTS.md maps
+each measured number to the paper's configuration.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from compile import data as data_mod  # noqa: E402
+from compile import train as train_mod  # noqa: E402
+from compile.attention import DsaConfig  # noqa: E402
+from compile.model import ModelConfig  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parent.parent.parent / "results"
+CKPT = RESULTS / "ckpt"
+
+#: Serving-testbed model configuration (matches aot.py base_config).
+def text_config(seq_len: int = 256) -> ModelConfig:
+    return ModelConfig(
+        seq_len=seq_len, d_model=128, n_heads=4, n_layers=2, d_ff=256,
+        n_classes=2, attn_kind="transformer",
+    )
+
+
+#: Reduced-scale config for the multi-model comparison (Table 2) — one
+#: layer keeps 12 models x 3 tasks inside the CPU budget.
+def small_config(task, attn_kind: str) -> ModelConfig:
+    return ModelConfig(
+        seq_len=task.seq_len,
+        d_model=64,
+        n_heads=2,
+        n_layers=1,
+        d_ff=128,
+        n_classes=task.n_classes,
+        attn_kind=attn_kind,
+        dual=task.dual,
+        pool="mean" if task.name == "image" else "first",
+        window=8,
+        n_global=4,
+        n_rand=8,
+        chunk=16,
+        lin_k=16,
+        perf_m=32,
+        dsa=DsaConfig(sparsity=0.9, sigma=0.5),
+    )
+
+
+def load_dense_checkpoint(seq_len: int = 256):
+    path = CKPT / f"text_dense_l{seq_len}.pkl"
+    if not path.exists():
+        raise SystemExit(f"{path} missing — run `make artifacts` first")
+    return train_mod.load_params(path)
+
+
+def load_variant_checkpoint(name: str, seq_len: int = 256):
+    path = CKPT / f"text_{name}_l{seq_len}.pkl"
+    if not path.exists():
+        raise SystemExit(f"{path} missing — run `make artifacts` first")
+    return train_mod.load_params(path)
+
+
+def save_result(name: str, payload) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / f"{name}.json"
+    out.write_text(json.dumps(payload, indent=2))
+    print(f"wrote {out}")
+    return out
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.time() - self.t0

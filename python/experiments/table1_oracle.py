@@ -1,0 +1,64 @@
+"""Table 1: oracle threshold sparsity — drop post-softmax attention weights
+below theta at inference (no fine-tuning) and measure accuracy + realized
+sparsity on the trained dense text model.
+
+Paper: theta=0.001 -> 75–95% sparsity, no loss; theta=0.01 -> 94–97%,
+~1 point drop. Usage: python experiments/table1_oracle.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from common import Timer, load_dense_checkpoint, save_result, text_config
+from compile import data as D
+from compile import model as M
+from compile import train as T
+
+
+def realized_sparsity(params, cfg, x, n=8):
+    """Mean fraction of post-softmax weights below theta across heads."""
+    fracs = []
+    for i in range(n):
+        _, aux = M.apply(params, jnp.asarray(x[i]), cfg, collect_aux=True)
+        for layer_aux in aux:
+            for head_aux in layer_aux:
+                if "weights" in head_aux:
+                    w = np.asarray(head_aux["weights"])
+                    fracs.append(float((w < max(cfg.oracle_theta, 1e-12)).mean()))
+    return float(np.mean(fracs)) if fracs else 0.0
+
+
+def main():
+    task = D.text_task(256)
+    params = load_dense_checkpoint()
+    rows = []
+    x, _ = D.eval_set(task, 8)
+    for theta in (0.0, 0.001, 0.01):
+        kind = "transformer" if theta == 0.0 else "oracle"
+        cfg = text_config()._replace(attn_kind=kind, oracle_theta=theta)
+        with Timer() as t:
+            acc = T.evaluate(params, cfg, task, n=512)
+        sp = realized_sparsity(params, cfg._replace(attn_kind="transformer"), x)
+        # sparsity realized BY the threshold = weights under theta
+        rows.append(
+            {
+                "theta": theta,
+                "accuracy": acc,
+                "weights_below_theta": sp,
+                "eval_seconds": round(t.elapsed, 1),
+            }
+        )
+        print(f"theta={theta:<6} acc={acc:.4f} weights<theta={sp:.3f}")
+    save_result("table1_oracle", {
+        "paper": {
+            "base": {"em": 81.49, "f1": 88.70},
+            "theta_0.001": {"sparsity": "75-95%", "em": 81.50},
+            "theta_0.01": {"sparsity": "94-97%", "em": 80.51},
+        },
+        "measured": rows,
+        "note": "testbed: synthetic text task, accuracy instead of EM/F1",
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Table 3 + Fig. 6: DSA-90 sensitivity to projection scale sigma and
+prediction precision; per-layer prediction accuracy per precision.
+
+Fine-tunes briefly from the dense checkpoint per configuration (the paper
+fine-tunes 5K steps at LRA scale; we use --steps at testbed scale).
+
+Usage: python experiments/table3_sweeps.py [--steps 150]
+"""
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from common import Timer, load_dense_checkpoint, save_result, text_config
+from compile import attention as A
+from compile import data as D
+from compile import model as M
+from compile import train as T
+from compile.attention import DsaConfig, keep_count
+
+
+def finetune(cfg, task, dense_params, steps):
+    init = M.init_params(jnp.asarray(np.random.default_rng(1).integers(0, 2**31)).astype(jnp.uint32), cfg) \
+        if False else M.init_params(__import__("jax").random.PRNGKey(1), cfg)
+    for layer, src in zip(init["layers"], dense_params["layers"]):
+        for k in src:
+            layer[k] = src[k]
+    init["embed"] = dense_params["embed"]
+    init["pos"] = dense_params["pos"]
+    init["cls"] = dense_params["cls"]
+    params, _ = T.train(
+        cfg, task, steps, params=init, batch=16, lr=2e-4, lam=0.001,
+        pred_warmup=max(1, steps // 3), log_every=max(20, steps // 3),
+        verbose=False,
+    )
+    return params
+
+
+def prediction_accuracy(params, cfg, task, n=8):
+    x, _ = D.eval_set(task, n)
+    keep = keep_count(cfg.seq_len, cfg.dsa.sparsity)
+    per_layer = []
+    for i in range(n):
+        _, aux = M.apply(params, jnp.asarray(x[i]), cfg, collect_aux=True)
+        per_layer.append([float(a) for a in M.prediction_accuracy_from_aux(aux, keep)])
+    return np.mean(per_layer, axis=0).tolist()
+
+
+def random_mask_accuracy(params_dense, cfg, task):
+    """Table 3's 'Random' row: random 10% mask instead of prediction."""
+    import jax
+
+    class_cfg = cfg._replace(attn_kind="dsa")
+    params = M.init_params(jax.random.PRNGKey(3), class_cfg)
+    for layer, src in zip(params["layers"], params_dense["layers"]):
+        for k in src:
+            layer[k] = src[k]
+    params["embed"], params["pos"], params["cls"] = (
+        params_dense["embed"], params_dense["pos"], params_dense["cls"],
+    )
+    # random predictor == random mask (no warm start, no training)
+    return T.evaluate(params, class_cfg, task, n=256)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--sigmas", default="0.25,0.5,0.75")
+    ap.add_argument("--precisions", default="int2,int4,int8,fp32")
+    args = ap.parse_args()
+
+    task = D.text_task(256)
+    dense = load_dense_checkpoint()
+    base_cfg = text_config()
+    dense_acc = T.evaluate(dense, base_cfg, task, n=512)
+    print(f"dense baseline acc={dense_acc:.4f}")
+
+    sigma_rows = []
+    for sigma in [float(s) for s in args.sigmas.split(",")]:
+        cfg = base_cfg._replace(
+            attn_kind="dsa", dsa=DsaConfig(sparsity=0.9, sigma=sigma)
+        )
+        with Timer() as t:
+            params = finetune(cfg, task, dense, args.steps)
+            acc = T.evaluate(params, cfg, task, n=512)
+        pred_acc = prediction_accuracy(params, cfg, task)
+        sigma_rows.append({"sigma": sigma, "accuracy": acc,
+                           "pred_accuracy_per_layer": pred_acc})
+        print(f"sigma={sigma} acc={acc:.4f} pred_acc={pred_acc} ({t.elapsed:.0f}s)")
+
+    prec_rows = []
+    for prec in args.precisions.split(","):
+        cfg = base_cfg._replace(
+            attn_kind="dsa", dsa=DsaConfig(sparsity=0.9, sigma=0.5, precision=prec)
+        )
+        with Timer() as t:
+            params = finetune(cfg, task, dense, args.steps)
+            acc = T.evaluate(params, cfg, task, n=512)
+        pred_acc = prediction_accuracy(params, cfg, task)
+        prec_rows.append({"precision": prec, "accuracy": acc,
+                          "pred_accuracy_per_layer": pred_acc})
+        print(f"prec={prec} acc={acc:.4f} pred_acc={pred_acc} ({t.elapsed:.0f}s)")
+
+    rand_acc = random_mask_accuracy(dense, base_cfg._replace(
+        dsa=DsaConfig(sparsity=0.9, sigma=0.5)), task)
+    print(f"random-mask acc={rand_acc:.4f}")
+
+    save_result("table3_sweeps", {
+        "dense_accuracy": dense_acc,
+        "sigma_sweep": sigma_rows,
+        "precision_sweep": prec_rows,
+        "random_mask_accuracy": rand_acc,
+        "paper": {
+            "sigma": {"0.1": 65.32, "0.25": 65.46, "0.4": 65.54, "baseline": 65.12},
+            "precision": {"int2": 64.23, "int4": 65.38, "int8": 65.44,
+                          "fp32": 65.46, "random": 60.42},
+        },
+        "note": "Fig. 6 per-layer prediction accuracy included per row",
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Synthetic task generators + quantization + tensor IO."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+from compile import tensorio as TIO
+from compile.quant import PRECISIONS, bits_of, fake_quant
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_text_labels_match_needle_counts():
+    rng = np.random.default_rng(0)
+    x, y = D.gen_text(rng, 64, 256)
+    hi = max(8, 256 // 16)
+    for i in range(64):
+        needle = x[i, 0]
+        count = int((x[i, 1:] == needle).sum())
+        if y[i] == 1:
+            assert count >= hi
+        else:
+            assert count < hi // 2
+
+
+def test_retrieval_pairs_share_motif_iff_positive():
+    rng = np.random.default_rng(1)
+    x, y = D.gen_retrieval(rng, 48, 128)
+
+    def has_common_motif(a, b):
+        for off in range(128 - D.MOTIF_LEN + 1):
+            window = a[off : off + D.MOTIF_LEN]
+            for off2 in range(128 - D.MOTIF_LEN + 1):
+                if np.array_equal(window, b[off2 : off2 + D.MOTIF_LEN]):
+                    return True
+        return False
+
+    # positives must share; spot-check a few (full scan is O(l^2))
+    pos = np.where(y == 1)[0][:3]
+    for i in pos:
+        assert has_common_motif(x[i, 0], x[i, 1])
+
+
+def test_image_shapes_and_range():
+    rng = np.random.default_rng(2)
+    x, y = D.gen_image(rng, 16, 1024)
+    assert x.shape == (16, 1024)
+    assert x.min() >= 0 and x.max() <= 255
+    assert set(np.unique(y)) <= {0, 1, 2, 3}
+
+
+def test_eval_set_is_deterministic_and_disjoint_from_train():
+    task = D.text_task(128)
+    a = D.eval_set(task, 8)
+    b = D.eval_set(task, 8)
+    np.testing.assert_array_equal(a[0], b[0])
+    first_train = next(D.batches(task, 8, seed=0))
+    assert not np.array_equal(a[0][:8], first_train[0])
+
+
+def test_labels_roughly_balanced():
+    rng = np.random.default_rng(3)
+    for gen in (D.gen_text, D.gen_image):
+        _, y = gen(rng, 400, 256)
+        frac = (y == (1 if gen is D.gen_text else y.max())).mean()
+        assert 0.1 < frac < 0.9
+
+
+# ---------------------------------------------------------------------------
+# quant
+# ---------------------------------------------------------------------------
+
+
+@given(st.sampled_from([p for p in PRECISIONS if p != "fp32"]),
+       st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_fake_quant_level_count(precision, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    q = np.asarray(fake_quant(x, precision))
+    b = bits_of(precision)
+    levels = np.unique(q)
+    assert len(levels) <= 2 ** b  # symmetric grid
+    # max abs preserved up to one quantization step
+    np.testing.assert_allclose(np.abs(q).max(), np.abs(np.asarray(x)).max(),
+                               rtol=0.2)
+
+
+def test_fake_quant_fp32_identity_and_monotone_error():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(128,)).astype(np.float32))
+    np.testing.assert_array_equal(fake_quant(x, "fp32"), x)
+    errs = []
+    for p in ("int16", "int8", "int4", "int2"):
+        errs.append(float(jnp.mean((fake_quant(x, p) - x) ** 2)))
+    assert errs == sorted(errs), f"error should grow as bits shrink: {errs}"
+
+
+def test_fake_quant_straight_through_gradient():
+    import jax
+
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x, "int4") ** 2))(jnp.ones((4,)))
+    assert np.isfinite(np.asarray(g)).all()
+    assert (np.asarray(g) != 0).any()
+
+
+# ---------------------------------------------------------------------------
+# tensor io
+# ---------------------------------------------------------------------------
+
+
+@given(st.sampled_from(["<f4", "<i4", "u1", "<f8", "<i8"]),
+       st.lists(st.integers(1, 5), min_size=1, max_size=3),
+       st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_tns_roundtrip(dtype, dims, seed):
+    import tempfile
+    from pathlib import Path
+
+    rng = np.random.default_rng(seed)
+    arr = (rng.normal(size=dims) * 10).astype(np.dtype(dtype))
+    with tempfile.TemporaryDirectory() as d:
+        path = Path(d) / "t.tns"
+        TIO.write_tensor(path, arr)
+        back = TIO.read_tensor(path)
+    np.testing.assert_array_equal(back, arr)
+
+
+def test_tns_bool_coercion(tmp_path):
+    arr = np.array([[True, False], [False, True]])
+    TIO.write_tensor(tmp_path / "b.tns", arr)
+    back = TIO.read_tensor(tmp_path / "b.tns")
+    assert back.dtype == np.uint8
+    np.testing.assert_array_equal(back, arr.astype(np.uint8))
+
+
+def test_tns_bad_magic(tmp_path):
+    p = tmp_path / "bad.tns"
+    p.write_bytes(b"NOPE1234")
+    with pytest.raises(ValueError):
+        TIO.read_tensor(p)

@@ -1,0 +1,126 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs the pure-jnp oracle.
+
+hypothesis sweeps shapes/seeds; assert_allclose against ref.py is THE
+correctness signal for the kernels that end up inside the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dsa_attention as K
+from compile.kernels import predictor as P
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+@st.composite
+def attn_shapes(draw):
+    l = draw(st.sampled_from([4, 16, 60, 64, 128]))
+    dk = draw(st.sampled_from([4, 8, 32]))
+    dv = draw(st.sampled_from([4, 8, 32]))
+    seed = draw(st.integers(0, 2**30))
+    return l, dk, dv, seed
+
+
+@given(attn_shapes())
+@settings(**SETTINGS)
+def test_dense_attention_matches_ref(shape):
+    l, dk, dv, seed = shape
+    q, k, v = rand(seed, l, dk), rand(seed + 1, l, dk), rand(seed + 2, l, dv)
+    got = K.dense_attention(q, k, v)
+    want = ref.dense_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(attn_shapes(), st.floats(0.5, 0.99))
+@settings(**SETTINGS)
+def test_masked_attention_matches_ref(shape, sparsity):
+    l, dk, dv, seed = shape
+    q, k, v = rand(seed, l, dk), rand(seed + 1, l, dk), rand(seed + 2, l, dv)
+    keep = max(1, int(round(l * (1 - sparsity))))
+    mask = ref.topk_mask(np.asarray(q @ k.T), keep)
+    got = K.masked_attention(q, k, v, jnp.asarray(mask))
+    want = ref.masked_attention(q, k, v, jnp.asarray(mask))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@given(attn_shapes())
+@settings(**SETTINGS)
+def test_masked_equals_dense_with_full_mask(shape):
+    l, dk, dv, seed = shape
+    q, k, v = rand(seed, l, dk), rand(seed + 1, l, dk), rand(seed + 2, l, dv)
+    full = jnp.ones((l, l), jnp.float32)
+    np.testing.assert_allclose(
+        K.masked_attention(q, k, v, full),
+        K.dense_attention(q, k, v),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+@given(st.sampled_from([8, 32, 64, 100]), st.sampled_from([4, 8, 16]),
+       st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_predictor_scores_matches_matmul(l, kdim, seed):
+    qt, kt = rand(seed, l, kdim), rand(seed + 1, l, kdim)
+    got = P.predictor_scores(qt, kt)
+    np.testing.assert_allclose(got, qt @ kt.T, rtol=1e-5, atol=1e-5)
+
+
+@given(st.sampled_from([8, 60, 64]), st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_sparse_softmax_matches_ref(l, seed):
+    s = rand(seed, l, l)
+    mask = ref.topk_mask(np.asarray(s), max(1, l // 8))
+    got = K.sparse_softmax(s, jnp.asarray(mask))
+    want = ref.sparse_softmax(s, jnp.asarray(mask))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # rows sum to 1 and masked entries are exactly zero
+    np.testing.assert_allclose(np.asarray(got).sum(-1), 1.0, rtol=1e-5)
+    assert np.all(np.asarray(got)[np.asarray(mask) == 0] == 0.0)
+
+
+@given(st.sampled_from([16, 64]), st.integers(1, 8), st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_threshold_mask_matches_topk(l, k, seed):
+    s = rand(seed, l, l)
+    k = min(k, l)
+    kth = jnp.sort(s, axis=-1)[:, l - k][:, None]
+    got = P.threshold_mask(s, kth)
+    want = ref.topk_mask(np.asarray(s), k)
+    np.testing.assert_allclose(got, want)
+
+
+def test_block_size_invariance():
+    """Tiling must not change results: sweep block_q including ragged l."""
+    q, k, v = rand(0, 96, 16), rand(1, 96, 16), rand(2, 96, 16)
+    base = K.dense_attention(q, k, v, block_q=96)
+    for bq in (1, 3, 32, 48, 64):
+        got = K.dense_attention(q, k, v, block_q=bq)
+        np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-6)
+
+
+def test_mask_neg_saturates_but_is_finite():
+    """Masked weights must vanish after softmax yet stay finite."""
+    q, k, v = rand(0, 8, 4), rand(1, 8, 4), rand(2, 8, 4)
+    mask = jnp.zeros((8, 8)).at[:, 0].set(1.0)
+    out = K.masked_attention(q, k, v, mask)
+    assert np.all(np.isfinite(np.asarray(out)))
+    # with only column 0 kept, output rows equal v[0]
+    np.testing.assert_allclose(out, jnp.broadcast_to(v[0], out.shape), rtol=1e-4, atol=1e-5)
+
+
+def test_oracle_sparsity_of_softmax_weights():
+    """Sec. 2: most post-softmax weights are tiny (motivating Table 1)."""
+    q, k = rand(0, 128, 32), rand(1, 128, 32)
+    a = ref.masked_attention_weights(q, k, jnp.ones((128, 128)))
+    frac_small = float((np.asarray(a) < 0.01).mean())
+    assert frac_small > 0.7

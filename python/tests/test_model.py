@@ -1,0 +1,114 @@
+"""L2 model: init/apply across attention kinds, pooling, dual encoder,
+loss helpers, smart predictor init."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import attention as A
+from compile import model as M
+from compile.attention import DsaConfig
+from compile.model import ModelConfig
+
+CFG = ModelConfig(seq_len=64, d_model=32, n_heads=2, n_layers=2, d_ff=64)
+
+
+def toks(seed=0, l=64):
+    return jax.random.randint(jax.random.PRNGKey(seed), (l,), 0, 255)
+
+
+@pytest.mark.parametrize("kind", list(A.ALL_BASELINES))
+def test_apply_all_kinds(kind):
+    cfg = CFG._replace(attn_kind=kind, dsa=DsaConfig(sparsity=0.9))
+    p = M.init_params(jax.random.PRNGKey(0), cfg)
+    logits, _ = M.apply(p, toks(), cfg)
+    assert logits.shape == (cfg.n_classes,)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_param_shapes_dsa():
+    cfg = CFG._replace(attn_kind="dsa", dsa=DsaConfig(sigma=0.5))
+    p = M.init_params(jax.random.PRNGKey(0), cfg)
+    layer = p["layers"][0]
+    kdim = layer["pred"]["proj"].shape[1]
+    assert kdim == max(4, int(round(0.5 * 32)))
+    assert layer["pred"]["wq"].shape == (cfg.n_heads, kdim, kdim)
+
+
+def test_dual_encoder_retrieval():
+    cfg = CFG._replace(dual=True)
+    p = M.init_params(jax.random.PRNGKey(0), cfg)
+    pair = jnp.stack([toks(0), toks(1)])
+    logits, _ = M.apply(p, pair, cfg)
+    assert logits.shape == (cfg.n_classes,)
+
+
+def test_pooling_modes_differ():
+    cfg_first = CFG._replace(pool="first")
+    cfg_mean = CFG._replace(pool="mean")
+    p = M.init_params(jax.random.PRNGKey(0), cfg_first)
+    l1, _ = M.apply(p, toks(), cfg_first)
+    l2, _ = M.apply(p, toks(), cfg_mean)
+    assert not np.allclose(np.asarray(l1), np.asarray(l2))
+
+
+def test_batched_apply_matches_single():
+    p = M.init_params(jax.random.PRNGKey(0), CFG)
+    batch = jnp.stack([toks(0), toks(1), toks(2)])
+    lb = M.batched_apply(p, batch, CFG)
+    for i in range(3):
+        li, _ = M.apply(p, batch[i], CFG)
+        np.testing.assert_allclose(lb[i], li, rtol=1e-5, atol=1e-6)
+
+
+def test_aux_collection_and_mse_loss():
+    cfg = CFG._replace(attn_kind="dsa", dsa=DsaConfig(sparsity=0.9))
+    p = M.init_params(jax.random.PRNGKey(0), cfg)
+    _, aux = M.apply(p, toks(), cfg, collect_aux=True)
+    assert len(aux) == cfg.n_layers
+    assert len(aux[0]) == cfg.n_heads
+    assert "approx_scores" in aux[0][0]
+    mse = M.mse_loss_from_aux(aux)
+    assert float(mse) > 0.0
+    # dense model has no approx scores -> zero MSE
+    pd = M.init_params(jax.random.PRNGKey(0), CFG)
+    _, daux = M.apply(pd, toks(), CFG, collect_aux=True)
+    assert float(M.mse_loss_from_aux(daux)) == 0.0
+
+
+def test_prediction_accuracy_bounds():
+    cfg = CFG._replace(attn_kind="dsa", dsa=DsaConfig(sparsity=0.9))
+    p = M.init_params(jax.random.PRNGKey(0), cfg)
+    _, aux = M.apply(p, toks(), cfg, collect_aux=True)
+    accs = M.prediction_accuracy_from_aux(aux, keep=6)
+    assert len(accs) == cfg.n_layers
+    for a in accs:
+        assert 0.0 <= float(a) <= 1.0
+
+
+def test_smart_init_predictor_improves_mse():
+    cfg = CFG._replace(attn_kind="dsa", dsa=DsaConfig(sparsity=0.9, sigma=0.5))
+    p = M.init_params(jax.random.PRNGKey(0), cfg)
+    _, aux0 = M.apply(p, toks(), cfg, collect_aux=True)
+    mse0 = float(M.mse_loss_from_aux(aux0))
+    p = M.smart_init_predictor(p, cfg)
+    _, aux1 = M.apply(p, toks(), cfg, collect_aux=True)
+    mse1 = float(M.mse_loss_from_aux(aux1))
+    assert mse1 < mse0, f"smart init should reduce MSE: {mse0} -> {mse1}"
+
+
+def test_gradients_flow_to_predictor():
+    cfg = CFG._replace(attn_kind="dsa", dsa=DsaConfig(sparsity=0.9))
+    p = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    def loss(params):
+        _, aux = M.apply(params, toks(), cfg, collect_aux=True)
+        return M.mse_loss_from_aux(aux)
+
+    g = jax.grad(loss)(p)
+    gnorm = float(jnp.abs(g["layers"][0]["pred"]["wq"]).sum())
+    assert gnorm > 0.0
+    # MSE also shapes the model's own scores (Sec. 3.2 joint optimization)
+    wq_norm = float(jnp.abs(g["layers"][0]["wq"]["w"]).sum())
+    assert wq_norm > 0.0

@@ -1,0 +1,133 @@
+"""Trainer mechanics + AOT export path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile import train as T
+from compile.aot import export, to_hlo_text
+from compile.attention import DsaConfig
+from compile.model import ModelConfig
+
+SMALL = ModelConfig(seq_len=32, d_model=16, n_heads=2, n_layers=1, d_ff=32)
+
+
+def test_adam_minimizes_quadratic():
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    opt = T.adam_init(params)
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, opt = T.adam_update(params, g, opt, lr=0.05)
+    assert float(loss(params)) < 1e-3
+
+
+def test_warmup_schedule_shape():
+    lrs = [float(T.warmup_rsqrt(s, 1.0, 100)) for s in (1, 50, 100, 400)]
+    assert lrs[0] < lrs[1] < lrs[2]  # warming up
+    assert lrs[3] < lrs[2]  # decaying
+    assert abs(lrs[2] - 1.0) < 1e-6
+
+
+def test_train_smoke_improves_loss():
+    task = D.text_task(32)
+    params, hist = T.train(SMALL, task, 30, batch=8, log_every=5, verbose=False)
+    losses = [h["loss"] for h in hist]
+    # per-step loss on a 16-dim model is noisy; the learnability signal is
+    # covered by the trained artifacts (integration tests). Here: training
+    # runs to completion, stays finite, and stays in a sane CE range.
+    assert len(losses) >= 6
+    assert all(np.isfinite(l) for l in losses)
+    assert all(l < 5.0 for l in losses), f"diverged: {losses}"
+
+
+def test_train_dsa_phases_run():
+    task = D.text_task(32)
+    cfg = SMALL._replace(attn_kind="dsa", dsa=DsaConfig(sparsity=0.8, sigma=0.5))
+    params, hist = T.train(
+        cfg, task, 9, batch=4, dense_steps=3, pred_warmup=3,
+        log_every=1, verbose=False,
+    )
+    assert len(hist) >= 9
+    # predictor warm-up phase reports nonzero MSE
+    assert any(h["mse"] > 0 for h in hist)
+
+
+def test_pred_only_freezes_model_params():
+    task = D.text_task(32)
+    cfg = SMALL._replace(attn_kind="dsa", dsa=DsaConfig(sparsity=0.8, sigma=0.5))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    before = np.asarray(params["layers"][0]["wq"]["w"]).copy()
+    pred_before = np.asarray(params["layers"][0]["pred"]["wq"]).copy()
+    params2, _ = T.train(
+        cfg, task, 4, params=params, batch=4, pred_warmup=3,
+        log_every=10, verbose=False,
+    )
+    # smart init + warm-up trains only pred during warm-up steps; the model
+    # weights may only move in the single joint step at the end.
+    assert not np.array_equal(
+        pred_before, np.asarray(params2["layers"][0]["pred"]["wq"])
+    )
+    # wq moved at most slightly (1 joint step at tiny lr)
+    drift = np.abs(before - np.asarray(params2["layers"][0]["wq"]["w"])).max()
+    assert drift < 0.05, f"model drifted {drift} during warm-up-dominated run"
+
+
+def test_evaluate_counts_accuracy():
+    task = D.text_task(32)
+    params = M.init_params(jax.random.PRNGKey(0), SMALL)
+    acc = T.evaluate(params, SMALL, task, n=32, batch=8)
+    assert 0.0 <= acc <= 1.0
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = M.init_params(jax.random.PRNGKey(0), SMALL)
+    T.save_params(params, tmp_path / "p.pkl")
+    back = T.load_params(tmp_path / "p.pkl")
+    np.testing.assert_allclose(params["embed"], back["embed"])
+
+
+# ---------------------------------------------------------------------------
+# AOT export
+# ---------------------------------------------------------------------------
+
+
+def test_hlo_text_contains_constants():
+    w = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+    lowered = jax.jit(lambda x: (x @ w,)).lower(
+        jax.ShapeDtypeStruct((2, 3), jnp.float32)
+    )
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "constant({...}" not in text  # large constants must be printed
+    assert "11" in text  # the weight payload survived
+
+
+def test_export_writes_metadata(tmp_path):
+    fn = lambda x: (x * 2.0,)
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    meta = export(fn, (spec,), tmp_path / "m.hlo.txt")
+    assert meta["inputs"][0]["shape"] == [4, 4]
+    assert meta["outputs"][0]["shape"] == [4, 4]
+    assert (tmp_path / "m.hlo.txt").read_text().startswith("HloModule")
+
+
+def test_classifier_export_with_pallas_kernels(tmp_path):
+    """The full model (with the Pallas masked-attention path) must lower."""
+    cfg = SMALL._replace(
+        attn_kind="dsa",
+        dsa=DsaConfig(sparsity=0.8, sigma=0.5, use_pallas=True),
+    )
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    const = jax.tree.map(jnp.asarray, params)
+
+    def fwd(tokens):
+        return (M.batched_apply(const, tokens, cfg),)
+
+    spec = jax.ShapeDtypeStruct((2, cfg.seq_len), jnp.int32)
+    meta = export(fwd, (spec,), tmp_path / "cls.hlo.txt")
+    assert meta["outputs"][0]["shape"] == [2, cfg.n_classes]
+    assert meta["hlo_bytes"] > 1000

@@ -1,0 +1,126 @@
+//! Regenerates the paper's analytical results: Fig. 7 (MAC breakdown),
+//! Fig. 8 (relative energy), Table 4 (kernel speedups), Fig. 10 (sparse
+//! softmax) and the Sec. 4.4 headline reduction range, and micro-times the
+//! models themselves. `harness = false` (criterion is unavailable offline;
+//! see util::bench).
+
+use dsa_serve::costmodel::{energy, gpu, macs};
+use dsa_serve::util::bench::Bench;
+
+fn main() {
+    println!("=== Fig. 7: MAC breakdown per task/model (GMACs) ===");
+    println!(
+        "{:<18} {:>8} {:>10} {:>8} {:>8} {:>10}",
+        "task/model", "linear", "attention", "other", "pred", "reduction"
+    );
+    let shapes = [
+        ("text-2k", macs::LayerShape::lra_text()),
+        ("text-4k", macs::LayerShape::lra_text_4k()),
+        ("retrieval-4k", macs::LayerShape::lra_retrieval()),
+        ("image-1k", macs::LayerShape::lra_image()),
+    ];
+    let mut reductions = Vec::new();
+    for (name, s) in &shapes {
+        let d = macs::dense_macs(s);
+        println!(
+            "{:<18} {:>8.2} {:>10.2} {:>8.2} {:>8.2} {:>10}",
+            format!("{name}/dense"),
+            d.linear / 1e9,
+            d.attention / 1e9,
+            d.other / 1e9,
+            0.0,
+            "1.00x"
+        );
+        for sp in [0.90, 0.95, 0.99] {
+            let m = macs::dsa_macs(s, sp, 0.25);
+            let r = macs::reduction_factor(s, sp, 0.25);
+            reductions.push(r);
+            println!(
+                "{:<18} {:>8.2} {:>10.2} {:>8.2} {:>8.2} {:>9.2}x",
+                format!("{name}/dsa{}", (sp * 100.0) as u32),
+                m.linear / 1e9,
+                m.attention / 1e9,
+                m.other / 1e9,
+                m.prediction / 1e9,
+                r
+            );
+        }
+    }
+    let lo = reductions.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = reductions.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "\nheadline: computation reduction spans {:.2}x – {:.2}x (paper: 2.79x – 4.35x)",
+        lo, hi
+    );
+
+    println!("\n=== Sec. 3.3: prediction overhead (INT4-weighted, % of dense) ===");
+    for (name, s) in &shapes {
+        let d = macs::dense_macs(s);
+        let m = macs::dsa_macs(s, 0.95, 0.25);
+        println!(
+            "  {:<14} {:.2}%   (paper: 1.17% – 1.33%)",
+            name,
+            100.0 * m.prediction_overhead(&d) * (4.0 / 32.0)
+        );
+    }
+
+    println!("\n=== Fig. 8: relative energy, DSA-95 sigma=0.25 INT4 ===");
+    for (name, s) in &shapes {
+        let e = energy::dsa_energy(s, 0.95, 0.25, "int4");
+        println!(
+            "  {:<14} {:.3}  (main {:.3} + pred {:.3})",
+            name,
+            e.relative(),
+            e.main_path / e.baseline,
+            e.prediction / e.baseline
+        );
+    }
+
+    println!("\n=== Table 4: kernel speedup over cuBLAS GEMM @90% (V100 model) ===");
+    let sh = gpu::AttnShape::table4();
+    println!(
+        "{:<24} {:>10} {:>10}",
+        "sparsity pattern", "SpMM", "SDDMM"
+    );
+    for (fmt, prec, label, paper) in [
+        (gpu::Format::ColVec(4), gpu::Precision::Fp16, "vec 1x4 (fp16)", (1.57, 0.94)),
+        (gpu::Format::ColVec(8), gpu::Precision::Fp16, "vec 1x8 (fp16)", (1.94, 1.15)),
+        (gpu::Format::FineGrained, gpu::Precision::Fp32, "fine-grained (fp32)", (1.85, 1.09)),
+    ] {
+        let spmm = gpu::kernel_speedup("spmm", sh, fmt, prec, 0.90);
+        let sddmm = gpu::kernel_speedup("sddmm", sh, fmt, prec, 0.90);
+        println!(
+            "{:<24} {:>8.2}x {:>8.2}x   (paper: {:.2}x / {:.2}x)",
+            label, spmm, sddmm, paper.0, paper.1
+        );
+    }
+
+    println!("\n=== Fig. 10: sparse softmax speedup (b=16 h=4 l=2000) ===");
+    for s in [0.5, 0.75, 0.9, 0.95, 0.99, 0.999, 0.9999] {
+        println!(
+            "  sparsity {:>6.2}%: {:>8.1}x",
+            s * 100.0,
+            gpu::softmax_speedup(sh, s)
+        );
+    }
+    println!("  (paper range: 3.0x – 709.9x across its enforced ratios)");
+
+    println!("\n=== model evaluation micro-benchmarks ===");
+    let mut b = Bench::new();
+    b.run("costmodel/dense_macs", || {
+        std::hint::black_box(macs::dense_macs(&macs::LayerShape::lra_text()));
+    });
+    b.run("costmodel/dsa_macs", || {
+        std::hint::black_box(macs::dsa_macs(&macs::LayerShape::lra_text(), 0.95, 0.25));
+    });
+    b.run("costmodel/kernel_speedup", || {
+        std::hint::black_box(gpu::kernel_speedup(
+            "spmm",
+            sh,
+            gpu::Format::ColVec(8),
+            gpu::Precision::Fp16,
+            0.9,
+        ));
+    });
+    b.flush_jsonl("costmodel");
+}

@@ -1,0 +1,115 @@
+//! L1 kernel micro-bench at the runtime level: executes the standalone
+//! AOT-lowered Pallas kernel modules (dense attention, masked attention,
+//! sparse softmax) through PJRT with generated inputs and masks at several
+//! sparsity ratios.
+//!
+//! Numbers are CPU-interpreter timings — NOT a TPU performance proxy (the
+//! kernels are lowered with interpret=True; see DESIGN.md
+//! §Hardware-Adaptation). What this bench validates is that the kernels
+//! compose end to end through the Rust runtime and how the *runtime-level*
+//! cost scales with shape.
+
+use std::time::Duration;
+
+use dsa_serve::runtime::registry::{Manifest, Registry};
+use dsa_serve::runtime::Arg;
+use dsa_serve::sparse::topk;
+use dsa_serve::util::bench::Bench;
+use dsa_serve::util::rng::Rng;
+
+fn main() {
+    let manifest = match Manifest::open("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            println!("skipping bench_kernels: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let registry = Registry::from_manifest(manifest.clone()).expect("registry");
+    let l = manifest.task_seq_len;
+    let (dk, dv) = (32usize, 32usize);
+    let mut rng = Rng::new(17);
+    let randv = |n: usize, rng: &mut Rng| -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    };
+    let q = randv(l * dk, &mut rng);
+    let k = randv(l * dk, &mut rng);
+    let v = randv(l * dv, &mut rng);
+    let scores = randv(l * l, &mut rng);
+
+    let mut b = Bench::new().with_budget(Duration::from_secs(3));
+
+    if let Some(info) = manifest
+        .modules()
+        .iter()
+        .find(|m| m.name.starts_with("kernel_dense_attention"))
+    {
+        let exe = registry.load(&info.name).expect("compile dense kernel");
+        b.run("kernel/dense_attention", || {
+            let out = exe
+                .run_f32(&[
+                    Arg::f32(q.clone(), &[l, dk]),
+                    Arg::f32(k.clone(), &[l, dk]),
+                    Arg::f32(v.clone(), &[l, dv]),
+                ])
+                .expect("exec");
+            std::hint::black_box(out);
+        });
+    }
+
+    if let Some(info) = manifest
+        .modules()
+        .iter()
+        .find(|m| m.name.starts_with("kernel_masked_attention"))
+    {
+        let exe = registry.load(&info.name).expect("compile masked kernel");
+        for sparsity in [0.90f64, 0.95, 0.99] {
+            let keep = ((1.0 - sparsity) * l as f64).round().max(1.0) as usize;
+            let mask = topk::topk_mask_exact(&scores, l, l, keep);
+            let mut mf = vec![0f32; l * l];
+            for r in 0..l {
+                for c in mask.row_cols(r) {
+                    mf[r * l + c] = 1.0;
+                }
+            }
+            b.run(&format!("kernel/masked_attention/s{:.0}", sparsity * 100.0), || {
+                let out = exe
+                    .run_f32(&[
+                        Arg::f32(q.clone(), &[l, dk]),
+                        Arg::f32(k.clone(), &[l, dk]),
+                        Arg::f32(v.clone(), &[l, dv]),
+                        Arg::f32(mf.clone(), &[l, l]),
+                    ])
+                    .expect("exec");
+                std::hint::black_box(out);
+            });
+        }
+    }
+
+    if let Some(info) = manifest
+        .modules()
+        .iter()
+        .find(|m| m.name.starts_with("kernel_sparse_softmax"))
+    {
+        let exe = registry.load(&info.name).expect("compile softmax kernel");
+        let mask = topk::topk_mask_exact(&scores, l, l, l / 10);
+        let mut mf = vec![0f32; l * l];
+        for r in 0..l {
+            for c in mask.row_cols(r) {
+                mf[r * l + c] = 1.0;
+            }
+        }
+        b.run("kernel/sparse_softmax/s90", || {
+            let out = exe
+                .run_f32(&[
+                    Arg::f32(scores.clone(), &[l, l]),
+                    Arg::f32(mf.clone(), &[l, l]),
+                ])
+                .expect("exec");
+            std::hint::black_box(out);
+        });
+    }
+
+    println!("\n(CPU interpret-mode timings; TPU perf is estimated analytically — DESIGN.md)");
+    b.flush_jsonl("kernels");
+}

@@ -1,0 +1,123 @@
+//! End-to-end serving benchmark over the AOT artifacts: closed-loop
+//! executable latency per (variant, batch bucket), dynamic-batcher
+//! overhead, and open-loop throughput per variant. Regenerates the serving
+//! rows recorded in EXPERIMENTS.md.
+//!
+//! Requires `make artifacts`. harness = false (no criterion offline).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
+use dsa_serve::runtime::registry::{Manifest, Registry};
+use dsa_serve::runtime::Arg;
+use dsa_serve::util::bench::Bench;
+use dsa_serve::util::stats::Summary;
+use dsa_serve::workload::{Arrival, Workload, WorkloadConfig};
+
+fn main() {
+    let manifest = match Manifest::open("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            println!("skipping bench_serving: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let seq_len = manifest.task_seq_len;
+    let mut b = Bench::new().with_budget(Duration::from_secs(4));
+
+    // ---- raw executable latency per variant x bucket --------------------
+    println!("=== raw PJRT executable latency (no batcher) ===");
+    let registry = Registry::from_manifest(manifest.clone()).expect("registry");
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len,
+        seed: 5,
+        ..Default::default()
+    });
+    for variant in &manifest.variants {
+        for &bucket in &manifest.batch_buckets {
+            let Some(info) = manifest.classifier(variant, bucket) else {
+                continue;
+            };
+            let exe = registry.load(&info.name).expect("compile");
+            let mut tokens: Vec<i32> = Vec::with_capacity(bucket * seq_len);
+            for _ in 0..bucket {
+                tokens.extend(wl.next_request().tokens);
+            }
+            b.run(&format!("exec/{variant}/b{bucket}"), || {
+                let out = exe
+                    .run_f32(&[Arg::i32(tokens.clone(), &[bucket, seq_len])])
+                    .expect("execute");
+                std::hint::black_box(out);
+            });
+        }
+    }
+
+    // ---- per-request amortized cost at each bucket (batching benefit) ---
+    println!("\n=== per-request amortized latency (batch benefit) ===");
+    for variant in &manifest.variants {
+        let mut line = format!("{variant:<8}");
+        for &bucket in &manifest.batch_buckets {
+            if let Some(r) = b
+                .results()
+                .iter()
+                .find(|r| r.name == format!("exec/{variant}/b{bucket}"))
+            {
+                line.push_str(&format!(
+                    "  b{}: {:.2} ms/req",
+                    bucket,
+                    r.mean_s * 1e3 / bucket as f64
+                ));
+            }
+        }
+        println!("{line}");
+    }
+    drop(registry);
+
+    // ---- engine: closed-loop throughput + batcher overhead --------------
+    println!("\n=== engine closed-loop (dynamic batcher) ===");
+    for variant in &manifest.variants {
+        let engine = Arc::new(
+            Engine::start(
+                manifest.clone(),
+                EngineConfig {
+                    default_variant: variant.clone(),
+                    policy: BatchPolicy {
+                        max_batch: *manifest.batch_buckets.iter().max().unwrap_or(&8),
+                        max_wait: Duration::from_millis(2),
+                        queue_cap: 4096,
+                    },
+                    preload: true,
+                },
+            )
+            .expect("engine"),
+        );
+        let n = 64;
+        let mut wl = Workload::new(WorkloadConfig {
+            seq_len,
+            seed: 6,
+            arrival: Arrival::Closed,
+            ..Default::default()
+        });
+        let trace = wl.trace(n);
+        let t0 = Instant::now();
+        let rxs: Vec<_> = trace
+            .into_iter()
+            .map(|r| engine.submit(r.tokens, None).expect("submit"))
+            .collect();
+        let mut lat = Summary::new();
+        for rx in rxs {
+            let resp = rx.recv().expect("resp");
+            lat.add(resp.latency.as_secs_f64());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "engine/{variant:<7} {:>6.1} req/s  p50 {:>7.2} ms  p95 {:>7.2} ms  (n={n})",
+            n as f64 / wall,
+            lat.percentile(50.0) * 1e3,
+            lat.percentile(95.0) * 1e3,
+        );
+    }
+
+    b.flush_jsonl("serving");
+}

@@ -1,0 +1,210 @@
+//! Dynamic batcher: groups queued requests into batches under a
+//! max-batch-size / max-wait policy (vLLM-router-style continuous batching,
+//! simplified to the encoder-classifier setting where every request is one
+//! fixed-length forward pass).
+//!
+//! Pure data structure — no threads — so the policy is unit-testable; the
+//! engine drives it from its worker loop.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::InferRequest;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Hard cap on requests per batch (usually the largest compiled bucket).
+    pub max_batch: usize,
+    /// Oldest request may wait at most this long before the batch is cut.
+    pub max_wait: Duration,
+    /// Queue capacity; submissions beyond this are rejected (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// FIFO queue with deadline-or-full batch cutting, grouped by variant.
+#[derive(Debug)]
+pub struct Batcher {
+    pub policy: BatchPolicy,
+    queue: VecDeque<InferRequest>,
+    rejected: u64,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            queue: VecDeque::new(),
+            rejected: 0,
+        }
+    }
+
+    /// Enqueue; Err(req) when the queue is full (backpressure signal).
+    pub fn push(&mut self, req: InferRequest) -> Result<(), InferRequest> {
+        if self.queue.len() >= self.policy.queue_cap {
+            self.rejected += 1;
+            return Err(req);
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// Deadline by which a batch must be cut (enqueue time of the oldest
+    /// request + max_wait), if any request is queued.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|r| r.enqueued + self.policy.max_wait)
+    }
+
+    /// Should a batch be cut now? True when the head-of-line request has
+    /// waited out max_wait, or a full max_batch of *same-variant* requests
+    /// is ready at the head.
+    pub fn ready(&self, now: Instant) -> bool {
+        match self.queue.front() {
+            None => false,
+            Some(head) => {
+                if now >= head.enqueued + self.policy.max_wait {
+                    return true;
+                }
+                // Count all queued same-variant requests (cut() collects
+                // them regardless of position, preserving FIFO order).
+                let head_variant = &head.variant;
+                self.queue
+                    .iter()
+                    .filter(|r| &r.variant == head_variant)
+                    .count()
+                    >= self.policy.max_batch
+            }
+        }
+    }
+
+    /// Cut the next batch: the head request plus up to max_batch-1 more
+    /// *with the same variant*, preserving FIFO order for that variant.
+    /// Requests of other variants keep their queue positions.
+    pub fn cut(&mut self) -> Vec<InferRequest> {
+        let Some(head) = self.queue.pop_front() else {
+            return Vec::new();
+        };
+        let variant = head.variant.clone();
+        let mut batch = vec![head];
+        let mut i = 0;
+        while i < self.queue.len() && batch.len() < self.policy.max_batch {
+            if self.queue[i].variant == variant {
+                batch.push(self.queue.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn req(id: u64, variant: Option<&str>) -> InferRequest {
+        let mut r = InferRequest::new(id, vec![0; 4]);
+        if let Some(v) = variant {
+            r = r.with_variant(v);
+        }
+        r
+    }
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+            queue_cap: 16,
+        }
+    }
+
+    #[test]
+    fn cuts_on_full_batch() {
+        let mut b = Batcher::new(policy(2, 1000));
+        b.push(req(1, None)).unwrap();
+        assert!(!b.ready(Instant::now()));
+        b.push(req(2, None)).unwrap();
+        assert!(b.ready(Instant::now()));
+        let batch = b.cut();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn cuts_on_deadline() {
+        let mut b = Batcher::new(policy(8, 0));
+        b.push(req(1, None)).unwrap();
+        // max_wait = 0 → immediately ready even though batch not full
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.cut().len(), 1);
+    }
+
+    #[test]
+    fn groups_by_variant() {
+        let mut b = Batcher::new(policy(4, 1000));
+        b.push(req(1, Some("dense"))).unwrap();
+        b.push(req(2, Some("dsa90"))).unwrap();
+        b.push(req(3, Some("dense"))).unwrap();
+        let batch = b.cut();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        // dsa90 request still queued, in order
+        assert_eq!(b.len(), 1);
+        let rest = b.cut();
+        assert_eq!(rest[0].id, 2);
+    }
+
+    #[test]
+    fn full_batch_of_same_variant_triggers_ready() {
+        let mut b = Batcher::new(policy(2, 1000));
+        b.push(req(1, Some("dense"))).unwrap();
+        b.push(req(2, Some("dsa90"))).unwrap();
+        assert!(!b.ready(Instant::now())); // head variant has only 1 queued
+        b.push(req(3, Some("dense"))).unwrap();
+        assert!(b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn backpressure_rejects() {
+        let mut b = Batcher::new(BatchPolicy {
+            queue_cap: 2,
+            ..policy(8, 1000)
+        });
+        b.push(req(1, None)).unwrap();
+        b.push(req(2, None)).unwrap();
+        assert!(b.push(req(3, None)).is_err());
+        assert_eq!(b.rejected(), 1);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut b = Batcher::new(policy(3, 0));
+        for i in 0..5 {
+            b.push(req(i, None)).unwrap();
+        }
+        assert_eq!(b.cut().len(), 3);
+        assert_eq!(b.cut().len(), 2);
+    }
+}

@@ -1,0 +1,326 @@
+//! Serving engine: the L3 hot path.
+//!
+//! A submission channel feeds a single worker thread (the testbed is a
+//! one-core CPU PJRT backend, so more executor threads would only add
+//! contention). The worker drives the [`Batcher`]: it sleeps until the
+//! head-of-line deadline or a full batch, cuts a batch of same-variant
+//! requests, pads it to the nearest compiled bucket, executes the PJRT
+//! executable, and fans responses back through per-request channels.
+//!
+//! Python is never involved: executables were AOT-compiled by
+//! `make artifacts`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::request::{InferRequest, InferResponse};
+use crate::runtime::registry::Manifest;
+use crate::runtime::{Arg, Registry};
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub default_variant: String,
+    pub policy: BatchPolicy,
+    /// Eagerly compile all buckets of the default variant at startup.
+    pub preload: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            default_variant: "dsa90".to_string(),
+            policy: BatchPolicy::default(),
+            preload: true,
+        }
+    }
+}
+
+enum Msg {
+    Request(InferRequest, Sender<InferResponse>),
+    Shutdown,
+}
+
+/// Handle to a running engine.
+pub struct Engine {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+    seq_len: usize,
+}
+
+impl Engine {
+    /// Start the engine over a parsed manifest. The PJRT client and all
+    /// compiled executables are created **inside** the worker thread — the
+    /// `xla` crate's handles are not `Send`, so they must never cross
+    /// threads. Startup errors (bad artifacts, compile failures during
+    /// preload) are reported synchronously through a channel.
+    pub fn start(manifest: Manifest, cfg: EngineConfig) -> Result<Engine> {
+        let metrics = Arc::new(Metrics::new());
+        let running = Arc::new(AtomicBool::new(true));
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let seq_len = manifest.task_seq_len;
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let worker = {
+            let metrics = metrics.clone();
+            let running = running.clone();
+            std::thread::Builder::new()
+                .name("dsa-engine".to_string())
+                .spawn(move || {
+                    let registry = match Registry::from_manifest(manifest) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    if cfg.preload {
+                        match registry.preload_classifiers(&cfg.default_variant) {
+                            Ok(0) => {
+                                let _ = ready_tx.send(Err(anyhow::anyhow!(
+                                    "no classifier modules for variant {}",
+                                    cfg.default_variant
+                                )));
+                                return;
+                            }
+                            Ok(_) => {}
+                            Err(e) => {
+                                let _ = ready_tx.send(Err(e.context("preload")));
+                                return;
+                            }
+                        }
+                    }
+                    let _ = ready_tx.send(Ok(()));
+                    worker_loop(registry, cfg, rx, metrics, running)
+                })
+                .context("spawning engine worker")?
+        };
+        ready_rx
+            .recv()
+            .context("engine worker died during startup")??;
+
+        Ok(Engine {
+            tx,
+            worker: Some(worker),
+            next_id: AtomicU64::new(1),
+            metrics,
+            running,
+            seq_len,
+        })
+    }
+
+    /// Expected token-sequence length for requests.
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// Submit a request; returns the channel delivering its response.
+    pub fn submit(
+        &self,
+        tokens: Vec<i32>,
+        variant: Option<String>,
+    ) -> Result<Receiver<InferResponse>> {
+        if tokens.len() != self.seq_len {
+            bail!(
+                "request length {} != model sequence length {}",
+                tokens.len(),
+                self.seq_len
+            );
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut req = InferRequest::new(id, tokens);
+        req.variant = variant;
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Request(req, rtx))
+            .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn infer(&self, tokens: Vec<i32>, variant: Option<String>) -> Result<InferResponse> {
+        let rx = self.submit(tokens, variant)?;
+        rx.recv().context("engine dropped request")
+    }
+
+    pub fn shutdown(&mut self) {
+        if self.running.swap(false, Ordering::SeqCst) {
+            let _ = self.tx.send(Msg::Shutdown);
+            if let Some(h) = self.worker.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(
+    registry: Registry,
+    cfg: EngineConfig,
+    rx: Receiver<Msg>,
+    metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+) {
+    let mut batcher = Batcher::new(cfg.policy.clone());
+    // Response channels parked by request id.
+    let mut waiters: std::collections::HashMap<u64, Sender<InferResponse>> =
+        std::collections::HashMap::new();
+
+    'outer: while running.load(Ordering::SeqCst) {
+        // Sleep until the next deadline (or a message arrives).
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Request(req, rtx)) => {
+                let id = req.id;
+                match batcher.push(req) {
+                    Ok(()) => {
+                        waiters.insert(id, rtx);
+                    }
+                    Err(_rejected) => {
+                        metrics.record_rejected(1);
+                        drop(rtx); // receiver sees disconnect = rejection
+                    }
+                }
+                // Drain whatever else is already queued without sleeping.
+                while let Ok(msg) = rx.try_recv() {
+                    match msg {
+                        Msg::Request(req, rtx) => {
+                            let id = req.id;
+                            match batcher.push(req) {
+                                Ok(()) => {
+                                    waiters.insert(id, rtx);
+                                }
+                                Err(_) => metrics.record_rejected(1),
+                            }
+                        }
+                        Msg::Shutdown => break 'outer,
+                    }
+                }
+            }
+            Ok(Msg::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+
+        let now = Instant::now();
+        while batcher.ready(now) {
+            let batch = batcher.cut();
+            if batch.is_empty() {
+                break;
+            }
+            execute_batch(&registry, &cfg, batch, &mut waiters, &metrics);
+        }
+    }
+
+    // Flush any stragglers on shutdown.
+    while !batcher.is_empty() {
+        let batch = batcher.cut();
+        execute_batch(&registry, &cfg, batch, &mut waiters, &metrics);
+    }
+}
+
+fn execute_batch(
+    registry: &Registry,
+    cfg: &EngineConfig,
+    batch: Vec<InferRequest>,
+    waiters: &mut std::collections::HashMap<u64, Sender<InferResponse>>,
+    metrics: &Metrics,
+) {
+    let variant = batch[0]
+        .variant
+        .clone()
+        .unwrap_or_else(|| cfg.default_variant.clone());
+    let n = batch.len();
+    let bucket = registry.manifest.bucket_for(n);
+    let seq_len = registry.manifest.task_seq_len;
+    let classes = registry.manifest.task_classes;
+
+    let Some(info) = registry.manifest.classifier(&variant, bucket) else {
+        log::error!("no classifier for variant={variant} bucket={bucket}");
+        for r in &batch {
+            waiters.remove(&r.id);
+        }
+        return;
+    };
+    let exe = match registry.load(&info.name) {
+        Ok(e) => e,
+        Err(e) => {
+            log::error!("loading {}: {e:#}", info.name);
+            for r in &batch {
+                waiters.remove(&r.id);
+            }
+            return;
+        }
+    };
+
+    // Pad to the bucket with the first request's tokens.
+    let mut tokens = Vec::with_capacity(bucket * seq_len);
+    for r in &batch {
+        tokens.extend_from_slice(&r.tokens);
+    }
+    for _ in n..bucket {
+        tokens.extend_from_slice(&batch[0].tokens);
+    }
+
+    let exec_start = Instant::now();
+    let out = match exe.run_f32(&[Arg::i32(tokens, &[bucket, seq_len])]) {
+        Ok(o) => o,
+        Err(e) => {
+            log::error!("executing {}: {e:#}", info.name);
+            for r in &batch {
+                waiters.remove(&r.id);
+            }
+            return;
+        }
+    };
+    let logits = &out[0];
+    debug_assert_eq!(logits.len(), bucket * classes);
+
+    let done = Instant::now();
+    let mut responses = Vec::with_capacity(n);
+    let mut lat_pairs = Vec::with_capacity(n);
+    for (i, r) in batch.iter().enumerate() {
+        let l = logits[i * classes..(i + 1) * classes].to_vec();
+        let resp = InferResponse {
+            id: r.id,
+            pred: InferResponse::argmax(&l),
+            logits: l,
+            latency: done.duration_since(r.enqueued),
+            queue_time: exec_start.duration_since(r.enqueued),
+            batch_size: n,
+            bucket,
+            variant: variant.clone(),
+        };
+        lat_pairs.push((
+            resp.latency.as_secs_f64(),
+            resp.queue_time.as_secs_f64(),
+        ));
+        responses.push(resp);
+    }
+    // Record metrics BEFORE waking waiters: a client that reads its reply
+    // and immediately queries /metrics must see its own request counted.
+    metrics.record_batch(&variant, n, &lat_pairs);
+    for resp in responses {
+        if let Some(tx) = waiters.remove(&resp.id) {
+            let _ = tx.send(resp);
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Serving metrics: latency / queue-time summaries, batch occupancy,
+//! per-variant counters. Shared across engine + server threads.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+#[derive(Default)]
+struct Inner {
+    latency: BTreeMap<String, Summary>,
+    queue_time: BTreeMap<String, Summary>,
+    batch_occupancy: Summary,
+    completed: u64,
+    rejected: u64,
+    batches: u64,
+    started: Option<Instant>,
+}
+
+/// Thread-safe metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        let m = Metrics::default();
+        m.inner.lock().unwrap().started = Some(Instant::now());
+        m
+    }
+
+    pub fn record_batch(&self, variant: &str, occupancy: usize, latencies_s: &[(f64, f64)]) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_occupancy.add(occupancy as f64);
+        g.completed += latencies_s.len() as u64;
+        let lat = g.latency.entry(variant.to_string()).or_default();
+        for (l, _) in latencies_s {
+            lat.add(*l);
+        }
+        let qt = g.queue_time.entry(variant.to_string()).or_default();
+        for (_, q) in latencies_s {
+            qt.add(*q);
+        }
+    }
+
+    pub fn record_rejected(&self, n: u64) {
+        self.inner.lock().unwrap().rejected += n;
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.inner.lock().unwrap().completed
+    }
+
+    /// Requests/second since start.
+    pub fn throughput(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        match g.started {
+            Some(t0) => g.completed as f64 / t0.elapsed().as_secs_f64().max(1e-9),
+            None => 0.0,
+        }
+    }
+
+    /// Human-readable multi-line report.
+    pub fn report(&self) -> String {
+        let mut g = self.inner.lock().unwrap();
+        let mut s = format!(
+            "completed={} rejected={} batches={} mean_occupancy={:.2} throughput={:.1} req/s\n",
+            g.completed,
+            g.rejected,
+            g.batches,
+            g.batch_occupancy.mean(),
+            {
+                let t0 = g.started;
+                match t0 {
+                    Some(t) => g.completed as f64 / t.elapsed().as_secs_f64().max(1e-9),
+                    None => 0.0,
+                }
+            }
+        );
+        let variants: Vec<String> = g.latency.keys().cloned().collect();
+        for v in variants {
+            let line = g.latency.get_mut(&v).unwrap().report_ms(&format!("  {v} latency"));
+            s.push_str(&line);
+            s.push('\n');
+            let line = g
+                .queue_time
+                .get_mut(&v)
+                .unwrap()
+                .report_ms(&format!("  {v} queue  "));
+            s.push_str(&line);
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Machine-readable snapshot.
+    pub fn to_json(&self) -> Json {
+        let mut g = self.inner.lock().unwrap();
+        let mut obj = vec![
+            ("completed", Json::num(g.completed as f64)),
+            ("rejected", Json::num(g.rejected as f64)),
+            ("batches", Json::num(g.batches as f64)),
+            ("mean_occupancy", Json::num(g.batch_occupancy.mean())),
+        ];
+        if let Some(t0) = g.started {
+            obj.push((
+                "throughput_rps",
+                Json::num(g.completed as f64 / t0.elapsed().as_secs_f64().max(1e-9)),
+            ));
+        }
+        let variants: Vec<String> = g.latency.keys().cloned().collect();
+        let mut per_variant = Vec::new();
+        for v in variants {
+            let lat = g.latency.get_mut(&v).unwrap();
+            per_variant.push(Json::obj(vec![
+                ("variant", Json::str(v.clone())),
+                ("n", Json::num(lat.len() as f64)),
+                ("mean_ms", Json::num(lat.mean() * 1e3)),
+                ("p50_ms", Json::num(lat.percentile(50.0) * 1e3)),
+                ("p95_ms", Json::num(lat.percentile(95.0) * 1e3)),
+                ("p99_ms", Json::num(lat.percentile(99.0) * 1e3)),
+            ]));
+        }
+        obj.push(("variants", Json::Arr(per_variant)));
+        Json::obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let m = Metrics::new();
+        m.record_batch("dense", 3, &[(0.010, 0.001), (0.012, 0.002), (0.011, 0.001)]);
+        m.record_batch("dense", 1, &[(0.020, 0.005)]);
+        m.record_rejected(2);
+        assert_eq!(m.completed(), 4);
+        let j = m.to_json();
+        assert_eq!(j.get("rejected").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("batches").unwrap().as_f64(), Some(2.0));
+        let report = m.report();
+        assert!(report.contains("dense latency"));
+    }
+}

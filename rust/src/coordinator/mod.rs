@@ -1,0 +1,19 @@
+//! L3 coordinator: the serving-side contribution of the stack.
+//!
+//! * [`request`] — request/response types.
+//! * [`batcher`] — dynamic batching policy (max-batch / deadline / variant
+//!   grouping / backpressure).
+//! * [`engine`] — worker loop: batch → pad to bucket → PJRT execute → fan
+//!   out responses.
+//! * [`metrics`] — latency/throughput/occupancy accounting.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use engine::{Engine, EngineConfig};
+pub use metrics::Metrics;
+pub use request::{InferRequest, InferResponse};

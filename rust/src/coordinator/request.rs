@@ -1,0 +1,69 @@
+//! Request / response types flowing through the serving engine.
+
+use std::time::{Duration, Instant};
+
+/// A single classification request (token ids, already tokenized).
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Model variant override ("dense", "dsa90", ...); None = engine default.
+    pub variant: Option<String>,
+    pub enqueued: Instant,
+}
+
+impl InferRequest {
+    pub fn new(id: u64, tokens: Vec<i32>) -> Self {
+        InferRequest {
+            id,
+            tokens,
+            variant: None,
+            enqueued: Instant::now(),
+        }
+    }
+
+    pub fn with_variant(mut self, v: impl Into<String>) -> Self {
+        self.variant = Some(v.into());
+        self
+    }
+}
+
+/// Completed inference result.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    /// Total time from enqueue to completion.
+    pub latency: Duration,
+    /// Time spent waiting in the batcher queue.
+    pub queue_time: Duration,
+    /// Size of the batch this request was served in (before padding).
+    pub batch_size: usize,
+    /// Executable bucket it ran under (after padding).
+    pub bucket: usize,
+    pub variant: String,
+}
+
+impl InferResponse {
+    pub fn argmax(logits: &[f32]) -> usize {
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(InferResponse::argmax(&[0.1, 0.9]), 1);
+        assert_eq!(InferResponse::argmax(&[3.0, -1.0, 2.0]), 0);
+        assert_eq!(InferResponse::argmax(&[]), 0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Adaptive variant routing policy.
+//!
+//! The paper's Sec. 3.3 frames the sparsity ratio alpha as a per-task,
+//! per-platform knob. At serving time that becomes a routing decision:
+//! under light load, serve the dense model (best quality); as load grows,
+//! shift traffic to progressively sparser DSA variants (cheaper per
+//! request). This module implements that policy over queue-depth
+//! hysteresis — an "extension/future-work" feature the ablation bench
+//! exercises (`bench_serving` closed-loop rows give the per-variant costs
+//! the thresholds encode).
+
+/// One rung of the policy ladder.
+#[derive(Debug, Clone)]
+pub struct Rung {
+    pub variant: String,
+    /// Route here once queue depth is >= this threshold.
+    pub min_queue: usize,
+}
+
+/// Queue-depth-driven variant selector with hysteresis.
+#[derive(Debug, Clone)]
+pub struct AdaptiveRouter {
+    /// Rungs in ascending min_queue order; rung 0 must have min_queue 0.
+    rungs: Vec<Rung>,
+    /// Hysteresis: step down (toward denser) only when depth falls below
+    /// the rung's threshold minus this margin.
+    hysteresis: usize,
+    current: usize,
+}
+
+impl AdaptiveRouter {
+    /// Build from (variant, min_queue) pairs.
+    ///
+    /// Panics if empty, unsorted, or rung 0 is not the zero-threshold rung.
+    pub fn new(rungs: Vec<Rung>, hysteresis: usize) -> Self {
+        assert!(!rungs.is_empty(), "need at least one rung");
+        assert_eq!(rungs[0].min_queue, 0, "rung 0 must cover empty queues");
+        assert!(
+            rungs.windows(2).all(|w| w[0].min_queue < w[1].min_queue),
+            "rungs must be strictly ascending in min_queue"
+        );
+        AdaptiveRouter {
+            rungs,
+            hysteresis,
+            current: 0,
+        }
+    }
+
+    /// The ladder used by the serving example: dense → dsa90 → dsa95.
+    pub fn default_ladder() -> Self {
+        AdaptiveRouter::new(
+            vec![
+                Rung { variant: "dense".into(), min_queue: 0 },
+                Rung { variant: "dsa90".into(), min_queue: 8 },
+                Rung { variant: "dsa95".into(), min_queue: 32 },
+            ],
+            2,
+        )
+    }
+
+    /// Select the variant for the next batch given the current queue depth.
+    pub fn select(&mut self, queue_depth: usize) -> &str {
+        // escalate while the next rung's threshold is met
+        while self.current + 1 < self.rungs.len()
+            && queue_depth >= self.rungs[self.current + 1].min_queue
+        {
+            self.current += 1;
+        }
+        // de-escalate with hysteresis
+        while self.current > 0
+            && queue_depth + self.hysteresis < self.rungs[self.current].min_queue
+        {
+            self.current -= 1;
+        }
+        &self.rungs[self.current].variant
+    }
+
+    pub fn current_variant(&self) -> &str {
+        &self.rungs[self.current].variant
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder() -> AdaptiveRouter {
+        AdaptiveRouter::default_ladder()
+    }
+
+    #[test]
+    fn starts_dense() {
+        let mut r = ladder();
+        assert_eq!(r.select(0), "dense");
+        assert_eq!(r.select(7), "dense");
+    }
+
+    #[test]
+    fn escalates_under_load() {
+        let mut r = ladder();
+        assert_eq!(r.select(8), "dsa90");
+        assert_eq!(r.select(40), "dsa95");
+    }
+
+    #[test]
+    fn skips_rungs_on_burst() {
+        let mut r = ladder();
+        assert_eq!(r.select(100), "dsa95");
+    }
+
+    #[test]
+    fn hysteresis_prevents_flapping() {
+        let mut r = ladder();
+        assert_eq!(r.select(8), "dsa90");
+        // depth 7 is below the threshold but inside the hysteresis band
+        assert_eq!(r.select(7), "dsa90");
+        assert_eq!(r.select(6), "dsa90");
+        // only well below does it de-escalate
+        assert_eq!(r.select(5), "dense");
+    }
+
+    #[test]
+    fn de_escalates_fully_when_idle() {
+        let mut r = ladder();
+        r.select(100);
+        assert_eq!(r.select(0), "dense");
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn rejects_unsorted_rungs() {
+        AdaptiveRouter::new(
+            vec![
+                Rung { variant: "a".into(), min_queue: 0 },
+                Rung { variant: "b".into(), min_queue: 5 },
+                Rung { variant: "c".into(), min_queue: 5 },
+            ],
+            1,
+        );
+    }
+}

@@ -1,0 +1,93 @@
+//! Relative-energy model (paper Fig. 8).
+//!
+//! The paper projects each reduced-precision MAC's energy to a fraction of
+//! an FP32 MAC using 45nm factors from an industry-grade simulator
+//! (Neurometer, Tang et al. 2021). We use the same style of table
+//! (Horowitz-lineage 45nm numbers); keep in sync with
+//! python/compile/quant.py `quant_mac_energy_factor`.
+
+use super::macs::{dense_macs, dsa_macs, LayerShape, MacBreakdown};
+
+/// Energy of one MAC at a given precision, relative to FP32 = 1.0.
+pub fn mac_energy_factor(precision: &str) -> f64 {
+    match precision {
+        "fp32" => 1.0,
+        "int16" => 0.35,
+        "int8" => 0.12,
+        "int4" => 0.045,
+        "int2" => 0.02,
+        p => panic!("unknown precision {p:?}"),
+    }
+}
+
+/// Relative energy of a model configuration vs the dense FP32 baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyReport {
+    /// FP32-equivalent energy units of the main path.
+    pub main_path: f64,
+    /// FP32-equivalent energy units of the prediction path.
+    pub prediction: f64,
+    /// Dense baseline energy units.
+    pub baseline: f64,
+}
+
+impl EnergyReport {
+    /// Total relative energy (Fig. 8's bar height; baseline = 1.0).
+    pub fn relative(&self) -> f64 {
+        (self.main_path + self.prediction) / self.baseline
+    }
+}
+
+/// Fig. 8: DSA at `sparsity`, prediction at `precision`, sigma = k/d_head.
+pub fn dsa_energy(
+    shape: &LayerShape,
+    sparsity: f64,
+    sigma: f64,
+    precision: &str,
+) -> EnergyReport {
+    let dense: MacBreakdown = dense_macs(shape);
+    let dsa: MacBreakdown = dsa_macs(shape, sparsity, sigma);
+    EnergyReport {
+        main_path: dsa.total_fp(), // runs at full precision
+        prediction: dsa.prediction * mac_energy_factor(precision),
+        baseline: dense.total_fp(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factors_monotone_in_bits() {
+        assert!(mac_energy_factor("int2") < mac_energy_factor("int4"));
+        assert!(mac_energy_factor("int4") < mac_energy_factor("int8"));
+        assert!(mac_energy_factor("int8") < mac_energy_factor("int16"));
+        assert!(mac_energy_factor("int16") < mac_energy_factor("fp32"));
+    }
+
+    #[test]
+    fn fig8_dsa95_is_compelling() {
+        // Paper: "even with the predictor overhead considered, the overall
+        // benefit is still compelling" for DSA-95, sigma=0.25, INT4.
+        for shape in [
+            LayerShape::lra_text(),
+            LayerShape::lra_retrieval(),
+            LayerShape::lra_image(),
+        ] {
+            let e = dsa_energy(&shape, 0.95, 0.25, "int4");
+            let rel = e.relative();
+            assert!(rel < 0.75, "relative energy {rel} for {shape:?}");
+            assert!(rel > 0.0);
+        }
+    }
+
+    #[test]
+    fn prediction_energy_small_at_int4() {
+        let e = dsa_energy(&LayerShape::lra_text(), 0.95, 0.25, "int4");
+        assert!(e.prediction < 0.05 * e.baseline);
+        // ... but significant if run at FP32 (motivates quantization).
+        let e32 = dsa_energy(&LayerShape::lra_text(), 0.95, 0.25, "fp32");
+        assert!(e32.prediction > 5.0 * e.prediction);
+    }
+}

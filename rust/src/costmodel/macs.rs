@@ -1,0 +1,171 @@
+//! MAC-count model of a Transformer encoder layer (paper Sec. 4.4, Fig. 7
+//! and the Sec. 3.3 computation-saving analysis).
+//!
+//! Breakdown follows the paper:
+//! * **Linear** — Q/K/V/output projections: `4 l d^2`
+//! * **Attention** — `QK^T` and `AV`: `2 l^2 d` (summed over heads)
+//! * **Other** — position-wise FFN: `2 l d d_ff`
+//!
+//! DSA scales the Attention part by the keep ratio `(1 - sparsity)` and adds
+//! the prediction path: `XP` (`l d k`), the two `k x k` transforms
+//! (`2 l k^2` per head) and `S~ = Q~K~^T` (`l^2 k` per head), counted in
+//! *reduced-precision* MACs (Sec. 3.3's beta factor).
+
+/// LRA-style model/workload configuration for cost accounting.
+#[derive(Debug, Clone)]
+pub struct LayerShape {
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+}
+
+impl LayerShape {
+    /// Paper benchmark configs (Appendix A).
+    pub fn lra_text() -> Self {
+        LayerShape { seq_len: 2000, d_model: 256, n_heads: 4, d_ff: 1024, n_layers: 4 }
+    }
+    pub fn lra_text_4k() -> Self {
+        LayerShape { seq_len: 4000, d_model: 256, n_heads: 4, d_ff: 1024, n_layers: 4 }
+    }
+    pub fn lra_retrieval() -> Self {
+        LayerShape { seq_len: 4000, d_model: 128, n_heads: 4, d_ff: 512, n_layers: 4 }
+    }
+    pub fn lra_image() -> Self {
+        // Appendix A.3: one layer, 8 heads, 64 q/k/v hidden dims, 128 FFN.
+        LayerShape { seq_len: 1024, d_model: 64, n_heads: 8, d_ff: 128, n_layers: 1 }
+    }
+    /// This repo's serving testbed config.
+    pub fn testbed() -> Self {
+        LayerShape { seq_len: 256, d_model: 128, n_heads: 4, d_ff: 256, n_layers: 2 }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Full-precision MAC breakdown for one forward pass of the whole encoder.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MacBreakdown {
+    pub linear: f64,
+    pub attention: f64,
+    pub other: f64,
+    /// Reduced-precision prediction-path MACs (0 for dense).
+    pub prediction: f64,
+}
+
+impl MacBreakdown {
+    pub fn total_fp(&self) -> f64 {
+        self.linear + self.attention + self.other
+    }
+
+    /// Prediction overhead relative to the *dense* model's FP MACs — the
+    /// paper reports 1.17%–1.33% (Sec. 1 / Sec. 3.3).
+    pub fn prediction_overhead(&self, dense: &MacBreakdown) -> f64 {
+        self.prediction / dense.total_fp()
+    }
+}
+
+/// Dense vanilla-transformer MACs.
+pub fn dense_macs(s: &LayerShape) -> MacBreakdown {
+    let (l, d, ff) = (s.seq_len as f64, s.d_model as f64, s.d_ff as f64);
+    let per_layer_linear = 4.0 * l * d * d;
+    let per_layer_attn = 2.0 * l * l * d;
+    let per_layer_other = 2.0 * l * d * ff;
+    let n = s.n_layers as f64;
+    MacBreakdown {
+        linear: n * per_layer_linear,
+        attention: n * per_layer_attn,
+        other: n * per_layer_other,
+        prediction: 0.0,
+    }
+}
+
+/// DSA MACs at `sparsity` with projection scale `sigma` (k = sigma * d_head).
+pub fn dsa_macs(s: &LayerShape, sparsity: f64, sigma: f64) -> MacBreakdown {
+    assert!((0.0..1.0).contains(&sparsity));
+    let dense = dense_macs(s);
+    let keep = 1.0 - sparsity;
+    let (l, d) = (s.seq_len as f64, s.d_model as f64);
+    let h = s.n_heads as f64;
+    let k = (sigma * s.d_head() as f64).max(1.0);
+    // Per layer: shared XP + per-head (Q~, K~ transforms + S~ scores).
+    let per_layer_pred = l * d * k + h * (2.0 * l * k * k + l * l * k);
+    MacBreakdown {
+        linear: dense.linear,
+        attention: dense.attention * keep,
+        other: dense.other,
+        prediction: s.n_layers as f64 * per_layer_pred,
+    }
+}
+
+/// Overall computation reduction of DSA vs dense (the paper's headline
+/// "2.79x – 4.35x", Sec. 4.4) counting FP MACs only, as Fig. 7 does.
+pub fn reduction_factor(s: &LayerShape, sparsity: f64, sigma: f64) -> f64 {
+    dense_macs(s).total_fp() / dsa_macs(s, sparsity, sigma).total_fp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_breakdown_matches_formula() {
+        let s = LayerShape { seq_len: 100, d_model: 64, n_heads: 4, d_ff: 128, n_layers: 2 };
+        let m = dense_macs(&s);
+        assert_eq!(m.linear, 2.0 * 4.0 * 100.0 * 64.0 * 64.0);
+        assert_eq!(m.attention, 2.0 * 2.0 * 100.0 * 100.0 * 64.0);
+        assert_eq!(m.other, 2.0 * 2.0 * 100.0 * 64.0 * 128.0);
+    }
+
+    #[test]
+    fn attention_dominates_long_sequences() {
+        let m = dense_macs(&LayerShape::lra_text_4k());
+        assert!(m.attention > m.linear + m.other);
+        // and not at short sequences
+        let m2 = dense_macs(&LayerShape {
+            seq_len: 64,
+            ..LayerShape::lra_text()
+        });
+        assert!(m2.attention < m2.linear + m2.other);
+    }
+
+    #[test]
+    fn dsa_scales_attention_only() {
+        let s = LayerShape::lra_text();
+        let d = dense_macs(&s);
+        let m = dsa_macs(&s, 0.9, 0.25);
+        assert_eq!(m.linear, d.linear);
+        assert_eq!(m.other, d.other);
+        assert!((m.attention - 0.1 * d.attention).abs() < 1e-3 * d.attention);
+        assert!(m.prediction > 0.0);
+    }
+
+    #[test]
+    fn paper_headline_reduction_range() {
+        // Paper Sec. 4.4: "DSA achieves 2.79–4.35x computation reduction".
+        // The 4K tasks sit at the top of the range; the 2K text config at
+        // the bottom (its Linear+FFN share is larger).
+        let r_text4k = reduction_factor(&LayerShape::lra_text_4k(), 0.95, 0.25);
+        assert!(r_text4k > 2.79, "text-4k reduction {r_text4k}");
+        let r_text2k = reduction_factor(&LayerShape::lra_text(), 0.95, 0.25);
+        assert!(r_text2k < r_text4k, "longer sequences must save more");
+        assert!(r_text2k > 1.5);
+        let r_img = reduction_factor(&LayerShape::lra_image(), 0.95, 0.25);
+        assert!(r_img > 1.0);
+    }
+
+    #[test]
+    fn prediction_overhead_around_paper_range() {
+        // INT4 prediction at sigma=0.25: paper reports ~1.17%-1.33% of the
+        // dense FP32 computation when weighted by precision (beta = 4/32).
+        let s = LayerShape::lra_text();
+        let dense = dense_macs(&s);
+        let m = dsa_macs(&s, 0.95, 0.25);
+        let beta = 4.0 / 32.0;
+        let ovh = m.prediction_overhead(&dense) * beta;
+        assert!(ovh > 0.002 && ovh < 0.05, "overhead {ovh}");
+    }
+}

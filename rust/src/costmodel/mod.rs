@@ -1,0 +1,11 @@
+//! Analytical cost models reproducing the paper's efficiency results:
+//!
+//! * [`macs`] — MAC-count breakdown (Fig. 7, Sec. 3.3 / 4.4 headline).
+//! * [`energy`] — relative-energy projection (Fig. 8).
+//! * [`gpu`] — V100 roofline kernel model (Table 4, Fig. 10); see
+//!   DESIGN.md substitutions for why this replaces real-GPU timing.
+
+pub mod energy;
+pub mod gpu;
+pub mod macs;
+pub mod tpu;

@@ -1,0 +1,33 @@
+//! Dynamic Sparse Attention (DSA) serving stack.
+//!
+//! Reproduction of "Transformer Acceleration with Dynamic Sparse Attention"
+//! (Liu et al., 2021) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * Layer 1 — Pallas kernels (build time, `python/compile/kernels/`)
+//! * Layer 2 — JAX model + AOT lowering to HLO text (`python/compile/`)
+//! * Layer 3 — this crate: a Rust serving coordinator that loads the AOT
+//!   artifacts via PJRT and serves batched inference requests, plus the
+//!   hardware-evaluation substrates (cost model, PE-array dataflow
+//!   simulator) used to reproduce the paper's systems results.
+//!
+//! Module map (see DESIGN.md for the per-experiment index):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`runtime`] | PJRT client + artifact registry (only `xla`-touching code) |
+//! | [`coordinator`] | dynamic batcher, engine worker, metrics |
+//! | [`server`] | line-JSON TCP front end + client |
+//! | [`sparse`] | mask / CSR / column-vector formats, top-k |
+//! | [`sim`] | PE-array dataflow + multi-precision simulators (Sec. 5.2) |
+//! | [`costmodel`] | MAC / energy / V100-roofline models (Fig. 7/8/10, Table 4) |
+//! | [`workload`] | synthetic serving workload generators |
+//! | [`util`] | offline substrates: json, cli, rng, stats, bench, prop, tensorio |
+
+pub mod coordinator;
+pub mod costmodel;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod sparse;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,329 @@
+//! `dsa-serve` — leader entrypoint for the DSA serving stack.
+//!
+//! Subcommands:
+//!
+//! * `serve`     — start the TCP serving front end over the AOT artifacts
+//! * `infer`     — one-shot inference of a generated example
+//! * `bench-serve` — closed/open-loop serving benchmark (dense vs DSA)
+//! * `simulate`  — PE-array dataflow simulation on real predicted masks
+//! * `costmodel` — print the MAC/energy/GPU-kernel model tables
+//! * `report`    — summarize results/bench.jsonl
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
+use dsa_serve::costmodel::{energy, gpu, macs};
+use dsa_serve::runtime::registry::Manifest;
+use dsa_serve::server;
+use dsa_serve::sim::dataflow::{self, Dataflow};
+use dsa_serve::sparse::{Csr, DenseMask};
+use dsa_serve::util::cli::Args;
+use dsa_serve::util::stats::Summary;
+use dsa_serve::workload::{Arrival, Workload, WorkloadConfig};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.clone(), r.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(&rest),
+        "infer" => cmd_infer(&rest),
+        "bench-serve" => cmd_bench_serve(&rest),
+        "simulate" => cmd_simulate(&rest),
+        "costmodel" => cmd_costmodel(&rest),
+        "report" => cmd_report(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "dsa-serve — Dynamic Sparse Attention serving stack\n\
+     \n\
+     Commands:\n\
+       serve        start the TCP server       (--addr, --artifacts, --variant)\n\
+       infer        one-shot inference         (--artifacts, --variant, --label)\n\
+       bench-serve  serving benchmark          (--requests, --rate, --variant)\n\
+       simulate     PE dataflow simulation     (--artifacts, --pes)\n\
+       costmodel    print cost-model tables    (--task)\n\
+       report       summarize results/bench.jsonl\n\
+     \n\
+     Run `dsa-serve <command> --help` for options."
+        .to_string()
+}
+
+fn engine_args(program: &str) -> Args {
+    Args::new(program, "DSA serving")
+        .opt("artifacts", "artifacts", "artifact directory (make artifacts)")
+        .opt("variant", "dsa90", "model variant: dense|dsa90|dsa95|dsa99")
+        .opt("max-batch", "8", "dynamic batcher: max requests per batch")
+        .opt("max-wait-ms", "4", "dynamic batcher: head-of-line deadline")
+}
+
+fn start_engine(a: &Args) -> Result<Engine> {
+    let manifest = Manifest::open(a.get("artifacts"))?;
+    let cfg = EngineConfig {
+        default_variant: a.get("variant"),
+        policy: BatchPolicy {
+            max_batch: a.get_usize("max-batch"),
+            max_wait: std::time::Duration::from_millis(a.get_usize("max-wait-ms") as u64),
+            queue_cap: 4096,
+        },
+        preload: true,
+    };
+    Engine::start(manifest, cfg)
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let a = engine_args("dsa-serve serve")
+        .opt("addr", "127.0.0.1:7788", "listen address")
+        .parse(rest)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+    let engine = Arc::new(start_engine(&a)?);
+    println!(
+        "engine up: variant={} seq_len={}",
+        a.get("variant"),
+        engine.seq_len()
+    );
+    server::serve(engine, &a.get("addr"))
+}
+
+fn cmd_infer(rest: &[String]) -> Result<()> {
+    let a = engine_args("dsa-serve infer")
+        .opt("label", "1", "ground-truth label of the generated example")
+        .opt("seed", "0", "workload seed")
+        .parse(rest)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+    let engine = start_engine(&a)?;
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len: engine.seq_len(),
+        seed: a.get_usize("seed") as u64,
+        ..Default::default()
+    });
+    let want: i32 = a.get_usize("label") as i32;
+    let mut req = wl.next_request();
+    while req.label != want {
+        req = wl.next_request();
+    }
+    let resp = engine.infer(req.tokens, None)?;
+    println!(
+        "pred={} (truth={}) logits={:?} latency={:.2}ms batch={} variant={}",
+        resp.pred,
+        req.label,
+        resp.logits,
+        resp.latency.as_secs_f64() * 1e3,
+        resp.batch_size,
+        resp.variant
+    );
+    Ok(())
+}
+
+fn cmd_bench_serve(rest: &[String]) -> Result<()> {
+    let a = engine_args("dsa-serve bench-serve")
+        .opt("requests", "200", "number of requests")
+        .opt("rate", "100", "open-loop arrival rate (req/s); 0 = closed loop")
+        .opt("seed", "0", "workload seed")
+        .parse(rest)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+    let engine = Arc::new(start_engine(&a)?);
+    let n = a.get_usize("requests");
+    let rate = a.get_f64("rate");
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len: engine.seq_len(),
+        rate_rps: if rate > 0.0 { rate } else { 1.0 },
+        arrival: if rate > 0.0 { Arrival::Poisson } else { Arrival::Closed },
+        seed: a.get_usize("seed") as u64,
+    });
+    let trace = wl.trace(n);
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(n);
+    let mut correct = 0usize;
+    let mut labels = Vec::with_capacity(n);
+    for r in trace {
+        if rate > 0.0 {
+            std::thread::sleep(r.delay);
+        }
+        labels.push(r.label);
+        rxs.push(engine.submit(r.tokens, None)?);
+    }
+    let mut lat = Summary::new();
+    for (rx, label) in rxs.into_iter().zip(labels) {
+        let resp = rx.recv()?;
+        lat.add(resp.latency.as_secs_f64());
+        if resp.pred as i32 == label {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", lat.report_ms("latency"));
+    println!(
+        "throughput={:.1} req/s accuracy={:.3} wall={:.2}s",
+        n as f64 / wall,
+        correct as f64 / n as f64,
+        wall
+    );
+    println!("{}", engine.metrics.report());
+    Ok(())
+}
+
+fn cmd_simulate(rest: &[String]) -> Result<()> {
+    let a = Args::new("dsa-serve simulate", "PE-array dataflow simulation")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("pes", "8", "row-parallel PEs")
+        .parse(rest)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+    let manifest = Manifest::open(a.get("artifacts"))?;
+    let t = manifest.tensor("dsa90_masks")?;
+    if t.dims.len() != 4 {
+        bail!("expected masks of shape [inputs, heads, l, l], got {:?}", t.dims);
+    }
+    let (inputs, heads) = (t.dims[0], t.dims[1]);
+    let pes = a.get_usize("pes");
+    println!(
+        "dataflow simulation on {} predicted masks ({} inputs x {} heads, l={}, PEs={})",
+        inputs * heads,
+        inputs,
+        heads,
+        t.dims[2],
+        pes
+    );
+    let mut totals = [0u64; 3];
+    for i in 0..inputs * heads {
+        let mask = DenseMask::from_tensor_slice(&t, i)?;
+        let csr = Csr::from_mask(&mask);
+        for (j, df) in [Dataflow::RowByRow, Dataflow::RowParallel, Dataflow::RowParallelReordered]
+            .into_iter()
+            .enumerate()
+        {
+            totals[j] += dataflow::simulate(&csr, df, pes).vector_loads;
+        }
+    }
+    println!("  row-by-row:               1.00x (baseline, {} loads)", totals[0]);
+    println!(
+        "  row-parallel w/o reorder: {:.2}x reduction",
+        totals[0] as f64 / totals[1] as f64
+    );
+    println!(
+        "  row-parallel w/ reorder:  {:.2}x reduction",
+        totals[0] as f64 / totals[2] as f64
+    );
+    Ok(())
+}
+
+fn cmd_costmodel(rest: &[String]) -> Result<()> {
+    let a = Args::new("dsa-serve costmodel", "cost model tables")
+        .opt("task", "all", "text|text4k|retrieval|image|all")
+        .parse(rest)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+    let shapes: Vec<(&str, macs::LayerShape)> = vec![
+        ("text-2k", macs::LayerShape::lra_text()),
+        ("text-4k", macs::LayerShape::lra_text_4k()),
+        ("retrieval-4k", macs::LayerShape::lra_retrieval()),
+        ("image-1k", macs::LayerShape::lra_image()),
+    ];
+    let want = a.get("task");
+    println!("== Fig. 7: MAC breakdown (GMACs) ==");
+    println!(
+        "{:<16} {:>8} {:>10} {:>8} {:>8} {:>10}",
+        "task/model", "linear", "attention", "other", "pred", "reduction"
+    );
+    for (name, s) in &shapes {
+        if want != "all" && !name.starts_with(&want) {
+            continue;
+        }
+        let d = macs::dense_macs(s);
+        println!(
+            "{:<16} {:>8.2} {:>10.2} {:>8.2} {:>8.2} {:>10}",
+            format!("{name}/dense"),
+            d.linear / 1e9,
+            d.attention / 1e9,
+            d.other / 1e9,
+            0.0,
+            "1.00x"
+        );
+        for sp in [0.90, 0.95, 0.99] {
+            let m = macs::dsa_macs(s, sp, 0.25);
+            println!(
+                "{:<16} {:>8.2} {:>10.2} {:>8.2} {:>8.2} {:>9.2}x",
+                format!("{name}/dsa{}", (sp * 100.0) as u32),
+                m.linear / 1e9,
+                m.attention / 1e9,
+                m.other / 1e9,
+                m.prediction / 1e9,
+                macs::reduction_factor(s, sp, 0.25)
+            );
+        }
+    }
+    println!("\n== Fig. 8: relative energy (DSA-95, sigma=0.25, INT4) ==");
+    for (name, s) in &shapes {
+        let e = energy::dsa_energy(s, 0.95, 0.25, "int4");
+        println!("  {:<16} {:.3} (vanilla = 1.0)", name, e.relative());
+    }
+    println!("\n== Table 4: kernel speedups @90% sparsity (V100 model) ==");
+    let sh = gpu::AttnShape::table4();
+    for (fmt, prec, label) in [
+        (gpu::Format::ColVec(4), gpu::Precision::Fp16, "vec 1x4 (fp16)"),
+        (gpu::Format::ColVec(8), gpu::Precision::Fp16, "vec 1x8 (fp16)"),
+        (gpu::Format::FineGrained, gpu::Precision::Fp32, "fine-grained (fp32)"),
+    ] {
+        println!(
+            "  {:<22} SpMM {:>5.2}x  SDDMM {:>5.2}x",
+            label,
+            gpu::kernel_speedup("spmm", sh, fmt, prec, 0.90),
+            gpu::kernel_speedup("sddmm", sh, fmt, prec, 0.90)
+        );
+    }
+    println!("\n== Fig. 10: sparse softmax speedup (b=16 h=4 l=2000) ==");
+    for s in [0.5, 0.75, 0.9, 0.95, 0.99, 0.999] {
+        println!(
+            "  sparsity {:>5.1}%: {:>7.1}x",
+            s * 100.0,
+            gpu::softmax_speedup(sh, s)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_report(rest: &[String]) -> Result<()> {
+    let a = Args::new("dsa-serve report", "summarize bench results")
+        .opt("file", "results/bench.jsonl", "bench jsonl path")
+        .parse(rest)
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+    let text = std::fs::read_to_string(a.get("file"))?;
+    let mut by_suite: std::collections::BTreeMap<String, Vec<(String, f64)>> =
+        Default::default();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = dsa_serve::util::json::parse(line)?;
+        let suite = j.get("suite").and_then(|s| s.as_str()).unwrap_or("?").to_string();
+        let name = j.get("name").and_then(|s| s.as_str()).unwrap_or("?").to_string();
+        let mean = j.get("mean_s").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        by_suite.entry(suite).or_default().push((name, mean));
+    }
+    for (suite, rows) in by_suite {
+        println!("== {suite} ==");
+        for (name, mean) in rows {
+            println!("  {:<48} {:>12.3} us", name, mean * 1e6);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,126 @@
+//! PJRT client + compiled-executable wrapper.
+//!
+//! Loads HLO **text** modules produced by `python/compile/aot.py` and
+//! executes them on the CPU PJRT backend. Text (not serialized proto) is
+//! the interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+//! instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+/// Shared PJRT client handle.
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<xla::PjRtClient>,
+}
+
+impl Client {
+    /// Construct the host CPU client.
+    pub fn cpu() -> Result<Client> {
+        let inner = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Client {
+            inner: Arc::new(inner),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    /// Load an HLO-text module from disk and compile it.
+    pub fn compile_hlo_file(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .inner
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe: Arc::new(exe),
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// Typed host-side tensor argument for execution.
+#[derive(Debug, Clone)]
+pub enum Arg {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl Arg {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Arg {
+        Arg::F32(data, dims.iter().map(|&d| d as i64).collect())
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Arg {
+        Arg::I32(data, dims.iter().map(|&d| d as i64).collect())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Arg::F32(data, dims) => {
+                let n: i64 = dims.iter().product();
+                if n as usize != data.len() {
+                    bail!("f32 arg: {} elements but dims {:?}", data.len(), dims);
+                }
+                xla::Literal::vec1(data).reshape(dims)?
+            }
+            Arg::I32(data, dims) => {
+                let n: i64 = dims.iter().product();
+                if n as usize != data.len() {
+                    bail!("i32 arg: {} elements but dims {:?}", data.len(), dims);
+                }
+                xla::Literal::vec1(data).reshape(dims)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// A compiled PJRT executable. Cheap to clone; `execute` is `&self` and
+/// thread-safe at the PJRT level (the CPU client serializes internally).
+#[derive(Clone)]
+pub struct Executable {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host args; returns the elements of the output tuple as
+    /// f32 vectors (aot.py lowers everything with return_tuple=True).
+    pub fn run_f32(&self, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        let lits = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut first = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .context("empty execution result")?
+            .to_literal_sync()?;
+        let parts = first.decompose_tuple()?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}

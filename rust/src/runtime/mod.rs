@@ -1,0 +1,9 @@
+//! PJRT runtime: client wrapper ([`client`]) and artifact registry
+//! ([`registry`]). This is the only module that touches the `xla` crate;
+//! everything above it (coordinator, server) works with plain vectors.
+
+pub mod client;
+pub mod registry;
+
+pub use client::{Arg, Client, Executable};
+pub use registry::{ModuleInfo, Registry};

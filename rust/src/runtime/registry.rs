@@ -1,0 +1,276 @@
+//! Artifact registry: parses `artifacts/manifest.json`, lazily compiles
+//! modules, and exposes variant/batch lookup for the coordinator.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::client::{Client, Executable};
+use crate::util::json::{self, Json};
+use crate::util::tensorio::Tensor;
+
+/// Metadata of one HLO module from the manifest.
+#[derive(Debug, Clone)]
+pub struct ModuleInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub variant: Option<String>,
+    pub batch: Option<usize>,
+    pub seq_len: Option<usize>,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub input_dtypes: Vec<String>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest: metadata only, no PJRT state — `Send + Sync`, so it can
+/// be shared with server threads and examples while the executables stay on
+/// the engine worker thread (the `xla` crate's handles are thread-local).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub task_seq_len: usize,
+    pub task_classes: usize,
+    pub batch_buckets: Vec<usize>,
+    pub variants: Vec<String>,
+    modules: Vec<ModuleInfo>,
+}
+
+/// Manifest + PJRT client + compiled-executable cache. **Not `Send`**: the
+/// `xla` crate wraps thread-local Rc handles, so a `Registry` must be
+/// created and used on one thread (the engine worker does exactly that).
+pub struct Registry {
+    pub manifest: Manifest,
+    client: Client,
+    cache: Mutex<HashMap<String, Executable>>,
+}
+
+fn shapes_of(entry: &Json, key: &str) -> (Vec<Vec<usize>>, Vec<String>) {
+    let mut shapes = Vec::new();
+    let mut dtypes = Vec::new();
+    if let Some(arr) = entry.get(key).and_then(|v| v.as_arr()) {
+        for io in arr {
+            let shape = io
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                .unwrap_or_default();
+            shapes.push(shape);
+            dtypes.push(
+                io.get("dtype")
+                    .and_then(|d| d.as_str())
+                    .unwrap_or("f32")
+                    .to_string(),
+            );
+        }
+    }
+    (shapes, dtypes)
+}
+
+impl Manifest {
+    /// Parse `root/manifest.json` (no PJRT involved).
+    pub fn open(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let manifest_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let doc = json::parse(&text).context("parsing manifest.json")?;
+
+        let mut modules = Vec::new();
+        for entry in doc.get("modules").and_then(|m| m.as_arr()).unwrap_or(&[]) {
+            let (input_shapes, input_dtypes) = shapes_of(entry, "inputs");
+            let (output_shapes, _) = shapes_of(entry, "outputs");
+            modules.push(ModuleInfo {
+                name: entry
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                file: entry
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                kind: entry
+                    .get("kind")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                variant: entry
+                    .get("variant")
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string),
+                batch: entry.get("batch").and_then(|v| v.as_usize()),
+                seq_len: entry.get("seq_len").and_then(|v| v.as_usize()),
+                input_shapes,
+                input_dtypes,
+                output_shapes,
+            });
+        }
+        if modules.is_empty() {
+            bail!("manifest has no modules — run `make artifacts` first");
+        }
+
+        let batch_buckets = doc
+            .get("batch_buckets")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_else(|| vec![1]);
+        let variants = doc
+            .get("variants")
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|x| x.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        Ok(Manifest {
+            task_seq_len: doc
+                .path(&["task", "seq_len"])
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+            task_classes: doc
+                .path(&["task", "n_classes"])
+                .and_then(|v| v.as_usize())
+                .unwrap_or(2),
+            batch_buckets,
+            variants,
+            modules,
+            root,
+        })
+    }
+
+    pub fn modules(&self) -> &[ModuleInfo] {
+        &self.modules
+    }
+
+    pub fn module(&self, name: &str) -> Option<&ModuleInfo> {
+        self.modules.iter().find(|m| m.name == name)
+    }
+
+    /// Classifier module for (variant, batch).
+    pub fn classifier(&self, variant: &str, batch: usize) -> Option<&ModuleInfo> {
+        self.modules.iter().find(|m| {
+            m.kind == "classifier"
+                && m.variant.as_deref() == Some(variant)
+                && m.batch == Some(batch)
+        })
+    }
+
+    /// Smallest compiled batch bucket >= n (or the largest bucket).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        let mut buckets = self.batch_buckets.clone();
+        buckets.sort_unstable();
+        for &b in &buckets {
+            if b >= n {
+                return b;
+            }
+        }
+        buckets.last().copied().unwrap_or(1)
+    }
+
+    /// Load a `.tns` tensor referenced by the manifest's tensors section.
+    pub fn tensor(&self, name: &str) -> Result<Tensor> {
+        // Conventional layout: tensors/<name>.tns
+        let p = self.root.join("tensors").join(format!("{name}.tns"));
+        Tensor::load(p)
+    }
+}
+
+impl Registry {
+    /// Open `root/manifest.json` and create the PJRT client **on this
+    /// thread** (see the `Send` note on the type).
+    pub fn open(root: impl AsRef<Path>) -> Result<Registry> {
+        Ok(Registry {
+            manifest: Manifest::open(root)?,
+            client: Client::cpu()?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn from_manifest(manifest: Manifest) -> Result<Registry> {
+        Ok(Registry {
+            manifest,
+            client: Client::cpu()?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn client(&self) -> &Client {
+        &self.client
+    }
+
+    /// Compile (or fetch cached) executable by module name.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self
+            .manifest
+            .module(name)
+            .with_context(|| format!("module {name} not in manifest"))?;
+        let exe = self
+            .client
+            .compile_hlo_file(self.manifest.root.join(&info.file))?;
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every classifier executable (serving warm-up).
+    pub fn preload_classifiers(&self, variant: &str) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .modules
+            .iter()
+            .filter(|m| m.kind == "classifier" && m.variant.as_deref() == Some(variant))
+            .map(|m| m.name.clone())
+            .collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Registry tests that need real artifacts live in rust/tests/; here we
+    /// only exercise manifest parsing against a synthetic manifest.
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("dsa_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "task": {"name": "text", "seq_len": 64, "n_classes": 2, "vocab": 256},
+              "batch_buckets": [1, 2, 4],
+              "variants": ["dense", "dsa90"],
+              "modules": [
+                {"name": "classifier_dense_b1", "file": "x.hlo.txt",
+                 "kind": "classifier", "variant": "dense", "batch": 1,
+                 "seq_len": 64,
+                 "inputs": [{"shape": [1, 64], "dtype": "int32"}],
+                 "outputs": [{"shape": [1, 2], "dtype": "float32"}]}
+              ],
+              "tensors": []
+            }"#,
+        )
+        .unwrap();
+        let man = Manifest::open(&dir).unwrap();
+        assert_eq!(man.task_seq_len, 64);
+        assert_eq!(man.bucket_for(3), 4);
+        assert_eq!(man.bucket_for(9), 4); // clamps to largest
+        let m = man.classifier("dense", 1).unwrap();
+        assert_eq!(m.input_shapes[0], vec![1, 64]);
+    }
+}

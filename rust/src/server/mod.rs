@@ -1,0 +1,166 @@
+//! Line-delimited-JSON TCP serving front end (tokio is unavailable offline;
+//! the listener uses one OS thread per connection, which is ample for a
+//! single-core PJRT backend whose executor is the actual bottleneck).
+//!
+//! Protocol (one JSON document per line):
+//!
+//! ```text
+//! -> {"op":"infer","tokens":[...],"variant":"dsa90"}
+//! <- {"ok":true,"pred":1,"logits":[...],"latency_ms":3.2,"batch":4}
+//! -> {"op":"metrics"}
+//! <- {"ok":true, ...metrics json...}
+//! -> {"op":"ping"} / {"op":"shutdown"}
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Engine;
+use crate::util::json::{self, Json};
+
+/// Serve `engine` on `addr` until a client sends `{"op":"shutdown"}`.
+pub fn serve(engine: Arc<Engine>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    println!("dsa-serve listening on {addr}");
+    let stop = Arc::new(AtomicBool::new(false));
+    listener.set_nonblocking(false)?;
+    let mut handles = Vec::new();
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = stream?;
+        let engine = engine.clone();
+        let stop2 = stop.clone();
+        handles.push(std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, &engine, &stop2) {
+                log::debug!("connection ended: {e:#}");
+            }
+        }));
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, engine: &Engine, stop: &AtomicBool) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match handle_line(&line, engine, stop) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(format!("{e:#}"))),
+            ]),
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        if stop.load(Ordering::SeqCst) {
+            // Nudge the accept loop by connecting to ourselves.
+            break;
+        }
+    }
+    log::debug!("peer {peer} disconnected");
+    Ok(())
+}
+
+/// Dispatch one request line. Public so tests can drive the protocol
+/// without sockets.
+pub fn handle_line(line: &str, engine: &Engine, stop: &AtomicBool) -> Result<Json> {
+    let req = json::parse(line).context("bad request json")?;
+    let op = req.get("op").and_then(|o| o.as_str()).unwrap_or("infer");
+    match op {
+        "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
+        "metrics" => {
+            let mut m = engine.metrics.to_json();
+            if let Json::Obj(map) = &mut m {
+                map.insert("ok".into(), Json::Bool(true));
+            }
+            Ok(m)
+        }
+        "shutdown" => {
+            stop.store(true, Ordering::SeqCst);
+            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("stopping", Json::Bool(true))]))
+        }
+        "infer" => {
+            let tokens: Vec<i32> = req
+                .get("tokens")
+                .and_then(|t| t.as_arr())
+                .context("missing tokens")?
+                .iter()
+                .filter_map(|v| v.as_f64().map(|f| f as i32))
+                .collect();
+            let variant = req
+                .get("variant")
+                .and_then(|v| v.as_str())
+                .map(str::to_string);
+            let resp = engine.infer(tokens, variant)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::num(resp.id as f64)),
+                ("pred", Json::num(resp.pred as f64)),
+                (
+                    "logits",
+                    Json::arr(resp.logits.iter().map(|&x| Json::num(x as f64))),
+                ),
+                ("latency_ms", Json::num(resp.latency.as_secs_f64() * 1e3)),
+                ("queue_ms", Json::num(resp.queue_time.as_secs_f64() * 1e3)),
+                ("batch", Json::num(resp.batch_size as f64)),
+                ("variant", Json::str(resp.variant)),
+            ]))
+        }
+        other => anyhow::bail!("unknown op {other:?}"),
+    }
+}
+
+/// Minimal blocking client for examples and tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        Ok(Client {
+            writer: stream.try_clone()?,
+            reader: BufReader::new(stream),
+        })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        json::parse(&line).map_err(Into::into)
+    }
+
+    pub fn infer(&mut self, tokens: &[i32], variant: Option<&str>) -> Result<Json> {
+        let mut fields = vec![
+            ("op", Json::str("infer")),
+            (
+                "tokens",
+                Json::arr(tokens.iter().map(|&t| Json::num(t as f64))),
+            ),
+        ];
+        if let Some(v) = variant {
+            fields.push(("variant", Json::str(v)));
+        }
+        self.call(&Json::obj(fields))
+    }
+}

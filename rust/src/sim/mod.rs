@@ -1,0 +1,10 @@
+//! Hardware-specialization simulators (paper Sec. 5.2):
+//!
+//! * [`dataflow`] — PE-array operand-load simulator: row-by-row vs
+//!   row-parallel vs reordered (Fig. 11 / Table 5).
+//! * [`multiprecision`] — decoupled vs coupled multi-precision PE arrays.
+
+pub mod dataflow;
+pub mod multiprecision;
+
+pub use dataflow::{simulate, Dataflow, SimResult};

@@ -1,0 +1,219 @@
+//! Block-sparse encoding (B×B tiles).
+//!
+//! The paper's Sec. 5.1 discusses block-wise structural constraints as the
+//! coarse end of the granularity spectrum ("larger blocks deliver higher
+//! speedup but can potentially cause accuracy loss"); on TPU a B×B block
+//! is the natural unit of a skipped MXU pass (DESIGN.md
+//! §Hardware-Adaptation). This encoding complements [`super::ColVec`]:
+//! reuse factor B on *both* operands instead of one.
+
+use anyhow::{bail, Result};
+
+use super::mask::DenseMask;
+
+/// Block pattern: for each block-row, the ascending list of block-columns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockSparse {
+    pub rows: usize,
+    pub cols: usize,
+    pub block: usize,
+    /// row_blocks[i] = kept block-column indices for block-row i.
+    pub row_blocks: Vec<Vec<u32>>,
+}
+
+impl BlockSparse {
+    /// Encode a mask that is exactly block-structured (every B×B tile all-0
+    /// or all-1).
+    pub fn from_mask(m: &DenseMask, block: usize) -> Result<BlockSparse> {
+        if block == 0 || m.rows % block != 0 || m.cols % block != 0 {
+            bail!("mask {}x{} not divisible by block {}", m.rows, m.cols, block);
+        }
+        let (br, bc) = (m.rows / block, m.cols / block);
+        let mut row_blocks = Vec::with_capacity(br);
+        for i in 0..br {
+            let mut blocks = Vec::new();
+            for j in 0..bc {
+                let mut set = 0usize;
+                for r in 0..block {
+                    for c in 0..block {
+                        if m.get(i * block + r, j * block + c) {
+                            set += 1;
+                        }
+                    }
+                }
+                if set == block * block {
+                    blocks.push(j as u32);
+                } else if set != 0 {
+                    bail!("tile ({i},{j}) partially set ({set}/{})", block * block);
+                }
+            }
+            row_blocks.push(blocks);
+        }
+        Ok(BlockSparse {
+            rows: m.rows,
+            cols: m.cols,
+            block,
+            row_blocks,
+        })
+    }
+
+    /// Structure a fine-grained mask into blocks: keep, per block-row, the
+    /// tiles with the highest hit count under a budget matching the
+    /// fine-grained density (same policy as [`super::ColVec::structure`]).
+    pub fn structure(m: &DenseMask, block: usize) -> Result<BlockSparse> {
+        if block == 0 || m.rows % block != 0 || m.cols % block != 0 {
+            bail!("mask {}x{} not divisible by block {}", m.rows, m.cols, block);
+        }
+        let (br, bc) = (m.rows / block, m.cols / block);
+        let mut row_blocks = Vec::with_capacity(br);
+        for i in 0..br {
+            let mut hits = vec![0usize; bc];
+            let mut nnz = 0usize;
+            for r in 0..block {
+                for c in m.row_cols(i * block + r) {
+                    hits[c / block] += 1;
+                    nnz += 1;
+                }
+            }
+            let budget = ((nnz as f64 / (block * block) as f64).round() as usize).max(1);
+            let mut order: Vec<usize> = (0..bc).collect();
+            order.sort_by(|&a, &b| hits[b].cmp(&hits[a]).then(a.cmp(&b)));
+            let mut blocks: Vec<u32> = order
+                .into_iter()
+                .take(budget.min(bc))
+                .filter(|&j| hits[j] > 0)
+                .map(|j| j as u32)
+                .collect();
+            blocks.sort_unstable();
+            row_blocks.push(blocks);
+        }
+        Ok(BlockSparse {
+            rows: m.rows,
+            cols: m.cols,
+            block,
+            row_blocks,
+        })
+    }
+
+    pub fn to_mask(&self) -> DenseMask {
+        let mut m = DenseMask::zeros(self.rows, self.cols);
+        for (i, blocks) in self.row_blocks.iter().enumerate() {
+            for &j in blocks {
+                for r in 0..self.block {
+                    for c in 0..self.block {
+                        m.set(i * self.block + r, j as usize * self.block + c, true);
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.row_blocks.iter().map(|b| b.len()).sum::<usize>() * self.block * self.block
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Fraction of MXU tile passes skipped for a (tile_m x tile_n) systolic
+    /// pass grid — the TPU analogue of the paper's kernel speedups. When
+    /// the encoding block divides the MXU tile, the skip rate equals the
+    /// block-level sparsity; finer blocks skip conservatively (a pass runs
+    /// if ANY covered block is kept).
+    pub fn mxu_skip_rate(&self, tile: usize) -> f64 {
+        assert!(tile >= self.block && tile % self.block == 0);
+        let per = tile / self.block;
+        let (tr, tc) = (self.rows / tile, self.cols / tile);
+        if tr == 0 || tc == 0 {
+            return 0.0;
+        }
+        let mut live = 0usize;
+        for ti in 0..tr {
+            let mut cols_live = vec![false; tc];
+            for sub in 0..per {
+                for &j in &self.row_blocks[ti * per + sub] {
+                    cols_live[j as usize / per] = true;
+                }
+            }
+            live += cols_live.iter().filter(|&&x| x).count();
+        }
+        1.0 - live as f64 / (tr * tc) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::topk;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_block_structured() {
+        let mut m = DenseMask::zeros(8, 8);
+        for r in 0..4 {
+            for c in 4..8 {
+                m.set(r, c, true); // top-right 4x4 tile
+            }
+        }
+        let b = BlockSparse::from_mask(&m, 4).unwrap();
+        assert_eq!(b.row_blocks, vec![vec![1], vec![]]);
+        assert_eq!(b.to_mask(), m);
+        assert!((b.sparsity() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_partial_tiles() {
+        let mut m = DenseMask::zeros(4, 4);
+        m.set(0, 0, true);
+        assert!(BlockSparse::from_mask(&m, 2).is_err());
+    }
+
+    #[test]
+    fn structure_roundtrips_and_preserves_budget() {
+        let mut rng = Rng::new(2);
+        let scores: Vec<f32> = (0..64 * 64).map(|_| rng.f32()).collect();
+        let fine = topk::topk_mask_exact(&scores, 64, 64, 6);
+        let b = BlockSparse::structure(&fine, 8).unwrap();
+        let re = BlockSparse::from_mask(&b.to_mask(), 8).unwrap();
+        assert_eq!(re, b);
+        let ratio = b.nnz() as f64 / fine.nnz() as f64;
+        assert!(ratio > 0.4 && ratio < 2.5, "budget drifted: {ratio}");
+    }
+
+    #[test]
+    fn mxu_skip_rate_matches_block_sparsity_when_aligned() {
+        let mut m = DenseMask::zeros(16, 16);
+        // keep exactly one 8x8 tile of four
+        for r in 0..8 {
+            for c in 0..8 {
+                m.set(r, c, true);
+            }
+        }
+        let b = BlockSparse::from_mask(&m, 8).unwrap();
+        assert!((b.mxu_skip_rate(8) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coarser_tiles_skip_less() {
+        // scattered 4x4 blocks: 16x16 grid of tiles at 25% density
+        let mut rng = Rng::new(7);
+        let mut m = DenseMask::zeros(64, 64);
+        for i in 0..16 {
+            for j in 0..16 {
+                if rng.f64() < 0.25 {
+                    for r in 0..4 {
+                        for c in 0..4 {
+                            m.set(i * 4 + r, j * 4 + c, true);
+                        }
+                    }
+                }
+            }
+        }
+        let b = BlockSparse::from_mask(&m, 4).unwrap();
+        let fine_skip = b.mxu_skip_rate(4);
+        let coarse_skip = b.mxu_skip_rate(16);
+        assert!(fine_skip > coarse_skip, "{fine_skip} vs {coarse_skip}");
+    }
+}

@@ -1,0 +1,179 @@
+//! Column-vector sparse encoding (paper Fig. 9, Chen et al. 2021).
+//!
+//! The attention matrix is partitioned into panels of `vec` consecutive
+//! rows; sparsity is selected at the granularity of `vec`-tall column
+//! vectors inside each panel. This gives block-sparse-like data reuse for
+//! SpMM/SDDMM (the whole K/V column is reused across the panel's rows)
+//! while keeping the selection granularity small enough to preserve
+//! accuracy (Table 4).
+
+use anyhow::{bail, Result};
+
+use super::mask::DenseMask;
+
+/// Column-vector pattern: for each row panel, the list of selected columns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ColVec {
+    pub rows: usize,
+    pub cols: usize,
+    pub vec: usize,
+    /// panel_cols[p] = ascending columns kept for panel p (rows p*vec..).
+    pub panel_cols: Vec<Vec<u32>>,
+}
+
+impl ColVec {
+    /// Encode a mask that is already column-vector structured.
+    /// Fails if any panel has a column only partially set.
+    pub fn from_mask(m: &DenseMask, vec: usize) -> Result<ColVec> {
+        if vec == 0 || m.rows % vec != 0 {
+            bail!("rows {} not divisible by vec {}", m.rows, vec);
+        }
+        let panels = m.rows / vec;
+        let mut panel_cols = Vec::with_capacity(panels);
+        for p in 0..panels {
+            let mut cols = Vec::new();
+            for c in 0..m.cols {
+                let set: usize = (0..vec).filter(|&i| m.get(p * vec + i, c)).count();
+                if set == vec {
+                    cols.push(c as u32);
+                } else if set != 0 {
+                    bail!("panel {p} column {c} partially set ({set}/{vec})");
+                }
+            }
+            panel_cols.push(cols);
+        }
+        Ok(ColVec {
+            rows: m.rows,
+            cols: m.cols,
+            vec,
+            panel_cols,
+        })
+    }
+
+    /// Structure a *fine-grained* mask into column vectors by keeping, per
+    /// panel, the columns with the highest hit count (ties by lower column),
+    /// matching the per-panel budget = round(mean panel nnz / vec).
+    pub fn structure(m: &DenseMask, vec: usize) -> Result<ColVec> {
+        if vec == 0 || m.rows % vec != 0 {
+            bail!("rows {} not divisible by vec {}", m.rows, vec);
+        }
+        let panels = m.rows / vec;
+        let mut panel_cols = Vec::with_capacity(panels);
+        for p in 0..panels {
+            let mut hits = vec![0usize; m.cols];
+            let mut nnz = 0usize;
+            for i in 0..vec {
+                for c in m.row_cols(p * vec + i) {
+                    hits[c] += 1;
+                    nnz += 1;
+                }
+            }
+            let budget = (nnz as f64 / vec as f64).round().max(1.0) as usize;
+            let mut order: Vec<usize> = (0..m.cols).collect();
+            order.sort_by(|&a, &b| hits[b].cmp(&hits[a]).then(a.cmp(&b)));
+            let mut cols: Vec<u32> = order
+                .into_iter()
+                .take(budget.min(m.cols))
+                .filter(|&c| hits[c] > 0)
+                .map(|c| c as u32)
+                .collect();
+            cols.sort_unstable();
+            panel_cols.push(cols);
+        }
+        Ok(ColVec {
+            rows: m.rows,
+            cols: m.cols,
+            vec,
+            panel_cols,
+        })
+    }
+
+    pub fn to_mask(&self) -> DenseMask {
+        let mut m = DenseMask::zeros(self.rows, self.cols);
+        for (p, cols) in self.panel_cols.iter().enumerate() {
+            for &c in cols {
+                for i in 0..self.vec {
+                    m.set(p * self.vec + i, c as usize, true);
+                }
+            }
+        }
+        m
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.panel_cols.iter().map(|c| c.len()).sum::<usize>() * self.vec
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Data-reuse factor for the second operand (K^T columns / V rows): how
+    /// many MACs each loaded operand vector serves. Fine-grained = 1; a
+    /// vec-tall column vector serves `vec` rows per load (Sec. 5.1).
+    pub fn reuse_factor(&self) -> f64 {
+        self.vec as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_structured() {
+        let mut m = DenseMask::zeros(8, 16);
+        // panel 0 keeps cols 1, 7; panel 1 keeps col 3 (vec = 4)
+        for i in 0..4 {
+            m.set(i, 1, true);
+            m.set(i, 7, true);
+            m.set(4 + i, 3, true);
+        }
+        let cv = ColVec::from_mask(&m, 4).unwrap();
+        assert_eq!(cv.panel_cols, vec![vec![1, 7], vec![3]]);
+        assert_eq!(cv.to_mask(), m);
+        assert_eq!(cv.nnz(), 12);
+    }
+
+    #[test]
+    fn rejects_partial_columns() {
+        let mut m = DenseMask::zeros(4, 4);
+        m.set(0, 2, true); // only 1 of 4 rows in the panel
+        assert!(ColVec::from_mask(&m, 4).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_vec() {
+        let m = DenseMask::zeros(6, 4);
+        assert!(ColVec::from_mask(&m, 4).is_err());
+    }
+
+    #[test]
+    fn structure_preserves_budget() {
+        let mut rng = Rng::new(5);
+        let mut m = DenseMask::zeros(16, 64);
+        // fine-grained ~10% mask
+        for r in 0..16 {
+            for _ in 0..6 {
+                let c = rng.below(64) as usize;
+                m.set(r, c, true);
+            }
+        }
+        let cv = ColVec::structure(&m, 4).unwrap();
+        // nnz should be in the same ballpark as the fine-grained mask
+        let fine = m.nnz() as f64;
+        let s = cv.nnz() as f64;
+        assert!(s > 0.5 * fine && s < 2.0 * fine, "nnz {s} vs fine {fine}");
+        // and the result must be losslessly encodable
+        let re = ColVec::from_mask(&cv.to_mask(), 4).unwrap();
+        assert_eq!(re, cv);
+    }
+
+    #[test]
+    fn reuse_factor_is_vec() {
+        let m = DenseMask::zeros(8, 8);
+        let cv = ColVec::from_mask(&m, 8).unwrap();
+        assert_eq!(cv.reuse_factor(), 8.0);
+    }
+}

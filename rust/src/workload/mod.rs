@@ -1,0 +1,196 @@
+//! Synthetic serving workloads: request generators with Poisson or bursty
+//! arrivals, mirroring the text task's token distribution so predictions
+//! run against in-distribution inputs.
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// Poisson with the given mean rate.
+    Poisson,
+    /// Alternating hot/cold phases (rate x4 / rate x0.25, 1 s phases).
+    Bursty,
+    /// Back-to-back (closed loop, zero think time).
+    Closed,
+}
+
+/// Workload generator configuration.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub seq_len: usize,
+    pub rate_rps: f64,
+    pub arrival: Arrival,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            seq_len: 256,
+            rate_rps: 50.0,
+            arrival: Arrival::Poisson,
+            seed: 0,
+        }
+    }
+}
+
+/// One generated request: token ids + the delay to wait *before* issuing it.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub tokens: Vec<i32>,
+    pub delay: Duration,
+    /// Ground-truth label of the synthetic example (for accuracy checks).
+    pub label: i32,
+}
+
+/// Streaming generator.
+pub struct Workload {
+    cfg: WorkloadConfig,
+    rng: Rng,
+    issued: usize,
+}
+
+impl Workload {
+    pub fn new(cfg: WorkloadConfig) -> Self {
+        let rng = Rng::new(cfg.seed ^ 0xD5A);
+        Workload {
+            cfg,
+            rng,
+            issued: 0,
+        }
+    }
+
+    /// Generate a text-task example (needle counting — mirrors
+    /// python/compile/data.py gen_text so the model is in-distribution).
+    fn gen_tokens(&mut self) -> (Vec<i32>, i32) {
+        let l = self.cfg.seq_len;
+        let hi = (l / 16).max(8);
+        let lo = (hi / 4).max(2);
+        let needle = 1 + self.rng.below(254) as i32;
+        let label = self.rng.below(2) as i32;
+        let mut toks: Vec<i32> = (0..l)
+            .map(|_| {
+                let mut t = 1 + self.rng.below(254) as i32;
+                if t == needle {
+                    t = (t % 254) + 1;
+                    if t == needle {
+                        t = if needle == 1 { 2 } else { 1 };
+                    }
+                }
+                t
+            })
+            .collect();
+        toks[0] = needle;
+        let count = if label == 1 {
+            hi + self.rng.below(hi as u64) as usize
+        } else {
+            self.rng.below(lo as u64) as usize
+        };
+        let pos = self.rng.sample_indices(l - 1, count.min(l - 1));
+        for p in pos {
+            toks[1 + p] = needle;
+        }
+        (toks, label)
+    }
+
+    fn next_delay(&mut self) -> Duration {
+        match self.cfg.arrival {
+            Arrival::Closed => Duration::ZERO,
+            Arrival::Poisson => {
+                Duration::from_secs_f64(self.rng.exponential(self.cfg.rate_rps))
+            }
+            Arrival::Bursty => {
+                // 1-second phases: hot = 4x rate, cold = 0.25x rate.
+                let phase_hot = (self.issued / 16) % 2 == 0;
+                let rate = if phase_hot {
+                    self.cfg.rate_rps * 4.0
+                } else {
+                    self.cfg.rate_rps * 0.25
+                };
+                Duration::from_secs_f64(self.rng.exponential(rate))
+            }
+        }
+    }
+
+    pub fn next_request(&mut self) -> GenRequest {
+        let delay = self.next_delay();
+        let (tokens, label) = self.gen_tokens();
+        self.issued += 1;
+        GenRequest {
+            tokens,
+            delay,
+            label,
+        }
+    }
+
+    /// Generate a fixed-size trace up front (deterministic given the seed).
+    pub fn trace(&mut self, n: usize) -> Vec<GenRequest> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_trace() {
+        let cfg = WorkloadConfig {
+            seq_len: 64,
+            seed: 7,
+            ..Default::default()
+        };
+        let a = Workload::new(cfg.clone()).trace(5);
+        let b = Workload::new(cfg).trace(5);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.delay, y.delay);
+        }
+    }
+
+    #[test]
+    fn tokens_valid_and_needle_planted() {
+        let mut w = Workload::new(WorkloadConfig {
+            seq_len: 128,
+            ..Default::default()
+        });
+        for _ in 0..50 {
+            let r = w.next_request();
+            assert_eq!(r.tokens.len(), 128);
+            assert!(r.tokens.iter().all(|&t| (1..=255).contains(&t)));
+            let needle = r.tokens[0];
+            let count = r.tokens[1..].iter().filter(|&&t| t == needle).count();
+            let hi = 128usize / 16;
+            if r.label == 1 {
+                assert!(count >= hi, "label 1 but count {count}");
+            } else {
+                assert!(count < hi / 2, "label 0 but count {count}");
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let mut w = Workload::new(WorkloadConfig {
+            seq_len: 16,
+            rate_rps: 200.0,
+            ..Default::default()
+        });
+        let trace = w.trace(2000);
+        let total: f64 = trace.iter().map(|r| r.delay.as_secs_f64()).sum();
+        let rate = 2000.0 / total;
+        assert!((rate - 200.0).abs() < 20.0, "rate {rate}");
+    }
+
+    #[test]
+    fn closed_loop_has_zero_delay() {
+        let mut w = Workload::new(WorkloadConfig {
+            arrival: Arrival::Closed,
+            ..Default::default()
+        });
+        assert_eq!(w.next_request().delay, Duration::ZERO);
+    }
+}

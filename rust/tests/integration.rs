@@ -1,0 +1,228 @@
+//! Integration tests over the real AOT artifacts (`make artifacts` first).
+//!
+//! Every test no-ops with a message when `artifacts/manifest.json` is
+//! missing so `cargo test` stays green on a fresh checkout; CI-style runs
+//! execute `make artifacts` before `cargo test`.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
+use dsa_serve::runtime::registry::{Manifest, Registry};
+use dsa_serve::runtime::Arg;
+use dsa_serve::server;
+use dsa_serve::util::json::Json;
+use dsa_serve::util::prop::assert_allclose;
+use dsa_serve::workload::{Workload, WorkloadConfig};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::open("artifacts") {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("artifacts/ not built — skipping integration test");
+            None
+        }
+    }
+}
+
+/// The HLO text round-trip must preserve the folded weight constants:
+/// replay the first eval row through each compiled classifier and compare
+/// with the logits JAX computed at export time.
+#[test]
+fn classifier_logits_match_jax() {
+    let Some(man) = manifest() else { return };
+    let registry = Registry::from_manifest(man.clone()).expect("registry");
+    let tokens = man.tensor("eval_tokens").expect("eval_tokens");
+    let l = man.task_seq_len;
+    let row: Vec<i32> = tokens.as_i32().expect("i32")[..l].to_vec();
+
+    for variant in &man.variants {
+        let expect = match man.tensor(&format!("expected_logits_{variant}_b1")) {
+            Ok(t) => t.as_f32().expect("f32"),
+            Err(_) => continue,
+        };
+        let info = man.classifier(variant, 1).expect("classifier b1");
+        let exe = registry.load(&info.name).expect("compile");
+        let out = exe
+            .run_f32(&[Arg::i32(row.clone(), &[1, l])])
+            .expect("execute");
+        // The artifact lowers through the Pallas kernels while the expected
+        // logits were computed on the jnp path. For the dense model the two
+        // paths agree to float noise. For DSA variants, score differences
+        // in the last ulps can flip top-k tie-breaks in the dynamic mask —
+        // a legitimate divergence that grows with sparsity (at DSA-99 only
+        // 3 entries/row survive). Check: logits close at a variant-scaled
+        // tolerance AND the argmax (the served prediction) must agree.
+        if variant == "dense" {
+            assert_allclose(&out[0], &expect, 1e-3, 1e-4);
+        } else {
+            // DSA-99 keeps only 3 entries/row: one tie-flip moves a logit
+            // by O(0.1); gross-bound the values, gate on the prediction.
+            assert_allclose(&out[0], &expect, 0.3, 0.3);
+            assert_eq!(
+                dsa_serve::coordinator::InferResponse::argmax(&out[0]),
+                dsa_serve::coordinator::InferResponse::argmax(&expect),
+                "{variant}: served prediction flipped"
+            );
+        }
+        eprintln!("{variant}: logits match ({:?})", &out[0]);
+    }
+}
+
+/// Batch-bucket invariance: the same request padded into different buckets
+/// must produce the same logits for the real rows.
+#[test]
+fn bucket_padding_is_consistent() {
+    let Some(man) = manifest() else { return };
+    let registry = Registry::from_manifest(man.clone()).expect("registry");
+    let l = man.task_seq_len;
+    let tokens = man.tensor("eval_tokens").expect("eval_tokens");
+    let row: Vec<i32> = tokens.as_i32().expect("i32")[..l].to_vec();
+
+    let variant = "dense";
+    let e1 = registry
+        .load(&man.classifier(variant, 1).unwrap().name)
+        .unwrap();
+    let out1 = e1.run_f32(&[Arg::i32(row.clone(), &[1, l])]).unwrap();
+    for &b in man.batch_buckets.iter().filter(|&&b| b > 1) {
+        let exe = registry
+            .load(&man.classifier(variant, b).unwrap().name)
+            .unwrap();
+        let mut padded = Vec::with_capacity(b * l);
+        for _ in 0..b {
+            padded.extend_from_slice(&row);
+        }
+        let out = exe.run_f32(&[Arg::i32(padded, &[b, l])]).unwrap();
+        let classes = man.task_classes;
+        assert_allclose(&out[0][..classes], &out1[0][..classes], 1e-4, 1e-5);
+    }
+}
+
+/// Engine end-to-end: submit concurrent requests, get coherent responses,
+/// and the trained model must beat chance on its own task distribution.
+#[test]
+fn engine_serves_and_model_beats_chance() {
+    let Some(man) = manifest() else { return };
+    let engine = Engine::start(
+        man.clone(),
+        EngineConfig {
+            default_variant: "dense".into(),
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+                queue_cap: 128,
+            },
+            preload: true,
+        },
+    )
+    .expect("engine");
+
+    let n = 32;
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len: engine.seq_len(),
+        seed: 99,
+        ..Default::default()
+    });
+    let trace = wl.trace(n);
+    let mut rxs = Vec::new();
+    let mut labels = Vec::new();
+    for r in trace {
+        labels.push(r.label);
+        rxs.push(engine.submit(r.tokens, None).expect("submit"));
+    }
+    let mut correct = 0;
+    for (rx, label) in rxs.into_iter().zip(labels) {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.logits.len(), man.task_classes);
+        assert!(resp.latency > Duration::ZERO);
+        if resp.pred as i32 == label {
+            correct += 1;
+        }
+    }
+    // Trained to ~0.95+ on this distribution; 22/32 is ~5 sigma above chance.
+    assert!(
+        correct >= 22,
+        "dense model should beat chance: {correct}/{n} correct"
+    );
+    // Dynamic batching must actually have batched something.
+    let occ = engine
+        .metrics
+        .to_json()
+        .get("mean_occupancy")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    assert!(occ > 1.0, "expected batching, mean occupancy {occ}");
+}
+
+/// Per-request variant override routes to a different executable.
+#[test]
+fn variant_override_routing() {
+    let Some(man) = manifest() else { return };
+    if !man.variants.iter().any(|v| v == "dsa90") {
+        return;
+    }
+    let engine = Engine::start(man.clone(), EngineConfig::default()).expect("engine");
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len: engine.seq_len(),
+        seed: 4,
+        ..Default::default()
+    });
+    let r = wl.next_request();
+    let resp_dense = engine
+        .infer(r.tokens.clone(), Some("dense".into()))
+        .expect("dense");
+    let resp_dsa = engine
+        .infer(r.tokens, Some("dsa90".into()))
+        .expect("dsa90");
+    assert_eq!(resp_dense.variant, "dense");
+    assert_eq!(resp_dsa.variant, "dsa90");
+}
+
+/// Server protocol: infer / metrics / ping round-trip via handle_line.
+#[test]
+fn server_protocol_roundtrip() {
+    let Some(man) = manifest() else { return };
+    let engine = Arc::new(Engine::start(man.clone(), EngineConfig::default()).expect("engine"));
+    let stop = AtomicBool::new(false);
+
+    let pong = server::handle_line(r#"{"op":"ping"}"#, &engine, &stop).unwrap();
+    assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len: engine.seq_len(),
+        seed: 12,
+        ..Default::default()
+    });
+    let r = wl.next_request();
+    let toks: Vec<String> = r.tokens.iter().map(|t| t.to_string()).collect();
+    let line = format!(r#"{{"op":"infer","tokens":[{}]}}"#, toks.join(","));
+    let resp = server::handle_line(&line, &engine, &stop).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    assert!(resp.get("pred").is_some());
+
+    let metrics = server::handle_line(r#"{"op":"metrics"}"#, &engine, &stop).unwrap();
+    assert!(metrics.get("completed").and_then(|v| v.as_f64()).unwrap_or(0.0) >= 1.0);
+
+    // malformed input → structured error, no panic
+    let err = server::handle_line("{nope", &engine, &stop);
+    assert!(err.is_err());
+}
+
+/// Masks exported from the trained DSA model honor the row-top-k uniform
+/// constraint at ~90% sparsity.
+#[test]
+fn exported_masks_are_row_uniform_and_sparse() {
+    let Some(man) = manifest() else { return };
+    let Ok(t) = man.tensor("dsa90_masks") else { return };
+    assert_eq!(t.dims.len(), 4);
+    let l = t.dims[2];
+    let keep = ((l as f64) * 0.10).round() as usize;
+    let m = dsa_serve::sparse::DenseMask::from_tensor_slice(&t, 0).unwrap();
+    let sp = m.sparsity();
+    assert!((0.85..0.95).contains(&sp), "sparsity {sp}");
+    // top-k with ties kept: rows may slightly exceed keep but never less.
+    for r in 0..m.rows {
+        assert!(m.row_nnz(r) >= keep, "row {r} has {} < {keep}", m.row_nnz(r));
+    }
+}
