@@ -1,0 +1,43 @@
+# Entry points shared by humans and CI (.github/workflows/ci.yml) so both
+# always invoke the same commands.
+#
+# Everything except `make artifacts` is hermetic: the default cargo feature
+# set has zero external dependencies and runs the native CPU kernels.
+
+CARGO_MANIFEST := rust/Cargo.toml
+
+.PHONY: verify build test bench fmt clippy pytest artifacts clean
+
+## tier-1 gate: hermetic release build + full test suite
+verify:
+	cargo build --release --manifest-path $(CARGO_MANIFEST)
+	cargo test -q --manifest-path $(CARGO_MANIFEST)
+
+build:
+	cargo build --release --manifest-path $(CARGO_MANIFEST)
+
+test:
+	cargo test -q --manifest-path $(CARGO_MANIFEST)
+
+## native kernel/cost-model/dataflow benches; appends results/bench.jsonl
+## and writes results/BENCH_kernels.json
+bench:
+	cargo bench --manifest-path $(CARGO_MANIFEST)
+
+fmt:
+	cargo fmt --manifest-path $(CARGO_MANIFEST) --all -- --check
+
+clippy:
+	cargo clippy --manifest-path $(CARGO_MANIFEST) --all-targets -- -D warnings
+
+pytest:
+	python3 -m pytest python/tests -q
+
+## OPTIONAL + Python-dependent (jax required): trains the models and
+## AOT-lowers the HLO artifacts that the PJRT paths (--features xla)
+## serve. Nothing in `make verify` needs this.
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+clean:
+	cargo clean --manifest-path $(CARGO_MANIFEST)

@@ -8,7 +8,7 @@
 
 use std::io::Write as _;
 
-use anyhow::{bail, Result};
+use dsa_serve::util::error::{bail, Result};
 use dsa_serve::runtime::registry::Manifest;
 use dsa_serve::sim::dataflow::{simulate, Dataflow};
 use dsa_serve::sparse::{Csr, DenseMask};

@@ -6,7 +6,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use anyhow::Result;
+use dsa_serve::util::error::Result;
 use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
 use dsa_serve::runtime::registry::Manifest;
 use dsa_serve::workload::{Workload, WorkloadConfig};

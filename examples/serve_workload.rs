@@ -12,7 +12,7 @@ use std::io::Write as _;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use dsa_serve::util::error::Result;
 use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
 use dsa_serve::runtime::registry::Manifest;
 use dsa_serve::server;

@@ -13,7 +13,7 @@
 //! cargo run --release --example sparsity_explorer -- 0.9
 //! ```
 
-use anyhow::Result;
+use dsa_serve::util::error::Result;
 use dsa_serve::costmodel::{energy, gpu, macs};
 use dsa_serve::sim::dataflow::{simulate, Dataflow};
 use dsa_serve::sparse::{topk, Csr};

@@ -1,27 +1,95 @@
-//! L1 kernel micro-bench at the runtime level: executes the standalone
-//! AOT-lowered Pallas kernel modules (dense attention, masked attention,
-//! sparse softmax) through PJRT with generated inputs and masks at several
-//! sparsity ratios.
+//! L1 kernel micro-bench over the native CPU DSA pipeline: dense attention
+//! baseline vs dynamic-sparse (int8 score prediction → row top-k → SDDMM →
+//! masked softmax → SpMM), single-threaded reference vs the row-parallel
+//! path, across sequence lengths and sparsity ratios. Runs hermetically —
+//! no artifacts required — and seeds the perf trajectory via
+//! `results/bench.jsonl` plus a `results/BENCH_kernels.json` summary.
 //!
-//! Numbers are CPU-interpreter timings — NOT a TPU performance proxy (the
-//! kernels are lowered with interpret=True; see DESIGN.md
-//! §Hardware-Adaptation). What this bench validates is that the kernels
-//! compose end to end through the Rust runtime and how the *runtime-level*
-//! cost scales with shape.
+//! When built with `--features xla` and artifacts exist, the AOT-lowered
+//! Pallas kernel modules are additionally timed through PJRT (CPU
+//! interpret-mode numbers — composition check, not a TPU proxy; see
+//! DESIGN.md §Hardware-Adaptation).
 
 use std::time::Duration;
 
-use dsa_serve::runtime::registry::{Manifest, Registry};
-use dsa_serve::runtime::Arg;
-use dsa_serve::sparse::topk;
+use dsa_serve::kernels::{dense, parallel, sparse, SparseKernel};
 use dsa_serve::util::bench::Bench;
 use dsa_serve::util::rng::Rng;
 
+fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
 fn main() {
+    let threads = parallel::effective_threads(0);
+    println!("=== native DSA kernels (row-parallel workers: {threads}) ===");
+    let mut b = Bench::new().with_budget(Duration::from_secs(2));
+    let mut rng = Rng::new(17);
+    let (dk, dv) = (64usize, 64usize);
+
+    let lengths = [256usize, 1024];
+    for &l in &lengths {
+        let q = randv(l * dk, &mut rng);
+        let k = randv(l * dk, &mut rng);
+        let v = randv(l * dv, &mut rng);
+
+        b.run(&format!("native/dense/l{l}/st"), || {
+            std::hint::black_box(dense::attention(&q, &k, &v, l, dk, dv));
+        });
+        b.run(&format!("native/dense/l{l}/mt"), || {
+            std::hint::black_box(parallel::dense_attention_mt(&q, &k, &v, l, dk, dv, 0));
+        });
+        for sparsity in [0.90f64, 0.95, 0.99] {
+            // the same budget the serving dispatch uses for this variant
+            let keep = SparseKernel { sparsity, threads: 1 }.keep_for(l);
+            let tag = (sparsity * 100.0) as u32;
+            b.run(&format!("native/dsa/l{l}/s{tag}/st"), || {
+                std::hint::black_box(sparse::dsa_attention(&q, &k, &v, l, dk, dv, keep));
+            });
+            b.run(&format!("native/dsa/l{l}/s{tag}/mt"), || {
+                std::hint::black_box(parallel::dsa_attention_mt(
+                    &q, &k, &v, l, dk, dv, keep, 0,
+                ));
+            });
+        }
+    }
+
+    println!("\n=== row-parallel speedup vs single-threaded reference ===");
+    for &l in &lengths {
+        let d_st = b.mean_of(&format!("native/dense/l{l}/st")).unwrap_or(f64::NAN);
+        let d_mt = b.mean_of(&format!("native/dense/l{l}/mt")).unwrap_or(f64::NAN);
+        let s_st = b.mean_of(&format!("native/dsa/l{l}/s90/st")).unwrap_or(f64::NAN);
+        let s_mt = b.mean_of(&format!("native/dsa/l{l}/s90/mt")).unwrap_or(f64::NAN);
+        println!(
+            "  l={l:<5} dense {:.2}x   dsa90 {:.2}x   (dense-st / dsa90-st work ratio {:.2}x)",
+            d_st / d_mt,
+            s_st / s_mt,
+            d_st / s_st
+        );
+    }
+
+    #[cfg(feature = "xla")]
+    pjrt_kernels(&mut b);
+
+    b.flush_jsonl("kernels");
+    match b.write_summary("results/BENCH_kernels.json", "kernels") {
+        Ok(()) => println!("\nwrote results/BENCH_kernels.json"),
+        Err(e) => eprintln!("\nfailed writing BENCH_kernels.json: {e}"),
+    }
+}
+
+/// PJRT section: times the AOT-lowered Pallas kernel modules when
+/// artifacts are present (CPU interpret-mode timings).
+#[cfg(feature = "xla")]
+fn pjrt_kernels(b: &mut Bench) {
+    use dsa_serve::runtime::registry::{Manifest, Registry};
+    use dsa_serve::runtime::Arg;
+    use dsa_serve::sparse::topk;
+
     let manifest = match Manifest::open("artifacts") {
         Ok(m) => m,
         Err(e) => {
-            println!("skipping bench_kernels: {e:#} (run `make artifacts`)");
+            println!("\n(skipping PJRT kernel section: {e} — run `make artifacts`)");
             return;
         }
     };
@@ -29,23 +97,19 @@ fn main() {
     let l = manifest.task_seq_len;
     let (dk, dv) = (32usize, 32usize);
     let mut rng = Rng::new(17);
-    let randv = |n: usize, rng: &mut Rng| -> Vec<f32> {
-        (0..n).map(|_| rng.normal() as f32).collect()
-    };
     let q = randv(l * dk, &mut rng);
     let k = randv(l * dk, &mut rng);
     let v = randv(l * dv, &mut rng);
     let scores = randv(l * l, &mut rng);
 
-    let mut b = Bench::new().with_budget(Duration::from_secs(3));
-
+    println!("\n=== PJRT kernel modules (CPU interpret mode) ===");
     if let Some(info) = manifest
         .modules()
         .iter()
         .find(|m| m.name.starts_with("kernel_dense_attention"))
     {
         let exe = registry.load(&info.name).expect("compile dense kernel");
-        b.run("kernel/dense_attention", || {
+        b.run("pjrt/dense_attention", || {
             let out = exe
                 .run_f32(&[
                     Arg::f32(q.clone(), &[l, dk]),
@@ -72,7 +136,7 @@ fn main() {
                     mf[r * l + c] = 1.0;
                 }
             }
-            b.run(&format!("kernel/masked_attention/s{:.0}", sparsity * 100.0), || {
+            b.run(&format!("pjrt/masked_attention/s{:.0}", sparsity * 100.0), || {
                 let out = exe
                     .run_f32(&[
                         Arg::f32(q.clone(), &[l, dk]),
@@ -92,14 +156,14 @@ fn main() {
         .find(|m| m.name.starts_with("kernel_sparse_softmax"))
     {
         let exe = registry.load(&info.name).expect("compile softmax kernel");
-        let mask = topk::topk_mask_exact(&scores, l, l, l / 10);
+        let mask = topk::topk_mask_exact(&scores, l, l, (l / 10).max(1));
         let mut mf = vec![0f32; l * l];
         for r in 0..l {
             for c in mask.row_cols(r) {
                 mf[r * l + c] = 1.0;
             }
         }
-        b.run("kernel/sparse_softmax/s90", || {
+        b.run("pjrt/sparse_softmax/s90", || {
             let out = exe
                 .run_f32(&[
                     Arg::f32(scores.clone(), &[l, l]),
@@ -109,7 +173,4 @@ fn main() {
             std::hint::black_box(out);
         });
     }
-
-    println!("\n(CPU interpret-mode timings; TPU perf is estimated analytically — DESIGN.md)");
-    b.flush_jsonl("kernels");
 }

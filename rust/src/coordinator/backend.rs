@@ -1,0 +1,209 @@
+//! Engine execution backends.
+//!
+//! The engine worker drives an [`InferBackend`], decoupling the serving
+//! loop (batching, metrics, fan-out) from what executes a batch:
+//!
+//! * [`NativeBackend`] — always available: the hand-constructed classifier
+//!   over the native DSA kernels (`kernels::model`), so a fresh checkout
+//!   serves real traffic with no artifacts and no PJRT.
+//! * `ArtifactBackend` (`xla` feature) — AOT-compiled HLO modules executed
+//!   through the PJRT registry, as produced by `make artifacts`.
+//!
+//! Backends are constructed **inside** the worker thread via a factory
+//! closure (`Engine::start_with`): the PJRT handles are thread-local, so a
+//! backend is never required to be `Send`.
+
+use std::collections::HashMap;
+
+use crate::kernels::dispatch::{for_variant, KernelDispatch};
+use crate::kernels::model::NativeClassifier;
+use crate::util::error::{bail, Context, Result};
+
+/// What the engine worker needs from an execution backend.
+pub trait InferBackend {
+    /// Expected token-sequence length per request.
+    fn seq_len(&self) -> usize;
+
+    /// Logit count per request.
+    fn classes(&self) -> usize;
+
+    /// Execution bucket that fits `n` requests (artifact backends round up
+    /// to a compiled batch size; native kernels run any size exactly).
+    fn bucket_for(&self, n: usize) -> usize;
+
+    /// Warm up `variant` (compile executables / instantiate kernels).
+    /// Errors abort engine startup.
+    fn preload(&mut self, variant: &str) -> Result<()>;
+
+    /// Execute `bucket * seq_len()` tokens, returning `bucket * classes()`
+    /// logits.
+    fn run(&mut self, variant: &str, tokens: &[i32], bucket: usize) -> Result<Vec<f32>>;
+}
+
+/// Configuration of the hermetic native backend.
+#[derive(Debug, Clone)]
+pub struct NativeModelConfig {
+    pub seq_len: usize,
+    /// Seed of the classifier's embedding table.
+    pub seed: u64,
+    /// Worker threads per attention call (0 = one per core).
+    pub threads: usize,
+}
+
+impl Default for NativeModelConfig {
+    fn default() -> Self {
+        NativeModelConfig {
+            seq_len: 256,
+            seed: 0xD5A,
+            threads: 0,
+        }
+    }
+}
+
+/// Native-kernel backend: no artifacts, no PJRT, no external crates.
+pub struct NativeBackend {
+    model: NativeClassifier,
+    threads: usize,
+    kernels: HashMap<String, Box<dyn KernelDispatch>>,
+}
+
+impl NativeBackend {
+    pub fn new(cfg: NativeModelConfig) -> NativeBackend {
+        NativeBackend {
+            model: NativeClassifier::new(cfg.seq_len, cfg.seed),
+            threads: cfg.threads,
+            kernels: HashMap::new(),
+        }
+    }
+
+    /// Factory form for `Engine::start_with`. Validates the config so a
+    /// bad `--seq-len` surfaces as a startup error, not a worker panic.
+    pub fn boxed(cfg: NativeModelConfig) -> Result<Box<dyn InferBackend>> {
+        if cfg.seq_len < 16 {
+            bail!("native backend seq_len {} too short (need >= 16)", cfg.seq_len);
+        }
+        Ok(Box::new(NativeBackend::new(cfg)))
+    }
+
+    fn ensure_kernel(&mut self, variant: &str) -> Result<()> {
+        if !self.kernels.contains_key(variant) {
+            let k = for_variant(variant, self.threads)
+                .with_context(|| format!("unknown serving variant {variant:?}"))?;
+            self.kernels.insert(variant.to_string(), k);
+        }
+        Ok(())
+    }
+}
+
+impl InferBackend for NativeBackend {
+    fn seq_len(&self) -> usize {
+        self.model.seq_len()
+    }
+
+    fn classes(&self) -> usize {
+        self.model.classes()
+    }
+
+    fn bucket_for(&self, n: usize) -> usize {
+        n.max(1)
+    }
+
+    fn preload(&mut self, variant: &str) -> Result<()> {
+        self.ensure_kernel(variant)
+    }
+
+    fn run(&mut self, variant: &str, tokens: &[i32], bucket: usize) -> Result<Vec<f32>> {
+        self.ensure_kernel(variant)?;
+        let kernel = self.kernels.get(variant).expect("just inserted").as_ref();
+        let sl = self.model.seq_len();
+        if tokens.len() != bucket * sl {
+            bail!(
+                "token buffer {} != bucket {bucket} x seq_len {sl}",
+                tokens.len()
+            );
+        }
+        let mut out = Vec::with_capacity(bucket * self.model.classes());
+        for seq in tokens.chunks_exact(sl) {
+            out.extend(self.model.logits(seq, kernel));
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT artifact backend over the registry (`make artifacts` output).
+#[cfg(feature = "xla")]
+pub struct ArtifactBackend {
+    registry: crate::runtime::Registry,
+}
+
+#[cfg(feature = "xla")]
+impl ArtifactBackend {
+    /// Factory form for `Engine::start_with`; creates the PJRT client on
+    /// the calling (worker) thread.
+    pub fn boxed(manifest: crate::runtime::Manifest) -> Result<Box<dyn InferBackend>> {
+        Ok(Box::new(ArtifactBackend {
+            registry: crate::runtime::Registry::from_manifest(manifest)?,
+        }))
+    }
+}
+
+#[cfg(feature = "xla")]
+impl InferBackend for ArtifactBackend {
+    fn seq_len(&self) -> usize {
+        self.registry.manifest.task_seq_len
+    }
+
+    fn classes(&self) -> usize {
+        self.registry.manifest.task_classes
+    }
+
+    fn bucket_for(&self, n: usize) -> usize {
+        self.registry.manifest.bucket_for(n)
+    }
+
+    fn preload(&mut self, variant: &str) -> Result<()> {
+        match self.registry.preload_classifiers(variant)? {
+            0 => bail!("no classifier modules for variant {variant}"),
+            _ => Ok(()),
+        }
+    }
+
+    fn run(&mut self, variant: &str, tokens: &[i32], bucket: usize) -> Result<Vec<f32>> {
+        let info = self
+            .registry
+            .manifest
+            .classifier(variant, bucket)
+            .with_context(|| format!("no classifier for variant={variant} bucket={bucket}"))?;
+        let name = info.name.clone();
+        let exe = self.registry.load(&name)?;
+        let out = exe.run_f32(&[crate::runtime::Arg::i32(
+            tokens.to_vec(),
+            &[bucket, self.seq_len()],
+        )])?;
+        out.into_iter().next().context("empty execution result")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_backend_runs_batches() {
+        let mut b = NativeBackend::new(NativeModelConfig {
+            seq_len: 256,
+            ..Default::default()
+        });
+        assert_eq!(b.seq_len(), 256);
+        assert_eq!(b.classes(), 2);
+        assert_eq!(b.bucket_for(0), 1);
+        assert_eq!(b.bucket_for(5), 5);
+        b.preload("dense").unwrap();
+        assert!(b.preload("bogus").is_err());
+        let tokens = vec![7i32; 2 * 256];
+        let logits = b.run("dsa90", &tokens, 2).unwrap();
+        assert_eq!(logits.len(), 4);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        assert!(b.run("dsa90", &tokens, 3).is_err()); // wrong bucket
+    }
+}

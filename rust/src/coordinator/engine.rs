@@ -1,14 +1,17 @@
 //! Serving engine: the L3 hot path.
 //!
-//! A submission channel feeds a single worker thread (the testbed is a
-//! one-core CPU PJRT backend, so more executor threads would only add
-//! contention). The worker drives the [`Batcher`]: it sleeps until the
-//! head-of-line deadline or a full batch, cuts a batch of same-variant
-//! requests, pads it to the nearest compiled bucket, executes the PJRT
-//! executable, and fans responses back through per-request channels.
+//! A submission channel feeds a single worker thread driving the
+//! [`Batcher`]: it sleeps until the head-of-line deadline or a full batch,
+//! cuts a batch of same-variant requests, pads it to the backend's
+//! execution bucket, runs the batch through an
+//! [`InferBackend`](super::backend::InferBackend) and fans responses back
+//! through per-request channels.
 //!
-//! Python is never involved: executables were AOT-compiled by
-//! `make artifacts`.
+//! The backend is constructed **inside** the worker thread from a factory
+//! closure: the PJRT artifact backend's handles are thread-local and must
+//! never cross threads, and the native backend simply doesn't care.
+//! Startup errors (bad artifacts, compile failures, unknown variants
+//! during preload) are reported synchronously through a channel.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -16,20 +19,18 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
-
+use super::backend::{InferBackend, NativeBackend, NativeModelConfig};
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::request::{InferRequest, InferResponse};
-use crate::runtime::registry::Manifest;
-use crate::runtime::{Arg, Registry};
+use crate::util::error::{bail, Context, Result};
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub default_variant: String,
     pub policy: BatchPolicy,
-    /// Eagerly compile all buckets of the default variant at startup.
+    /// Eagerly warm up the default variant at startup.
     pub preload: bool,
 }
 
@@ -56,20 +57,20 @@ pub struct Engine {
     pub metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
     seq_len: usize,
+    classes: usize,
 }
 
 impl Engine {
-    /// Start the engine over a parsed manifest. The PJRT client and all
-    /// compiled executables are created **inside** the worker thread — the
-    /// `xla` crate's handles are not `Send`, so they must never cross
-    /// threads. Startup errors (bad artifacts, compile failures during
-    /// preload) are reported synchronously through a channel.
-    pub fn start(manifest: Manifest, cfg: EngineConfig) -> Result<Engine> {
+    /// Start the engine over a backend factory that runs on the worker
+    /// thread (see the module docs for why).
+    pub fn start_with<F>(factory: F, cfg: EngineConfig) -> Result<Engine>
+    where
+        F: FnOnce() -> Result<Box<dyn InferBackend>> + Send + 'static,
+    {
         let metrics = Arc::new(Metrics::new());
         let running = Arc::new(AtomicBool::new(true));
         let (tx, rx) = mpsc::channel::<Msg>();
-        let seq_len = manifest.task_seq_len;
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
 
         let worker = {
             let metrics = metrics.clone();
@@ -77,35 +78,25 @@ impl Engine {
             std::thread::Builder::new()
                 .name("dsa-engine".to_string())
                 .spawn(move || {
-                    let registry = match Registry::from_manifest(manifest) {
-                        Ok(r) => r,
+                    let mut backend = match factory() {
+                        Ok(b) => b,
                         Err(e) => {
-                            let _ = ready_tx.send(Err(e));
+                            let _ = ready_tx.send(Err(e.context("creating backend")));
                             return;
                         }
                     };
                     if cfg.preload {
-                        match registry.preload_classifiers(&cfg.default_variant) {
-                            Ok(0) => {
-                                let _ = ready_tx.send(Err(anyhow::anyhow!(
-                                    "no classifier modules for variant {}",
-                                    cfg.default_variant
-                                )));
-                                return;
-                            }
-                            Ok(_) => {}
-                            Err(e) => {
-                                let _ = ready_tx.send(Err(e.context("preload")));
-                                return;
-                            }
+                        if let Err(e) = backend.preload(&cfg.default_variant) {
+                            let _ = ready_tx.send(Err(e.context("preload")));
+                            return;
                         }
                     }
-                    let _ = ready_tx.send(Ok(()));
-                    worker_loop(registry, cfg, rx, metrics, running)
+                    let _ = ready_tx.send(Ok((backend.seq_len(), backend.classes())));
+                    worker_loop(backend.as_mut(), cfg, rx, metrics, running)
                 })
                 .context("spawning engine worker")?
         };
-        ready_rx
+        let (seq_len, classes) = ready_rx
             .recv()
             .context("engine worker died during startup")??;
 
@@ -116,12 +107,32 @@ impl Engine {
             metrics,
             running,
             seq_len,
+            classes,
         })
+    }
+
+    /// Start the hermetic native-kernel engine (no artifacts required).
+    pub fn start_native(model: NativeModelConfig, cfg: EngineConfig) -> Result<Engine> {
+        Engine::start_with(move || NativeBackend::boxed(model), cfg)
+    }
+
+    /// Start over AOT artifacts through PJRT (requires the `xla` feature).
+    #[cfg(feature = "xla")]
+    pub fn start(manifest: crate::runtime::Manifest, cfg: EngineConfig) -> Result<Engine> {
+        Engine::start_with(
+            move || super::backend::ArtifactBackend::boxed(manifest),
+            cfg,
+        )
     }
 
     /// Expected token-sequence length for requests.
     pub fn seq_len(&self) -> usize {
         self.seq_len
+    }
+
+    /// Logits per response.
+    pub fn classes(&self) -> usize {
+        self.classes
     }
 
     /// Submit a request; returns the channel delivering its response.
@@ -143,7 +154,7 @@ impl Engine {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Msg::Request(req, rtx))
-            .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+            .map_err(|_| crate::err!("engine stopped"))?;
         Ok(rrx)
     }
 
@@ -170,7 +181,7 @@ impl Drop for Engine {
 }
 
 fn worker_loop(
-    registry: Registry,
+    backend: &mut dyn InferBackend,
     cfg: EngineConfig,
     rx: Receiver<Msg>,
     metrics: Arc<Metrics>,
@@ -226,19 +237,19 @@ fn worker_loop(
             if batch.is_empty() {
                 break;
             }
-            execute_batch(&registry, &cfg, batch, &mut waiters, &metrics);
+            execute_batch(backend, &cfg, batch, &mut waiters, &metrics);
         }
     }
 
     // Flush any stragglers on shutdown.
     while !batcher.is_empty() {
         let batch = batcher.cut();
-        execute_batch(&registry, &cfg, batch, &mut waiters, &metrics);
+        execute_batch(backend, &cfg, batch, &mut waiters, &metrics);
     }
 }
 
 fn execute_batch(
-    registry: &Registry,
+    backend: &mut dyn InferBackend,
     cfg: &EngineConfig,
     batch: Vec<InferRequest>,
     waiters: &mut std::collections::HashMap<u64, Sender<InferResponse>>,
@@ -249,27 +260,9 @@ fn execute_batch(
         .clone()
         .unwrap_or_else(|| cfg.default_variant.clone());
     let n = batch.len();
-    let bucket = registry.manifest.bucket_for(n);
-    let seq_len = registry.manifest.task_seq_len;
-    let classes = registry.manifest.task_classes;
-
-    let Some(info) = registry.manifest.classifier(&variant, bucket) else {
-        log::error!("no classifier for variant={variant} bucket={bucket}");
-        for r in &batch {
-            waiters.remove(&r.id);
-        }
-        return;
-    };
-    let exe = match registry.load(&info.name) {
-        Ok(e) => e,
-        Err(e) => {
-            log::error!("loading {}: {e:#}", info.name);
-            for r in &batch {
-                waiters.remove(&r.id);
-            }
-            return;
-        }
-    };
+    let bucket = backend.bucket_for(n);
+    let seq_len = backend.seq_len();
+    let classes = backend.classes();
 
     // Pad to the bucket with the first request's tokens.
     let mut tokens = Vec::with_capacity(bucket * seq_len);
@@ -281,17 +274,16 @@ fn execute_batch(
     }
 
     let exec_start = Instant::now();
-    let out = match exe.run_f32(&[Arg::i32(tokens, &[bucket, seq_len])]) {
+    let logits = match backend.run(&variant, &tokens, bucket) {
         Ok(o) => o,
         Err(e) => {
-            log::error!("executing {}: {e:#}", info.name);
+            crate::log_error!("executing variant={variant} bucket={bucket}: {e}");
             for r in &batch {
                 waiters.remove(&r.id);
             }
             return;
         }
     };
-    let logits = &out[0];
     debug_assert_eq!(logits.len(), bucket * classes);
 
     let done = Instant::now();

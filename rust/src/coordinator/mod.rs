@@ -3,16 +3,20 @@
 //! * [`request`] — request/response types.
 //! * [`batcher`] — dynamic batching policy (max-batch / deadline / variant
 //!   grouping / backpressure).
-//! * [`engine`] — worker loop: batch → pad to bucket → PJRT execute → fan
-//!   out responses.
+//! * [`backend`] — execution backends: hermetic native kernels (always)
+//!   and PJRT artifacts (`xla` feature).
+//! * [`engine`] — worker loop: batch → pad to bucket → backend execute →
+//!   fan out responses.
 //! * [`metrics`] — latency/throughput/occupancy accounting.
 
+pub mod backend;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod request;
 pub mod router;
 
+pub use backend::{InferBackend, NativeBackend, NativeModelConfig};
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{Engine, EngineConfig};
 pub use metrics::Metrics;

@@ -1,0 +1,166 @@
+//! Dense attention reference: `softmax(Q K^T / sqrt(dk)) V` over row-major
+//! f32 buffers. This is the baseline every sparse path is validated
+//! against: at `keep = l` the dynamic-sparse pipeline in
+//! [`super::sparse`] performs the exact same float operations in the same
+//! order, so the two agree bit for bit.
+
+/// Scaled attention scores for query row `r`:
+/// `out[c] = (q_r . k_c) / sqrt(dk)`.
+pub fn score_row(q: &[f32], k: &[f32], l: usize, dk: usize, r: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), l);
+    let scale = 1.0 / (dk as f32).sqrt();
+    let qr = &q[r * dk..(r + 1) * dk];
+    for (c, o) in out.iter_mut().enumerate() {
+        let kc = &k[c * dk..(c + 1) * dk];
+        let mut acc = 0.0f32;
+        for (a, b) in qr.iter().zip(kc) {
+            acc += a * b;
+        }
+        *o = acc * scale;
+    }
+}
+
+/// Numerically-stable softmax over `row`, in place. A row whose maximum is
+/// not finite — e.g. every entry `-inf`, the fully-masked case — becomes
+/// all zeros instead of NaN, so downstream SpMM rows renormalize to a zero
+/// context vector rather than poisoning the output.
+pub fn softmax_in_place(row: &mut [f32]) {
+    let mut max = f32::NEG_INFINITY;
+    for &x in row.iter() {
+        if x > max {
+            max = x;
+        }
+    }
+    if !max.is_finite() {
+        for x in row.iter_mut() {
+            *x = 0.0;
+        }
+        return;
+    }
+    let mut sum = 0.0f32;
+    for x in row.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    if sum > 0.0 {
+        let inv = 1.0 / sum;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// Dense attention for query rows `r0..r1`, writing the `(r1 - r0) x dv`
+/// context rows into `out`. Row ranges are independent, so disjoint ranges
+/// can run on different threads (see [`super::parallel`]) with results
+/// identical to a single-threaded pass.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_rows(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (r1 - r0) * dv);
+    let mut row = vec![0f32; l];
+    for r in r0..r1 {
+        score_row(q, k, l, dk, r, &mut row);
+        softmax_in_place(&mut row);
+        let o = &mut out[(r - r0) * dv..(r - r0 + 1) * dv];
+        o.fill(0.0);
+        for (c, &w) in row.iter().enumerate() {
+            if w != 0.0 {
+                let vc = &v[c * dv..(c + 1) * dv];
+                for (oi, x) in o.iter_mut().zip(vc) {
+                    *oi += w * x;
+                }
+            }
+        }
+    }
+}
+
+/// Full dense attention: returns the `l x dv` context matrix.
+pub fn attention(q: &[f32], k: &[f32], v: &[f32], l: usize, dk: usize, dv: usize) -> Vec<f32> {
+    assert_eq!(q.len(), l * dk, "q shape");
+    assert_eq!(k.len(), l * dk, "k shape");
+    assert_eq!(v.len(), l * dv, "v shape");
+    let mut out = vec![0f32; l * dv];
+    attention_rows(q, k, v, l, dk, dv, 0, l, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_allclose;
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut row = vec![1.0f32, 2.0, 3.0];
+        softmax_in_place(&mut row);
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "sum {sum}");
+        assert!(row[2] > row[1] && row[1] > row[0]);
+    }
+
+    #[test]
+    fn softmax_fully_masked_row_is_zero_not_nan() {
+        let mut row = vec![f32::NEG_INFINITY; 4];
+        softmax_in_place(&mut row);
+        assert_eq!(row, vec![0.0; 4]);
+        let mut empty: Vec<f32> = Vec::new();
+        softmax_in_place(&mut empty); // must not panic
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let mut a = vec![1.0f32, 2.0, 4.0];
+        let mut b = vec![1001.0f32, 1002.0, 1004.0];
+        softmax_in_place(&mut a);
+        softmax_in_place(&mut b);
+        assert_allclose(&a, &b, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn uniform_scores_average_v() {
+        // q orthogonal to every k => all scores 0 => uniform weights.
+        let l = 4;
+        let (dk, dv) = (2, 3);
+        let q = vec![0.0f32; l * dk];
+        let k = vec![1.0f32; l * dk];
+        let v: Vec<f32> = (0..l * dv).map(|i| i as f32).collect();
+        let out = attention(&q, &k, &v, l, dk, dv);
+        // mean of rows [0,1,2],[3,4,5],[6,7,8],[9,10,11] = [4.5,5.5,6.5]
+        for r in 0..l {
+            assert_allclose(&out[r * dv..(r + 1) * dv], &[4.5, 5.5, 6.5], 1e-5, 1e-5);
+        }
+    }
+
+    #[test]
+    fn one_hot_scores_select_v_row() {
+        // Orthogonal q/k rows with large magnitude: row r attends ~only to
+        // the column sharing its axis, i.e. itself.
+        let l = 2;
+        let (dk, dv) = (2, 2);
+        let mut q = vec![0f32; l * dk];
+        for (r, chunk) in q.chunks_exact_mut(dk).enumerate() {
+            chunk[r] = 30.0;
+        }
+        let k = q.clone();
+        let v: Vec<f32> = (0..l * dv).map(|i| i as f32).collect();
+        let out = attention(&q, &k, &v, l, dk, dv);
+        for r in 0..l {
+            assert_allclose(
+                &out[r * dv..(r + 1) * dv],
+                &v[r * dv..(r + 1) * dv],
+                1e-3,
+                1e-3,
+            );
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! [`KernelDispatch`]: one call surface over the native attention paths so
+//! the engine backend, tests and benches can switch dense vs dynamic
+//! sparse (and single- vs multi-threaded) without caring which kernels
+//! run. Serving variant names ("dense", "dsa90", "dsa95", "dsa99", …)
+//! resolve through [`for_variant`].
+
+use super::{dense, parallel, sparse};
+
+/// One single-head attention problem, row-major f32.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnInput<'a> {
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub l: usize,
+    pub dk: usize,
+    pub dv: usize,
+}
+
+impl AttnInput<'_> {
+    fn validate(&self) {
+        assert_eq!(self.q.len(), self.l * self.dk, "q shape");
+        assert_eq!(self.k.len(), self.l * self.dk, "k shape");
+        assert_eq!(self.v.len(), self.l * self.dv, "v shape");
+    }
+}
+
+/// A selectable attention implementation.
+pub trait KernelDispatch: Send + Sync {
+    /// Human-readable identifier (shows up in bench/metrics output).
+    fn name(&self) -> String;
+
+    /// Kept entries per mask row at sequence length `l`; `None` = dense.
+    fn keep(&self, l: usize) -> Option<usize>;
+
+    /// Compute the `l x dv` context matrix.
+    fn forward(&self, x: &AttnInput) -> Vec<f32>;
+}
+
+/// Dense attention baseline (`threads`: 0 = one per core, 1 = reference
+/// single-threaded path).
+#[derive(Debug, Clone)]
+pub struct DenseKernel {
+    pub threads: usize,
+}
+
+impl KernelDispatch for DenseKernel {
+    fn name(&self) -> String {
+        format!("dense(t{})", self.threads)
+    }
+
+    fn keep(&self, _l: usize) -> Option<usize> {
+        None
+    }
+
+    fn forward(&self, x: &AttnInput) -> Vec<f32> {
+        x.validate();
+        if self.threads == 1 {
+            dense::attention(x.q, x.k, x.v, x.l, x.dk, x.dv)
+        } else {
+            parallel::dense_attention_mt(x.q, x.k, x.v, x.l, x.dk, x.dv, self.threads)
+        }
+    }
+}
+
+/// Dynamic-sparse attention at a target sparsity ratio in `(0, 1)`.
+#[derive(Debug, Clone)]
+pub struct SparseKernel {
+    pub sparsity: f64,
+    pub threads: usize,
+}
+
+impl SparseKernel {
+    /// Mask budget: kept entries per row at sequence length `l`.
+    pub fn keep_for(&self, l: usize) -> usize {
+        (((1.0 - self.sparsity) * l as f64).round() as usize).clamp(1, l.max(1))
+    }
+}
+
+impl KernelDispatch for SparseKernel {
+    fn name(&self) -> String {
+        format!("dsa{:.0}(t{})", self.sparsity * 100.0, self.threads)
+    }
+
+    fn keep(&self, l: usize) -> Option<usize> {
+        Some(self.keep_for(l))
+    }
+
+    fn forward(&self, x: &AttnInput) -> Vec<f32> {
+        x.validate();
+        let keep = self.keep_for(x.l);
+        if self.threads == 1 {
+            sparse::dsa_attention(x.q, x.k, x.v, x.l, x.dk, x.dv, keep)
+        } else {
+            parallel::dsa_attention_mt(x.q, x.k, x.v, x.l, x.dk, x.dv, keep, self.threads)
+        }
+    }
+}
+
+/// Kernel for a serving variant name: `"dense"`, or `"dsa<pct>"` with
+/// integer percent sparsity in `[1, 99]` (e.g. `"dsa90"`). Unknown names
+/// return `None`.
+pub fn for_variant(variant: &str, threads: usize) -> Option<Box<dyn KernelDispatch>> {
+    if variant == "dense" {
+        return Some(Box::new(DenseKernel { threads }));
+    }
+    let pct: u32 = variant.strip_prefix("dsa")?.parse().ok()?;
+    if !(1..=99).contains(&pct) {
+        return None;
+    }
+    Some(Box::new(SparseKernel {
+        sparsity: pct as f64 / 100.0,
+        threads,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn variant_resolution() {
+        assert_eq!(for_variant("dense", 1).unwrap().name(), "dense(t1)");
+        assert_eq!(for_variant("dsa90", 0).unwrap().name(), "dsa90(t0)");
+        assert!(for_variant("dsa0", 1).is_none());
+        assert!(for_variant("dsa100", 1).is_none());
+        assert!(for_variant("nope", 1).is_none());
+        assert!(for_variant("dsaXY", 1).is_none());
+    }
+
+    #[test]
+    fn keep_budgets() {
+        let k = SparseKernel { sparsity: 0.90, threads: 1 };
+        assert_eq!(k.keep_for(256), 26);
+        assert_eq!(k.keep_for(1), 1);
+        let k = SparseKernel { sparsity: 0.99, threads: 1 };
+        assert_eq!(k.keep_for(256), 3);
+        assert_eq!(for_variant("dense", 1).unwrap().keep(256), None);
+    }
+
+    #[test]
+    fn dispatch_paths_agree_at_full_keep() {
+        let mut rng = Rng::new(31);
+        let (l, dk, dv) = (24, 6, 5);
+        let q: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..l * dv).map(|_| rng.normal() as f32).collect();
+        let x = AttnInput { q: &q, k: &k, v: &v, l, dk, dv };
+        let dense_out = DenseKernel { threads: 1 }.forward(&x);
+        // sparsity small enough that keep rounds to l
+        let sparse_out = SparseKernel { sparsity: 1e-9, threads: 2 }.forward(&x);
+        assert_eq!(dense_out, sparse_out);
+    }
+}

@@ -1,0 +1,26 @@
+//! Native CPU implementations of the DSA kernel pipeline — the hermetic
+//! hot path the serving stack runs when no AOT artifacts (and no PJRT)
+//! are present, and the measured counterpart the analytical cost models
+//! (`costmodel`) are validated against.
+//!
+//! * [`dense`] — dense attention baseline (per-row, single-threaded
+//!   reference).
+//! * [`sparse`] — the dynamic pipeline of Eq. (4): int8 approximate-score
+//!   prediction → exact row top-k mask (`sparse::topk`) → SDDMM → masked
+//!   softmax → SpMM over [`crate::sparse::Csr`].
+//! * [`parallel`] — row-parallel multi-threaded drivers with bit-identical
+//!   results (rows are independent end to end).
+//! * [`dispatch`] — the [`KernelDispatch`] trait mapping serving variant
+//!   names ("dense", "dsa90", …) to kernel implementations.
+//! * [`model`] — a hand-constructed, training-free needle-counting
+//!   classifier over these kernels; the model behind
+//!   `coordinator::backend::NativeBackend`.
+
+pub mod dense;
+pub mod dispatch;
+pub mod model;
+pub mod parallel;
+pub mod sparse;
+
+pub use dispatch::{for_variant, AttnInput, DenseKernel, KernelDispatch, SparseKernel};
+pub use model::NativeClassifier;

@@ -1,0 +1,156 @@
+//! Hand-constructed needle-counting classifier over the native attention
+//! kernels — the model served by the hermetic engine backend.
+//!
+//! The synthetic serving task ([`crate::workload`], mirroring
+//! python/compile/data.py `gen_text`) plants `tokens[0]` as a needle;
+//! label 1 ⇔ the needle recurs at least `l/16` times. Attention solves
+//! this exactly without training: with random ±1 sign embeddings,
+//! `q_i · k_j` is large only where `t_i == t_j`, so query row 0's softmax
+//! mass over needle columns is monotone in the needle count. With one-hot
+//! value vectors, `out[0][needle]` *is* that mass, and thresholding it
+//! classifies the sequence.
+//!
+//! The threshold is variant-aware: a dynamic-sparse mask keeping `keep`
+//! entries per row renormalizes the softmax over a shorter non-match tail,
+//! inflating the mass, so the decision boundary is computed from the mask
+//! budget the dispatched kernel reports. This keeps the classifier
+//! accurate through the same dense and DSA kernels the benches measure
+//! (down to ~95% sparsity at l = 256; sparser masks saturate the mass and
+//! lose label-0 accuracy — the paper's accuracy/sparsity trade-off,
+//! observable natively).
+
+use super::dispatch::{AttnInput, KernelDispatch};
+use crate::util::rng::Rng;
+
+/// Token vocabulary (matches the workload generator's `1..=255` range and
+/// doubles as the one-hot value dimension).
+pub const VOCAB: usize = 256;
+/// Embedding width: same-token raw scores land at `sqrt(DK)` after the
+/// kernels' `1/sqrt(dk)` scaling; cross-token scores are ~N(0, 1).
+const DK: usize = 64;
+/// Target softmax weight of a matching column relative to a typical
+/// non-match (sets the query scale β = ln(MATCH_WEIGHT)/sqrt(DK)).
+const MATCH_WEIGHT: f64 = 40.0;
+/// Logit scale.
+const GAIN: f64 = 6.0;
+
+/// Deterministic needle-counting classifier. Cheap to construct; the
+/// embedding table is fixed by `seed`.
+pub struct NativeClassifier {
+    seq_len: usize,
+    /// `VOCAB x DK` random sign embeddings (±1).
+    emb: Vec<f32>,
+}
+
+impl NativeClassifier {
+    pub fn new(seq_len: usize, seed: u64) -> NativeClassifier {
+        assert!(seq_len >= 16, "seq_len {seq_len} too short for the task");
+        let mut emb = Vec::with_capacity(VOCAB * DK);
+        for t in 0..VOCAB {
+            let mut rng = Rng::new(seed ^ ((t as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+            for _ in 0..DK {
+                emb.push(if rng.next_u64() & 1 == 1 { 1.0 } else { -1.0 });
+            }
+        }
+        NativeClassifier { seq_len, emb }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn classes(&self) -> usize {
+        2
+    }
+
+    /// Decision boundary on the needle softmax mass for a mask keeping
+    /// `keep` entries per row: the mass a pivot count of matches (midway
+    /// between the task's label-0 max and label-1 min) would produce.
+    fn threshold(&self, keep: usize) -> f64 {
+        let l = self.seq_len;
+        let hi = (l / 16).max(8) as f64;
+        let lo = (hi / 4.0).max(2.0);
+        let pivot = (lo + hi) / 2.0;
+        pivot * MATCH_WEIGHT / (pivot * MATCH_WEIGHT + (keep as f64 - pivot).max(0.0))
+    }
+
+    /// Run one sequence through `kernel` and return `[logit_0, logit_1]`.
+    pub fn logits(&self, tokens: &[i32], kernel: &dyn KernelDispatch) -> Vec<f32> {
+        assert_eq!(tokens.len(), self.seq_len, "token length");
+        let l = self.seq_len;
+        let beta = (MATCH_WEIGHT.ln() / (DK as f64).sqrt()) as f32;
+        let mut q = Vec::with_capacity(l * DK);
+        let mut k = Vec::with_capacity(l * DK);
+        let mut v = vec![0f32; l * VOCAB];
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t.rem_euclid(VOCAB as i32) as usize;
+            let e = &self.emb[t * DK..(t + 1) * DK];
+            k.extend_from_slice(e);
+            q.extend(e.iter().map(|&x| x * beta));
+            v[i * VOCAB + t] = 1.0;
+        }
+        let out = kernel.forward(&AttnInput {
+            q: &q,
+            k: &k,
+            v: &v,
+            l,
+            dk: DK,
+            dv: VOCAB,
+        });
+        let needle = tokens[0].rem_euclid(VOCAB as i32) as usize;
+        // Row 0's context vector is a distribution over tokens; the mass on
+        // the needle coordinate is the matched attention fraction.
+        let mass = out[needle] as f64;
+        let keep = kernel.keep(l).unwrap_or(l);
+        let score = (GAIN * (mass - self.threshold(keep))) as f32;
+        vec![-score, score]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::InferResponse;
+    use crate::kernels::dispatch::for_variant;
+    use crate::workload::{Workload, WorkloadConfig};
+
+    fn accuracy(variant: &str, n: usize) -> f64 {
+        let model = NativeClassifier::new(256, 0xD5A);
+        let kernel = for_variant(variant, 0).expect("variant");
+        let mut wl = Workload::new(WorkloadConfig {
+            seq_len: 256,
+            seed: 1234,
+            ..Default::default()
+        });
+        let mut correct = 0usize;
+        for _ in 0..n {
+            let r = wl.next_request();
+            let logits = model.logits(&r.tokens, kernel.as_ref());
+            if InferResponse::argmax(&logits) as i32 == r.label {
+                correct += 1;
+            }
+        }
+        correct as f64 / n as f64
+    }
+
+    #[test]
+    fn dense_classifier_solves_the_task() {
+        assert!(accuracy("dense", 24) >= 0.95, "dense accuracy too low");
+    }
+
+    #[test]
+    fn dsa90_classifier_solves_the_task() {
+        assert!(accuracy("dsa90", 24) >= 0.9, "dsa90 accuracy too low");
+    }
+
+    #[test]
+    fn logits_are_antisymmetric_and_finite() {
+        let model = NativeClassifier::new(256, 0xD5A);
+        let kernel = for_variant("dsa95", 1).unwrap();
+        let tokens: Vec<i32> = (0..256).map(|i| 1 + (i % 255) as i32).collect();
+        let logits = model.logits(&tokens, kernel.as_ref());
+        assert_eq!(logits.len(), 2);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        assert!((logits[0] + logits[1]).abs() < 1e-6);
+    }
+}

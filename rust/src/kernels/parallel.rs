@@ -1,0 +1,150 @@
+//! Row-parallel execution of the native attention kernels with
+//! `std::thread::scope` (rayon is unavailable in the hermetic build).
+//!
+//! Attention rows are independent end to end — scoring, mask selection,
+//! SDDMM, masked softmax and SpMM — so the query dimension is split into
+//! contiguous chunks, one per worker, and each worker writes a disjoint
+//! slice of the output. Because every chunk performs exactly the
+//! operations the single-threaded reference would, results are
+//! **bit-identical** regardless of thread count (asserted by the tests).
+
+use super::sparse::ApproxScorer;
+use super::{dense, sparse};
+
+/// Resolve a requested worker count: 0 means one worker per available
+/// core.
+pub fn effective_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Split `out` into per-chunk row slices and run `f(r0, r1, slice)` on
+/// scoped worker threads (`threads <= 1` runs inline).
+fn par_row_chunks<F>(l: usize, dv: usize, threads: usize, out: &mut [f32], f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), l * dv);
+    let threads = threads.clamp(1, l.max(1));
+    if threads <= 1 {
+        f(0, l, out);
+        return;
+    }
+    let chunk = l.div_ceil(threads);
+    let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(threads);
+    let mut rest = out;
+    let mut r0 = 0;
+    while r0 < l {
+        let r1 = (r0 + chunk).min(l);
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * dv);
+        slices.push((r0, r1, head));
+        rest = tail;
+        r0 = r1;
+    }
+    let fref = &f;
+    std::thread::scope(|s| {
+        for (a, b, slice) in slices {
+            s.spawn(move || fref(a, b, slice));
+        }
+    });
+}
+
+/// Multi-threaded dense attention (`threads = 0` → one per core).
+pub fn dense_attention_mt(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(q.len(), l * dk, "q shape");
+    assert_eq!(k.len(), l * dk, "k shape");
+    assert_eq!(v.len(), l * dv, "v shape");
+    let mut out = vec![0f32; l * dv];
+    par_row_chunks(l, dv, effective_threads(threads), &mut out, |r0, r1, slice| {
+        dense::attention_rows(q, k, v, l, dk, dv, r0, r1, slice);
+    });
+    out
+}
+
+/// Multi-threaded dynamic-sparse attention: Q/K are quantized once, then
+/// each worker runs the full per-row DSA pipeline over its chunk.
+#[allow(clippy::too_many_arguments)]
+pub fn dsa_attention_mt(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(v.len(), l * dv, "v shape");
+    let scorer = ApproxScorer::new(q, k, l, dk);
+    let mut out = vec![0f32; l * dv];
+    par_row_chunks(l, dv, effective_threads(threads), &mut out, |r0, r1, slice| {
+        sparse::dsa_attention_rows(q, k, v, l, dk, dv, keep, &scorer, r0, r1, slice);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn effective_threads_resolves() {
+        assert_eq!(effective_threads(3), 3);
+        assert!(effective_threads(0) >= 1);
+    }
+
+    #[test]
+    fn dense_mt_matches_st_bitwise() {
+        let mut rng = Rng::new(21);
+        let (l, dk, dv) = (67, 8, 5); // odd sizes exercise ragged chunks
+        let q = randv(&mut rng, l * dk);
+        let k = randv(&mut rng, l * dk);
+        let v = randv(&mut rng, l * dv);
+        let st = dense::attention(&q, &k, &v, l, dk, dv);
+        for threads in [1, 2, 3, 8, 64, 200] {
+            let mt = dense_attention_mt(&q, &k, &v, l, dk, dv, threads);
+            assert_eq!(st, mt, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn sparse_mt_matches_st_bitwise() {
+        let mut rng = Rng::new(22);
+        let (l, dk, dv) = (61, 8, 7);
+        let q = randv(&mut rng, l * dk);
+        let k = randv(&mut rng, l * dk);
+        let v = randv(&mut rng, l * dv);
+        for keep in [1, 6, 61] {
+            let st = sparse::dsa_attention(&q, &k, &v, l, dk, dv, keep);
+            for threads in [2, 5, 16] {
+                let mt = dsa_attention_mt(&q, &k, &v, l, dk, dv, keep, threads);
+                assert_eq!(st, mt, "keep={keep} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_do_not_panic() {
+        let out = dense_attention_mt(&[], &[], &[], 0, 4, 4, 8);
+        assert!(out.is_empty());
+        let out = dsa_attention_mt(&[0.5], &[0.5], &[1.0], 1, 1, 1, 3, 4);
+        assert_eq!(out, vec![1.0]);
+    }
+}

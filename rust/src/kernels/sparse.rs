@@ -1,0 +1,330 @@
+//! The dynamic-sparse attention pipeline (paper Eq. 4 / Sec. 4): quantized
+//! approximate scores predict a per-input row top-k mask, and only the
+//! surviving entries run through SDDMM → masked softmax → SpMM.
+//!
+//! Two equivalent drivers are provided:
+//!
+//! * [`dsa_attention`] — the whole-matrix reference: full approximate-score
+//!   matrix → [`crate::sparse::topk::topk_mask_exact`] →
+//!   [`crate::sparse::Csr`] → [`sddmm`] → [`masked_softmax`] → [`spmm`].
+//! * [`dsa_attention_rows`] — the row-range form the multi-threaded path
+//!   ([`super::parallel`]) drives. Every stage is row-local, so both
+//!   drivers perform identical float operations per row and agree bit for
+//!   bit — and at `keep = l` they also match [`super::dense`] exactly.
+
+use super::dense::softmax_in_place;
+use crate::sparse::{topk, Csr};
+
+/// Symmetric int8 quantization: `x ≈ q * scale`. An all-zero (or empty)
+/// tensor quantizes to scale 0.
+pub fn quantize_i8(x: &[f32]) -> (Vec<i8>, f32) {
+    let max = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    if max == 0.0 {
+        return (vec![0; x.len()], 0.0);
+    }
+    let inv = 127.0 / max;
+    let q = x
+        .iter()
+        .map(|&v| (v * inv).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (q, max / 127.0)
+}
+
+/// Low-precision score predictor: Q and K quantized to int8 once, rows
+/// scored on demand. These approximate scores select the mask; the kept
+/// entries are then re-computed exactly by [`sddmm`] (the paper's
+/// approximate-prediction / exact-execution split).
+pub struct ApproxScorer {
+    qq: Vec<i8>,
+    kq: Vec<i8>,
+    scale: f32,
+    l: usize,
+    dk: usize,
+}
+
+impl ApproxScorer {
+    pub fn new(q: &[f32], k: &[f32], l: usize, dk: usize) -> ApproxScorer {
+        assert_eq!(q.len(), l * dk, "q shape");
+        assert_eq!(k.len(), l * dk, "k shape");
+        let (qq, qs) = quantize_i8(q);
+        let (kq, ks) = quantize_i8(k);
+        ApproxScorer {
+            qq,
+            kq,
+            scale: qs * ks / (dk as f32).sqrt(),
+            l,
+            dk,
+        }
+    }
+
+    /// Approximate scores of query row `r` against every key.
+    pub fn score_row(&self, r: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.l);
+        let dk = self.dk;
+        let qr = &self.qq[r * dk..(r + 1) * dk];
+        for (c, o) in out.iter_mut().enumerate() {
+            let kc = &self.kq[c * dk..(c + 1) * dk];
+            let mut acc = 0i32;
+            for (&a, &b) in qr.iter().zip(kc) {
+                acc += a as i32 * b as i32;
+            }
+            *o = acc as f32 * self.scale;
+        }
+    }
+
+    /// The full `l x l` approximate score matrix.
+    pub fn full(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.l * self.l];
+        for (r, row) in out.chunks_exact_mut(self.l).enumerate() {
+            self.score_row(r, row);
+        }
+        out
+    }
+}
+
+/// Full approximate score matrix for `q`/`k` (convenience wrapper).
+pub fn approx_scores(q: &[f32], k: &[f32], l: usize, dk: usize) -> Vec<f32> {
+    ApproxScorer::new(q, k, l, dk).full()
+}
+
+/// SDDMM: exact scaled scores computed only at the kept entries of
+/// `pattern`, returned aligned with `pattern.col_idx`.
+pub fn sddmm(q: &[f32], k: &[f32], dk: usize, pattern: &Csr) -> Vec<f32> {
+    let scale = 1.0 / (dk as f32).sqrt();
+    let mut vals = Vec::with_capacity(pattern.nnz());
+    for r in 0..pattern.rows {
+        let qr = &q[r * dk..(r + 1) * dk];
+        for &c in pattern.row(r) {
+            let kc = &k[c as usize * dk..(c as usize + 1) * dk];
+            let mut acc = 0.0f32;
+            for (a, b) in qr.iter().zip(kc) {
+                acc += a * b;
+            }
+            vals.push(acc * scale);
+        }
+    }
+    vals
+}
+
+/// Masked softmax over CSR values, row by row in place. Rows with no kept
+/// entries are skipped; rows whose kept scores are all `-inf` renormalize
+/// to zeros (see [`softmax_in_place`]) — never NaN.
+pub fn masked_softmax(pattern: &Csr, vals: &mut [f32]) {
+    assert_eq!(vals.len(), pattern.nnz(), "values misaligned with pattern");
+    for r in 0..pattern.rows {
+        let (a, b) = (pattern.row_ptr[r] as usize, pattern.row_ptr[r + 1] as usize);
+        softmax_in_place(&mut vals[a..b]);
+    }
+}
+
+/// SpMM: `out = A V` where sparse `A` has `pattern` structure and `vals`
+/// values. Rows with no kept entries produce zero context vectors.
+pub fn spmm(pattern: &Csr, vals: &[f32], v: &[f32], dv: usize) -> Vec<f32> {
+    assert_eq!(vals.len(), pattern.nnz(), "values misaligned with pattern");
+    assert_eq!(v.len(), pattern.cols * dv, "v shape");
+    let mut out = vec![0f32; pattern.rows * dv];
+    for (r, orow) in out.chunks_exact_mut(dv).enumerate() {
+        let base = pattern.row_ptr[r] as usize;
+        for (i, &c) in pattern.row(r).iter().enumerate() {
+            let w = vals[base + i];
+            if w != 0.0 {
+                let vc = &v[c as usize * dv..(c as usize + 1) * dv];
+                for (o, x) in orow.iter_mut().zip(vc) {
+                    *o += w * x;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Whole-matrix dynamic-sparse attention reference (single-threaded).
+pub fn dsa_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+) -> Vec<f32> {
+    assert_eq!(v.len(), l * dv, "v shape");
+    let scores = approx_scores(q, k, l, dk);
+    let mask = topk::topk_mask_exact(&scores, l, l, keep);
+    let pattern = Csr::from_mask(&mask);
+    let mut vals = sddmm(q, k, dk, &pattern);
+    masked_softmax(&pattern, &mut vals);
+    spmm(&pattern, &vals, v, dv)
+}
+
+/// The full DSA pipeline for query rows `r0..r1`, writing `(r1 - r0) x dv`
+/// context rows into `out`. Mask selection (exact row top-k on the shared
+/// [`ApproxScorer`], via [`topk::topk_row_indices`] — the same primitive
+/// `topk_mask_exact` uses), SDDMM, masked softmax and SpMM all happen per
+/// row, so disjoint ranges parallelize with bit-identical results.
+#[allow(clippy::too_many_arguments)]
+pub fn dsa_attention_rows(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+    scorer: &ApproxScorer,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (r1 - r0) * dv);
+    let scale = 1.0 / (dk as f32).sqrt();
+    let mut srow = vec![0f32; l];
+    let mut vals: Vec<f32> = Vec::with_capacity(keep.min(l));
+    for r in r0..r1 {
+        scorer.score_row(r, &mut srow);
+        let kept = topk::topk_row_indices(&srow, keep);
+        // SDDMM over the kept entries of this row.
+        vals.clear();
+        let qr = &q[r * dk..(r + 1) * dk];
+        for &c in &kept {
+            let kc = &k[c * dk..(c + 1) * dk];
+            let mut acc = 0.0f32;
+            for (a, b) in qr.iter().zip(kc) {
+                acc += a * b;
+            }
+            vals.push(acc * scale);
+        }
+        softmax_in_place(&mut vals);
+        // SpMM row.
+        let orow = &mut out[(r - r0) * dv..(r - r0 + 1) * dv];
+        orow.fill(0.0);
+        for (&c, &w) in kept.iter().zip(vals.iter()) {
+            if w != 0.0 {
+                let vc = &v[c * dv..(c + 1) * dv];
+                for (o, x) in orow.iter_mut().zip(vc) {
+                    *o += w * x;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::DenseMask;
+    use crate::util::prop::{assert_allclose, forall, Config};
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn quantize_roundtrips_within_step() {
+        let x = vec![-2.0f32, -0.5, 0.0, 0.7, 1.9];
+        let (q, s) = quantize_i8(&x);
+        for (orig, &qi) in x.iter().zip(&q) {
+            assert!((orig - qi as f32 * s).abs() <= s * 0.5 + 1e-7);
+        }
+        let (qz, sz) = quantize_i8(&[0.0, 0.0]);
+        assert_eq!((qz, sz), (vec![0, 0], 0.0));
+    }
+
+    #[test]
+    fn approx_scores_track_exact_ranking() {
+        let mut rng = Rng::new(1);
+        let (l, dk) = (16, 8);
+        let q = randv(&mut rng, l * dk);
+        let k = randv(&mut rng, l * dk);
+        let approx = approx_scores(&q, &k, l, dk);
+        let mut exact = vec![0f32; l];
+        for r in 0..l {
+            super::super::dense::score_row(&q, &k, l, dk, r, &mut exact);
+            // int8 x int8 error stays well under the score spread
+            assert_allclose(&approx[r * l..(r + 1) * l], &exact, 0.05, 0.25);
+        }
+    }
+
+    #[test]
+    fn masked_softmax_rows_sum_to_one_or_zero() {
+        let mut m = DenseMask::zeros(3, 6);
+        for c in [0, 2, 5] {
+            m.set(0, c, true);
+        }
+        m.set(2, 1, true);
+        // row 1 fully masked (no kept entries)
+        let pattern = Csr::from_mask(&m);
+        let mut vals = vec![0.3, -1.0, 2.0, 4.0];
+        masked_softmax(&pattern, &mut vals);
+        let row0: f32 = vals[..3].iter().sum();
+        assert!((row0 - 1.0).abs() < 1e-6);
+        assert!((vals[3] - 1.0).abs() < 1e-6); // single-entry row
+        let out = spmm(&pattern, &vals, &[1.0f32; 12], 2);
+        // fully-masked row 1 must be exactly zero, not NaN
+        assert_eq!(&out[2..4], &[0.0, 0.0]);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn sparse_at_full_keep_matches_dense_prop() {
+        forall(
+            &Config { cases: 24, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let l = 2 + rng.below(4 * size as u64) as usize;
+                let dk = 1 + rng.below(16) as usize;
+                let dv = 1 + rng.below(16) as usize;
+                let q = randv(rng, l * dk);
+                let k = randv(rng, l * dk);
+                let v = randv(rng, l * dv);
+                (q, k, v, l, dk, dv)
+            },
+            |(q, k, v, l, dk, dv)| {
+                let dense = super::super::dense::attention(q, k, v, *l, *dk, *dv);
+                let sparse = dsa_attention(q, k, v, *l, *dk, *dv, *l);
+                // keep = l: identical op order => bit-for-bit equal
+                dense == sparse
+            },
+        );
+    }
+
+    #[test]
+    fn row_driver_matches_reference_prop() {
+        forall(
+            &Config { cases: 24, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let l = 2 + rng.below(4 * size as u64) as usize;
+                let dk = 1 + rng.below(12) as usize;
+                let dv = 1 + rng.below(12) as usize;
+                let keep = 1 + rng.below(l as u64) as usize;
+                let q = randv(rng, l * dk);
+                let k = randv(rng, l * dk);
+                let v = randv(rng, l * dv);
+                (q, k, v, l, dk, dv, keep)
+            },
+            |(q, k, v, l, dk, dv, keep)| {
+                let whole = dsa_attention(q, k, v, *l, *dk, *dv, *keep);
+                let scorer = ApproxScorer::new(q, k, *l, *dk);
+                let mut by_rows = vec![0f32; l * dv];
+                // split at an arbitrary interior row
+                let mid = l / 2;
+                let (a, b) = by_rows.split_at_mut(mid * dv);
+                dsa_attention_rows(q, k, v, *l, *dk, *dv, *keep, &scorer, 0, mid, a);
+                dsa_attention_rows(q, k, v, *l, *dk, *dv, *keep, &scorer, mid, *l, b);
+                whole == by_rows
+            },
+        );
+    }
+
+    #[test]
+    fn sparsity_actually_prunes() {
+        let mut rng = Rng::new(9);
+        let (l, dk) = (64, 8);
+        let q = randv(&mut rng, l * dk);
+        let k = randv(&mut rng, l * dk);
+        let scores = approx_scores(&q, &k, l, dk);
+        let mask = topk::topk_mask_exact(&scores, l, l, 6);
+        assert_eq!(Csr::from_mask(&mask).nnz(), l * 6);
+        assert!((mask.sparsity() - (1.0 - 6.0 / 64.0)).abs() < 1e-9);
+    }
+}

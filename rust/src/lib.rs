@@ -5,26 +5,36 @@
 //!
 //! * Layer 1 — Pallas kernels (build time, `python/compile/kernels/`)
 //! * Layer 2 — JAX model + AOT lowering to HLO text (`python/compile/`)
-//! * Layer 3 — this crate: a Rust serving coordinator that loads the AOT
-//!   artifacts via PJRT and serves batched inference requests, plus the
+//! * Layer 3 — this crate: a Rust serving coordinator plus native CPU
+//!   implementations of the full DSA kernel pipeline, and the
 //!   hardware-evaluation substrates (cost model, PE-array dataflow
 //!   simulator) used to reproduce the paper's systems results.
+//!
+//! **Build story:** the default feature set is hermetic — zero external
+//! crates, no Python artifacts, no network. `cargo build --release &&
+//! cargo test -q` works from a fresh checkout; the engine serves through
+//! the native [`kernels`] and CI (.github/workflows/ci.yml) gates fmt,
+//! clippy, build, test and pytest on every PR. The optional `xla` feature
+//! (plus a vendored `xla` crate, see Cargo.toml) additionally compiles the
+//! PJRT runtime that executes AOT artifacts from `make artifacts`.
 //!
 //! Module map (see DESIGN.md for the per-experiment index):
 //!
 //! | module | role |
 //! |---|---|
-//! | [`runtime`] | PJRT client + artifact registry (only `xla`-touching code) |
-//! | [`coordinator`] | dynamic batcher, engine worker, metrics |
+//! | [`kernels`] | native DSA pipeline: dense baseline, int8 score prediction, SDDMM, masked softmax, SpMM, row-parallel drivers, `KernelDispatch` |
+//! | [`runtime`] | artifact manifest (always) + PJRT client/registry (`xla` feature) |
+//! | [`coordinator`] | dynamic batcher, backends, engine worker, metrics |
 //! | [`server`] | line-JSON TCP front end + client |
 //! | [`sparse`] | mask / CSR / column-vector formats, top-k |
 //! | [`sim`] | PE-array dataflow + multi-precision simulators (Sec. 5.2) |
 //! | [`costmodel`] | MAC / energy / V100-roofline models (Fig. 7/8/10, Table 4) |
 //! | [`workload`] | synthetic serving workload generators |
-//! | [`util`] | offline substrates: json, cli, rng, stats, bench, prop, tensorio |
+//! | [`util`] | offline substrates: json, cli, rng, stats, bench, prop, error, logging, tensorio |
 
 pub mod coordinator;
 pub mod costmodel;
+pub mod kernels;
 pub mod runtime;
 pub mod server;
 pub mod sim;

@@ -11,9 +11,8 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
-
-use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
+use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig, NativeModelConfig};
+use dsa_serve::util::error::{bail, err, Result};
 use dsa_serve::costmodel::{energy, gpu, macs};
 use dsa_serve::runtime::registry::Manifest;
 use dsa_serve::server;
@@ -71,14 +70,15 @@ fn usage() -> String {
 
 fn engine_args(program: &str) -> Args {
     Args::new(program, "DSA serving")
+        .opt("backend", "auto", "auto|native|artifacts (native = hermetic kernels)")
         .opt("artifacts", "artifacts", "artifact directory (make artifacts)")
         .opt("variant", "dsa90", "model variant: dense|dsa90|dsa95|dsa99")
+        .opt("seq-len", "256", "sequence length of the native backend")
         .opt("max-batch", "8", "dynamic batcher: max requests per batch")
         .opt("max-wait-ms", "4", "dynamic batcher: head-of-line deadline")
 }
 
 fn start_engine(a: &Args) -> Result<Engine> {
-    let manifest = Manifest::open(a.get("artifacts"))?;
     let cfg = EngineConfig {
         default_variant: a.get("variant"),
         policy: BatchPolicy {
@@ -88,14 +88,40 @@ fn start_engine(a: &Args) -> Result<Engine> {
         },
         preload: true,
     };
-    Engine::start(manifest, cfg)
+    let artifacts = a.get("artifacts");
+    let use_artifacts = match a.get("backend").as_str() {
+        "native" => false,
+        "artifacts" => true,
+        "auto" => {
+            cfg!(feature = "xla")
+                && std::path::Path::new(&artifacts).join("manifest.json").exists()
+        }
+        other => bail!("unknown --backend {other:?} (auto|native|artifacts)"),
+    };
+    if use_artifacts {
+        #[cfg(feature = "xla")]
+        {
+            let manifest = Manifest::open(&artifacts)?;
+            return Engine::start(manifest, cfg);
+        }
+        #[cfg(not(feature = "xla"))]
+        bail!("--backend artifacts needs --features xla (and a vendored xla crate)");
+    }
+    println!("using hermetic native-kernel backend (no artifacts)");
+    Engine::start_native(
+        NativeModelConfig {
+            seq_len: a.get_usize("seq-len"),
+            ..Default::default()
+        },
+        cfg,
+    )
 }
 
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let a = engine_args("dsa-serve serve")
         .opt("addr", "127.0.0.1:7788", "listen address")
         .parse(rest)
-        .map_err(|u| anyhow::anyhow!("{u}"))?;
+        .map_err(|u| err!("{u}"))?;
     let engine = Arc::new(start_engine(&a)?);
     println!(
         "engine up: variant={} seq_len={}",
@@ -110,7 +136,7 @@ fn cmd_infer(rest: &[String]) -> Result<()> {
         .opt("label", "1", "ground-truth label of the generated example")
         .opt("seed", "0", "workload seed")
         .parse(rest)
-        .map_err(|u| anyhow::anyhow!("{u}"))?;
+        .map_err(|u| err!("{u}"))?;
     let engine = start_engine(&a)?;
     let mut wl = Workload::new(WorkloadConfig {
         seq_len: engine.seq_len(),
@@ -141,7 +167,7 @@ fn cmd_bench_serve(rest: &[String]) -> Result<()> {
         .opt("rate", "100", "open-loop arrival rate (req/s); 0 = closed loop")
         .opt("seed", "0", "workload seed")
         .parse(rest)
-        .map_err(|u| anyhow::anyhow!("{u}"))?;
+        .map_err(|u| err!("{u}"))?;
     let engine = Arc::new(start_engine(&a)?);
     let n = a.get_usize("requests");
     let rate = a.get_f64("rate");
@@ -188,7 +214,7 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("pes", "8", "row-parallel PEs")
         .parse(rest)
-        .map_err(|u| anyhow::anyhow!("{u}"))?;
+        .map_err(|u| err!("{u}"))?;
     let manifest = Manifest::open(a.get("artifacts"))?;
     let t = manifest.tensor("dsa90_masks")?;
     if t.dims.len() != 4 {
@@ -231,7 +257,7 @@ fn cmd_costmodel(rest: &[String]) -> Result<()> {
     let a = Args::new("dsa-serve costmodel", "cost model tables")
         .opt("task", "all", "text|text4k|retrieval|image|all")
         .parse(rest)
-        .map_err(|u| anyhow::anyhow!("{u}"))?;
+        .map_err(|u| err!("{u}"))?;
     let shapes: Vec<(&str, macs::LayerShape)> = vec![
         ("text-2k", macs::LayerShape::lra_text()),
         ("text-4k", macs::LayerShape::lra_text_4k()),
@@ -305,7 +331,7 @@ fn cmd_report(rest: &[String]) -> Result<()> {
     let a = Args::new("dsa-serve report", "summarize bench results")
         .opt("file", "results/bench.jsonl", "bench jsonl path")
         .parse(rest)
-        .map_err(|u| anyhow::anyhow!("{u}"))?;
+        .map_err(|u| err!("{u}"))?;
     let text = std::fs::read_to_string(a.get("file"))?;
     let mut by_suite: std::collections::BTreeMap<String, Vec<(String, f64)>> =
         Default::default();

@@ -9,7 +9,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 /// Shared PJRT client handle.
 #[derive(Clone)]

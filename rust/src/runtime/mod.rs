@@ -1,9 +1,21 @@
 //! PJRT runtime: client wrapper ([`client`]) and artifact registry
-//! ([`registry`]). This is the only module that touches the `xla` crate;
-//! everything above it (coordinator, server) works with plain vectors.
+//! ([`registry`]).
+//!
+//! Everything that touches the `xla` crate is gated behind the `xla`
+//! feature so the default build is hermetic: [`registry::Manifest`]
+//! (artifact metadata parsing, no PJRT state) is always available, while
+//! [`client`] and [`registry::Registry`] (compiled-executable cache) only
+//! exist with `--features xla` and a vendored `xla` crate (see
+//! Cargo.toml). Everything above this module (coordinator, server) works
+//! with plain vectors and the backend abstraction in
+//! `coordinator::backend`.
 
+#[cfg(feature = "xla")]
 pub mod client;
 pub mod registry;
 
+#[cfg(feature = "xla")]
 pub use client::{Arg, Client, Executable};
-pub use registry::{ModuleInfo, Registry};
+pub use registry::{Manifest, ModuleInfo};
+#[cfg(feature = "xla")]
+pub use registry::Registry;

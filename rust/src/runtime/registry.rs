@@ -1,13 +1,15 @@
 //! Artifact registry: parses `artifacts/manifest.json`, lazily compiles
 //! modules, and exposes variant/batch lookup for the coordinator.
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "xla")]
 use std::sync::Mutex;
 
-use anyhow::{bail, Context, Result};
-
+#[cfg(feature = "xla")]
 use crate::runtime::client::{Client, Executable};
+use crate::util::error::{bail, Context, Result};
 use crate::util::json::{self, Json};
 use crate::util::tensorio::Tensor;
 
@@ -41,6 +43,7 @@ pub struct Manifest {
 /// Manifest + PJRT client + compiled-executable cache. **Not `Send`**: the
 /// `xla` crate wraps thread-local Rc handles, so a `Registry` must be
 /// created and used on one thread (the engine worker does exactly that).
+#[cfg(feature = "xla")]
 pub struct Registry {
     pub manifest: Manifest,
     client: Client,
@@ -181,6 +184,7 @@ impl Manifest {
     }
 }
 
+#[cfg(feature = "xla")]
 impl Registry {
     /// Open `root/manifest.json` and create the PJRT client **on this
     /// thread** (see the `Send` note on the type).

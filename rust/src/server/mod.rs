@@ -17,9 +17,8 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
-
 use crate::coordinator::Engine;
+use crate::util::error::{bail, Context, Result};
 use crate::util::json::{self, Json};
 
 /// Serve `engine` on `addr` until a client sends `{"op":"shutdown"}`.
@@ -38,7 +37,7 @@ pub fn serve(engine: Arc<Engine>, addr: &str) -> Result<()> {
         let stop2 = stop.clone();
         handles.push(std::thread::spawn(move || {
             if let Err(e) = handle_conn(stream, &engine, &stop2) {
-                log::debug!("connection ended: {e:#}");
+                crate::log_debug!("connection ended: {e}");
             }
         }));
         if stop.load(Ordering::SeqCst) {
@@ -74,7 +73,7 @@ fn handle_conn(stream: TcpStream, engine: &Engine, stop: &AtomicBool) -> Result<
             break;
         }
     }
-    log::debug!("peer {peer} disconnected");
+    crate::log_debug!("peer {peer} disconnected");
     Ok(())
 }
 
@@ -123,7 +122,7 @@ pub fn handle_line(line: &str, engine: &Engine, stop: &AtomicBool) -> Result<Jso
                 ("variant", Json::str(resp.variant)),
             ]))
         }
-        other => anyhow::bail!("unknown op {other:?}"),
+        other => bail!("unknown op {other:?}"),
     }
 }
 

@@ -7,9 +7,8 @@
 //! §Hardware-Adaptation). This encoding complements [`super::ColVec`]:
 //! reuse factor B on *both* operands instead of one.
 
-use anyhow::{bail, Result};
-
 use super::mask::DenseMask;
+use crate::util::error::{bail, Result};
 
 /// Block pattern: for each block-row, the ascending list of block-columns.
 #[derive(Debug, Clone, PartialEq, Eq)]

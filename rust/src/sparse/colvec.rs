@@ -7,9 +7,8 @@
 //! while keeping the selection granularity small enough to preserve
 //! accuracy (Table 4).
 
-use anyhow::{bail, Result};
-
 use super::mask::DenseMask;
+use crate::util::error::{bail, Result};
 
 /// Column-vector pattern: for each row panel, the list of selected columns.
 #[derive(Debug, Clone, PartialEq, Eq)]

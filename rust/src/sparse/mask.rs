@@ -3,8 +3,7 @@
 //! The canonical in-memory form of a predicted sparsity pattern `M` from
 //! Eq. (4): `rows x cols` bits, row-major, one u64 word per 64 columns.
 
-use anyhow::{bail, Result};
-
+use crate::util::error::{bail, Result};
 use crate::util::tensorio::{DType, Tensor};
 
 /// Bitset mask over an attention matrix.

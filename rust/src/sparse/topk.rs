@@ -4,27 +4,78 @@
 //! kernels.ref.topk_mask): the k-th largest value per row is the threshold
 //! and ties at the threshold are kept (so nnz per row can exceed k when
 //! scores tie — relevant for quantized scores, where ties are common).
+//!
+//! NaN scores are ordered below every finite value and `-inf` (a NaN can
+//! never displace a real score from a top-k set; an all-NaN row keeps
+//! everything under the inclusive-tie rule and exactly `k` low-column
+//! entries under the exact rule). The previous implementation fed NaNs
+//! through `partial_cmp`, making `select_nth_unstable_by`'s ordering
+//! non-total and the `>= thresh` filter silently drop rows.
+
+use std::cmp::Ordering;
 
 use super::mask::DenseMask;
 
-/// Row top-k mask over a row-major `rows x cols` score matrix.
+/// Map NaN to `-inf` so `total_cmp` gives the ordering documented above.
+#[inline]
+fn sanitize(x: f32) -> f32 {
+    if x.is_nan() {
+        f32::NEG_INFINITY
+    } else {
+        x
+    }
+}
+
+/// Total order: higher score first, ties broken by lower column index.
+#[inline]
+fn desc_score_then_col(row: &[f32], a: usize, b: usize) -> Ordering {
+    sanitize(row[b])
+        .total_cmp(&sanitize(row[a]))
+        .then(a.cmp(&b))
+}
+
+/// Exact top-k column indices of one score row (ties broken by lower
+/// column), returned in ascending column order. This is the per-row
+/// primitive shared by [`topk_mask_exact`] and the native kernels'
+/// row-parallel path, so both always select identical masks.
+pub fn topk_row_indices(row: &[f32], k: usize) -> Vec<usize> {
+    let cols = row.len();
+    if cols == 0 {
+        return Vec::new();
+    }
+    let k = k.clamp(1, cols);
+    let mut order: Vec<usize> = (0..cols).collect();
+    if k < cols {
+        // Partial selection instead of a full per-row sort: O(cols) to
+        // place the top-k prefix (§Perf: see EXPERIMENTS.md for the
+        // measured delta at 256x256, k=26).
+        order.select_nth_unstable_by(k, |&a, &b| desc_score_then_col(row, a, b));
+        order.truncate(k);
+    }
+    order.sort_unstable();
+    order
+}
+
+/// Row top-k mask over a row-major `rows x cols` score matrix, keeping
+/// ties at the threshold (nnz per row >= k).
 pub fn topk_mask(scores: &[f32], rows: usize, cols: usize, k: usize) -> DenseMask {
     assert_eq!(scores.len(), rows * cols);
-    let k = k.clamp(1, cols.max(1));
     let mut m = DenseMask::zeros(rows, cols);
+    if cols == 0 {
+        return m;
+    }
+    let k = k.clamp(1, cols);
     let mut buf: Vec<f32> = Vec::with_capacity(cols);
     for r in 0..rows {
         let row = &scores[r * cols..(r + 1) * cols];
         buf.clear();
-        buf.extend_from_slice(row);
-        // kth largest via partial selection
+        buf.extend(row.iter().map(|&v| sanitize(v)));
+        // kth largest via partial selection under a total order
         let idx = cols - k;
-        buf.select_nth_unstable_by(idx, |a, b| {
-            a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)
-        });
+        buf.select_nth_unstable_by(idx, |a, b| a.total_cmp(b));
         let thresh = buf[idx];
         for (c, &v) in row.iter().enumerate() {
-            if v >= thresh {
+            if sanitize(v) >= thresh {
                 m.set(r, c, true);
             }
         }
@@ -36,33 +87,13 @@ pub fn topk_mask(scores: &[f32], rows: usize, cols: usize, k: usize) -> DenseMas
 /// order) — the row-uniform constraint of Sec. 5.2 that balances PE load.
 pub fn topk_mask_exact(scores: &[f32], rows: usize, cols: usize, k: usize) -> DenseMask {
     assert_eq!(scores.len(), rows * cols);
-    let k = k.clamp(1, cols.max(1));
     let mut m = DenseMask::zeros(rows, cols);
-    let mut order: Vec<usize> = Vec::with_capacity(cols);
+    if cols == 0 {
+        return m;
+    }
     for r in 0..rows {
         let row = &scores[r * cols..(r + 1) * cols];
-        order.clear();
-        order.extend(0..cols);
-        if k < cols {
-            // Partial selection instead of a full per-row sort: O(cols) to
-            // place the top-k prefix, then sort only that prefix for the
-            // deterministic column-order tie-break. (§Perf: 8.4 ms -> see
-            // EXPERIMENTS.md for the measured delta at 256x256, k=26.)
-            order.select_nth_unstable_by(k, |&a, &b| {
-                row[b]
-                    .partial_cmp(&row[a])
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(a.cmp(&b))
-            });
-        }
-        let prefix = &mut order[..k];
-        prefix.sort_by(|&a, &b| {
-            row[b]
-                .partial_cmp(&row[a])
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.cmp(&b))
-        });
-        for &c in prefix.iter() {
+        for c in topk_row_indices(row, k) {
             m.set(r, c, true);
         }
     }
@@ -90,6 +121,68 @@ mod tests {
         assert_eq!(m.row_nnz(0), 3); // all tied at threshold kept
         let e = topk_mask_exact(&scores, 1, 4, 2);
         assert_eq!(e.row_nnz(0), 2); // exact variant trims
+    }
+
+    #[test]
+    fn row_indices_ascending_and_exact() {
+        let row = [0.3f32, 0.9, 0.1, 0.9, 0.5];
+        assert_eq!(topk_row_indices(&row, 3), vec![1, 3, 4]);
+        assert_eq!(topk_row_indices(&row, 99), vec![0, 1, 2, 3, 4]);
+        assert_eq!(topk_row_indices(&[], 3), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn nan_scores_never_selected_over_finite() {
+        // Regression: NaNs used to corrupt select_nth's ordering and the
+        // `>= thresh` filter could silently drop whole rows.
+        let scores = vec![f32::NAN, 1.0, f32::NAN, 0.5];
+        let m = topk_mask(&scores, 1, 4, 2);
+        assert_eq!(m.row_cols(0), vec![1, 3]);
+        let e = topk_mask_exact(&scores, 1, 4, 2);
+        assert_eq!(e.row_cols(0), vec![1, 3]);
+    }
+
+    #[test]
+    fn all_nan_row_keeps_k_exact_and_all_inclusive() {
+        let scores = vec![f32::NAN; 4];
+        // Inclusive rule: everything ties at the sanitized threshold.
+        assert_eq!(topk_mask(&scores, 1, 4, 2).row_nnz(0), 4);
+        // Exact rule: low-column tie-break, still exactly k.
+        assert_eq!(topk_mask_exact(&scores, 1, 4, 2).row_cols(0), vec![0, 1]);
+    }
+
+    #[test]
+    fn nan_rows_prop() {
+        forall(
+            &Config { cases: 40, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let rows = 1 + rng.below(size as u64) as usize;
+                let cols = 4 + rng.below(size as u64 * 8) as usize;
+                let k = 1 + rng.below((cols / 2) as u64) as usize;
+                let scores: Vec<f32> = (0..rows * cols)
+                    .map(|_| {
+                        if rng.f64() < 0.2 {
+                            f32::NAN
+                        } else {
+                            rng.f32()
+                        }
+                    })
+                    .collect();
+                (scores, rows, cols, k)
+            },
+            |(scores, rows, cols, k)| {
+                let e = topk_mask_exact(scores, *rows, *cols, *k);
+                (0..*rows).all(|r| {
+                    let row = &scores[r * cols..(r + 1) * cols];
+                    let finite = row.iter().filter(|v| !v.is_nan()).count();
+                    // exact-k never drops a row, and NaN columns are only
+                    // selected when fewer than k finite scores exist.
+                    e.row_nnz(r) == *k
+                        && (finite < *k
+                            || e.row_cols(r).iter().all(|&c| !row[c].is_nan()))
+                })
+            },
+        );
     }
 
     #[test]

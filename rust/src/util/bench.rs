@@ -111,9 +111,39 @@ impl Bench {
                 if let Json::Obj(m) = &mut j {
                     m.insert("suite".into(), Json::str(suite));
                 }
-                let _ = writeln!(f, "{}", j.to_string());
+                let _ = writeln!(f, "{j}");
             }
         }
+    }
+
+    /// Write one JSON document summarizing every recorded result to `path`
+    /// (e.g. `results/BENCH_kernels.json`) — the machine-readable artifact
+    /// a bench run leaves behind for perf-trajectory tracking.
+    pub fn write_summary(
+        &self,
+        path: impl AsRef<std::path::Path>,
+        suite: &str,
+    ) -> std::io::Result<()> {
+        let host_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let doc = Json::obj(vec![
+            ("suite", Json::str(suite)),
+            ("host_threads", Json::num(host_threads as f64)),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ]);
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, doc.to_string())
+    }
+
+    /// Mean seconds of a recorded result by exact name, if present.
+    pub fn mean_of(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|r| r.name == name).map(|r| r.mean_s)
     }
 
     pub fn results(&self) -> &[BenchResult] {
@@ -140,5 +170,26 @@ mod tests {
         assert!(r.iters >= 1);
         assert!(r.mean_s >= 0.0);
         assert_eq!(b.results().len(), 1);
+        assert!(b.mean_of("noop").is_some());
+        assert!(b.mean_of("nope").is_none());
+    }
+
+    #[test]
+    fn writes_summary_json() {
+        let mut b = Bench {
+            warmup_iters: 0,
+            max_iters: 2,
+            budget: Duration::from_millis(50),
+            results: Vec::new(),
+        };
+        b.run("a", || {});
+        let path = std::env::temp_dir().join("dsa_bench_test").join("s.json");
+        b.write_summary(&path, "unit").unwrap();
+        let doc = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("suite").and_then(|s| s.as_str()), Some("unit"));
+        assert_eq!(
+            doc.get("results").and_then(|r| r.as_arr()).map(|a| a.len()),
+            Some(1)
+        );
     }
 }

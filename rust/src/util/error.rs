@@ -1,0 +1,157 @@
+//! Minimal error type with context chaining (anyhow is unavailable in the
+//! hermetic build environment; this re-implements the small surface the
+//! crate uses: `Result`, `Context::{context,with_context}`, `bail!` and
+//! `err!` as the `anyhow!` analogue).
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what makes the blanket
+//! `From<E: std::error::Error>` impl (and therefore `?` on io/parse errors)
+//! coherent.
+
+use std::fmt;
+
+/// An error message plus a chain of outer context frames.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// Crate-wide result type defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error {
+            msg: m.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap `self` with an outer context frame (mirrors
+    /// `anyhow::Error::context`).
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error {
+            msg: c.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            write!(f, ": {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Attach context to the error arm of a `Result` or the `None` arm of an
+/// `Option`, converting into [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with a formatted [`Error`] (the `anyhow::bail!` analogue).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($t)*)))
+    };
+}
+
+/// Build a formatted [`Error`] value (the `anyhow::anyhow!` analogue).
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => {
+        $crate::util::error::Error::msg(format!($($t)*))
+    };
+}
+
+// Make the crate-root macros importable alongside the types:
+// `use crate::util::error::{bail, err, Context, Result};`
+pub use crate::{bail, err};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "inner 42");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 42");
+        let e = fails()
+            .with_context(|| format!("outer {}", 1))
+            .unwrap_err();
+        assert_eq!(e.to_string(), "outer 1: inner 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(7u32).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io().is_err());
+    }
+
+    #[test]
+    fn err_macro_builds_values() {
+        let e = err!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+}

@@ -113,13 +113,7 @@ impl Json {
         Some(cur)
     }
 
-    // -- serialization -----------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
+    // -- serialization (via `Display`, so `.to_string()` keeps working) ----
 
     fn write(&self, out: &mut String) {
         match self {
@@ -156,6 +150,14 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

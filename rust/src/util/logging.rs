@@ -1,0 +1,38 @@
+//! Stderr logging macros (the `log` crate is unavailable in the hermetic
+//! build). `log_error!` always prints; `log_debug!` is gated on the
+//! `DSA_LOG` environment variable so serving hot paths stay quiet by
+//! default.
+
+/// True when `DSA_LOG` is set (to any value). Checked per call site — the
+/// cost of one env lookup only lands on cold/error paths.
+pub fn verbose() -> bool {
+    std::env::var_os("DSA_LOG").is_some()
+}
+
+/// Debug-level line, printed only when `DSA_LOG` is set.
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        if $crate::util::logging::verbose() {
+            eprintln!($($t)*);
+        }
+    };
+}
+
+/// Error-level line, always printed to stderr.
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => {
+        eprintln!($($t)*)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand() {
+        // Smoke check that both macros compile and run.
+        crate::log_error!("log_error smoke ({})", 1);
+        crate::log_debug!("log_debug smoke ({})", 2);
+    }
+}

@@ -1,13 +1,16 @@
 //! Dependency-free substrates: JSON, CLI parsing, PRNG, statistics, a
-//! micro-bench harness, a property-test helper and the `.tns` tensor reader.
+//! micro-bench harness, a property-test helper, error/logging plumbing and
+//! the `.tns` tensor reader.
 //!
-//! The offline build environment only vendors the `xla` crate's dependency
-//! closure, so the conventional crates (serde, clap, rand, criterion,
-//! proptest) are re-implemented here at the scale this project needs.
+//! The default build is fully hermetic (zero external crates), so the
+//! conventional crates (serde, clap, rand, criterion, proptest, anyhow,
+//! log) are re-implemented here at the scale this project needs.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
+pub mod logging;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -13,7 +13,7 @@
 use std::fs;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 /// Element type of a tensor file.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -1,8 +1,12 @@
 //! Integration tests over the real AOT artifacts (`make artifacts` first).
 //!
-//! Every test no-ops with a message when `artifacts/manifest.json` is
-//! missing so `cargo test` stays green on a fresh checkout; CI-style runs
-//! execute `make artifacts` before `cargo test`.
+//! The whole file is gated on the `xla` feature (the default build has no
+//! PJRT); with the feature on, every test additionally no-ops with a
+//! message when `artifacts/manifest.json` is missing so `cargo test` stays
+//! green without artifacts. The hermetic end-to-end coverage lives in
+//! `tests/native_engine.rs`.
+
+#![cfg(feature = "xla")]
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;

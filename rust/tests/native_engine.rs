@@ -1,0 +1,182 @@
+//! Hermetic end-to-end tests: the native-kernel backend through the full
+//! serving stack — engine worker, dynamic batcher, metrics and the server
+//! protocol — with no artifacts, no PJRT and no external crates. This is
+//! the coverage `cargo test -q` provides on a fresh checkout.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig, NativeModelConfig};
+use dsa_serve::server;
+use dsa_serve::util::json::Json;
+use dsa_serve::workload::{Workload, WorkloadConfig};
+
+const SEQ_LEN: usize = 256;
+
+fn engine(variant: &str) -> Engine {
+    Engine::start_native(
+        NativeModelConfig {
+            seq_len: SEQ_LEN,
+            ..Default::default()
+        },
+        EngineConfig {
+            default_variant: variant.to_string(),
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+                queue_cap: 128,
+            },
+            preload: true,
+        },
+    )
+    .expect("native engine")
+}
+
+/// Serve a burst of requests; the hand-constructed classifier must solve
+/// the task through both the dense and the dynamic-sparse kernels, and the
+/// dynamic batcher must actually batch.
+fn serve_and_score(variant: &str, n: usize) -> (usize, f64) {
+    let engine = engine(variant);
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len: SEQ_LEN,
+        seed: 99,
+        ..Default::default()
+    });
+    let trace = wl.trace(n);
+    let mut rxs = Vec::new();
+    let mut labels = Vec::new();
+    for r in trace {
+        labels.push(r.label);
+        rxs.push(engine.submit(r.tokens, None).expect("submit"));
+    }
+    let mut correct = 0;
+    for (rx, label) in rxs.into_iter().zip(labels) {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.logits.len(), engine.classes());
+        assert!(resp.latency > Duration::ZERO);
+        assert_eq!(resp.variant, variant);
+        if resp.pred as i32 == label {
+            correct += 1;
+        }
+    }
+    let occ = engine
+        .metrics
+        .to_json()
+        .get("mean_occupancy")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    (correct, occ)
+}
+
+#[test]
+fn dense_engine_solves_task_and_batches() {
+    let n = 32;
+    let (correct, occ) = serve_and_score("dense", n);
+    assert!(correct >= 29, "dense accuracy too low: {correct}/{n}");
+    assert!(occ > 1.0, "expected batching, mean occupancy {occ}");
+}
+
+#[test]
+fn dsa90_engine_solves_task() {
+    let n = 32;
+    let (correct, _) = serve_and_score("dsa90", n);
+    assert!(correct >= 28, "dsa90 accuracy too low: {correct}/{n}");
+}
+
+#[test]
+fn dsa95_engine_beats_chance() {
+    let n = 32;
+    let (correct, _) = serve_and_score("dsa95", n);
+    // 95% sparsity is near the budget where label-1 masks saturate; it
+    // must still clearly beat chance (22/32 ~ 5 sigma).
+    assert!(correct >= 22, "dsa95 accuracy too low: {correct}/{n}");
+}
+
+#[test]
+fn variant_override_routing() {
+    let e = engine("dsa90");
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len: SEQ_LEN,
+        seed: 4,
+        ..Default::default()
+    });
+    let r = wl.next_request();
+    let resp_dense = e.infer(r.tokens.clone(), Some("dense".into())).expect("dense");
+    let resp_dsa = e.infer(r.tokens, Some("dsa95".into())).expect("dsa95");
+    assert_eq!(resp_dense.variant, "dense");
+    assert_eq!(resp_dsa.variant, "dsa95");
+}
+
+#[test]
+fn unknown_variant_fails_closed() {
+    let e = engine("dense");
+    let tokens = vec![1i32; SEQ_LEN];
+    // The batch execution fails; the waiter channel is dropped and infer
+    // surfaces an error instead of hanging or panicking.
+    assert!(e.infer(tokens.clone(), Some("bogus".into())).is_err());
+    // The engine stays healthy for subsequent requests.
+    assert!(e.infer(tokens, None).is_ok());
+}
+
+#[test]
+fn wrong_length_rejected_at_submit() {
+    let e = engine("dense");
+    assert!(e.submit(vec![1i32; SEQ_LEN - 1], None).is_err());
+}
+
+#[test]
+fn unknown_default_variant_fails_startup() {
+    let r = Engine::start_native(
+        NativeModelConfig::default(),
+        EngineConfig {
+            default_variant: "dsaXL".into(),
+            ..Default::default()
+        },
+    );
+    assert!(r.is_err(), "preload of unknown variant must fail startup");
+}
+
+#[test]
+fn server_protocol_roundtrip() {
+    let engine = Arc::new(engine("dsa90"));
+    let stop = AtomicBool::new(false);
+
+    let pong = server::handle_line(r#"{"op":"ping"}"#, &engine, &stop).unwrap();
+    assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len: SEQ_LEN,
+        seed: 12,
+        ..Default::default()
+    });
+    let r = wl.next_request();
+    let toks: Vec<String> = r.tokens.iter().map(|t| t.to_string()).collect();
+    let line = format!(r#"{{"op":"infer","tokens":[{}]}}"#, toks.join(","));
+    let resp = server::handle_line(&line, &engine, &stop).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    assert!(resp.get("pred").is_some());
+    assert_eq!(
+        resp.get("variant").and_then(|v| v.as_str()),
+        Some("dsa90")
+    );
+
+    let metrics = server::handle_line(r#"{"op":"metrics"}"#, &engine, &stop).unwrap();
+    assert!(
+        metrics
+            .get("completed")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+            >= 1.0
+    );
+
+    // malformed input → structured error, no panic
+    assert!(server::handle_line("{nope", &engine, &stop).is_err());
+
+    // unknown op → error, engine still up
+    assert!(server::handle_line(r#"{"op":"frobnicate"}"#, &engine, &stop).is_err());
+
+    let bye = server::handle_line(r#"{"op":"shutdown"}"#, &engine, &stop).unwrap();
+    assert_eq!(bye.get("stopping"), Some(&Json::Bool(true)));
+    assert!(stop.load(std::sync::atomic::Ordering::SeqCst));
+}
