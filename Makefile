@@ -1,12 +1,35 @@
 # Entry points shared by humans and CI (.github/workflows/ci.yml) so both
-# always invoke the same commands.
+# always invoke the same commands. Run `make help` for the target index.
 #
 # Everything except `make artifacts` is hermetic: the default cargo feature
 # set has zero external dependencies and runs the native CPU kernels.
+#
+# Bench-baseline workflow: `results/BENCH_kernels.json` is the committed
+# perf baseline. After a kernel change, run `make bench-compare` — it
+# saves the committed copy, re-runs the kernel bench (overwriting the
+# file), prints per-kernel speedups plus the headline SIMD/batched-dispatch
+# ratios, and exits nonzero if anything regressed >25%. When the new
+# numbers are intentional, commit the regenerated BENCH_kernels.json as
+# the next baseline.
 
 CARGO_MANIFEST := rust/Cargo.toml
+BENCH_BASELINE := results/BENCH_kernels.baseline.json
 
-.PHONY: verify build test bench fmt clippy pytest artifacts clean
+.PHONY: help verify build test bench bench-compare bench-serve fmt clippy pytest artifacts clean
+
+help:
+	@echo "Targets:"
+	@echo "  verify         tier-1 gate: release build + full test suite"
+	@echo "  build          cargo build --release"
+	@echo "  test           cargo test -q"
+	@echo "  bench          all native benches; writes results/BENCH_kernels.json"
+	@echo "  bench-compare  perf gate: re-bench kernels and diff vs the committed"
+	@echo "                 results/BENCH_kernels.json (fails on >25% regression;"
+	@echo "                 commit the regenerated file to accept new numbers)"
+	@echo "  bench-serve    native-backend serving rate sweep -> results/BENCH_serving_native.json"
+	@echo "  fmt / clippy   style gates (CI-enforced)"
+	@echo "  pytest         python tests (artifact/optional-dep tests auto-skip)"
+	@echo "  artifacts      OPTIONAL, needs jax: AOT-lower the PJRT artifacts"
 
 ## tier-1 gate: hermetic release build + full test suite
 verify:
@@ -23,6 +46,20 @@ test:
 ## and writes results/BENCH_kernels.json
 bench:
 	cargo bench --manifest-path $(CARGO_MANIFEST)
+
+## local perf gate: snapshot the committed baseline, re-run the kernel
+## bench, diff, and fail on >25% regression (see header comment)
+bench-compare:
+	@git show HEAD:results/BENCH_kernels.json > $(BENCH_BASELINE) 2>/dev/null \
+		|| { echo "(no committed results/BENCH_kernels.json baseline)"; rm -f $(BENCH_BASELINE); }
+	cargo bench --manifest-path $(CARGO_MANIFEST) --bench bench_kernels
+	cargo run --release --manifest-path $(CARGO_MANIFEST) --bin dsa-serve -- bench-compare \
+		--baseline $(BENCH_BASELINE) --fresh results/BENCH_kernels.json --max-regress 0.25
+
+## open-loop serving rate sweep against the hermetic native backend
+bench-serve:
+	cargo run --release --manifest-path $(CARGO_MANIFEST) --bin dsa-serve -- bench-serve \
+		--backend native --requests 120 --rates 100,300,600
 
 fmt:
 	cargo fmt --manifest-path $(CARGO_MANIFEST) --all -- --check

@@ -1,9 +1,14 @@
 //! L1 kernel micro-bench over the native CPU DSA pipeline: dense attention
 //! baseline vs dynamic-sparse (int8 score prediction → row top-k → SDDMM →
-//! masked softmax → SpMM), single-threaded reference vs the row-parallel
-//! path, across sequence lengths and sparsity ratios. Runs hermetically —
-//! no artifacts required — and seeds the perf trajectory via
-//! `results/bench.jsonl` plus a `results/BENCH_kernels.json` summary.
+//! masked softmax → SpMM), swept over single- vs multi-threaded drivers,
+//! scalar vs SIMD inner products, and single-head vs batched 8-head
+//! dispatch — plus raw f32/int8 dot microbenches isolating the SIMD win.
+//! Runs hermetically — no artifacts required — and tracks the perf
+//! trajectory via `results/bench.jsonl`, a `results/BENCH_kernels.json`
+//! summary, and a printed diff against the previously committed summary
+//! (see `make bench-compare` for the gating form).
+//!
+//! `DSA_BENCH_SMOKE=1` shrinks budgets for CI smoke runs.
 //!
 //! When built with `--features xla` and artifacts exist, the AOT-lowered
 //! Pallas kernel modules are additionally timed through PJRT (CPU
@@ -12,59 +17,212 @@
 
 use std::time::Duration;
 
-use dsa_serve::kernels::{dense, parallel, sparse, SparseKernel};
-use dsa_serve::util::bench::Bench;
+use dsa_serve::kernels::simd::{self, Mode};
+use dsa_serve::kernels::{dense, for_variant, parallel, scratch, sparse, AttnBatch, SparseKernel};
+use dsa_serve::util::bench::{diff_baseline, results_path, Bench};
+use dsa_serve::util::json;
 use dsa_serve::util::rng::Rng;
+
+const HEADS: usize = 8;
 
 fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
     (0..n).map(|_| rng.normal() as f32).collect()
 }
 
+fn mode_tag(m: Mode) -> &'static str {
+    match m {
+        Mode::Scalar => "scalar",
+        Mode::Simd => "simd",
+    }
+}
+
+/// Raw inner-product microbenches: 256 dots of length 1024 per iteration,
+/// isolating the lane kernels from the attention pipeline around them.
+fn dot_microbench(b: &mut Bench, mode: Mode) {
+    simd::set_mode(mode);
+    let tag = mode_tag(mode);
+    let mut rng = Rng::new(99);
+    let n = 1024usize;
+    let rows = 256usize;
+    let q = randv(n, &mut rng);
+    let keys = randv(n * rows, &mut rng);
+    b.run(&format!("native/dot_f32/n{n}/{tag}"), || {
+        let mut acc = 0.0f32;
+        for kc in keys.chunks_exact(n) {
+            acc += simd::dot_f32(&q, kc);
+        }
+        std::hint::black_box(acc);
+    });
+    let qi: Vec<i8> = q.iter().map(|&x| (x * 40.0).clamp(-127.0, 127.0) as i8).collect();
+    let ki: Vec<i8> = keys.iter().map(|&x| (x * 40.0).clamp(-127.0, 127.0) as i8).collect();
+    b.run(&format!("native/dot_i8/n{n}/{tag}"), || {
+        let mut acc = 0i32;
+        for kc in ki.chunks_exact(n) {
+            acc = acc.wrapping_add(simd::dot_i8(&qi, kc));
+        }
+        std::hint::black_box(acc);
+    });
+}
+
 fn main() {
+    let smoke = std::env::var_os("DSA_BENCH_SMOKE").is_some();
     let threads = parallel::effective_threads(0);
-    println!("=== native DSA kernels (row-parallel workers: {threads}) ===");
-    let mut b = Bench::new().with_budget(Duration::from_secs(2));
+    println!(
+        "=== native DSA kernels (workers: {threads}, isa: {}{}) ===",
+        simd::active_isa(),
+        if smoke { ", smoke mode" } else { "" }
+    );
+    let mut b = Bench::new().with_budget(Duration::from_millis(if smoke { 60 } else { 300 }));
+    b.warmup_iters = 1;
+    if smoke {
+        b.max_iters = 5;
+    }
+    // Keep whatever summary is on disk (the committed baseline on a fresh
+    // checkout, or the previous local run while iterating) for the
+    // trajectory diff below. `make bench-compare` diffs against the
+    // committed copy specifically.
+    let summary_path = results_path("BENCH_kernels.json");
+    let prev = std::fs::read_to_string(&summary_path)
+        .ok()
+        .and_then(|s| json::parse(&s).ok());
+
+    dot_microbench(&mut b, Mode::Scalar);
+    dot_microbench(&mut b, Mode::Simd);
+
     let mut rng = Rng::new(17);
     let (dk, dv) = (64usize, 64usize);
-
     let lengths = [256usize, 1024];
+    let grows_before = scratch::grow_events();
+
     for &l in &lengths {
         let q = randv(l * dk, &mut rng);
         let k = randv(l * dk, &mut rng);
         let v = randv(l * dv, &mut rng);
 
-        b.run(&format!("native/dense/l{l}/st"), || {
-            std::hint::black_box(dense::attention(&q, &k, &v, l, dk, dv));
-        });
-        b.run(&format!("native/dense/l{l}/mt"), || {
-            std::hint::black_box(parallel::dense_attention_mt(&q, &k, &v, l, dk, dv, 0));
-        });
-        for sparsity in [0.90f64, 0.95, 0.99] {
-            // the same budget the serving dispatch uses for this variant
-            let keep = SparseKernel { sparsity, threads: 1 }.keep_for(l);
-            let tag = (sparsity * 100.0) as u32;
-            b.run(&format!("native/dsa/l{l}/s{tag}/st"), || {
-                std::hint::black_box(sparse::dsa_attention(&q, &k, &v, l, dk, dv, keep));
+        // Single-head: st/mt × scalar/simd for dense and dsa90; the
+        // sparser budgets ride along on the default (simd) tier.
+        for mode in [Mode::Scalar, Mode::Simd] {
+            simd::set_mode(mode);
+            let tag = mode_tag(mode);
+            b.run(&format!("native/dense/l{l}/h1/st/{tag}"), || {
+                std::hint::black_box(dense::attention(&q, &k, &v, l, dk, dv));
             });
-            b.run(&format!("native/dsa/l{l}/s{tag}/mt"), || {
+            b.run(&format!("native/dense/l{l}/h1/mt/{tag}"), || {
+                std::hint::black_box(parallel::dense_attention_mt(&q, &k, &v, l, dk, dv, 0));
+            });
+            let keep90 = SparseKernel { sparsity: 0.90, threads: 1 }.keep_for(l);
+            b.run(&format!("native/dsa/l{l}/s90/h1/st/{tag}"), || {
+                std::hint::black_box(sparse::dsa_attention(&q, &k, &v, l, dk, dv, keep90));
+            });
+            b.run(&format!("native/dsa/l{l}/s90/h1/mt/{tag}"), || {
                 std::hint::black_box(parallel::dsa_attention_mt(
-                    &q, &k, &v, l, dk, dv, keep, 0,
+                    &q, &k, &v, l, dk, dv, keep90, 0,
                 ));
             });
         }
+        simd::set_mode(Mode::Simd);
+        for sparsity in [0.95f64, 0.99] {
+            let keep = SparseKernel { sparsity, threads: 1 }.keep_for(l);
+            let tag = (sparsity * 100.0) as u32;
+            b.run(&format!("native/dsa/l{l}/s{tag}/h1/st/simd"), || {
+                std::hint::black_box(sparse::dsa_attention(&q, &k, &v, l, dk, dv, keep));
+            });
+            b.run(&format!("native/dsa/l{l}/s{tag}/h1/mt/simd"), || {
+                std::hint::black_box(parallel::dsa_attention_mt(&q, &k, &v, l, dk, dv, keep, 0));
+            });
+        }
+
+        // Batched 8-head dispatch vs eight single-head dispatches (the
+        // serving-relevant comparison: one spawn/join + cross-head load
+        // balance vs per-head dispatch overhead), on the SIMD tier.
+        let p = HEADS;
+        let qb = randv(p * l * dk, &mut rng);
+        let kb = randv(p * l * dk, &mut rng);
+        let vb = randv(p * l * dv, &mut rng);
+        let batch = AttnBatch { q: &qb, k: &kb, v: &vb, b: 1, h: p, l, dk, dv };
+        for variant in ["dense", "dsa90"] {
+            let kernel = for_variant(variant, 0).expect("variant");
+            let vtag = if variant == "dense" {
+                format!("native/dense/l{l}/h{p}")
+            } else {
+                format!("native/dsa/l{l}/s90/h{p}")
+            };
+            b.run(&format!("{vtag}/looped/simd"), || {
+                for i in 0..p {
+                    std::hint::black_box(kernel.forward(&batch.problem(i)));
+                }
+            });
+            b.run(&format!("{vtag}/batched/simd"), || {
+                std::hint::black_box(kernel.forward_batch(&batch));
+            });
+        }
+    }
+    simd::set_mode(Mode::Simd);
+
+    println!(
+        "\nscratch grow events this run: {} (bounded per worker+dispatch, not per row)",
+        scratch::grow_events() - grows_before
+    );
+
+    println!("\n=== SIMD speedup vs scalar (same kernel, same threads) ===");
+    let ratio = |b: &Bench, scalar: String, simd_name: String| -> f64 {
+        let s = b.mean_of(&scalar).unwrap_or(f64::NAN);
+        let v = b.mean_of(&simd_name).unwrap_or(f64::NAN);
+        s / v
+    };
+    println!(
+        "  dot_f32/n1024 {:.2}x   dot_i8/n1024 {:.2}x",
+        ratio(
+            &b,
+            "native/dot_f32/n1024/scalar".into(),
+            "native/dot_f32/n1024/simd".into()
+        ),
+        ratio(
+            &b,
+            "native/dot_i8/n1024/scalar".into(),
+            "native/dot_i8/n1024/simd".into()
+        )
+    );
+    for &l in &lengths {
+        println!(
+            "  l={l:<5} dense-st {:.2}x  dense-mt {:.2}x  dsa90-st {:.2}x  dsa90-mt {:.2}x",
+            ratio(
+                &b,
+                format!("native/dense/l{l}/h1/st/scalar"),
+                format!("native/dense/l{l}/h1/st/simd")
+            ),
+            ratio(
+                &b,
+                format!("native/dense/l{l}/h1/mt/scalar"),
+                format!("native/dense/l{l}/h1/mt/simd")
+            ),
+            ratio(
+                &b,
+                format!("native/dsa/l{l}/s90/h1/st/scalar"),
+                format!("native/dsa/l{l}/s90/h1/st/simd")
+            ),
+            ratio(
+                &b,
+                format!("native/dsa/l{l}/s90/h1/mt/scalar"),
+                format!("native/dsa/l{l}/s90/h1/mt/simd")
+            )
+        );
     }
 
-    println!("\n=== row-parallel speedup vs single-threaded reference ===");
+    println!("\n=== batched {HEADS}-head dispatch vs {HEADS} single-head dispatches ===");
     for &l in &lengths {
-        let d_st = b.mean_of(&format!("native/dense/l{l}/st")).unwrap_or(f64::NAN);
-        let d_mt = b.mean_of(&format!("native/dense/l{l}/mt")).unwrap_or(f64::NAN);
-        let s_st = b.mean_of(&format!("native/dsa/l{l}/s90/st")).unwrap_or(f64::NAN);
-        let s_mt = b.mean_of(&format!("native/dsa/l{l}/s90/mt")).unwrap_or(f64::NAN);
         println!(
-            "  l={l:<5} dense {:.2}x   dsa90 {:.2}x   (dense-st / dsa90-st work ratio {:.2}x)",
-            d_st / d_mt,
-            s_st / s_mt,
-            d_st / s_st
+            "  l={l:<5} dense {:.2}x   dsa90 {:.2}x",
+            ratio(
+                &b,
+                format!("native/dense/l{l}/h{HEADS}/looped/simd"),
+                format!("native/dense/l{l}/h{HEADS}/batched/simd")
+            ),
+            ratio(
+                &b,
+                format!("native/dsa/l{l}/s90/h{HEADS}/looped/simd"),
+                format!("native/dsa/l{l}/s90/h{HEADS}/batched/simd")
+            )
         );
     }
 
@@ -72,9 +230,17 @@ fn main() {
     pjrt_kernels(&mut b);
 
     b.flush_jsonl("kernels");
-    match b.write_summary("results/BENCH_kernels.json", "kernels") {
-        Ok(()) => println!("\nwrote results/BENCH_kernels.json"),
-        Err(e) => eprintln!("\nfailed writing BENCH_kernels.json: {e}"),
+    let fresh = b.summary_json("kernels");
+    match b.write_summary(&summary_path, "kernels") {
+        Ok(()) => println!("\nwrote {}", summary_path.display()),
+        Err(e) => eprintln!("\nfailed writing {}: {e}", summary_path.display()),
+    }
+    if let Some(prev) = prev {
+        println!(
+            "\n=== vs previous {} on disk (speedup = previous/fresh) ===",
+            summary_path.display()
+        );
+        diff_baseline(&prev, &fresh).print();
     }
 }
 

@@ -122,11 +122,11 @@ impl InferBackend for NativeBackend {
                 tokens.len()
             );
         }
-        let mut out = Vec::with_capacity(bucket * self.model.classes());
-        for seq in tokens.chunks_exact(sl) {
-            out.extend(self.model.logits(seq, kernel));
-        }
-        Ok(out)
+        // One batched dispatch for the whole bucket: the kernels
+        // parallelize over (sequence, row-range) work items and pay the
+        // thread spawn/join cost once per batch instead of once per
+        // sequence. Bit-identical to the per-sequence loop it replaced.
+        Ok(self.model.logits_batch(tokens, bucket, kernel))
     }
 }
 
@@ -205,5 +205,26 @@ mod tests {
         assert_eq!(logits.len(), 4);
         assert!(logits.iter().all(|x| x.is_finite()));
         assert!(b.run("dsa90", &tokens, 3).is_err()); // wrong bucket
+    }
+
+    #[test]
+    fn batched_run_matches_per_sequence_runs() {
+        use crate::workload::{Workload, WorkloadConfig};
+        let mut b = NativeBackend::new(NativeModelConfig::default());
+        let mut wl = Workload::new(WorkloadConfig {
+            seq_len: 256,
+            seed: 31337,
+            ..Default::default()
+        });
+        let mut tokens = Vec::new();
+        for _ in 0..3 {
+            tokens.extend(wl.next_request().tokens);
+        }
+        let batched = b.run("dense", &tokens, 3).unwrap();
+        let mut looped = Vec::new();
+        for seq in tokens.chunks_exact(256) {
+            looped.extend(b.run("dense", seq, 1).unwrap());
+        }
+        assert_eq!(batched, looped);
     }
 }

@@ -4,8 +4,10 @@
 //! [`Batcher`]: it sleeps until the head-of-line deadline or a full batch,
 //! cuts a batch of same-variant requests, pads it to the backend's
 //! execution bucket, runs the batch through an
-//! [`InferBackend`](super::backend::InferBackend) and fans responses back
-//! through per-request channels.
+//! [`InferBackend`](super::backend::InferBackend) as **one** backend
+//! dispatch — the native backend hands the whole bucket to the batched
+//! multi-head kernels, which parallelize over `(sequence, row-range)`
+//! work items — and fans responses back through per-request channels.
 //!
 //! The backend is constructed **inside** the worker thread from a factory
 //! closure: the PJRT artifact backend's handles are thread-local and must
@@ -91,6 +93,12 @@ impl Engine {
                             return;
                         }
                     }
+                    crate::log_debug!(
+                        "engine backend up: seq_len={} classes={} kernel_isa={}",
+                        backend.seq_len(),
+                        backend.classes(),
+                        crate::kernels::simd::active_isa()
+                    );
                     let _ = ready_tx.send(Ok((backend.seq_len(), backend.classes())));
                     worker_loop(backend.as_mut(), cfg, rx, metrics, running)
                 })

@@ -2,21 +2,27 @@
 //! f32 buffers. This is the baseline every sparse path is validated
 //! against: at `keep = l` the dynamic-sparse pipeline in
 //! [`super::sparse`] performs the exact same float operations in the same
-//! order, so the two agree bit for bit.
+//! order, so the two agree bit for bit. Both paths share one inner-product
+//! implementation ([`super::simd`]) so that guarantee survives the SIMD
+//! dispatch: whatever tier runs, it runs on both sides.
+
+use super::scratch::Scratch;
+use super::simd;
 
 /// Scaled attention scores for query row `r`:
 /// `out[c] = (q_r . k_c) / sqrt(dk)`.
 pub fn score_row(q: &[f32], k: &[f32], l: usize, dk: usize, r: usize, out: &mut [f32]) {
     debug_assert_eq!(out.len(), l);
-    let scale = 1.0 / (dk as f32).sqrt();
+    score_row_scaled(q, k, dk, r, 1.0 / (dk as f32).sqrt(), out);
+}
+
+/// [`score_row`] with the `1 / sqrt(dk)` scale hoisted out — the row
+/// drivers compute it once per call instead of once per row. One score per
+/// `out` entry: `out[c] = (q_r . k_c) * scale`.
+pub fn score_row_scaled(q: &[f32], k: &[f32], dk: usize, r: usize, scale: f32, out: &mut [f32]) {
     let qr = &q[r * dk..(r + 1) * dk];
     for (c, o) in out.iter_mut().enumerate() {
-        let kc = &k[c * dk..(c + 1) * dk];
-        let mut acc = 0.0f32;
-        for (a, b) in qr.iter().zip(kc) {
-            acc += a * b;
-        }
-        *o = acc * scale;
+        *o = simd::dot_f32(qr, &k[c * dk..(c + 1) * dk]) * scale;
     }
 }
 
@@ -53,7 +59,9 @@ pub fn softmax_in_place(row: &mut [f32]) {
 /// Dense attention for query rows `r0..r1`, writing the `(r1 - r0) x dv`
 /// context rows into `out`. Row ranges are independent, so disjoint ranges
 /// can run on different threads (see [`super::parallel`]) with results
-/// identical to a single-threaded pass.
+/// identical to a single-threaded pass. Allocates a throwaway scratch; the
+/// parallel drivers use [`attention_rows_scratch`] to reuse one per
+/// worker.
 #[allow(clippy::too_many_arguments)]
 pub fn attention_rows(
     q: &[f32],
@@ -66,19 +74,38 @@ pub fn attention_rows(
     r1: usize,
     out: &mut [f32],
 ) {
+    let mut scratch = Scratch::new();
+    attention_rows_scratch(q, k, v, l, dk, dv, r0, r1, out, &mut scratch);
+}
+
+/// [`attention_rows`] over a caller-owned [`Scratch`]: the row loop itself
+/// performs no allocations, so a warm scratch records zero grow events no
+/// matter how many rows pass through (asserted by the tests).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_rows_scratch(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+    scratch: &mut Scratch,
+) {
     debug_assert_eq!(out.len(), (r1 - r0) * dv);
-    let mut row = vec![0f32; l];
+    scratch.reserve(l, 0);
+    let scale = 1.0 / (dk as f32).sqrt();
+    let row = &mut scratch.row[..l];
     for r in r0..r1 {
-        score_row(q, k, l, dk, r, &mut row);
-        softmax_in_place(&mut row);
+        score_row_scaled(q, k, dk, r, scale, row);
+        softmax_in_place(row);
         let o = &mut out[(r - r0) * dv..(r - r0 + 1) * dv];
         o.fill(0.0);
         for (c, &w) in row.iter().enumerate() {
             if w != 0.0 {
-                let vc = &v[c * dv..(c + 1) * dv];
-                for (oi, x) in o.iter_mut().zip(vc) {
-                    *oi += w * x;
-                }
+                simd::axpy_f32(o, w, &v[c * dv..(c + 1) * dv]);
             }
         }
     }
@@ -139,6 +166,80 @@ mod tests {
         for r in 0..l {
             assert_allclose(&out[r * dv..(r + 1) * dv], &[4.5, 5.5, 6.5], 1e-5, 1e-5);
         }
+    }
+
+    /// Test-local strictly-scalar dense attention (every inner product
+    /// through the `simd::scalar` oracle) — the reference the dispatched
+    /// path is compared against without touching the global SIMD mode.
+    fn scalar_attention(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        l: usize,
+        dk: usize,
+        dv: usize,
+    ) -> Vec<f32> {
+        use crate::kernels::simd::scalar;
+        let scale = 1.0 / (dk as f32).sqrt();
+        let mut out = vec![0f32; l * dv];
+        let mut row = vec![0f32; l];
+        for r in 0..l {
+            let qr = &q[r * dk..(r + 1) * dk];
+            for (c, o) in row.iter_mut().enumerate() {
+                *o = scalar::dot_f32(qr, &k[c * dk..(c + 1) * dk]) * scale;
+            }
+            softmax_in_place(&mut row);
+            let o = &mut out[r * dv..(r + 1) * dv];
+            for (c, &w) in row.iter().enumerate() {
+                if w != 0.0 {
+                    scalar::axpy_f32(o, w, &v[c * dv..(c + 1) * dv]);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn simd_attention_matches_scalar_oracle_prop() {
+        use crate::util::prop::{forall, Config};
+        use crate::util::rng::Rng;
+        forall(
+            &Config { cases: 24, ..Default::default() },
+            |rng: &mut Rng, size| {
+                // Odd lengths exercise the remainder lanes of every dot.
+                let l = 2 + rng.below(3 * size as u64) as usize;
+                let dk = 1 + rng.below(20) as usize;
+                let dv = 1 + rng.below(20) as usize;
+                let q: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+                let k: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+                let v: Vec<f32> = (0..l * dv).map(|_| rng.normal() as f32).collect();
+                (q, k, v, l, dk, dv)
+            },
+            |(q, k, v, l, dk, dv)| {
+                let got = attention(q, k, v, *l, *dk, *dv);
+                let want = scalar_attention(q, k, v, *l, *dk, *dv);
+                got.iter().zip(&want).all(|(a, b)| (a - b).abs() <= 1e-5 + 1e-5 * b.abs())
+            },
+        );
+    }
+
+    #[test]
+    fn warm_scratch_rows_are_allocation_free() {
+        use crate::kernels::scratch::Scratch;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let (l, dk, dv) = (33, 7, 5);
+        let q: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..l * dv).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0f32; l * dv];
+        let mut scratch = Scratch::new();
+        attention_rows_scratch(&q, &k, &v, l, dk, dv, 0, l, &mut out, &mut scratch);
+        let warm = scratch.grow_events();
+        let mut again = vec![0f32; l * dv];
+        attention_rows_scratch(&q, &k, &v, l, dk, dv, 0, l, &mut again, &mut scratch);
+        assert_eq!(scratch.grow_events(), warm, "hot loop allocated");
+        assert_eq!(out, again, "scratch reuse changed results");
     }
 
     #[test]

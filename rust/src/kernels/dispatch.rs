@@ -2,7 +2,10 @@
 //! the engine backend, tests and benches can switch dense vs dynamic
 //! sparse (and single- vs multi-threaded) without caring which kernels
 //! run. Serving variant names ("dense", "dsa90", "dsa95", "dsa99", …)
-//! resolve through [`for_variant`].
+//! resolve through [`for_variant`]. Problems come in two shapes: one
+//! single-head [`AttnInput`], or a batched multi-head [`AttnBatch`] that
+//! runs as **one** dispatch with workers balanced over `(batch, head,
+//! row-range)` — bit-identical to dispatching each head separately.
 
 use super::{dense, parallel, sparse};
 
@@ -25,6 +28,52 @@ impl AttnInput<'_> {
     }
 }
 
+/// A batched multi-head attention problem: `q`/`k` laid out
+/// `[b, h, l, dk]` and `v` laid out `[b, h, l, dv]`, row-major. Every
+/// `(batch, head)` pair is an independent single-head problem; batching
+/// them into one dispatch amortizes thread spawn/join and scorer setup
+/// and lets workers balance across the whole batch.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnBatch<'a> {
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub b: usize,
+    pub h: usize,
+    pub l: usize,
+    pub dk: usize,
+    pub dv: usize,
+}
+
+impl<'a> AttnBatch<'a> {
+    /// Independent single-head problems in this batch (`b * h`).
+    pub fn problems(&self) -> usize {
+        self.b * self.h
+    }
+
+    fn validate(&self) {
+        let p = self.problems();
+        assert_eq!(self.q.len(), p * self.l * self.dk, "q shape");
+        assert_eq!(self.k.len(), p * self.l * self.dk, "k shape");
+        assert_eq!(self.v.len(), p * self.l * self.dv, "v shape");
+    }
+
+    /// View of problem `i` (flattened `(batch, head)` index) as a
+    /// single-head input.
+    pub fn problem(&self, i: usize) -> AttnInput<'a> {
+        let (q, k, v) = (self.q, self.k, self.v);
+        let (lk, lv) = (self.l * self.dk, self.l * self.dv);
+        AttnInput {
+            q: &q[i * lk..(i + 1) * lk],
+            k: &k[i * lk..(i + 1) * lk],
+            v: &v[i * lv..(i + 1) * lv],
+            l: self.l,
+            dk: self.dk,
+            dv: self.dv,
+        }
+    }
+}
+
 /// A selectable attention implementation.
 pub trait KernelDispatch: Send + Sync {
     /// Human-readable identifier (shows up in bench/metrics output).
@@ -35,6 +84,19 @@ pub trait KernelDispatch: Send + Sync {
 
     /// Compute the `l x dv` context matrix.
     fn forward(&self, x: &AttnInput) -> Vec<f32>;
+
+    /// Compute the `[b, h, l, dv]` context batch in one dispatch. The
+    /// default loops [`KernelDispatch::forward`] per problem; the native
+    /// kernels override it with a single row-parallel pass over the whole
+    /// batch. Implementations must match the looped form bit for bit.
+    fn forward_batch(&self, x: &AttnBatch) -> Vec<f32> {
+        x.validate();
+        let mut out = Vec::with_capacity(x.problems() * x.l * x.dv);
+        for i in 0..x.problems() {
+            out.extend(self.forward(&x.problem(i)));
+        }
+        out
+    }
 }
 
 /// Dense attention baseline (`threads`: 0 = one per core, 1 = reference
@@ -60,6 +122,21 @@ impl KernelDispatch for DenseKernel {
         } else {
             parallel::dense_attention_mt(x.q, x.k, x.v, x.l, x.dk, x.dv, self.threads)
         }
+    }
+
+    fn forward_batch(&self, x: &AttnBatch) -> Vec<f32> {
+        x.validate();
+        parallel::dense_attention_batch_mt(
+            x.q,
+            x.k,
+            x.v,
+            x.b,
+            x.h,
+            x.l,
+            x.dk,
+            x.dv,
+            self.threads,
+        )
     }
 }
 
@@ -94,6 +171,22 @@ impl KernelDispatch for SparseKernel {
         } else {
             parallel::dsa_attention_mt(x.q, x.k, x.v, x.l, x.dk, x.dv, keep, self.threads)
         }
+    }
+
+    fn forward_batch(&self, x: &AttnBatch) -> Vec<f32> {
+        x.validate();
+        parallel::dsa_attention_batch_mt(
+            x.q,
+            x.k,
+            x.v,
+            x.b,
+            x.h,
+            x.l,
+            x.dk,
+            x.dv,
+            self.keep_for(x.l),
+            self.threads,
+        )
     }
 }
 
@@ -137,6 +230,67 @@ mod tests {
         let k = SparseKernel { sparsity: 0.99, threads: 1 };
         assert_eq!(k.keep_for(256), 3);
         assert_eq!(for_variant("dense", 1).unwrap().keep(256), None);
+    }
+
+    /// Batched multi-head output equals per-head single dispatch bit for
+    /// bit — for both kernels, across st/mt.
+    #[test]
+    fn forward_batch_matches_per_head_dispatch_bitwise() {
+        let mut rng = Rng::new(41);
+        let (b, h, l, dk, dv) = (2, 4, 21, 6, 5);
+        let p = b * h;
+        let q: Vec<f32> = (0..p * l * dk).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..p * l * dk).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..p * l * dv).map(|_| rng.normal() as f32).collect();
+        let batch = AttnBatch { q: &q, k: &k, v: &v, b, h, l, dk, dv };
+        for variant in ["dense", "dsa90", "dsa99"] {
+            for threads in [1, 2, 8] {
+                let kernel = for_variant(variant, threads).unwrap();
+                let mut looped = Vec::with_capacity(p * l * dv);
+                for i in 0..p {
+                    looped.extend(kernel.forward(&batch.problem(i)));
+                }
+                let batched = kernel.forward_batch(&batch);
+                assert_eq!(looped, batched, "{variant} t{threads}");
+            }
+        }
+    }
+
+    /// The trait's default (looped) `forward_batch` agrees with the
+    /// overridden single-dispatch implementations bit for bit.
+    #[test]
+    fn default_forward_batch_agrees_with_override() {
+        struct Looped(DenseKernel);
+        impl KernelDispatch for Looped {
+            fn name(&self) -> String {
+                "looped".into()
+            }
+            fn keep(&self, l: usize) -> Option<usize> {
+                self.0.keep(l)
+            }
+            fn forward(&self, x: &AttnInput) -> Vec<f32> {
+                self.0.forward(x)
+            }
+        }
+        let mut rng = Rng::new(43);
+        let (b, h, l, dk, dv) = (2, 2, 13, 4, 3);
+        let p = b * h;
+        let q: Vec<f32> = (0..p * l * dk).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..p * l * dk).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..p * l * dv).map(|_| rng.normal() as f32).collect();
+        let batch = AttnBatch { q: &q, k: &k, v: &v, b, h, l, dk, dv };
+        let dense = DenseKernel { threads: 2 };
+        assert_eq!(
+            Looped(dense.clone()).forward_batch(&batch),
+            dense.forward_batch(&batch)
+        );
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let kernel = for_variant("dense", 2).unwrap();
+        let batch = AttnBatch { q: &[], k: &[], v: &[], b: 0, h: 4, l: 8, dk: 2, dv: 2 };
+        assert!(kernel.forward_batch(&batch).is_empty());
     }
 
     #[test]

@@ -8,10 +8,17 @@
 //! * [`sparse`] — the dynamic pipeline of Eq. (4): int8 approximate-score
 //!   prediction → exact row top-k mask (`sparse::topk`) → SDDMM → masked
 //!   softmax → SpMM over [`crate::sparse::Csr`].
+//! * [`simd`] — the shared inner products (f32 dot/axpy, int8×int8 dot):
+//!   manual 8-lane unrolling, AVX2-specialized at runtime, with a scalar
+//!   oracle every tier is property-tested against.
+//! * [`scratch`] — reusable per-worker buffers so the row hot loops are
+//!   allocation-free (observable via a grow counter).
 //! * [`parallel`] — row-parallel multi-threaded drivers with bit-identical
-//!   results (rows are independent end to end).
+//!   results (rows are independent end to end), for single-head problems
+//!   and batched multi-head `[b, h, l, d]` dispatches alike.
 //! * [`dispatch`] — the [`KernelDispatch`] trait mapping serving variant
-//!   names ("dense", "dsa90", …) to kernel implementations.
+//!   names ("dense", "dsa90", …) to kernel implementations, over one
+//!   [`AttnInput`] problem or one [`AttnBatch`] per engine batch.
 //! * [`model`] — a hand-constructed, training-free needle-counting
 //!   classifier over these kernels; the model behind
 //!   `coordinator::backend::NativeBackend`.
@@ -20,7 +27,9 @@ pub mod dense;
 pub mod dispatch;
 pub mod model;
 pub mod parallel;
+pub mod scratch;
+pub mod simd;
 pub mod sparse;
 
-pub use dispatch::{for_variant, AttnInput, DenseKernel, KernelDispatch, SparseKernel};
+pub use dispatch::{for_variant, AttnBatch, AttnInput, DenseKernel, KernelDispatch, SparseKernel};
 pub use model::NativeClassifier;

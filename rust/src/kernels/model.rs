@@ -19,7 +19,7 @@
 //! lose label-0 accuracy — the paper's accuracy/sparsity trade-off,
 //! observable natively).
 
-use super::dispatch::{AttnInput, KernelDispatch};
+use super::dispatch::{AttnBatch, KernelDispatch};
 use crate::util::rng::Rng;
 
 /// Token vocabulary (matches the workload generator's `1..=255` range and
@@ -76,34 +76,61 @@ impl NativeClassifier {
 
     /// Run one sequence through `kernel` and return `[logit_0, logit_1]`.
     pub fn logits(&self, tokens: &[i32], kernel: &dyn KernelDispatch) -> Vec<f32> {
-        assert_eq!(tokens.len(), self.seq_len, "token length");
+        self.logits_batch(tokens, 1, kernel)
+    }
+
+    /// Run `n` concatenated sequences (`n * seq_len` tokens) through
+    /// `kernel` as **one** batched dispatch, returning `n * 2` logits.
+    /// Each sequence is an independent single-head attention problem
+    /// (`b = n`, `h = 1`), so the result is bit-identical to calling
+    /// [`NativeClassifier::logits`] per sequence — the kernels' batched
+    /// drivers guarantee it — while the dispatch overhead (thread
+    /// spawn/join, scorer setup) is paid once per engine batch.
+    pub fn logits_batch(
+        &self,
+        tokens: &[i32],
+        n: usize,
+        kernel: &dyn KernelDispatch,
+    ) -> Vec<f32> {
         let l = self.seq_len;
+        assert_eq!(tokens.len(), n * l, "token length");
         let beta = (MATCH_WEIGHT.ln() / (DK as f64).sqrt()) as f32;
-        let mut q = Vec::with_capacity(l * DK);
-        let mut k = Vec::with_capacity(l * DK);
-        let mut v = vec![0f32; l * VOCAB];
-        for (i, &t) in tokens.iter().enumerate() {
-            let t = t.rem_euclid(VOCAB as i32) as usize;
-            let e = &self.emb[t * DK..(t + 1) * DK];
-            k.extend_from_slice(e);
-            q.extend(e.iter().map(|&x| x * beta));
-            v[i * VOCAB + t] = 1.0;
+        let mut q = Vec::with_capacity(n * l * DK);
+        let mut k = Vec::with_capacity(n * l * DK);
+        let mut v = vec![0f32; n * l * VOCAB];
+        for (s, seq) in tokens.chunks_exact(l).enumerate() {
+            for (i, &t) in seq.iter().enumerate() {
+                let t = t.rem_euclid(VOCAB as i32) as usize;
+                let e = &self.emb[t * DK..(t + 1) * DK];
+                k.extend_from_slice(e);
+                q.extend(e.iter().map(|&x| x * beta));
+                v[(s * l + i) * VOCAB + t] = 1.0;
+            }
         }
-        let out = kernel.forward(&AttnInput {
+        let out = kernel.forward_batch(&AttnBatch {
             q: &q,
             k: &k,
             v: &v,
+            b: n,
+            h: 1,
             l,
             dk: DK,
             dv: VOCAB,
         });
-        let needle = tokens[0].rem_euclid(VOCAB as i32) as usize;
-        // Row 0's context vector is a distribution over tokens; the mass on
-        // the needle coordinate is the matched attention fraction.
-        let mass = out[needle] as f64;
         let keep = kernel.keep(l).unwrap_or(l);
-        let score = (GAIN * (mass - self.threshold(keep))) as f32;
-        vec![-score, score]
+        let threshold = self.threshold(keep);
+        let mut logits = Vec::with_capacity(n * 2);
+        for (s, seq) in tokens.chunks_exact(l).enumerate() {
+            let needle = seq[0].rem_euclid(VOCAB as i32) as usize;
+            // Row 0's context vector of each sequence is a distribution
+            // over tokens; the mass on the needle coordinate is the
+            // matched attention fraction.
+            let mass = out[s * l * VOCAB + needle] as f64;
+            let score = (GAIN * (mass - threshold)) as f32;
+            logits.push(-score);
+            logits.push(score);
+        }
+        logits
     }
 }
 
@@ -141,6 +168,36 @@ mod tests {
     #[test]
     fn dsa90_classifier_solves_the_task() {
         assert!(accuracy("dsa90", 24) >= 0.9, "dsa90 accuracy too low");
+    }
+
+    /// One batched dispatch over `n` sequences produces exactly the
+    /// logits of `n` per-sequence dispatches — the engine's batched
+    /// execution changes performance, never predictions.
+    #[test]
+    fn batched_logits_match_per_sequence_bitwise() {
+        let model = NativeClassifier::new(256, 0xD5A);
+        let mut wl = Workload::new(WorkloadConfig {
+            seq_len: 256,
+            seed: 777,
+            ..Default::default()
+        });
+        let n = 5;
+        let mut tokens = Vec::with_capacity(n * 256);
+        for _ in 0..n {
+            tokens.extend(wl.next_request().tokens);
+        }
+        for variant in ["dense", "dsa90"] {
+            for threads in [1, 0] {
+                let kernel = for_variant(variant, threads).unwrap();
+                let batched = model.logits_batch(&tokens, n, kernel.as_ref());
+                assert_eq!(batched.len(), n * 2);
+                let mut looped = Vec::with_capacity(n * 2);
+                for seq in tokens.chunks_exact(256) {
+                    looped.extend(model.logits(seq, kernel.as_ref()));
+                }
+                assert_eq!(batched, looped, "{variant} t{threads}");
+            }
+        }
     }
 
     #[test]

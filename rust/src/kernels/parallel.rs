@@ -2,12 +2,24 @@
 //! `std::thread::scope` (rayon is unavailable in the hermetic build).
 //!
 //! Attention rows are independent end to end — scoring, mask selection,
-//! SDDMM, masked softmax and SpMM — so the query dimension is split into
-//! contiguous chunks, one per worker, and each worker writes a disjoint
-//! slice of the output. Because every chunk performs exactly the
-//! operations the single-threaded reference would, results are
-//! **bit-identical** regardless of thread count (asserted by the tests).
+//! SDDMM, masked softmax and SpMM — so the work is split into contiguous
+//! row chunks, one per worker, and each worker writes a disjoint slice of
+//! the output through its own reusable [`Scratch`]. Because every chunk
+//! performs exactly the operations the single-threaded reference would,
+//! results are **bit-identical** regardless of thread count (asserted by
+//! the tests).
+//!
+//! Two granularities share the same chunking machinery:
+//!
+//! * single-head (`*_mt`): workers split the `l` query rows of one
+//!   `(l, dk, dv)` problem.
+//! * batched multi-head (`*_batch_mt`): one dispatch covers all
+//!   `b * h` problems of a `[b, h, l, d]` batch; workers split the global
+//!   `b * h * l` row space, so threads balance across `(batch, head,
+//!   row-range)` work items and the per-dispatch spawn/join cost is paid
+//!   once for the whole batch instead of once per head.
 
+use super::scratch::Scratch;
 use super::sparse::ApproxScorer;
 use super::{dense, sparse};
 
@@ -23,23 +35,25 @@ pub fn effective_threads(requested: usize) -> usize {
 }
 
 /// Split `out` into per-chunk row slices and run `f(r0, r1, slice)` on
-/// scoped worker threads (`threads <= 1` runs inline).
-fn par_row_chunks<F>(l: usize, dv: usize, threads: usize, out: &mut [f32], f: F)
+/// scoped worker threads (`threads <= 1` runs inline). `rows` counts
+/// logical output rows of width `dv` — a single problem's query rows, or
+/// the `b * h * l` global row space of a batch.
+fn par_row_chunks<F>(rows: usize, dv: usize, threads: usize, out: &mut [f32], f: F)
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
 {
-    debug_assert_eq!(out.len(), l * dv);
-    let threads = threads.clamp(1, l.max(1));
+    debug_assert_eq!(out.len(), rows * dv);
+    let threads = threads.clamp(1, rows.max(1));
     if threads <= 1 {
-        f(0, l, out);
+        f(0, rows, out);
         return;
     }
-    let chunk = l.div_ceil(threads);
+    let chunk = rows.div_ceil(threads);
     let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(threads);
     let mut rest = out;
     let mut r0 = 0;
-    while r0 < l {
-        let r1 = (r0 + chunk).min(l);
+    while r0 < rows {
+        let r1 = (r0 + chunk).min(rows);
         let (head, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * dv);
         slices.push((r0, r1, head));
         rest = tail;
@@ -68,7 +82,8 @@ pub fn dense_attention_mt(
     assert_eq!(v.len(), l * dv, "v shape");
     let mut out = vec![0f32; l * dv];
     par_row_chunks(l, dv, effective_threads(threads), &mut out, |r0, r1, slice| {
-        dense::attention_rows(q, k, v, l, dk, dv, r0, r1, slice);
+        let mut scratch = Scratch::new();
+        dense::attention_rows_scratch(q, k, v, l, dk, dv, r0, r1, slice, &mut scratch);
     });
     out
 }
@@ -90,7 +105,125 @@ pub fn dsa_attention_mt(
     let scorer = ApproxScorer::new(q, k, l, dk);
     let mut out = vec![0f32; l * dv];
     par_row_chunks(l, dv, effective_threads(threads), &mut out, |r0, r1, slice| {
-        sparse::dsa_attention_rows(q, k, v, l, dk, dv, keep, &scorer, r0, r1, slice);
+        let mut scratch = Scratch::new();
+        sparse::dsa_attention_rows_scratch(
+            q, k, v, l, dk, dv, keep, &scorer, r0, r1, slice, &mut scratch,
+        );
+    });
+    out
+}
+
+/// Walk the problems of a `[p, l, ...]` batch that intersect the global
+/// row range `[g0, g1)`, calling `f(problem, local_r0, local_r1,
+/// out_offset_rows)` per intersection in ascending order.
+fn for_problem_ranges<F>(l: usize, g0: usize, g1: usize, mut f: F)
+where
+    F: FnMut(usize, usize, usize, usize),
+{
+    let mut g = g0;
+    while g < g1 {
+        let p = g / l;
+        let r0 = g % l;
+        let r1 = (r0 + (g1 - g)).min(l);
+        f(p, r0, r1, g - g0);
+        g += r1 - r0;
+    }
+}
+
+/// Batched multi-head dense attention over `[b, h, l, d]` row-major
+/// buffers: one dispatch, workers split the `b * h * l` global row space.
+/// Bit-identical to running [`dense_attention_mt`] per `(batch, head)`
+/// problem and concatenating (asserted by the tests).
+#[allow(clippy::too_many_arguments)]
+pub fn dense_attention_batch_mt(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    h: usize,
+    l: usize,
+    dk: usize,
+    dv: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let p = b * h;
+    assert_eq!(q.len(), p * l * dk, "q shape");
+    assert_eq!(k.len(), p * l * dk, "k shape");
+    assert_eq!(v.len(), p * l * dv, "v shape");
+    let rows = p * l;
+    let mut out = vec![0f32; rows * dv];
+    par_row_chunks(rows, dv, effective_threads(threads), &mut out, |g0, g1, slice| {
+        let mut scratch = Scratch::new();
+        for_problem_ranges(l, g0, g1, |pi, r0, r1, off| {
+            dense::attention_rows_scratch(
+                &q[pi * l * dk..(pi + 1) * l * dk],
+                &k[pi * l * dk..(pi + 1) * l * dk],
+                &v[pi * l * dv..(pi + 1) * l * dv],
+                l,
+                dk,
+                dv,
+                r0,
+                r1,
+                &mut slice[off * dv..(off + r1 - r0) * dv],
+                &mut scratch,
+            );
+        });
+    });
+    out
+}
+
+/// Batched multi-head dynamic-sparse attention over `[b, h, l, d]`
+/// buffers. Each `(batch, head)` problem gets its own quantized scorer —
+/// exactly what a per-head dispatch would build, so masks and outputs are
+/// bit-identical to [`dsa_attention_mt`] per problem (asserted by the
+/// tests); workers then split the global row space as in the dense path.
+#[allow(clippy::too_many_arguments)]
+pub fn dsa_attention_batch_mt(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    h: usize,
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let p = b * h;
+    assert_eq!(q.len(), p * l * dk, "q shape");
+    assert_eq!(k.len(), p * l * dk, "k shape");
+    assert_eq!(v.len(), p * l * dv, "v shape");
+    let scorers: Vec<ApproxScorer> = (0..p)
+        .map(|pi| {
+            ApproxScorer::new(
+                &q[pi * l * dk..(pi + 1) * l * dk],
+                &k[pi * l * dk..(pi + 1) * l * dk],
+                l,
+                dk,
+            )
+        })
+        .collect();
+    let rows = p * l;
+    let mut out = vec![0f32; rows * dv];
+    par_row_chunks(rows, dv, effective_threads(threads), &mut out, |g0, g1, slice| {
+        let mut scratch = Scratch::new();
+        for_problem_ranges(l, g0, g1, |pi, r0, r1, off| {
+            sparse::dsa_attention_rows_scratch(
+                &q[pi * l * dk..(pi + 1) * l * dk],
+                &k[pi * l * dk..(pi + 1) * l * dk],
+                &v[pi * l * dv..(pi + 1) * l * dv],
+                l,
+                dk,
+                dv,
+                keep,
+                &scorers[pi],
+                r0,
+                r1,
+                &mut slice[off * dv..(off + r1 - r0) * dv],
+                &mut scratch,
+            );
+        });
     });
     out
 }
@@ -141,10 +274,78 @@ mod tests {
     }
 
     #[test]
+    fn problem_ranges_cover_batch_exactly() {
+        // ragged split across 3 problems of 5 rows each
+        let mut seen = Vec::new();
+        for_problem_ranges(5, 3, 14, |p, r0, r1, off| seen.push((p, r0, r1, off)));
+        assert_eq!(seen, vec![(0, 3, 5, 0), (1, 0, 5, 2), (2, 0, 4, 7)]);
+        // empty range
+        for_problem_ranges(5, 4, 4, |_, _, _, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn dense_batch_matches_per_problem_bitwise() {
+        let mut rng = Rng::new(23);
+        let (b, h, l, dk, dv) = (2, 3, 19, 6, 5); // odd l: chunks straddle problems
+        let p = b * h;
+        let q = randv(&mut rng, p * l * dk);
+        let k = randv(&mut rng, p * l * dk);
+        let v = randv(&mut rng, p * l * dv);
+        let mut looped = Vec::with_capacity(p * l * dv);
+        for pi in 0..p {
+            looped.extend(dense::attention(
+                &q[pi * l * dk..(pi + 1) * l * dk],
+                &k[pi * l * dk..(pi + 1) * l * dk],
+                &v[pi * l * dv..(pi + 1) * l * dv],
+                l,
+                dk,
+                dv,
+            ));
+        }
+        for threads in [1, 2, 4, 7, 32] {
+            let batched = dense_attention_batch_mt(&q, &k, &v, b, h, l, dk, dv, threads);
+            assert_eq!(looped, batched, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn sparse_batch_matches_per_problem_bitwise() {
+        let mut rng = Rng::new(24);
+        let (b, h, l, dk, dv) = (3, 2, 23, 5, 4);
+        let p = b * h;
+        let q = randv(&mut rng, p * l * dk);
+        let k = randv(&mut rng, p * l * dk);
+        let v = randv(&mut rng, p * l * dv);
+        for keep in [1, 5, 23] {
+            let mut looped = Vec::with_capacity(p * l * dv);
+            for pi in 0..p {
+                looped.extend(sparse::dsa_attention(
+                    &q[pi * l * dk..(pi + 1) * l * dk],
+                    &k[pi * l * dk..(pi + 1) * l * dk],
+                    &v[pi * l * dv..(pi + 1) * l * dv],
+                    l,
+                    dk,
+                    dv,
+                    keep,
+                ));
+            }
+            for threads in [1, 3, 8] {
+                let batched =
+                    dsa_attention_batch_mt(&q, &k, &v, b, h, l, dk, dv, keep, threads);
+                assert_eq!(looped, batched, "keep={keep} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
     fn degenerate_shapes_do_not_panic() {
         let out = dense_attention_mt(&[], &[], &[], 0, 4, 4, 8);
         assert!(out.is_empty());
         let out = dsa_attention_mt(&[0.5], &[0.5], &[1.0], 1, 1, 1, 3, 4);
         assert_eq!(out, vec![1.0]);
+        let out = dense_attention_batch_mt(&[], &[], &[], 0, 8, 16, 4, 4, 8);
+        assert!(out.is_empty());
+        let out = dsa_attention_batch_mt(&[0.5], &[0.5], &[2.0], 1, 1, 1, 1, 1, 9, 3);
+        assert_eq!(out, vec![2.0]);
     }
 }

@@ -1,0 +1,112 @@
+//! Reusable per-worker scratch buffers for the attention row drivers.
+//!
+//! The hot row loops (dense scoring/accumulation and the per-row DSA
+//! pipeline) need an `l`-length score row, a `keep`-length softmax row and
+//! a kept-column index buffer. Allocating those per call — let alone per
+//! row, as the old `topk_row_indices` return value did — puts the
+//! allocator on the hot path. Each worker thread instead owns one
+//! [`Scratch`] for the lifetime of a dispatch: buffers grow monotonically
+//! to the largest problem seen and are reused across every row and every
+//! `(batch, head)` problem the worker processes.
+//!
+//! Growth is observable: every buffer grow bumps both the instance counter
+//! ([`Scratch::grow_events`]) and a process-wide counter
+//! ([`grow_events`]). The unit tests assert a warm scratch processes
+//! arbitrarily many rows with **zero** further grow events, and
+//! `bench_kernels` prints the global counter so allocation regressions
+//! show up next to the timings they would explain.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static GROW_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+/// Total scratch-buffer grow events process-wide (bench-mode counter).
+pub fn grow_events() -> u64 {
+    GROW_EVENTS.load(Ordering::Relaxed)
+}
+
+/// Per-worker scratch for the attention row drivers. Construct once per
+/// worker (or reuse across dispatches); [`Scratch::reserve`] sizes it for
+/// a problem and the drivers index the buffers directly.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Score row of the current problem (`l` entries live).
+    pub row: Vec<f32>,
+    /// Softmax row over the kept entries (used via `clear` + `push`).
+    pub vals: Vec<f32>,
+    /// Kept column indices (doubles as the top-k selection buffer, so its
+    /// capacity is `l`, not `keep`).
+    pub kept: Vec<usize>,
+    grows: u64,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Grow events observed by this instance (monotone; a warm scratch
+    /// reused at the same problem size records none).
+    pub fn grow_events(&self) -> u64 {
+        self.grows
+    }
+
+    fn note_grow(&mut self) {
+        self.grows += 1;
+        GROW_EVENTS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Ensure capacity for one `(l, keep)` problem: `row` holds at least
+    /// `l` initialized entries and, when the mask path is in use
+    /// (`keep > 0`), `vals` can hold `keep` and `kept` can hold `l`
+    /// without reallocating. The dense path passes `keep = 0` and only
+    /// pays for the score row. Shrinks nothing.
+    pub fn reserve(&mut self, l: usize, keep: usize) {
+        if self.row.len() < l {
+            self.note_grow();
+            self.row.resize(l, 0.0);
+        }
+        if keep == 0 {
+            return;
+        }
+        if self.vals.capacity() < keep {
+            self.note_grow();
+            let need = keep - self.vals.len();
+            self.vals.reserve(need);
+        }
+        if self.kept.capacity() < l {
+            self.note_grow();
+            let need = l - self.kept.len();
+            self.kept.reserve(need);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warm_scratch_never_regrows() {
+        let mut s = Scratch::new();
+        s.reserve(64, 9);
+        let warm = s.grow_events();
+        assert!(warm >= 1);
+        for _ in 0..100 {
+            s.reserve(64, 9);
+            s.reserve(13, 2); // smaller problems must not shrink or grow
+        }
+        assert_eq!(s.grow_events(), warm, "warm scratch reallocated");
+        assert!(s.row.len() >= 64);
+        assert!(s.vals.capacity() >= 9);
+        assert!(s.kept.capacity() >= 64);
+    }
+
+    #[test]
+    fn growth_is_counted_globally() {
+        let before = grow_events();
+        let mut s = Scratch::new();
+        s.reserve(8, 4);
+        assert!(grow_events() > before);
+    }
+}

@@ -1,0 +1,405 @@
+//! SIMD inner products shared by every native kernel hot loop.
+//!
+//! All three inner products of the DSA pipeline route through this module:
+//! the f32 dot behind dense scoring and SDDMM, the f32 axpy behind dense
+//! accumulation and SpMM, and the int8×int8 dot behind the approximate
+//! score predictor. Three tiers, selected at runtime per call:
+//!
+//! * [`scalar`] — strictly-ordered reference loops, the correctness oracle
+//!   every other tier is property-tested against.
+//! * portable lanes — manual 8-accumulator (`f32x8` / `i32x8`) unrolling
+//!   on plain stable Rust. Splitting the reduction across independent
+//!   lanes is what lets LLVM vectorize it at all: a single f32 accumulator
+//!   forces sequential adds (float addition is not associative), so the
+//!   scalar loop can never be packed.
+//! * AVX2(+FMA) — the same lane kernels recompiled under
+//!   `#[target_feature]` so they use 256-bit registers, selected when
+//!   `is_x86_feature_detected!` says the host supports them. Because the
+//!   lane code is identical, the AVX2 tier is bit-identical to the
+//!   portable tier; only the scalar tier differs (by summation order,
+//!   within `~1e-5` relative on attention-scale inputs).
+//!
+//! The int8 dot accumulates in i32, where order is irrelevant — every tier
+//! is **bitwise identical**, so mask selection (and therefore the whole
+//! sparse pattern) never depends on the ISA the host happens to have.
+//!
+//! [`set_mode`] flips every dispatched call site between [`Mode::Scalar`]
+//! and [`Mode::Simd`] process-wide; the benches sweep it to measure the
+//! SIMD win. Tests never touch the global — they compare tiers directly —
+//! so parallel test threads cannot race on it.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Accumulator lanes of the manually-unrolled kernels.
+pub const LANES: usize = 8;
+
+/// Process-wide kernel tier selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Strictly-ordered scalar loops (the oracle).
+    Scalar,
+    /// Lane-unrolled kernels, AVX2-specialized when the host supports it.
+    Simd,
+}
+
+static MODE: AtomicU8 = AtomicU8::new(1);
+
+/// Select the tier every dispatched call uses (benches sweep this; the
+/// default is [`Mode::Simd`]).
+pub fn set_mode(m: Mode) {
+    MODE.store(
+        match m {
+            Mode::Scalar => 0,
+            Mode::Simd => 1,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// The currently selected tier.
+pub fn mode() -> Mode {
+    if MODE.load(Ordering::Relaxed) == 0 {
+        Mode::Scalar
+    } else {
+        Mode::Simd
+    }
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+#[inline]
+fn avx2_fma() -> bool {
+    // std caches the cpuid probe; this is an atomic load after first use.
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// Human-readable name of the instruction set the dispatched calls run on
+/// (shows up in bench output and engine startup logs).
+pub fn active_isa() -> &'static str {
+    match mode() {
+        Mode::Scalar => "scalar",
+        Mode::Simd => {
+            #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+            {
+                if avx2_fma() {
+                    return "avx2+fma";
+                }
+            }
+            "portable-lanes"
+        }
+    }
+}
+
+/// `a . b` over f32, runtime-dispatched. Slices must have equal length.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match mode() {
+        Mode::Scalar => scalar::dot_f32(a, b),
+        Mode::Simd => {
+            #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+            {
+                if avx2_fma() {
+                    // SAFETY: guarded by the runtime feature probe above.
+                    return unsafe { x86::dot_f32_avx2(a, b) };
+                }
+            }
+            lanes::dot_f32(a, b)
+        }
+    }
+}
+
+/// `out[i] += w * x[i]`, runtime-dispatched. Elementwise (no reduction),
+/// so every tier is bit-identical. Slices must have equal length.
+#[inline]
+pub fn axpy_f32(out: &mut [f32], w: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    match mode() {
+        Mode::Scalar => scalar::axpy_f32(out, w, x),
+        Mode::Simd => {
+            #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+            {
+                if avx2_fma() {
+                    // SAFETY: guarded by the runtime feature probe above.
+                    unsafe { x86::axpy_f32_avx2(out, w, x) };
+                    return;
+                }
+            }
+            lanes::axpy_f32(out, w, x)
+        }
+    }
+}
+
+/// `a . b` over int8 accumulating in i32, runtime-dispatched. Integer
+/// accumulation commutes, so every tier is bitwise identical — the score
+/// predictor's masks never depend on the host ISA. Slices must have equal
+/// length. Overflow-safe by construction: `len * 127 * 127 < i32::MAX`
+/// for every sequence length this crate can represent.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    match mode() {
+        Mode::Scalar => scalar::dot_i8(a, b),
+        Mode::Simd => {
+            #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+            {
+                if avx2_fma() {
+                    // SAFETY: guarded by the runtime feature probe above.
+                    return unsafe { x86::dot_i8_avx2(a, b) };
+                }
+            }
+            lanes::dot_i8(a, b)
+        }
+    }
+}
+
+/// Strictly-ordered scalar reference loops — the oracle the lane kernels
+/// are property-tested against, and the `Mode::Scalar` tier the benches
+/// compare SIMD numbers to.
+pub mod scalar {
+    /// Sequential-order f32 dot product.
+    #[inline]
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for (x, y) in a.iter().zip(b) {
+            acc += x * y;
+        }
+        acc
+    }
+
+    /// Elementwise `out[i] += w * x[i]`.
+    #[inline]
+    pub fn axpy_f32(out: &mut [f32], w: f32, x: &[f32]) {
+        for (o, &v) in out.iter_mut().zip(x) {
+            *o += w * v;
+        }
+    }
+
+    /// Sequential-order int8 dot accumulating in i32.
+    #[inline]
+    pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        let mut acc = 0i32;
+        for (&x, &y) in a.iter().zip(b) {
+            acc += x as i32 * y as i32;
+        }
+        acc
+    }
+}
+
+/// Manually lane-unrolled kernels on plain stable Rust. Eight independent
+/// accumulators expose the data parallelism LLVM needs to emit packed
+/// instructions; the fixed reduction tree at the end keeps results
+/// identical whether the body compiles to SSE2, AVX2, or stays scalar.
+mod lanes {
+    use super::LANES;
+
+    #[inline(always)]
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = [0.0f32; LANES];
+        let mut ca = a.chunks_exact(LANES);
+        let mut cb = b.chunks_exact(LANES);
+        for (xa, xb) in (&mut ca).zip(&mut cb) {
+            for ((s, &x), &y) in acc.iter_mut().zip(xa).zip(xb) {
+                *s += x * y;
+            }
+        }
+        let mut tail = 0.0f32;
+        for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+            tail += x * y;
+        }
+        // Fixed pairwise reduction: the same order on every ISA.
+        let s0 = (acc[0] + acc[4]) + (acc[1] + acc[5]);
+        let s1 = (acc[2] + acc[6]) + (acc[3] + acc[7]);
+        (s0 + s1) + tail
+    }
+
+    #[inline(always)]
+    pub fn axpy_f32(out: &mut [f32], w: f32, x: &[f32]) {
+        // Elementwise: the plain zip already vectorizes (no reduction),
+        // the unrolled form just helps the AVX2 recompile use full-width
+        // stores on the exact-chunk body.
+        let mut co = out.chunks_exact_mut(LANES);
+        let mut cx = x.chunks_exact(LANES);
+        for (xo, xx) in (&mut co).zip(&mut cx) {
+            for (o, &v) in xo.iter_mut().zip(xx) {
+                *o += w * v;
+            }
+        }
+        for (o, &v) in co.into_remainder().iter_mut().zip(cx.remainder()) {
+            *o += w * v;
+        }
+    }
+
+    #[inline(always)]
+    pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        let mut acc = [0i32; LANES];
+        let mut ca = a.chunks_exact(LANES);
+        let mut cb = b.chunks_exact(LANES);
+        for (xa, xb) in (&mut ca).zip(&mut cb) {
+            for ((s, &x), &y) in acc.iter_mut().zip(xa).zip(xb) {
+                *s += x as i32 * y as i32;
+            }
+        }
+        let mut tail = 0i32;
+        for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+            tail += x as i32 * y as i32;
+        }
+        acc.iter().sum::<i32>() + tail
+    }
+}
+
+/// The lane kernels recompiled for AVX2(+FMA) via `#[target_feature]`:
+/// `#[inline(always)]` on the lane bodies lets them inline here and pick
+/// up 256-bit codegen. Callers must verify support first (see the
+/// dispatchers above).
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod x86 {
+    /// # Safety
+    /// The host CPU must support AVX2 and FMA.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
+        super::lanes::dot_f32(a, b)
+    }
+
+    /// # Safety
+    /// The host CPU must support AVX2 and FMA.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn axpy_f32_avx2(out: &mut [f32], w: f32, x: &[f32]) {
+        super::lanes::axpy_f32(out, w, x)
+    }
+
+    /// # Safety
+    /// The host CPU must support AVX2 and FMA.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+        super::lanes::dot_i8(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, forall, Config};
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn default_mode_is_simd() {
+        // Tests never mutate the global mode (it would race with the
+        // bitwise tests on other threads); benches own it.
+        assert_eq!(mode(), Mode::Simd);
+        assert!(!active_isa().is_empty());
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert_eq!(dot_f32(&[], &[]), 0.0);
+        assert_eq!(scalar::dot_f32(&[], &[]), 0.0);
+        assert_eq!(dot_i8(&[], &[]), 0);
+        assert_eq!(dot_f32(&[2.0], &[3.5]), 7.0);
+        assert_eq!(dot_i8(&[-4], &[5]), -20);
+        let mut out = [1.0f32];
+        axpy_f32(&mut out, 2.0, &[3.0]);
+        assert_eq!(out, [7.0]);
+    }
+
+    /// Dispatched f32 dot matches the scalar oracle within reassociation
+    /// tolerance across every remainder-lane residue (lengths 0..=67
+    /// cover 0..8 tail elements several times) and NaN-bearing inputs.
+    #[test]
+    fn dot_f32_matches_scalar_prop() {
+        forall(
+            &Config { cases: 96, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let n = rng.below(2 + 2 * size as u64) as usize;
+                let mut a = randv(rng, n);
+                let b = randv(rng, n);
+                if size > 16 && n > 0 && rng.f64() < 0.3 {
+                    // NaN-bearing rows: both tiers must agree on NaN-ness.
+                    let i = rng.below(n as u64) as usize;
+                    a[i] = f32::NAN;
+                }
+                (a, b)
+            },
+            |(a, b)| {
+                let simd = dot_f32(a, b);
+                let oracle = scalar::dot_f32(a, b);
+                if oracle.is_nan() {
+                    return simd.is_nan();
+                }
+                let tol = 1e-5f32 * oracle.abs().max(a.len() as f32);
+                (simd - oracle).abs() <= tol
+            },
+        );
+    }
+
+    /// int8 dot is bitwise identical to the oracle in every tier — integer
+    /// accumulation commutes — across all remainder residues and extreme
+    /// (±127) values.
+    #[test]
+    fn dot_i8_matches_scalar_bitwise_prop() {
+        forall(
+            &Config { cases: 96, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let n = rng.below(2 + 2 * size as u64) as usize;
+                let a: Vec<i8> =
+                    (0..n).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+                let b: Vec<i8> =
+                    (0..n).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+                (a, b)
+            },
+            |(a, b)| dot_i8(a, b) == scalar::dot_i8(a, b),
+        );
+    }
+
+    /// axpy is elementwise, so the dispatched tier is bitwise equal to the
+    /// oracle (no reduction to reassociate).
+    #[test]
+    fn axpy_matches_scalar_bitwise_prop() {
+        forall(
+            &Config { cases: 64, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let n = rng.below(2 + 2 * size as u64) as usize;
+                let out = randv(rng, n);
+                let x = randv(rng, n);
+                let w = rng.normal() as f32;
+                (out, x, w)
+            },
+            |(out, x, w)| {
+                let mut a = out.clone();
+                let mut b = out.clone();
+                axpy_f32(&mut a, *w, x);
+                scalar::axpy_f32(&mut b, *w, x);
+                a == b
+            },
+        );
+    }
+
+    #[test]
+    fn long_dot_accumulates_accurately() {
+        // 1024-element dot (the bench shape): lane reduction must stay
+        // within float tolerance of the f64 ground truth.
+        let mut rng = Rng::new(7);
+        let a = randv(&mut rng, 1024);
+        let b = randv(&mut rng, 1024);
+        let exact: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        assert_allclose(&[dot_f32(&a, &b)], &[exact as f32], 1e-4, 1e-3);
+        assert_allclose(&[scalar::dot_f32(&a, &b)], &[exact as f32], 1e-4, 1e-3);
+    }
+
+    #[test]
+    fn infinities_do_not_diverge_between_tiers() {
+        let mut a = vec![1.0f32; 24];
+        let b = vec![1.0f32; 24];
+        a[3] = f32::INFINITY;
+        let s = scalar::dot_f32(&a, &b);
+        let v = dot_f32(&a, &b);
+        assert_eq!(s.is_finite(), v.is_finite());
+        assert_eq!(s.is_nan(), v.is_nan());
+    }
+}

@@ -13,6 +13,8 @@
 //!   bit — and at `keep = l` they also match [`super::dense`] exactly.
 
 use super::dense::softmax_in_place;
+use super::scratch::Scratch;
+use super::simd;
 use crate::sparse::{topk, Csr};
 
 /// Symmetric int8 quantization: `x ≈ q * scale`. An all-zero (or empty)
@@ -57,18 +59,16 @@ impl ApproxScorer {
         }
     }
 
-    /// Approximate scores of query row `r` against every key.
+    /// Approximate scores of query row `r` against every key. The int8
+    /// dot accumulates exactly in i32 ([`simd::dot_i8`]), so the predicted
+    /// scores — and therefore the selected masks — are bitwise identical
+    /// across SIMD tiers.
     pub fn score_row(&self, r: usize, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.l);
         let dk = self.dk;
         let qr = &self.qq[r * dk..(r + 1) * dk];
         for (c, o) in out.iter_mut().enumerate() {
-            let kc = &self.kq[c * dk..(c + 1) * dk];
-            let mut acc = 0i32;
-            for (&a, &b) in qr.iter().zip(kc) {
-                acc += a as i32 * b as i32;
-            }
-            *o = acc as f32 * self.scale;
+            *o = simd::dot_i8(qr, &self.kq[c * dk..(c + 1) * dk]) as f32 * self.scale;
         }
     }
 
@@ -96,11 +96,7 @@ pub fn sddmm(q: &[f32], k: &[f32], dk: usize, pattern: &Csr) -> Vec<f32> {
         let qr = &q[r * dk..(r + 1) * dk];
         for &c in pattern.row(r) {
             let kc = &k[c as usize * dk..(c as usize + 1) * dk];
-            let mut acc = 0.0f32;
-            for (a, b) in qr.iter().zip(kc) {
-                acc += a * b;
-            }
-            vals.push(acc * scale);
+            vals.push(simd::dot_f32(qr, kc) * scale);
         }
     }
     vals
@@ -128,10 +124,7 @@ pub fn spmm(pattern: &Csr, vals: &[f32], v: &[f32], dv: usize) -> Vec<f32> {
         for (i, &c) in pattern.row(r).iter().enumerate() {
             let w = vals[base + i];
             if w != 0.0 {
-                let vc = &v[c as usize * dv..(c as usize + 1) * dv];
-                for (o, x) in orow.iter_mut().zip(vc) {
-                    *o += w * x;
-                }
+                simd::axpy_f32(orow, w, &v[c as usize * dv..(c as usize + 1) * dv]);
             }
         }
     }
@@ -176,34 +169,51 @@ pub fn dsa_attention_rows(
     r1: usize,
     out: &mut [f32],
 ) {
+    let mut scratch = Scratch::new();
+    dsa_attention_rows_scratch(q, k, v, l, dk, dv, keep, scorer, r0, r1, out, &mut scratch);
+}
+
+/// [`dsa_attention_rows`] over a caller-owned [`Scratch`]: score row,
+/// top-k selection buffer and softmax row are all reused, so the per-row
+/// pipeline performs no allocations once the scratch is warm (asserted by
+/// the tests via the scratch grow counter).
+#[allow(clippy::too_many_arguments)]
+pub fn dsa_attention_rows_scratch(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+    scorer: &ApproxScorer,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+    scratch: &mut Scratch,
+) {
     debug_assert_eq!(out.len(), (r1 - r0) * dv);
+    scratch.reserve(l, keep.min(l.max(1)));
     let scale = 1.0 / (dk as f32).sqrt();
-    let mut srow = vec![0f32; l];
-    let mut vals: Vec<f32> = Vec::with_capacity(keep.min(l));
+    let srow = &mut scratch.row[..l];
+    let vals = &mut scratch.vals;
+    let kept = &mut scratch.kept;
     for r in r0..r1 {
-        scorer.score_row(r, &mut srow);
-        let kept = topk::topk_row_indices(&srow, keep);
+        scorer.score_row(r, srow);
+        topk::topk_row_indices_into(srow, keep, kept);
         // SDDMM over the kept entries of this row.
         vals.clear();
         let qr = &q[r * dk..(r + 1) * dk];
-        for &c in &kept {
-            let kc = &k[c * dk..(c + 1) * dk];
-            let mut acc = 0.0f32;
-            for (a, b) in qr.iter().zip(kc) {
-                acc += a * b;
-            }
-            vals.push(acc * scale);
+        for &c in kept.iter() {
+            vals.push(simd::dot_f32(qr, &k[c * dk..(c + 1) * dk]) * scale);
         }
-        softmax_in_place(&mut vals);
+        softmax_in_place(vals);
         // SpMM row.
         let orow = &mut out[(r - r0) * dv..(r - r0 + 1) * dv];
         orow.fill(0.0);
         for (&c, &w) in kept.iter().zip(vals.iter()) {
             if w != 0.0 {
-                let vc = &v[c * dv..(c + 1) * dv];
-                for (o, x) in orow.iter_mut().zip(vc) {
-                    *o += w * x;
-                }
+                simd::axpy_f32(orow, w, &v[c * dv..(c + 1) * dv]);
             }
         }
     }
@@ -314,6 +324,118 @@ mod tests {
                 whole == by_rows
             },
         );
+    }
+
+    /// Strictly-scalar DSA row pipeline (every inner product through the
+    /// `simd::scalar` oracle, same mask selection) — the reference the
+    /// dispatched path is compared against without touching the global
+    /// SIMD mode. Mask selection reuses the scorer's (bitwise
+    /// tier-independent) int8 scores, so both sides prune identically and
+    /// only float rounding can differ.
+    fn scalar_dsa_attention(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        l: usize,
+        dk: usize,
+        dv: usize,
+        keep: usize,
+    ) -> Vec<f32> {
+        use crate::kernels::simd::scalar;
+        let scorer = ApproxScorer::new(q, k, l, dk);
+        let scale = 1.0 / (dk as f32).sqrt();
+        let mut out = vec![0f32; l * dv];
+        let mut srow = vec![0f32; l];
+        for r in 0..l {
+            scorer.score_row(r, &mut srow);
+            let kept = topk::topk_row_indices(&srow, keep);
+            let qr = &q[r * dk..(r + 1) * dk];
+            let mut vals: Vec<f32> = kept
+                .iter()
+                .map(|&c| scalar::dot_f32(qr, &k[c * dk..(c + 1) * dk]) * scale)
+                .collect();
+            softmax_in_place(&mut vals);
+            let orow = &mut out[r * dv..(r + 1) * dv];
+            for (&c, &w) in kept.iter().zip(vals.iter()) {
+                if w != 0.0 {
+                    scalar::axpy_f32(orow, w, &v[c * dv..(c + 1) * dv]);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn simd_dsa_matches_scalar_oracle_prop() {
+        forall(
+            &Config { cases: 24, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let l = 2 + rng.below(3 * size as u64) as usize;
+                let dk = 1 + rng.below(20) as usize;
+                let dv = 1 + rng.below(20) as usize;
+                let keep = 1 + rng.below(l as u64) as usize;
+                let mut q = randv(rng, l * dk);
+                let k = randv(rng, l * dk);
+                let v = randv(rng, l * dv);
+                if size > 16 && rng.f64() < 0.3 {
+                    // NaN-bearing inputs: NaN quantizes to 0, the exact
+                    // SDDMM re-scores it to NaN — both tiers must agree.
+                    let i = rng.below((l * dk) as u64) as usize;
+                    q[i] = f32::NAN;
+                }
+                (q, k, v, l, dk, dv, keep)
+            },
+            |(q, k, v, l, dk, dv, keep)| {
+                let got = dsa_attention(q, k, v, *l, *dk, *dv, *keep);
+                let want = scalar_dsa_attention(q, k, v, *l, *dk, *dv, *keep);
+                got.iter().zip(&want).all(|(a, b)| {
+                    (a.is_nan() && b.is_nan()) || (a - b).abs() <= 1e-5 + 1e-5 * b.abs()
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn fully_masked_rows_zero_in_every_tier() {
+        // A row whose kept scores are all -inf renormalizes to an exactly
+        // zero context row — through the dispatched SpMM and the scalar
+        // oracle alike (the w != 0 skip makes this bitwise, not allclose).
+        let mut m = DenseMask::zeros(2, 4);
+        for c in 0..3 {
+            m.set(0, c, true);
+            m.set(1, c, true);
+        }
+        let pattern = Csr::from_mask(&m);
+        let ninf = f32::NEG_INFINITY;
+        let mut vals = vec![0.5, 1.0, -0.25, ninf, ninf, ninf];
+        masked_softmax(&pattern, &mut vals);
+        let v: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let out = spmm(&pattern, &vals, &v, 4);
+        assert!(out[..4].iter().all(|x| x.is_finite()));
+        assert_eq!(&out[4..], &[0.0; 4], "fully -inf row must be exactly zero");
+    }
+
+    #[test]
+    fn warm_scratch_rows_are_allocation_free() {
+        let mut rng = Rng::new(11);
+        let (l, dk, dv, keep) = (41, 9, 6, 7);
+        let q = randv(&mut rng, l * dk);
+        let k = randv(&mut rng, l * dk);
+        let v = randv(&mut rng, l * dv);
+        let scorer = ApproxScorer::new(&q, &k, l, dk);
+        let mut out = vec![0f32; l * dv];
+        let mut scratch = Scratch::new();
+        dsa_attention_rows_scratch(
+            &q, &k, &v, l, dk, dv, keep, &scorer, 0, l, &mut out, &mut scratch,
+        );
+        let warm = scratch.grow_events();
+        let mut again = vec![0f32; l * dv];
+        dsa_attention_rows_scratch(
+            &q, &k, &v, l, dk, dv, keep, &scorer, 0, l, &mut again, &mut scratch,
+        );
+        assert_eq!(scratch.grow_events(), warm, "hot loop allocated");
+        assert_eq!(out, again, "scratch reuse changed results");
+        assert_eq!(out, dsa_attention(&q, &k, &v, l, dk, dv, keep));
     }
 
     #[test]

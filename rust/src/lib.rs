@@ -22,7 +22,7 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`kernels`] | native DSA pipeline: dense baseline, int8 score prediction, SDDMM, masked softmax, SpMM, row-parallel drivers, `KernelDispatch` |
+//! | [`kernels`] | native DSA pipeline: dense baseline, int8 score prediction, SDDMM, masked softmax, SpMM; SIMD inner products (`kernels::simd`, AVX2-specialized with a scalar oracle), allocation-free per-worker scratch, row-parallel drivers for single-head and batched multi-head `[b, h, l, d]` problems, `KernelDispatch` |
 //! | [`runtime`] | artifact manifest (always) + PJRT client/registry (`xla` feature) |
 //! | [`coordinator`] | dynamic batcher, backends, engine worker, metrics |
 //! | [`server`] | line-JSON TCP front end + client |

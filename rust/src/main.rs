@@ -4,7 +4,10 @@
 //!
 //! * `serve`     — start the TCP serving front end over the AOT artifacts
 //! * `infer`     — one-shot inference of a generated example
-//! * `bench-serve` — closed/open-loop serving benchmark (dense vs DSA)
+//! * `bench-serve` — closed/open-loop serving benchmark (dense vs DSA),
+//!   optionally sweeping arrival rates and writing a BENCH summary JSON
+//! * `bench-compare` — diff a fresh kernel-bench summary against the
+//!   committed baseline; nonzero exit past the regression threshold
 //! * `simulate`  — PE-array dataflow simulation on real predicted masks
 //! * `costmodel` — print the MAC/energy/GPU-kernel model tables
 //! * `report`    — summarize results/bench.jsonl
@@ -18,7 +21,9 @@ use dsa_serve::runtime::registry::Manifest;
 use dsa_serve::server;
 use dsa_serve::sim::dataflow::{self, Dataflow};
 use dsa_serve::sparse::{Csr, DenseMask};
+use dsa_serve::util::bench;
 use dsa_serve::util::cli::Args;
+use dsa_serve::util::json::{self, Json};
 use dsa_serve::util::stats::Summary;
 use dsa_serve::workload::{Arrival, Workload, WorkloadConfig};
 
@@ -35,6 +40,7 @@ fn main() {
         "serve" => cmd_serve(&rest),
         "infer" => cmd_infer(&rest),
         "bench-serve" => cmd_bench_serve(&rest),
+        "bench-compare" => cmd_bench_compare(&rest),
         "simulate" => cmd_simulate(&rest),
         "costmodel" => cmd_costmodel(&rest),
         "report" => cmd_report(&rest),
@@ -57,12 +63,13 @@ fn usage() -> String {
     "dsa-serve — Dynamic Sparse Attention serving stack\n\
      \n\
      Commands:\n\
-       serve        start the TCP server       (--addr, --artifacts, --variant)\n\
-       infer        one-shot inference         (--artifacts, --variant, --label)\n\
-       bench-serve  serving benchmark          (--requests, --rate, --variant)\n\
-       simulate     PE dataflow simulation     (--artifacts, --pes)\n\
-       costmodel    print cost-model tables    (--task)\n\
-       report       summarize results/bench.jsonl\n\
+       serve          start the TCP server     (--addr, --artifacts, --variant)\n\
+       infer          one-shot inference       (--artifacts, --variant, --label)\n\
+       bench-serve    serving benchmark        (--requests, --rate|--rates, --out)\n\
+       bench-compare  perf gate vs committed   (--baseline, --fresh, --max-regress)\n\
+       simulate       PE dataflow simulation   (--artifacts, --pes)\n\
+       costmodel      print cost-model tables  (--task)\n\
+       report         summarize results/bench.jsonl\n\
      \n\
      Run `dsa-serve <command> --help` for options."
         .to_string()
@@ -163,19 +170,104 @@ fn cmd_infer(rest: &[String]) -> Result<()> {
 
 fn cmd_bench_serve(rest: &[String]) -> Result<()> {
     let a = engine_args("dsa-serve bench-serve")
-        .opt("requests", "200", "number of requests")
+        .opt("requests", "200", "number of requests per rate point")
         .opt("rate", "100", "open-loop arrival rate (req/s); 0 = closed loop")
+        .opt(
+            "rates",
+            "",
+            "comma-separated rate sweep (req/s, 0 = closed loop); overrides --rate",
+        )
+        .opt(
+            "out",
+            "auto",
+            "summary JSON path; auto = repo-root results/BENCH_serving_native.json, \
+             empty = don't write",
+        )
         .opt("seed", "0", "workload seed")
         .parse(rest)
         .map_err(|u| err!("{u}"))?;
     let engine = Arc::new(start_engine(&a)?);
     let n = a.get_usize("requests");
-    let rate = a.get_f64("rate");
+    let rates: Vec<f64> = {
+        let sweep = a.get("rates");
+        if sweep.trim().is_empty() {
+            vec![a.get_f64("rate")]
+        } else {
+            let mut out = Vec::new();
+            for tok in sweep.split(',') {
+                let tok = tok.trim();
+                out.push(
+                    tok.parse::<f64>()
+                        .map_err(|_| err!("bad --rates entry {tok:?}"))?,
+                );
+            }
+            out
+        }
+    };
+    let mut rows: Vec<Json> = Vec::with_capacity(rates.len());
+    for &rate in &rates {
+        let (mut lat, correct, wall) = run_rate_point(&engine, n, rate, a.get_usize("seed"))?;
+        let name = if rate > 0.0 {
+            format!("serve/native/rate{rate:.0}")
+        } else {
+            "serve/native/closed".to_string()
+        };
+        println!("== {name} ==");
+        println!("{}", lat.report_ms("latency"));
+        println!(
+            "throughput={:.1} req/s accuracy={:.3} wall={:.2}s",
+            n as f64 / wall,
+            correct as f64 / n as f64,
+            wall
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("rate_rps", Json::num(rate)),
+            ("requests", Json::num(n as f64)),
+            ("throughput_rps", Json::num(n as f64 / wall)),
+            ("accuracy", Json::num(correct as f64 / n as f64)),
+            ("mean_s", Json::num(lat.mean())),
+            ("p50_s", Json::num(lat.percentile(50.0))),
+            ("p95_s", Json::num(lat.percentile(95.0))),
+        ]));
+    }
+    println!("{}", engine.metrics.report());
+    let out = a.get("out");
+    if !out.trim().is_empty() {
+        // "auto" anchors on the repo-root results/ directory (see
+        // util::bench::results_path), so `cargo bench` outputs and this
+        // sweep land in the same place regardless of invocation cwd.
+        let path = if out == "auto" {
+            bench::results_path("BENCH_serving_native.json")
+        } else {
+            std::path::PathBuf::from(&out)
+        };
+        let doc = Json::obj(vec![
+            ("suite", Json::str("serving_native")),
+            ("results", Json::Arr(rows)),
+        ]);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, doc.to_string())?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// One open/closed-loop rate point against a running engine: returns the
+/// latency summary, correct predictions, and wall seconds.
+fn run_rate_point(
+    engine: &Engine,
+    n: usize,
+    rate: f64,
+    seed: usize,
+) -> Result<(Summary, usize, f64)> {
     let mut wl = Workload::new(WorkloadConfig {
         seq_len: engine.seq_len(),
         rate_rps: if rate > 0.0 { rate } else { 1.0 },
         arrival: if rate > 0.0 { Arrival::Poisson } else { Arrival::Closed },
-        seed: a.get_usize("seed") as u64,
+        seed: seed as u64,
     });
     let trace = wl.trace(n);
     let t0 = std::time::Instant::now();
@@ -197,15 +289,115 @@ fn cmd_bench_serve(rest: &[String]) -> Result<()> {
             correct += 1;
         }
     }
-    let wall = t0.elapsed().as_secs_f64();
-    println!("{}", lat.report_ms("latency"));
-    println!(
-        "throughput={:.1} req/s accuracy={:.3} wall={:.2}s",
-        n as f64 / wall,
-        correct as f64 / n as f64,
-        wall
-    );
-    println!("{}", engine.metrics.report());
+    Ok((lat, correct, t0.elapsed().as_secs_f64()))
+}
+
+/// Perf gate: diff a fresh `results/BENCH_kernels.json` against the
+/// committed baseline copy, print per-kernel speedups plus the headline
+/// SIMD / batched-dispatch ratios, and exit nonzero when anything
+/// regressed past `--max-regress`.
+fn cmd_bench_compare(rest: &[String]) -> Result<()> {
+    let a = Args::new("dsa-serve bench-compare", "kernel-bench perf gate")
+        .opt(
+            "baseline",
+            "",
+            "committed baseline summary (e.g. git show HEAD:results/BENCH_kernels.json); \
+             default: repo-root results/BENCH_kernels.baseline.json",
+        )
+        .opt(
+            "fresh",
+            "",
+            "fresh bench summary; default: repo-root results/BENCH_kernels.json",
+        )
+        .opt(
+            "max-regress",
+            "0.25",
+            "fail when any shared kernel is this fraction slower than baseline",
+        )
+        .parse(rest)
+        .map_err(|u| err!("{u}"))?;
+    // Defaults anchor on the repo-root results/ directory the bench
+    // writes to (util::bench::results_path), so writer and reader agree
+    // regardless of invocation cwd.
+    let resolve = |key: &str, default: &str| -> String {
+        let v = a.get(key);
+        if v.trim().is_empty() {
+            bench::results_path(default).display().to_string()
+        } else {
+            v
+        }
+    };
+    let fresh_path = resolve("fresh", "BENCH_kernels.json");
+    let fresh = json::parse(
+        &std::fs::read_to_string(&fresh_path)
+            .map_err(|e| err!("reading fresh summary {fresh_path}: {e}"))?,
+    )?;
+    let means = bench::summary_means(&fresh);
+    let headline = |num: &str, den: &str| -> Option<f64> {
+        Some(means.get(num)? / means.get(den)?)
+    };
+    println!("== headline ratios (fresh run) ==");
+    match headline("native/dot_f32/n1024/scalar", "native/dot_f32/n1024/simd") {
+        Some(r) => println!(
+            "  SIMD f32 dot speedup vs scalar:            {r:.2}x (target >= 2x) {}",
+            if r >= 2.0 { "OK" } else { "BELOW TARGET" }
+        ),
+        None => println!("  SIMD f32 dot speedup: (missing bench names)"),
+    }
+    match headline("native/dot_i8/n1024/scalar", "native/dot_i8/n1024/simd") {
+        Some(r) => println!("  SIMD int8 dot speedup vs scalar:           {r:.2}x"),
+        None => println!("  SIMD int8 dot speedup: (missing bench names)"),
+    }
+    for (label, looped, batched, target) in [
+        (
+            "batched 8-head dense vs 8 dispatches",
+            "native/dense/l1024/h8/looped/simd",
+            "native/dense/l1024/h8/batched/simd",
+            1.0,
+        ),
+        (
+            "batched 8-head dsa90 vs 8 dispatches",
+            "native/dsa/l1024/s90/h8/looped/simd",
+            "native/dsa/l1024/s90/h8/batched/simd",
+            1.5,
+        ),
+    ] {
+        match headline(looped, batched) {
+            Some(r) if target > 1.0 => println!(
+                "  {label} (l=1024): {r:.2}x (target >= {target}x) {}",
+                if r >= target { "OK" } else { "BELOW TARGET" }
+            ),
+            Some(r) => println!("  {label} (l=1024): {r:.2}x"),
+            None => println!("  {label}: (missing bench names)"),
+        }
+    }
+    let base_path = resolve("baseline", "BENCH_kernels.baseline.json");
+    let base_text = match std::fs::read_to_string(&base_path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("\n(no baseline at {base_path} — skipping regression gate)");
+            return Ok(());
+        }
+    };
+    let baseline = json::parse(&base_text)?;
+    println!("\n== per-kernel diff vs baseline (speedup = baseline/fresh) ==");
+    let diff = bench::diff_baseline(&baseline, &fresh);
+    diff.print();
+    let max = a.get_f64("max-regress");
+    let regressions = diff.regressions(max);
+    if let Some(worst) = regressions
+        .iter()
+        .min_by(|a, b| a.speedup().total_cmp(&b.speedup()))
+    {
+        bail!(
+            "{} kernel(s) regressed more than {:.0}% vs {base_path} (worst: {} at {:.2}x)",
+            regressions.len(),
+            max * 100.0,
+            worst.name,
+            worst.speedup()
+        );
+    }
+    println!("\nperf gate OK (no kernel regressed more than {:.0}%)", max * 100.0);
     Ok(())
 }
 

@@ -39,21 +39,31 @@ fn desc_score_then_col(row: &[f32], a: usize, b: usize) -> Ordering {
 /// primitive shared by [`topk_mask_exact`] and the native kernels'
 /// row-parallel path, so both always select identical masks.
 pub fn topk_row_indices(row: &[f32], k: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    topk_row_indices_into(row, k, &mut out);
+    out
+}
+
+/// Allocation-free form of [`topk_row_indices`]: writes the selection into
+/// `out`, which doubles as the selection buffer (its capacity grows to
+/// `row.len()` once and is reused across rows — see `kernels::scratch`).
+/// Identical selection semantics, asserted by the tests.
+pub fn topk_row_indices_into(row: &[f32], k: usize, out: &mut Vec<usize>) {
     let cols = row.len();
+    out.clear();
     if cols == 0 {
-        return Vec::new();
+        return;
     }
     let k = k.clamp(1, cols);
-    let mut order: Vec<usize> = (0..cols).collect();
+    out.extend(0..cols);
     if k < cols {
         // Partial selection instead of a full per-row sort: O(cols) to
         // place the top-k prefix (§Perf: see EXPERIMENTS.md for the
         // measured delta at 256x256, k=26).
-        order.select_nth_unstable_by(k, |&a, &b| desc_score_then_col(row, a, b));
-        order.truncate(k);
+        out.select_nth_unstable_by(k, |&a, &b| desc_score_then_col(row, a, b));
+        out.truncate(k);
     }
-    order.sort_unstable();
-    order
+    out.sort_unstable();
 }
 
 /// Row top-k mask over a row-major `rows x cols` score matrix, keeping
@@ -129,6 +139,25 @@ mod tests {
         assert_eq!(topk_row_indices(&row, 3), vec![1, 3, 4]);
         assert_eq!(topk_row_indices(&row, 99), vec![0, 1, 2, 3, 4]);
         assert_eq!(topk_row_indices(&[], 3), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn into_variant_reuses_buffer_and_matches() {
+        let mut rng = Rng::new(5);
+        let mut buf = Vec::new();
+        for _ in 0..50 {
+            let cols = 1 + rng.below(40) as usize;
+            let k = 1 + rng.below(cols as u64) as usize;
+            let row: Vec<f32> = (0..cols)
+                .map(|_| if rng.f64() < 0.1 { f32::NAN } else { rng.f32() })
+                .collect();
+            topk_row_indices_into(&row, k, &mut buf);
+            assert_eq!(buf, topk_row_indices(&row, k));
+            assert!(buf.capacity() <= 80, "buffer should stay bounded by ~cols");
+        }
+        // Stale contents from a prior (larger) row never leak through.
+        topk_row_indices_into(&[], 3, &mut buf);
+        assert!(buf.is_empty());
     }
 
     #[test]

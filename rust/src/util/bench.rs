@@ -4,11 +4,37 @@
 //! timed iterations until a wall budget or iteration cap, mean/p50/p95
 //! reporting, and a machine-readable JSON line per benchmark appended to
 //! `results/bench.jsonl` so EXPERIMENTS.md tables can be regenerated.
+//!
+//! Perf-trajectory tracking: [`Bench::write_summary`] leaves one JSON
+//! document per suite (e.g. `results/BENCH_kernels.json`), and
+//! [`diff_baseline`] compares a fresh run against the committed copy of
+//! that document, reporting per-kernel speedup ratios. `make
+//! bench-compare` drives this as a local perf gate (nonzero exit past a
+//! regression threshold); `bench_kernels` prints the same diff after
+//! every run.
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+
+/// Path of a bench artifact inside the repo-root `results/` directory.
+///
+/// Cargo runs bench/test binaries with cwd = the *package* root
+/// (`rust/`), but `cargo run` keeps the invoker's cwd — so a bare
+/// `"results/…"` would land in `rust/results/` for benches while the
+/// `bench-compare` gate and CI artifact upload read `results/` at the
+/// repo root. Cargo exports `CARGO_MANIFEST_DIR` to both kinds of
+/// process; anchoring on it makes every writer and reader agree. Outside
+/// cargo (a directly-executed binary) this falls back to cwd-relative
+/// `results/`.
+pub fn results_path(file: &str) -> std::path::PathBuf {
+    match std::env::var_os("CARGO_MANIFEST_DIR") {
+        Some(m) => std::path::Path::new(&m).join("..").join("results").join(file),
+        None => std::path::Path::new("results").join(file),
+    }
+}
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -97,14 +123,18 @@ impl Bench {
         r
     }
 
-    /// Append all results as JSON lines to `results/bench.jsonl`.
+    /// Append all results as JSON lines to `results/bench.jsonl` at the
+    /// repo root (see [`results_path`]).
     pub fn flush_jsonl(&self, suite: &str) {
         use std::io::Write;
-        let _ = std::fs::create_dir_all("results");
+        let path = results_path("bench.jsonl");
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
         if let Ok(mut f) = std::fs::OpenOptions::new()
             .create(true)
             .append(true)
-            .open("results/bench.jsonl")
+            .open(&path)
         {
             for r in &self.results {
                 let mut j = r.to_json();
@@ -116,6 +146,21 @@ impl Bench {
         }
     }
 
+    /// The summary document [`Bench::write_summary`] serializes.
+    pub fn summary_json(&self, suite: &str) -> Json {
+        let host_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Json::obj(vec![
+            ("suite", Json::str(suite)),
+            ("host_threads", Json::num(host_threads as f64)),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
     /// Write one JSON document summarizing every recorded result to `path`
     /// (e.g. `results/BENCH_kernels.json`) — the machine-readable artifact
     /// a bench run leaves behind for perf-trajectory tracking.
@@ -124,17 +169,7 @@ impl Bench {
         path: impl AsRef<std::path::Path>,
         suite: &str,
     ) -> std::io::Result<()> {
-        let host_threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        let doc = Json::obj(vec![
-            ("suite", Json::str(suite)),
-            ("host_threads", Json::num(host_threads as f64)),
-            (
-                "results",
-                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
-            ),
-        ]);
+        let doc = self.summary_json(suite);
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;
         }
@@ -148,6 +183,120 @@ impl Bench {
 
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+}
+
+/// `name -> mean seconds` of a summary document (as produced by
+/// [`Bench::write_summary`]). Entries without a finite positive mean are
+/// skipped — a committed placeholder baseline therefore compares as "no
+/// baseline" rather than as an infinite regression.
+pub fn summary_means(doc: &Json) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    let results = match doc.get("results").and_then(|r| r.as_arr()) {
+        Some(r) => r,
+        None => return out,
+    };
+    for r in results {
+        let name = r.get("name").and_then(|n| n.as_str());
+        let mean = r.get("mean_s").and_then(|m| m.as_f64());
+        if let (Some(name), Some(mean)) = (name, mean) {
+            if mean.is_finite() && mean > 0.0 {
+                out.insert(name.to_string(), mean);
+            }
+        }
+    }
+    out
+}
+
+/// One benchmark present in both the baseline and the fresh summary.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub name: String,
+    pub base_s: f64,
+    pub new_s: f64,
+}
+
+impl Comparison {
+    /// `baseline / fresh`: > 1 is a speedup, < 1 a slowdown.
+    pub fn speedup(&self) -> f64 {
+        self.base_s / self.new_s
+    }
+}
+
+/// Diff between a committed baseline summary and a fresh run.
+#[derive(Debug, Clone, Default)]
+pub struct BaselineDiff {
+    /// Benchmarks present on both sides, in fresh-run order.
+    pub rows: Vec<Comparison>,
+    /// Benchmarks only in the fresh run (no baseline yet).
+    pub added: Vec<String>,
+    /// Benchmarks only in the baseline (dropped from the sweep).
+    pub removed: Vec<String>,
+}
+
+/// Compare two summary documents (see [`Bench::summary_json`]) by
+/// benchmark name.
+pub fn diff_baseline(baseline: &Json, fresh: &Json) -> BaselineDiff {
+    let base = summary_means(baseline);
+    let new = summary_means(fresh);
+    let mut diff = BaselineDiff::default();
+    for (name, &new_s) in &new {
+        match base.get(name) {
+            Some(&base_s) => diff.rows.push(Comparison {
+                name: name.clone(),
+                base_s,
+                new_s,
+            }),
+            None => diff.added.push(name.clone()),
+        }
+    }
+    for name in base.keys() {
+        if !new.contains_key(name) {
+            diff.removed.push(name.clone());
+        }
+    }
+    diff
+}
+
+impl BaselineDiff {
+    /// Print per-kernel speedup ratios vs the baseline.
+    pub fn print(&self) {
+        if self.rows.is_empty() && self.added.is_empty() && self.removed.is_empty() {
+            println!("(no baseline data to compare)");
+            return;
+        }
+        for c in &self.rows {
+            let flag = if c.speedup() < 0.8 {
+                "  << REGRESSION"
+            } else if c.speedup() > 1.25 {
+                "  >> improved"
+            } else {
+                ""
+            };
+            println!(
+                "{:<52} {:>10.3}us -> {:>10.3}us  {:>6.2}x{}",
+                c.name,
+                c.base_s * 1e6,
+                c.new_s * 1e6,
+                c.speedup(),
+                flag
+            );
+        }
+        for name in &self.added {
+            println!("{name:<52} (new — no baseline timing)");
+        }
+        for name in &self.removed {
+            println!("{name:<52} (removed from sweep)");
+        }
+    }
+
+    /// Comparisons slower than `1 + max_slowdown` vs baseline (e.g.
+    /// `max_slowdown = 0.25` flags >25% regressions).
+    pub fn regressions(&self, max_slowdown: f64) -> Vec<&Comparison> {
+        self.rows
+            .iter()
+            .filter(|c| c.new_s > c.base_s * (1.0 + max_slowdown))
+            .collect()
     }
 }
 
@@ -172,6 +321,46 @@ mod tests {
         assert_eq!(b.results().len(), 1);
         assert!(b.mean_of("noop").is_some());
         assert!(b.mean_of("nope").is_none());
+    }
+
+    fn summary_with(results: Vec<(&str, f64)>) -> Json {
+        Json::obj(vec![(
+            "results",
+            Json::Arr(
+                results
+                    .into_iter()
+                    .map(|(n, m)| Json::obj(vec![("name", Json::str(n)), ("mean_s", Json::num(m))]))
+                    .collect(),
+            ),
+        )])
+    }
+
+    #[test]
+    fn baseline_diff_flags_regressions_and_membership() {
+        let base = summary_with(vec![("a", 1.0e-3), ("b", 2.0e-3), ("gone", 1.0e-3)]);
+        let fresh = summary_with(vec![("a", 0.5e-3), ("b", 3.0e-3), ("new", 1.0e-3)]);
+        let diff = diff_baseline(&base, &fresh);
+        assert_eq!(diff.rows.len(), 2);
+        assert_eq!(diff.added, vec!["new".to_string()]);
+        assert_eq!(diff.removed, vec!["gone".to_string()]);
+        let reg = diff.regressions(0.25);
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg[0].name, "b");
+        assert!((reg[0].speedup() - 2.0 / 3.0).abs() < 1e-12);
+        // a sped up 2x, not a regression
+        assert!(diff.regressions(0.25).iter().all(|c| c.name != "a"));
+        diff.print(); // smoke: must not panic
+    }
+
+    #[test]
+    fn placeholder_baseline_means_are_skipped() {
+        let base = summary_with(vec![("a", 0.0), ("b", f64::NAN)]);
+        let fresh = summary_with(vec![("a", 1.0e-3), ("b", 1.0e-3)]);
+        let diff = diff_baseline(&base, &fresh);
+        assert!(diff.rows.is_empty());
+        assert_eq!(diff.added.len(), 2);
+        assert!(diff.regressions(0.25).is_empty());
+        assert!(summary_means(&Json::Null).is_empty());
     }
 
     #[test]
