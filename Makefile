@@ -15,7 +15,7 @@
 CARGO_MANIFEST := rust/Cargo.toml
 BENCH_BASELINE := results/BENCH_kernels.baseline.json
 
-.PHONY: help verify build test bench bench-compare bench-serve fmt clippy pytest artifacts clean
+.PHONY: help verify build test bench bench-baseline bench-compare bench-serve fmt clippy pytest artifacts clean
 
 help:
 	@echo "Targets:"
@@ -23,10 +23,20 @@ help:
 	@echo "  build          cargo build --release"
 	@echo "  test           cargo test -q"
 	@echo "  bench          all native benches; writes results/BENCH_kernels.json"
+	@echo "                 (incl. the spawn-vs-pool dispatch-overhead sweep across"
+	@echo "                 l=64..2000; ratios land under 'derived' in the summary;"
+	@echo "                 DSA_BENCH_SMOKE=1 shrinks budgets for CI smoke runs)"
+	@echo "  bench-baseline full kernel bench, then reminds you to commit the"
+	@echo "                 regenerated results/BENCH_kernels.json as the gating"
+	@echo "                 baseline (or dispatch the bench-baseline CI workflow)"
 	@echo "  bench-compare  perf gate: re-bench kernels and diff vs the committed"
 	@echo "                 results/BENCH_kernels.json (fails on >25% regression;"
-	@echo "                 commit the regenerated file to accept new numbers)"
+	@echo "                 commit the regenerated file to accept new numbers);"
+	@echo "                 also prints headline SIMD / batched / pool-vs-spawn ratios"
 	@echo "  bench-serve    native-backend serving rate sweep -> results/BENCH_serving_native.json"
+	@echo "                 (dsa-serve bench-serve: --rates validates entries — finite,"
+	@echo "                 >= 0, no duplicates; --adaptive on enables queue-depth"
+	@echo "                 variant routing, decisions visible in metrics)"
 	@echo "  fmt / clippy   style gates (CI-enforced)"
 	@echo "  pytest         python tests (artifact/optional-dep tests auto-skip)"
 	@echo "  artifacts      OPTIONAL, needs jax: AOT-lower the PJRT artifacts"
@@ -46,6 +56,15 @@ test:
 ## and writes results/BENCH_kernels.json
 bench:
 	cargo bench --manifest-path $(CARGO_MANIFEST)
+
+## regenerate the committed kernel-bench baseline at full budgets; commit
+## the refreshed results/BENCH_kernels.json so `make bench-compare` (and
+## the CI bench-compare job) gate against real numbers instead of the
+## placeholder. CI equivalent: the manually-dispatched `bench-baseline`
+## workflow uploads the same file as an artifact.
+bench-baseline:
+	cargo bench --manifest-path $(CARGO_MANIFEST) --bench bench_kernels
+	@echo "baseline refreshed — commit results/BENCH_kernels.json to activate the gate"
 
 ## local perf gate: snapshot the committed baseline, re-run the kernel
 ## bench, diff, and fail on >25% regression (see header comment)

@@ -27,6 +27,7 @@ fn main() -> Result<()> {
                 default_variant: variant.to_string(),
                 policy: BatchPolicy::default(),
                 preload: true,
+                router: None,
             },
         )?;
         let mut wl = Workload::new(WorkloadConfig {

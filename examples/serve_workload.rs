@@ -45,6 +45,7 @@ fn main() -> Result<()> {
                 default_variant: variant.clone(),
                 policy: BatchPolicy::default(),
                 preload: true,
+                router: None,
             },
         )?);
 

@@ -2,7 +2,10 @@
 //! baseline vs dynamic-sparse (int8 score prediction → row top-k → SDDMM →
 //! masked softmax → SpMM), swept over single- vs multi-threaded drivers,
 //! scalar vs SIMD inner products, and single-head vs batched 8-head
-//! dispatch — plus raw f32/int8 dot microbenches isolating the SIMD win.
+//! dispatch — plus raw f32/int8 dot microbenches isolating the SIMD win,
+//! and a spawn-vs-pool sweep (`l ∈ {64, 128, 256, 1024, 2000}`) isolating
+//! the per-dispatch overhead the persistent worker pool removes; its
+//! ratios are recorded under `"derived"` in the summary JSON.
 //! Runs hermetically — no artifacts required — and tracks the perf
 //! trajectory via `results/bench.jsonl`, a `results/BENCH_kernels.json`
 //! summary, and a printed diff against the previously committed summary
@@ -17,8 +20,11 @@
 
 use std::time::Duration;
 
+use dsa_serve::kernels::parallel::Exec;
 use dsa_serve::kernels::simd::{self, Mode};
-use dsa_serve::kernels::{dense, for_variant, parallel, scratch, sparse, AttnBatch, SparseKernel};
+use dsa_serve::kernels::{
+    dense, for_variant, parallel, scratch, sparse, AttnBatch, SparseKernel, WorkerPool,
+};
 use dsa_serve::util::bench::{diff_baseline, results_path, Bench};
 use dsa_serve::util::json;
 use dsa_serve::util::rng::Rng;
@@ -159,6 +165,42 @@ fn main() {
     }
     simd::set_mode(Mode::Simd);
 
+    // Spawn-vs-pool sweep: identical kernels, identical chunking — only
+    // the dispatch mechanism differs, so spawn/pool isolates the
+    // per-dispatch thread spawn/join (+ cold scratch) overhead the
+    // persistent pool removes. The win concentrates at small l, where
+    // that fixed cost dominates the row work.
+    let pool = WorkerPool::global();
+    let pool_sweep = [64usize, 128, 256, 1024, 2000];
+    let max_l = *pool_sweep.iter().max().unwrap();
+    pool.warm(max_l, max_l); // measure dispatch overhead, not first-touch growth
+    for &l in &pool_sweep {
+        let q = randv(l * dk, &mut rng);
+        let k = randv(l * dk, &mut rng);
+        let v = randv(l * dv, &mut rng);
+        let keep90 = SparseKernel { sparsity: 0.90, threads: 1 }.keep_for(l);
+        b.run(&format!("native/dense/l{l}/h1/mt-spawn/simd"), || {
+            std::hint::black_box(parallel::dense_attention_mt_exec(
+                &q, &k, &v, l, dk, dv, 0, Exec::Spawn,
+            ));
+        });
+        b.run(&format!("native/dense/l{l}/h1/mt-pool/simd"), || {
+            std::hint::black_box(parallel::dense_attention_mt_exec(
+                &q, &k, &v, l, dk, dv, 0, Exec::Pool(pool),
+            ));
+        });
+        b.run(&format!("native/dsa/l{l}/s90/h1/mt-spawn/simd"), || {
+            std::hint::black_box(parallel::dsa_attention_mt_exec(
+                &q, &k, &v, l, dk, dv, keep90, 0, Exec::Spawn,
+            ));
+        });
+        b.run(&format!("native/dsa/l{l}/s90/h1/mt-pool/simd"), || {
+            std::hint::black_box(parallel::dsa_attention_mt_exec(
+                &q, &k, &v, l, dk, dv, keep90, 0, Exec::Pool(pool),
+            ));
+        });
+    }
+
     println!(
         "\nscratch grow events this run: {} (bounded per worker+dispatch, not per row)",
         scratch::grow_events() - grows_before
@@ -225,6 +267,27 @@ fn main() {
             )
         );
     }
+
+    println!("\n=== persistent pool vs per-dispatch spawn (spawn/pool, >1 = pool wins) ===");
+    for &l in &pool_sweep {
+        let d = ratio(
+            &b,
+            format!("native/dense/l{l}/h1/mt-spawn/simd"),
+            format!("native/dense/l{l}/h1/mt-pool/simd"),
+        );
+        let s = ratio(
+            &b,
+            format!("native/dsa/l{l}/s90/h1/mt-spawn/simd"),
+            format!("native/dsa/l{l}/s90/h1/mt-pool/simd"),
+        );
+        println!("  l={l:<5} dense {d:.2}x   dsa90 {s:.2}x");
+        b.note(&format!("pool_vs_spawn/dense/l{l}"), d);
+        b.note(&format!("pool_vs_spawn/dsa90/l{l}"), s);
+    }
+    println!(
+        "  pool: {:?} (one process-wide pool; parked workers, warm scratch)",
+        pool.stats()
+    );
 
     #[cfg(feature = "xla")]
     pjrt_kernels(&mut b);

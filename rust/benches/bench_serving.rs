@@ -88,6 +88,7 @@ fn main() {
                         queue_cap: 4096,
                     },
                     preload: true,
+                    router: None,
                 },
             )
             .expect("engine"),

@@ -109,7 +109,13 @@ impl InferBackend for NativeBackend {
     }
 
     fn preload(&mut self, variant: &str) -> Result<()> {
-        self.ensure_kernel(variant)
+        self.ensure_kernel(variant)?;
+        // Warm every worker of the process-wide pool for this model's
+        // problem size: the first real request then dispatches with zero
+        // thread spawns and zero scratch allocations.
+        let l = self.model.seq_len();
+        crate::kernels::pool::WorkerPool::global().warm(l, l);
+        Ok(())
     }
 
     fn run(&mut self, variant: &str, tokens: &[i32], bucket: usize) -> Result<Vec<f32>> {

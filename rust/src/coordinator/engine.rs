@@ -7,7 +7,12 @@
 //! [`InferBackend`](super::backend::InferBackend) as **one** backend
 //! dispatch — the native backend hands the whole bucket to the batched
 //! multi-head kernels, which parallelize over `(sequence, row-range)`
-//! work items — and fans responses back through per-request channels.
+//! work items on the process-wide persistent worker pool
+//! (`kernels::pool`) — and fans responses back through per-request
+//! channels. With [`EngineConfig::router`] set, the worker also picks the
+//! serving variant per batch from the live queue depth (dense under light
+//! load, sparser DSA rungs as backlog grows), recording every decision
+//! plus the pool counters in [`Metrics`].
 //!
 //! The backend is constructed **inside** the worker thread from a factory
 //! closure: the PJRT artifact backend's handles are thread-local and must
@@ -25,6 +30,7 @@ use super::backend::{InferBackend, NativeBackend, NativeModelConfig};
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::request::{InferRequest, InferResponse};
+use super::router::AdaptiveRouter;
 use crate::util::error::{bail, Context, Result};
 
 /// Engine configuration.
@@ -34,6 +40,12 @@ pub struct EngineConfig {
     pub policy: BatchPolicy,
     /// Eagerly warm up the default variant at startup.
     pub preload: bool,
+    /// Adaptive variant routing: batches of requests **without** an
+    /// explicit variant override are routed by live queue depth (the
+    /// backlog left after the batch is cut) instead of always serving
+    /// `default_variant`. Every rung is preloaded at startup and every
+    /// decision is recorded in [`Metrics`]. `None` = fixed default.
+    pub router: Option<AdaptiveRouter>,
 }
 
 impl Default for EngineConfig {
@@ -42,6 +54,7 @@ impl Default for EngineConfig {
             default_variant: "dsa90".to_string(),
             policy: BatchPolicy::default(),
             preload: true,
+            router: None,
         }
     }
 }
@@ -91,6 +104,17 @@ impl Engine {
                         if let Err(e) = backend.preload(&cfg.default_variant) {
                             let _ = ready_tx.send(Err(e.context("preload")));
                             return;
+                        }
+                        // Preload every router rung too: a mid-burst
+                        // escalation must never fail (or stall) on lazy
+                        // kernel instantiation.
+                        if let Some(router) = &cfg.router {
+                            for variant in router.variants() {
+                                if let Err(e) = backend.preload(variant) {
+                                    let _ = ready_tx.send(Err(e.context("preload router rung")));
+                                    return;
+                                }
+                            }
                         }
                     }
                     crate::log_debug!(
@@ -196,6 +220,7 @@ fn worker_loop(
     running: Arc<AtomicBool>,
 ) {
     let mut batcher = Batcher::new(cfg.policy.clone());
+    let mut router = cfg.router.clone();
     // Response channels parked by request id.
     let mut waiters: std::collections::HashMap<u64, Sender<InferResponse>> =
         std::collections::HashMap::new();
@@ -245,28 +270,45 @@ fn worker_loop(
             if batch.is_empty() {
                 break;
             }
-            execute_batch(backend, &cfg, batch, &mut waiters, &metrics);
+            // Live load signal for the router: the backlog this batch
+            // leaves behind in the queue.
+            let depth = batcher.len();
+            execute_batch(backend, &cfg, &mut router, depth, batch, &mut waiters, &metrics);
         }
     }
 
     // Flush any stragglers on shutdown.
     while !batcher.is_empty() {
         let batch = batcher.cut();
-        execute_batch(backend, &cfg, batch, &mut waiters, &metrics);
+        let depth = batcher.len();
+        execute_batch(backend, &cfg, &mut router, depth, batch, &mut waiters, &metrics);
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn execute_batch(
     backend: &mut dyn InferBackend,
     cfg: &EngineConfig,
+    router: &mut Option<AdaptiveRouter>,
+    queue_depth: usize,
     batch: Vec<InferRequest>,
     waiters: &mut std::collections::HashMap<u64, Sender<InferResponse>>,
     metrics: &Metrics,
 ) {
-    let variant = batch[0]
-        .variant
-        .clone()
-        .unwrap_or_else(|| cfg.default_variant.clone());
+    // Explicit per-request variant overrides always win; otherwise the
+    // adaptive router (when configured) picks the rung for the current
+    // load, and the decision is recorded before the batch runs.
+    let variant = match &batch[0].variant {
+        Some(v) => v.clone(),
+        None => match router.as_mut() {
+            Some(r) => {
+                let v = r.select(queue_depth).to_string();
+                metrics.record_routed(&v);
+                v
+            }
+            None => cfg.default_variant.clone(),
+        },
+    };
     let n = batch.len();
     let bucket = backend.bucket_for(n);
     let seq_len = backend.seq_len();
@@ -318,6 +360,12 @@ fn execute_batch(
     // Record metrics BEFORE waking waiters: a client that reads its reply
     // and immediately queries /metrics must see its own request counted.
     metrics.record_batch(&variant, n, &lat_pairs);
+    // Pool counters ride along when the native kernels have started the
+    // global pool; a PJRT-only serving path must not spawn one just to
+    // report zeros.
+    if let Some(stats) = crate::kernels::pool::WorkerPool::try_global_stats() {
+        metrics.record_pool(stats);
+    }
     for resp in responses {
         if let Some(tx) = waiters.remove(&resp.id) {
             let _ = tx.send(resp);

@@ -1,10 +1,13 @@
 //! Serving metrics: latency / queue-time summaries, batch occupancy,
-//! per-variant counters. Shared across engine + server threads.
+//! per-variant counters, adaptive-router decisions and worker-pool stats.
+//! Shared across engine + server threads; everything here surfaces in the
+//! server's `{"op":"metrics"}` response.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::kernels::pool::PoolStats;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -17,6 +20,12 @@ struct Inner {
     rejected: u64,
     batches: u64,
     started: Option<Instant>,
+    /// Adaptive-router decisions: variant -> batches routed there.
+    routed: BTreeMap<String, u64>,
+    /// Most recent router rung (None until the router decides once).
+    router_rung: Option<String>,
+    /// Latest worker-pool snapshot (None until a batch executed).
+    pool: Option<PoolStats>,
 }
 
 /// Thread-safe metrics sink.
@@ -49,6 +58,18 @@ impl Metrics {
 
     pub fn record_rejected(&self, n: u64) {
         self.inner.lock().unwrap().rejected += n;
+    }
+
+    /// Record an adaptive-router decision: one batch routed to `variant`.
+    pub fn record_routed(&self, variant: &str) {
+        let mut g = self.inner.lock().unwrap();
+        *g.routed.entry(variant.to_string()).or_insert(0) += 1;
+        g.router_rung = Some(variant.to_string());
+    }
+
+    /// Record the latest worker-pool counters (taken after each batch).
+    pub fn record_pool(&self, stats: PoolStats) {
+        self.inner.lock().unwrap().pool = Some(stats);
     }
 
     pub fn completed(&self) -> u64 {
@@ -94,6 +115,19 @@ impl Metrics {
             s.push_str(&line);
             s.push('\n');
         }
+        if let Some(rung) = &g.router_rung {
+            s.push_str(&format!("  router rung={rung} routed:"));
+            for (v, n) in &g.routed {
+                s.push_str(&format!(" {v}={n}"));
+            }
+            s.push('\n');
+        }
+        if let Some(p) = &g.pool {
+            s.push_str(&format!(
+                "  pool workers={} dispatches={} tasks={} queue_hw={} scratch_grows={}\n",
+                p.workers, p.dispatches, p.tasks_executed, p.queue_highwater, p.scratch_grows
+            ));
+        }
         s
     }
 
@@ -126,6 +160,32 @@ impl Metrics {
             ]));
         }
         obj.push(("variants", Json::Arr(per_variant)));
+        if let Some(rung) = &g.router_rung {
+            let routed: Vec<(&str, Json)> = g
+                .routed
+                .iter()
+                .map(|(v, &n)| (v.as_str(), Json::num(n as f64)))
+                .collect();
+            obj.push((
+                "router",
+                Json::obj(vec![
+                    ("rung", Json::str(rung.clone())),
+                    ("routed_batches", Json::obj(routed)),
+                ]),
+            ));
+        }
+        if let Some(p) = &g.pool {
+            obj.push((
+                "pool",
+                Json::obj(vec![
+                    ("workers", Json::num(p.workers as f64)),
+                    ("dispatches", Json::num(p.dispatches as f64)),
+                    ("tasks_executed", Json::num(p.tasks_executed as f64)),
+                    ("queue_highwater", Json::num(p.queue_highwater as f64)),
+                    ("scratch_grows", Json::num(p.scratch_grows as f64)),
+                ]),
+            ));
+        }
         Json::obj(obj)
     }
 }
@@ -146,5 +206,36 @@ mod tests {
         assert_eq!(j.get("batches").unwrap().as_f64(), Some(2.0));
         let report = m.report();
         assert!(report.contains("dense latency"));
+        // router/pool sections are absent until recorded
+        assert!(j.get("router").is_none());
+        assert!(j.get("pool").is_none());
+    }
+
+    #[test]
+    fn router_and_pool_sections_surface() {
+        let m = Metrics::new();
+        m.record_routed("dense");
+        m.record_routed("dsa90");
+        m.record_routed("dsa90");
+        m.record_pool(PoolStats {
+            workers: 4,
+            dispatches: 7,
+            tasks_executed: 28,
+            queue_highwater: 5,
+            scratch_grows: 12,
+        });
+        let j = m.to_json();
+        let router = j.get("router").expect("router section");
+        assert_eq!(router.get("rung").and_then(|r| r.as_str()), Some("dsa90"));
+        let routed = router.get("routed_batches").expect("routed counts");
+        assert_eq!(routed.get("dense").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(routed.get("dsa90").and_then(|v| v.as_f64()), Some(2.0));
+        let pool = j.get("pool").expect("pool section");
+        assert_eq!(pool.get("workers").and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(pool.get("tasks_executed").and_then(|v| v.as_f64()), Some(28.0));
+        assert_eq!(pool.get("queue_highwater").and_then(|v| v.as_f64()), Some(5.0));
+        let report = m.report();
+        assert!(report.contains("router rung=dsa90"));
+        assert!(report.contains("pool workers=4"));
     }
 }

@@ -5,9 +5,13 @@
 //!   grouping / backpressure).
 //! * [`backend`] — execution backends: hermetic native kernels (always)
 //!   and PJRT artifacts (`xla` feature).
-//! * [`engine`] — worker loop: batch → pad to bucket → backend execute →
-//!   fan out responses.
-//! * [`metrics`] — latency/throughput/occupancy accounting.
+//! * [`engine`] — worker loop: batch → route variant (optionally via the
+//!   adaptive router) → pad to bucket → backend execute → fan out
+//!   responses.
+//! * [`router`] — queue-depth-driven variant ladder (dense → dsa90 →
+//!   dsa95) the engine worker consults per batch.
+//! * [`metrics`] — latency/throughput/occupancy accounting plus router
+//!   decisions and worker-pool counters.
 
 pub mod backend;
 pub mod batcher;
@@ -21,3 +25,4 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{Engine, EngineConfig};
 pub use metrics::Metrics;
 pub use request::{InferRequest, InferResponse};
+pub use router::{AdaptiveRouter, Rung};

@@ -5,9 +5,11 @@
 //! under light load, serve the dense model (best quality); as load grows,
 //! shift traffic to progressively sparser DSA variants (cheaper per
 //! request). This module implements that policy over queue-depth
-//! hysteresis — an "extension/future-work" feature the ablation bench
-//! exercises (`bench_serving` closed-loop rows give the per-variant costs
-//! the thresholds encode).
+//! hysteresis; the engine worker drives it per batch (see
+//! `EngineConfig::router`) using the live post-cut queue depth, and every
+//! decision is recorded in `Metrics` (`router` section of the stats
+//! JSON). The ablation bench exercises the same ladder (`bench_serving`
+//! closed-loop rows give the per-variant costs the thresholds encode).
 
 /// One rung of the policy ladder.
 #[derive(Debug, Clone)]
@@ -78,6 +80,13 @@ impl AdaptiveRouter {
     pub fn current_variant(&self) -> &str {
         &self.rungs[self.current].variant
     }
+
+    /// Variant name of every rung, densest first — the engine preloads
+    /// all of them at startup so a mid-burst escalation never pays (or
+    /// fails) lazy kernel instantiation.
+    pub fn variants(&self) -> impl Iterator<Item = &str> {
+        self.rungs.iter().map(|r| r.variant.as_str())
+    }
 }
 
 #[cfg(test)]
@@ -86,6 +95,13 @@ mod tests {
 
     fn ladder() -> AdaptiveRouter {
         AdaptiveRouter::default_ladder()
+    }
+
+    #[test]
+    fn exposes_rung_variants_in_order() {
+        let r = ladder();
+        let vs: Vec<&str> = r.variants().collect();
+        assert_eq!(vs, vec!["dense", "dsa90", "dsa95"]);
     }
 
     #[test]

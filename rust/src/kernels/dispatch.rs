@@ -6,6 +6,11 @@
 //! single-head [`AttnInput`], or a batched multi-head [`AttnBatch`] that
 //! runs as **one** dispatch with workers balanced over `(batch, head,
 //! row-range)` — bit-identical to dispatching each head separately.
+//!
+//! Multi-threaded forwards (`threads != 1`) execute on the process-wide
+//! persistent [`WorkerPool`](super::pool::WorkerPool): one pool of parked
+//! workers serves every kernel the engine, benches and tests dispatch, so
+//! no `forward` call pays thread spawn/join (see `kernels::pool`).
 
 use super::{dense, parallel, sparse};
 

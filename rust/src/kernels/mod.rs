@@ -13,9 +13,15 @@
 //!   oracle every tier is property-tested against.
 //! * [`scratch`] — reusable per-worker buffers so the row hot loops are
 //!   allocation-free (observable via a grow counter).
+//! * [`pool`] — the persistent, channel-fed worker pool (parked workers,
+//!   warm per-worker scratch, panic-safe join) every multi-threaded
+//!   driver dispatches through; one process-wide pool serves the engine,
+//!   benches and tests.
 //! * [`parallel`] — row-parallel multi-threaded drivers with bit-identical
 //!   results (rows are independent end to end), for single-head problems
-//!   and batched multi-head `[b, h, l, d]` dispatches alike.
+//!   and batched multi-head `[b, h, l, d]` dispatches alike; each driver
+//!   runs on the pool by default or per-dispatch scoped spawns
+//!   ([`parallel::Exec`], the benchmarked comparison).
 //! * [`dispatch`] — the [`KernelDispatch`] trait mapping serving variant
 //!   names ("dense", "dsa90", …) to kernel implementations, over one
 //!   [`AttnInput`] problem or one [`AttnBatch`] per engine batch.
@@ -27,9 +33,12 @@ pub mod dense;
 pub mod dispatch;
 pub mod model;
 pub mod parallel;
+pub mod pool;
 pub mod scratch;
 pub mod simd;
 pub mod sparse;
 
 pub use dispatch::{for_variant, AttnBatch, AttnInput, DenseKernel, KernelDispatch, SparseKernel};
 pub use model::NativeClassifier;
+pub use parallel::Exec;
+pub use pool::{PoolStats, WorkerPool};

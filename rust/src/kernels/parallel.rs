@@ -1,13 +1,21 @@
-//! Row-parallel execution of the native attention kernels with
-//! `std::thread::scope` (rayon is unavailable in the hermetic build).
+//! Row-parallel execution of the native attention kernels.
 //!
 //! Attention rows are independent end to end — scoring, mask selection,
 //! SDDMM, masked softmax and SpMM — so the work is split into contiguous
 //! row chunks, one per worker, and each worker writes a disjoint slice of
 //! the output through its own reusable [`Scratch`]. Because every chunk
 //! performs exactly the operations the single-threaded reference would,
-//! results are **bit-identical** regardless of thread count (asserted by
-//! the tests).
+//! results are **bit-identical** regardless of thread count or execution
+//! backend (asserted by the property tests).
+//!
+//! Two execution backends share the chunking ([`Exec`]):
+//!
+//! * [`Exec::Pool`] — the default: chunks run as tasks on the persistent
+//!   [`WorkerPool`], whose parked workers and warm per-worker scratch
+//!   remove the per-dispatch spawn/join and allocation cost (the win is
+//!   largest for small problems, `l <= 256`).
+//! * [`Exec::Spawn`] — the legacy `std::thread::scope` path, kept as the
+//!   benchmark comparator (`bench_kernels` sweeps spawn vs pool).
 //!
 //! Two granularities share the same chunking machinery:
 //!
@@ -16,9 +24,10 @@
 //! * batched multi-head (`*_batch_mt`): one dispatch covers all
 //!   `b * h` problems of a `[b, h, l, d]` batch; workers split the global
 //!   `b * h * l` row space, so threads balance across `(batch, head,
-//!   row-range)` work items and the per-dispatch spawn/join cost is paid
-//!   once for the whole batch instead of once per head.
+//!   row-range)` work items and the per-dispatch cost is paid once for
+//!   the whole batch instead of once per head.
 
+use super::pool::{self, ScopedTask, WorkerPool};
 use super::scratch::Scratch;
 use super::sparse::ApproxScorer;
 use super::{dense, sparse};
@@ -34,18 +43,38 @@ pub fn effective_threads(requested: usize) -> usize {
         .unwrap_or(1)
 }
 
-/// Split `out` into per-chunk row slices and run `f(r0, r1, slice)` on
-/// scoped worker threads (`threads <= 1` runs inline). `rows` counts
-/// logical output rows of width `dv` — a single problem's query rows, or
-/// the `b * h * l` global row space of a batch.
-fn par_row_chunks<F>(rows: usize, dv: usize, threads: usize, out: &mut [f32], f: F)
+/// How a row-parallel dispatch executes its chunks. Chunking — and
+/// therefore the output bits — depends only on the `threads` count, never
+/// on the backend; the two variants differ purely in dispatch overhead.
+#[derive(Clone, Copy)]
+pub enum Exec<'p> {
+    /// Per-dispatch `std::thread::scope` spawn/join (legacy path, kept as
+    /// the benchmark comparator).
+    Spawn,
+    /// Tasks on a persistent [`WorkerPool`] with warm per-worker scratch.
+    Pool(&'p WorkerPool),
+}
+
+impl Exec<'_> {
+    /// The production default: the process-wide pool.
+    pub fn global_pool() -> Exec<'static> {
+        Exec::Pool(WorkerPool::global())
+    }
+}
+
+/// Split `out` into per-chunk row slices and run `f(r0, r1, slice,
+/// scratch)` per chunk on `exec` (`threads <= 1` runs inline on the
+/// calling thread's scratch). `rows` counts logical output rows of width
+/// `dv` — a single problem's query rows, or the `b * h * l` global row
+/// space of a batch.
+fn par_row_chunks<F>(rows: usize, dv: usize, threads: usize, exec: Exec<'_>, out: &mut [f32], f: F)
 where
-    F: Fn(usize, usize, &mut [f32]) + Sync,
+    F: Fn(usize, usize, &mut [f32], &mut Scratch) + Sync,
 {
     debug_assert_eq!(out.len(), rows * dv);
     let threads = threads.clamp(1, rows.max(1));
     if threads <= 1 {
-        f(0, rows, out);
+        pool::with_local_scratch(|scratch| f(0, rows, out, scratch));
         return;
     }
     let chunk = rows.div_ceil(threads);
@@ -60,14 +89,31 @@ where
         r0 = r1;
     }
     let fref = &f;
-    std::thread::scope(|s| {
-        for (a, b, slice) in slices {
-            s.spawn(move || fref(a, b, slice));
+    match exec {
+        Exec::Spawn => {
+            std::thread::scope(|s| {
+                for (a, b, slice) in slices {
+                    s.spawn(move || {
+                        let mut scratch = Scratch::new();
+                        fref(a, b, slice, &mut scratch);
+                    });
+                }
+            });
         }
-    });
+        Exec::Pool(p) => {
+            let mut tasks: Vec<ScopedTask<'_>> = Vec::with_capacity(slices.len());
+            for (a, b, slice) in slices {
+                tasks.push(Box::new(move |scratch: &mut Scratch| {
+                    fref(a, b, slice, scratch);
+                }));
+            }
+            p.run_scoped(tasks);
+        }
+    }
 }
 
-/// Multi-threaded dense attention (`threads = 0` → one per core).
+/// Multi-threaded dense attention on the global pool (`threads = 0` → one
+/// chunk per core).
 pub fn dense_attention_mt(
     q: &[f32],
     k: &[f32],
@@ -77,19 +123,35 @@ pub fn dense_attention_mt(
     dv: usize,
     threads: usize,
 ) -> Vec<f32> {
+    dense_attention_mt_exec(q, k, v, l, dk, dv, threads, Exec::global_pool())
+}
+
+/// [`dense_attention_mt`] with an explicit execution backend.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_attention_mt_exec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    threads: usize,
+    exec: Exec<'_>,
+) -> Vec<f32> {
     assert_eq!(q.len(), l * dk, "q shape");
     assert_eq!(k.len(), l * dk, "k shape");
     assert_eq!(v.len(), l * dv, "v shape");
     let mut out = vec![0f32; l * dv];
-    par_row_chunks(l, dv, effective_threads(threads), &mut out, |r0, r1, slice| {
-        let mut scratch = Scratch::new();
-        dense::attention_rows_scratch(q, k, v, l, dk, dv, r0, r1, slice, &mut scratch);
+    let threads = effective_threads(threads);
+    par_row_chunks(l, dv, threads, exec, &mut out, |r0, r1, slice, scratch| {
+        dense::attention_rows_scratch(q, k, v, l, dk, dv, r0, r1, slice, scratch);
     });
     out
 }
 
-/// Multi-threaded dynamic-sparse attention: Q/K are quantized once, then
-/// each worker runs the full per-row DSA pipeline over its chunk.
+/// Multi-threaded dynamic-sparse attention on the global pool: Q/K are
+/// quantized once, then each worker runs the full per-row DSA pipeline
+/// over its chunk.
 #[allow(clippy::too_many_arguments)]
 pub fn dsa_attention_mt(
     q: &[f32],
@@ -101,13 +163,29 @@ pub fn dsa_attention_mt(
     keep: usize,
     threads: usize,
 ) -> Vec<f32> {
+    dsa_attention_mt_exec(q, k, v, l, dk, dv, keep, threads, Exec::global_pool())
+}
+
+/// [`dsa_attention_mt`] with an explicit execution backend.
+#[allow(clippy::too_many_arguments)]
+pub fn dsa_attention_mt_exec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+    threads: usize,
+    exec: Exec<'_>,
+) -> Vec<f32> {
     assert_eq!(v.len(), l * dv, "v shape");
     let scorer = ApproxScorer::new(q, k, l, dk);
     let mut out = vec![0f32; l * dv];
-    par_row_chunks(l, dv, effective_threads(threads), &mut out, |r0, r1, slice| {
-        let mut scratch = Scratch::new();
+    let threads = effective_threads(threads);
+    par_row_chunks(l, dv, threads, exec, &mut out, |r0, r1, slice, scratch| {
         sparse::dsa_attention_rows_scratch(
-            q, k, v, l, dk, dv, keep, &scorer, r0, r1, slice, &mut scratch,
+            q, k, v, l, dk, dv, keep, &scorer, r0, r1, slice, scratch,
         );
     });
     out
@@ -146,14 +224,31 @@ pub fn dense_attention_batch_mt(
     dv: usize,
     threads: usize,
 ) -> Vec<f32> {
+    dense_attention_batch_mt_exec(q, k, v, b, h, l, dk, dv, threads, Exec::global_pool())
+}
+
+/// [`dense_attention_batch_mt`] with an explicit execution backend.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_attention_batch_mt_exec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    h: usize,
+    l: usize,
+    dk: usize,
+    dv: usize,
+    threads: usize,
+    exec: Exec<'_>,
+) -> Vec<f32> {
     let p = b * h;
     assert_eq!(q.len(), p * l * dk, "q shape");
     assert_eq!(k.len(), p * l * dk, "k shape");
     assert_eq!(v.len(), p * l * dv, "v shape");
     let rows = p * l;
     let mut out = vec![0f32; rows * dv];
-    par_row_chunks(rows, dv, effective_threads(threads), &mut out, |g0, g1, slice| {
-        let mut scratch = Scratch::new();
+    let threads = effective_threads(threads);
+    par_row_chunks(rows, dv, threads, exec, &mut out, |g0, g1, slice, scratch| {
         for_problem_ranges(l, g0, g1, |pi, r0, r1, off| {
             dense::attention_rows_scratch(
                 &q[pi * l * dk..(pi + 1) * l * dk],
@@ -165,7 +260,7 @@ pub fn dense_attention_batch_mt(
                 r0,
                 r1,
                 &mut slice[off * dv..(off + r1 - r0) * dv],
-                &mut scratch,
+                scratch,
             );
         });
     });
@@ -190,6 +285,24 @@ pub fn dsa_attention_batch_mt(
     keep: usize,
     threads: usize,
 ) -> Vec<f32> {
+    dsa_attention_batch_mt_exec(q, k, v, b, h, l, dk, dv, keep, threads, Exec::global_pool())
+}
+
+/// [`dsa_attention_batch_mt`] with an explicit execution backend.
+#[allow(clippy::too_many_arguments)]
+pub fn dsa_attention_batch_mt_exec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    h: usize,
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+    threads: usize,
+    exec: Exec<'_>,
+) -> Vec<f32> {
     let p = b * h;
     assert_eq!(q.len(), p * l * dk, "q shape");
     assert_eq!(k.len(), p * l * dk, "k shape");
@@ -206,8 +319,8 @@ pub fn dsa_attention_batch_mt(
         .collect();
     let rows = p * l;
     let mut out = vec![0f32; rows * dv];
-    par_row_chunks(rows, dv, effective_threads(threads), &mut out, |g0, g1, slice| {
-        let mut scratch = Scratch::new();
+    let threads = effective_threads(threads);
+    par_row_chunks(rows, dv, threads, exec, &mut out, |g0, g1, slice, scratch| {
         for_problem_ranges(l, g0, g1, |pi, r0, r1, off| {
             sparse::dsa_attention_rows_scratch(
                 &q[pi * l * dk..(pi + 1) * l * dk],
@@ -221,7 +334,7 @@ pub fn dsa_attention_batch_mt(
                 r0,
                 r1,
                 &mut slice[off * dv..(off + r1 - r0) * dv],
-                &mut scratch,
+                scratch,
             );
         });
     });
@@ -231,6 +344,7 @@ pub fn dsa_attention_batch_mt(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{forall, Config};
     use crate::util::rng::Rng;
 
     fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -273,6 +387,44 @@ mod tests {
         }
     }
 
+    /// The tentpole invariant: for random problems, the pool-based
+    /// drivers are bit-identical to both the per-dispatch spawn drivers
+    /// and the single-threaded reference — across thread counts
+    /// {1, 2, 7, num_cpus} and a pool smaller than the chunk count.
+    #[test]
+    fn pool_and_spawn_drivers_bit_identical_property() {
+        let pool = WorkerPool::new(3); // fewer workers than chunks: tasks queue
+        let ncpu = effective_threads(0);
+        forall(
+            &Config { cases: 16, seed: 0x9001_D5A5 },
+            |rng, size| {
+                let l = 2 + (rng.next_u64() as usize % (size * 4 + 3));
+                let dk = 1 + (rng.next_u64() as usize % 8);
+                let dv = 1 + (rng.next_u64() as usize % 8);
+                let keep = 1 + (rng.next_u64() as usize % l);
+                let q = randv(rng, l * dk);
+                let k = randv(rng, l * dk);
+                let v = randv(rng, l * dv);
+                (l, dk, dv, keep, q, k, v)
+            },
+            |(l, dk, dv, keep, q, k, v)| {
+                let (l, dk, dv, keep) = (*l, *dk, *dv, *keep);
+                let dense_ref = dense::attention(q, k, v, l, dk, dv);
+                let dsa_ref = sparse::dsa_attention(q, k, v, l, dk, dv, keep);
+                for threads in [1usize, 2, 7, ncpu] {
+                    for exec in [Exec::Spawn, Exec::Pool(&pool)] {
+                        let d = dense_attention_mt_exec(q, k, v, l, dk, dv, threads, exec);
+                        let s = dsa_attention_mt_exec(q, k, v, l, dk, dv, keep, threads, exec);
+                        if d != dense_ref || s != dsa_ref {
+                            return false;
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+
     #[test]
     fn problem_ranges_cover_batch_exactly() {
         // ragged split across 3 problems of 5 rows each
@@ -302,9 +454,13 @@ mod tests {
                 dv,
             ));
         }
+        let pool = WorkerPool::new(2);
         for threads in [1, 2, 4, 7, 32] {
-            let batched = dense_attention_batch_mt(&q, &k, &v, b, h, l, dk, dv, threads);
-            assert_eq!(looped, batched, "threads={threads}");
+            for exec in [Exec::Spawn, Exec::Pool(&pool), Exec::global_pool()] {
+                let batched =
+                    dense_attention_batch_mt_exec(&q, &k, &v, b, h, l, dk, dv, threads, exec);
+                assert_eq!(looped, batched, "threads={threads}");
+            }
         }
     }
 
@@ -329,10 +485,14 @@ mod tests {
                     keep,
                 ));
             }
+            let pool = WorkerPool::new(4);
             for threads in [1, 3, 8] {
-                let batched =
-                    dsa_attention_batch_mt(&q, &k, &v, b, h, l, dk, dv, keep, threads);
-                assert_eq!(looped, batched, "keep={keep} threads={threads}");
+                for exec in [Exec::Spawn, Exec::Pool(&pool)] {
+                    let batched = dsa_attention_batch_mt_exec(
+                        &q, &k, &v, b, h, l, dk, dv, keep, threads, exec,
+                    );
+                    assert_eq!(looped, batched, "keep={keep} threads={threads}");
+                }
             }
         }
     }

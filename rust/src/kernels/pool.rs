@@ -1,0 +1,428 @@
+//! Persistent, channel-fed worker pool for the row-parallel kernel
+//! drivers.
+//!
+//! Every `KernelDispatch` call used to pay a `std::thread::scope`
+//! spawn/join; for small problems (`l <= 256`) that per-dispatch overhead
+//! swamps the dynamic-sparse win the paper's practical-speedup claim
+//! rests on. This pool keeps the execution units hot instead: workers are
+//! spawned once, park on a condvar when the queue is empty, and each owns
+//! one [`Scratch`] that stays warm across dispatches — so a steady-state
+//! dispatch does zero thread creation and zero allocation (asserted by
+//! the scratch grow-counter tests).
+//!
+//! Design:
+//!
+//! * **Queue** — a `Mutex<VecDeque>` + `Condvar` MPMC queue (std has no
+//!   multi-consumer channel). Producers enqueue a whole dispatch at once
+//!   and `notify_all`; idle workers park on the condvar.
+//! * **Scoped tasks** — tasks may borrow the caller's stack (the drivers
+//!   hand workers `&mut` output slices and `&` inputs). Safety comes from
+//!   the completion latch: [`WorkerPool::run_scoped`] does not return
+//!   until every task of the dispatch has finished, so no borrow outlives
+//!   its frame — the same contract `std::thread::scope` enforces, without
+//!   the spawn/join.
+//! * **Panic-safe join** — each task runs under `catch_unwind`; the
+//!   panic payload travels through the dispatch latch and is re-raised
+//!   (diagnostics intact) on the calling thread, but never kills the
+//!   worker, so the pool stays serviceable.
+//! * **Nested dispatch** — a task that itself calls `run_scoped` (or any
+//!   pool entry point) executes inline on the worker instead of
+//!   re-enqueueing, which would risk deadlock with every worker blocked.
+//! * **Graceful shutdown** — dropping the pool sets the shutdown flag,
+//!   wakes all workers and joins them. The process-wide
+//!   [`WorkerPool::global`] pool is never dropped.
+//!
+//! Stats ([`WorkerPool::stats`]) — worker count, dispatches, tasks
+//! executed, queue high-water mark, per-worker scratch grows — feed
+//! `coordinator::Metrics` and the server stats response.
+
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use super::scratch::Scratch;
+
+/// A unit of work handed to one worker: runs once with that worker's
+/// persistent scratch. The `'env` lifetime lets tasks borrow the caller's
+/// stack; [`WorkerPool::run_scoped`] guarantees completion before return.
+pub type ScopedTask<'env> = Box<dyn FnOnce(&mut Scratch) + Send + 'env>;
+
+/// Fully-owned task as stored in the queue (lifetime erased; see the
+/// SAFETY comment in [`WorkerPool::run_scoped`]).
+type Task = Box<dyn FnOnce(&mut Scratch) + Send + 'static>;
+
+thread_local! {
+    /// True on pool worker threads — used to run nested dispatches inline.
+    static IS_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+    /// Per-thread scratch for inline (non-pooled) execution paths, so
+    /// `threads <= 1` dispatches also reuse buffers across calls.
+    static LOCAL_SCRATCH: std::cell::RefCell<Scratch> =
+        std::cell::RefCell::new(Scratch::new());
+}
+
+/// Run `f` with this thread's persistent [`Scratch`] (grown monotonically,
+/// reused across calls). Must not be re-entered from inside `f`.
+pub fn with_local_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    LOCAL_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Is the current thread a pool worker?
+fn on_pool_worker() -> bool {
+    IS_POOL_WORKER.with(|w| w.get())
+}
+
+/// A caught panic payload, carried back to the dispatching thread.
+type Payload = Box<dyn std::any::Any + Send + 'static>;
+
+/// Completion latch of one dispatch: counts outstanding tasks down and
+/// carries the first panic payload back to the dispatcher.
+struct Latch {
+    /// (remaining tasks, first caught panic payload)
+    state: Mutex<(usize, Option<Payload>)>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { state: Mutex::new((n, None)), cv: Condvar::new() }
+    }
+
+    fn complete(&self, panicked: Option<Payload>) {
+        let mut g = self.state.lock().unwrap();
+        g.0 -= 1;
+        if let Some(p) = panicked {
+            g.1.get_or_insert(p);
+        }
+        if g.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every task completed; the first panic payload, if any.
+    fn wait(&self) -> Option<Payload> {
+        let mut g = self.state.lock().unwrap();
+        while g.0 > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+        g.1.take()
+    }
+}
+
+/// State shared between the pool handle and its workers.
+struct Shared {
+    queue: Mutex<VecDeque<(Task, Arc<Latch>)>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    dispatches: AtomicU64,
+    tasks_executed: AtomicU64,
+    queue_highwater: AtomicUsize,
+    scratch_grows: AtomicU64,
+}
+
+/// Point-in-time snapshot of pool counters (all monotone except
+/// `workers`, which is fixed at construction).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Worker threads owned by the pool.
+    pub workers: usize,
+    /// `run_scoped` dispatches served through the queue.
+    pub dispatches: u64,
+    /// Tasks executed by workers (inline fallback tasks not counted).
+    pub tasks_executed: u64,
+    /// Deepest the task queue has ever been.
+    pub queue_highwater: usize,
+    /// Scratch-buffer grow events across all workers; flat once warm.
+    pub scratch_grows: u64,
+}
+
+/// Long-lived worker pool; see the module docs.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` parked worker threads (0 = one per
+    /// available core, via the same resolution the drivers use for their
+    /// chunk counts).
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = super::parallel::effective_threads(workers);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            dispatches: AtomicU64::new(0),
+            tasks_executed: AtomicU64::new(0),
+            queue_highwater: AtomicUsize::new(0),
+            scratch_grows: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("dsa-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { shared, workers: handles }
+    }
+
+    /// The process-wide pool every `_mt` driver dispatches through by
+    /// default (one worker per core, spawned on first use, never dropped).
+    pub fn global() -> &'static WorkerPool {
+        GLOBAL.get_or_init(|| WorkerPool::new(0))
+    }
+
+    /// Stats of the global pool **if it has been started** — observers
+    /// (metrics, stats endpoints) must not themselves spawn a pool a
+    /// non-native serving path would never use.
+    pub fn try_global_stats() -> Option<PoolStats> {
+        GLOBAL.get().map(WorkerPool::stats)
+    }
+
+    /// Worker threads owned by this pool.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Snapshot the pool counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.workers.len(),
+            dispatches: self.shared.dispatches.load(Ordering::Relaxed),
+            tasks_executed: self.shared.tasks_executed.load(Ordering::Relaxed),
+            queue_highwater: self.shared.queue_highwater.load(Ordering::Relaxed),
+            scratch_grows: self.shared.scratch_grows.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Execute one dispatch: enqueue `tasks`, wake the workers, and block
+    /// until every task has completed. If any task panicked, the first
+    /// panic's payload is re-raised here — after all of them finished, so
+    /// borrowed data is never touched past this call (the
+    /// `std::thread::scope` contract, original diagnostics preserved).
+    ///
+    /// Called from a pool worker (nested dispatch), the tasks run inline
+    /// on that worker instead — every worker blocking on a sub-dispatch
+    /// could otherwise deadlock the queue.
+    pub fn run_scoped<'env>(&self, tasks: Vec<ScopedTask<'env>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        if self.workers.is_empty() || on_pool_worker() {
+            // Fresh scratch, not the thread-local one: a nested task may
+            // itself enter `with_local_scratch` (e.g. a `threads <= 1`
+            // driver), which must not find it already borrowed.
+            let mut scratch = Scratch::new();
+            for t in tasks {
+                t(&mut scratch);
+            }
+            return;
+        }
+        let latch = Arc::new(Latch::new(tasks.len()));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for t in tasks {
+                // SAFETY: erasing `'env` to `'static` is sound because
+                // this function does not return until `latch.wait()`
+                // observes every task completed (panicked tasks complete
+                // via `catch_unwind` + poison), so no borrow in `t` is
+                // used after its referent could be dropped. The queue is
+                // drained by workers that never outlive the process.
+                let t: Task = unsafe { std::mem::transmute::<ScopedTask<'env>, Task>(t) };
+                q.push_back((t, latch.clone()));
+            }
+            self.shared.queue_highwater.fetch_max(q.len(), Ordering::Relaxed);
+        }
+        self.shared.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.shared.available.notify_all();
+        if let Some(payload) = latch.wait() {
+            panic::resume_unwind(payload);
+        }
+    }
+
+    /// Deterministically pre-grow **every** worker's scratch (and the
+    /// calling thread's inline scratch) for an `(l, keep)` problem, so the
+    /// first real dispatch after warm-up is allocation-free. A barrier
+    /// holds each warm task on its worker until all workers have one,
+    /// guaranteeing full coverage.
+    pub fn warm(&self, l: usize, keep: usize) {
+        if !self.workers.is_empty() && !on_pool_worker() {
+            let barrier = Arc::new(Barrier::new(self.workers.len()));
+            let mut tasks: Vec<ScopedTask<'_>> = Vec::with_capacity(self.workers.len());
+            for _ in 0..self.workers.len() {
+                let barrier = barrier.clone();
+                tasks.push(Box::new(move |scratch: &mut Scratch| {
+                    scratch.reserve(l, keep);
+                    barrier.wait();
+                }));
+            }
+            self.run_scoped(tasks);
+        }
+        with_local_scratch(|scratch| scratch.reserve(l, keep));
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    IS_POOL_WORKER.with(|w| w.set(true));
+    let mut scratch = Scratch::new();
+    let mut grows_seen = 0u64;
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap(); // parked
+            }
+        };
+        let Some((task, latch)) = job else { return };
+        let panicked = panic::catch_unwind(AssertUnwindSafe(|| task(&mut scratch))).err();
+        shared.tasks_executed.fetch_add(1, Ordering::Relaxed);
+        let grows = scratch.grow_events();
+        shared.scratch_grows.fetch_add(grows - grows_seen, Ordering::Relaxed);
+        grows_seen = grows;
+        latch.complete(panicked);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as Counter;
+
+    /// Box a closure as a pool task (keeps the test call sites readable).
+    fn task<'env>(f: impl FnOnce(&mut Scratch) + Send + 'env) -> ScopedTask<'env> {
+        Box::new(f)
+    }
+
+    #[test]
+    fn executes_tasks_and_counts_them() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        let hits = Counter::new(0);
+        let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
+        for _ in 0..10 {
+            tasks.push(task(|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        pool.run_scoped(tasks);
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+        let s = pool.stats();
+        assert_eq!(s.dispatches, 1);
+        assert_eq!(s.tasks_executed, 10);
+        assert!(s.queue_highwater >= 1);
+    }
+
+    #[test]
+    fn workers_write_disjoint_borrowed_slices() {
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0u32; 64];
+        let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
+        for (i, slice) in out.chunks_mut(16).enumerate() {
+            tasks.push(task(move |_| {
+                for (j, x) in slice.iter_mut().enumerate() {
+                    *x = (i * 16 + j) as u32;
+                }
+            }));
+        }
+        pool.run_scoped(tasks);
+        assert!(out.iter().enumerate().all(|(i, &x)| x == i as u32));
+    }
+
+    #[test]
+    fn panicking_task_poisons_dispatch_but_not_pool() {
+        let pool = WorkerPool::new(2);
+        let r = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_scoped(vec![task(|_| {}), task(|_| panic!("boom"))]);
+        }));
+        let payload = r.expect_err("panic must propagate to the dispatching thread");
+        assert_eq!(
+            payload.downcast_ref::<&str>(),
+            Some(&"boom"),
+            "original panic payload must be preserved"
+        );
+        // The pool stays serviceable: workers survived the panic.
+        let ok = Counter::new(0);
+        pool.run_scoped(vec![task(|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        })]);
+        assert_eq!(ok.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.stats().tasks_executed, 3);
+    }
+
+    #[test]
+    fn nested_dispatch_runs_inline_without_deadlock() {
+        let pool = WorkerPool::new(1); // 1 worker: a queued nested dispatch would deadlock
+        let hits = Counter::new(0);
+        pool.run_scoped(vec![task(|_| {
+            pool.run_scoped(vec![
+                task(|_| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }),
+                task(|_| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }),
+            ]);
+        })]);
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn warm_covers_every_worker() {
+        let pool = WorkerPool::new(3);
+        pool.warm(128, 16);
+        let warm = pool.stats().scratch_grows;
+        assert!(warm >= 3, "each worker must have grown at least once");
+        // Warming again at the same (or smaller) size grows nothing.
+        pool.warm(128, 16);
+        pool.warm(64, 4);
+        assert_eq!(pool.stats().scratch_grows, warm);
+    }
+
+    #[test]
+    fn tasks_see_worker_scratch() {
+        let pool = WorkerPool::new(1);
+        let sum = Counter::new(0);
+        pool.run_scoped(vec![task(|s| {
+            s.reserve(8, 2);
+            sum.fetch_add(s.row.len() as u64, Ordering::Relaxed);
+        })]);
+        assert!(sum.load(Ordering::Relaxed) >= 8);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = WorkerPool::global();
+        let b = WorkerPool::global();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.workers() >= 1);
+    }
+
+    #[test]
+    fn drop_joins_workers_gracefully() {
+        let pool = WorkerPool::new(2);
+        pool.run_scoped(vec![task(|_| {})]);
+        drop(pool); // must not hang or panic
+    }
+}

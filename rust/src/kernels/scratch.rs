@@ -109,4 +109,38 @@ mod tests {
         s.reserve(8, 4);
         assert!(grow_events() > before);
     }
+
+    /// A warm worker pool does **zero** scratch re-grows across repeated
+    /// full dispatches: `WorkerPool::warm` pre-grows every worker's
+    /// scratch, after which dense and DSA dispatches of any smaller-or-
+    /// equal problem allocate nothing (tracked by the pool's aggregated
+    /// per-worker grow counter, so concurrent tests on the global counter
+    /// can't perturb this assertion).
+    #[test]
+    fn warm_pool_dispatches_never_regrow() {
+        use crate::kernels::parallel::{self, Exec};
+        use crate::kernels::pool::WorkerPool;
+        use crate::util::rng::Rng;
+
+        let pool = WorkerPool::new(3);
+        let (l, dk, dv, keep) = (48usize, 8usize, 6usize, 9usize);
+        pool.warm(l, l);
+        let warm = pool.stats().scratch_grows;
+        assert!(warm >= 3, "warm must touch every worker");
+
+        let mut rng = Rng::new(77);
+        let q: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..l * dv).map(|_| rng.normal() as f32).collect();
+        let exec = Exec::Pool(&pool);
+        for _ in 0..5 {
+            parallel::dense_attention_mt_exec(&q, &k, &v, l, dk, dv, 3, exec);
+            parallel::dsa_attention_mt_exec(&q, &k, &v, l, dk, dv, keep, 3, exec);
+        }
+        assert_eq!(
+            pool.stats().scratch_grows,
+            warm,
+            "warm pool re-grew scratch during dispatches"
+        );
+    }
 }

@@ -22,9 +22,9 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`kernels`] | native DSA pipeline: dense baseline, int8 score prediction, SDDMM, masked softmax, SpMM; SIMD inner products (`kernels::simd`, AVX2-specialized with a scalar oracle), allocation-free per-worker scratch, row-parallel drivers for single-head and batched multi-head `[b, h, l, d]` problems, `KernelDispatch` |
+//! | [`kernels`] | native DSA pipeline: dense baseline, int8 score prediction, SDDMM, masked softmax, SpMM; SIMD inner products (`kernels::simd`, AVX2-specialized with a scalar oracle), allocation-free per-worker scratch, a persistent worker pool (`kernels::pool`: parked channel-fed workers with warm scratch — one pool serves the whole process), row-parallel drivers for single-head and batched multi-head `[b, h, l, d]` problems (pool-backed by default, scoped-spawn kept as the benchmarked comparator), `KernelDispatch` |
 //! | [`runtime`] | artifact manifest (always) + PJRT client/registry (`xla` feature) |
-//! | [`coordinator`] | dynamic batcher, backends, engine worker, metrics |
+//! | [`coordinator`] | dynamic batcher, backends, engine worker, queue-depth adaptive variant router, metrics (incl. router decisions + pool counters) |
 //! | [`server`] | line-JSON TCP front end + client |
 //! | [`sparse`] | mask / CSR / column-vector formats, top-k |
 //! | [`sim`] | PE-array dataflow + multi-precision simulators (Sec. 5.2) |

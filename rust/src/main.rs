@@ -14,7 +14,9 @@
 
 use std::sync::Arc;
 
-use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig, NativeModelConfig};
+use dsa_serve::coordinator::{
+    AdaptiveRouter, BatchPolicy, Engine, EngineConfig, NativeModelConfig,
+};
 use dsa_serve::util::error::{bail, err, Result};
 use dsa_serve::costmodel::{energy, gpu, macs};
 use dsa_serve::runtime::registry::Manifest;
@@ -83,9 +85,20 @@ fn engine_args(program: &str) -> Args {
         .opt("seq-len", "256", "sequence length of the native backend")
         .opt("max-batch", "8", "dynamic batcher: max requests per batch")
         .opt("max-wait-ms", "4", "dynamic batcher: head-of-line deadline")
+        .opt(
+            "adaptive",
+            "off",
+            "on = route default-variant traffic by live queue depth \
+             (dense -> dsa90 -> dsa95); decisions surface in metrics",
+        )
 }
 
 fn start_engine(a: &Args) -> Result<Engine> {
+    let router = match a.get("adaptive").as_str() {
+        "off" => None,
+        "on" => Some(AdaptiveRouter::default_ladder()),
+        other => bail!("unknown --adaptive {other:?} (on|off)"),
+    };
     let cfg = EngineConfig {
         default_variant: a.get("variant"),
         policy: BatchPolicy {
@@ -94,6 +107,7 @@ fn start_engine(a: &Args) -> Result<Engine> {
             queue_cap: 4096,
         },
         preload: true,
+        router,
     };
     let artifacts = a.get("artifacts");
     let use_artifacts = match a.get("backend").as_str() {
@@ -191,17 +205,9 @@ fn cmd_bench_serve(rest: &[String]) -> Result<()> {
     let rates: Vec<f64> = {
         let sweep = a.get("rates");
         if sweep.trim().is_empty() {
-            vec![a.get_f64("rate")]
+            parse_rates(&a.get("rate"))?
         } else {
-            let mut out = Vec::new();
-            for tok in sweep.split(',') {
-                let tok = tok.trim();
-                out.push(
-                    tok.parse::<f64>()
-                        .map_err(|_| err!("bad --rates entry {tok:?}"))?,
-                );
-            }
-            out
+            parse_rates(&sweep)?
         }
     };
     let mut rows: Vec<Json> = Vec::with_capacity(rates.len());
@@ -253,6 +259,31 @@ fn cmd_bench_serve(rest: &[String]) -> Result<()> {
         println!("wrote {}", path.display());
     }
     Ok(())
+}
+
+/// Parse and validate a rate sweep: comma-separated req/s entries, each a
+/// finite number >= 0 (`0` = closed loop), with duplicates rejected —
+/// a malformed sweep aborts the bench up front instead of silently
+/// benching nonsense points.
+fn parse_rates(sweep: &str) -> Result<Vec<f64>> {
+    let mut out: Vec<f64> = Vec::new();
+    for tok in sweep.split(',') {
+        let tok = tok.trim();
+        let rate: f64 = tok
+            .parse()
+            .map_err(|_| err!("bad --rates entry {tok:?} (expected a number)"))?;
+        if !rate.is_finite() || rate < 0.0 {
+            bail!(
+                "bad --rates entry {tok:?}: rates must be finite and >= 0 \
+                 (0 = closed loop)"
+            );
+        }
+        if out.contains(&rate) {
+            bail!("duplicate --rates entry {tok:?}");
+        }
+        out.push(rate);
+    }
+    Ok(out)
 }
 
 /// One open/closed-loop rate point against a running engine: returns the
@@ -369,6 +400,31 @@ fn cmd_bench_compare(rest: &[String]) -> Result<()> {
             ),
             Some(r) => println!("  {label} (l=1024): {r:.2}x"),
             None => println!("  {label}: (missing bench names)"),
+        }
+    }
+    // Persistent-pool dividend: same kernels, same chunking — only the
+    // per-dispatch spawn/join differs, so the ratio isolates the overhead
+    // the pool removes. The win concentrates at small l.
+    println!("\n== persistent pool vs per-dispatch spawn (spawn/pool, >1 = pool wins) ==");
+    for l in [64usize, 128, 256, 1024, 2000] {
+        let dense = headline(
+            &format!("native/dense/l{l}/h1/mt-spawn/simd"),
+            &format!("native/dense/l{l}/h1/mt-pool/simd"),
+        );
+        let dsa = headline(
+            &format!("native/dsa/l{l}/s90/h1/mt-spawn/simd"),
+            &format!("native/dsa/l{l}/s90/h1/mt-pool/simd"),
+        );
+        match (dense, dsa) {
+            (Some(d), Some(s)) => {
+                let gate = if l <= 256 && (d < 1.0 || s < 1.0) {
+                    " BELOW TARGET (pool must win at l <= 256)"
+                } else {
+                    ""
+                };
+                println!("  l={l:<5} dense {d:.2}x   dsa90 {s:.2}x{gate}");
+            }
+            _ => println!("  l={l:<5} (missing bench names)"),
         }
     }
     let base_path = resolve("baseline", "BENCH_kernels.baseline.json");
@@ -544,4 +600,29 @@ fn cmd_report(rest: &[String]) -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_accept_valid_sweeps() {
+        assert_eq!(parse_rates("100").unwrap(), vec![100.0]);
+        assert_eq!(parse_rates("100, 300,600").unwrap(), vec![100.0, 300.0, 600.0]);
+        // 0 is the documented closed-loop sentinel
+        assert_eq!(parse_rates("0,250.5").unwrap(), vec![0.0, 250.5]);
+    }
+
+    #[test]
+    fn rates_reject_malformed_entries() {
+        assert!(parse_rates("").is_err());
+        assert!(parse_rates("100,,300").is_err());
+        assert!(parse_rates("abc").is_err());
+        assert!(parse_rates("100,-5").is_err(), "negative rate must be rejected");
+        assert!(parse_rates("NaN").is_err(), "NaN must be rejected");
+        assert!(parse_rates("inf").is_err(), "infinite rate must be rejected");
+        assert!(parse_rates("100,300,100").is_err(), "duplicates must be rejected");
+        assert!(parse_rates("1e400").is_err(), "overflow parses to inf; reject");
+    }
 }

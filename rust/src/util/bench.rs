@@ -66,6 +66,10 @@ pub struct Bench {
     pub max_iters: usize,
     pub budget: Duration,
     results: Vec<BenchResult>,
+    /// Named scalars derived from the raw timings (e.g. spawn-vs-pool
+    /// overhead ratios); serialized under `"derived"` in the summary so
+    /// headline numbers travel with the artifact.
+    derived: BTreeMap<String, f64>,
 }
 
 impl Default for Bench {
@@ -75,6 +79,7 @@ impl Default for Bench {
             max_iters: 200,
             budget: Duration::from_secs(5),
             results: Vec::new(),
+            derived: BTreeMap::new(),
         }
     }
 }
@@ -151,14 +156,23 @@ impl Bench {
         let host_threads = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1);
-        Json::obj(vec![
+        let mut obj = vec![
             ("suite", Json::str(suite)),
             ("host_threads", Json::num(host_threads as f64)),
             (
                 "results",
                 Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
             ),
-        ])
+        ];
+        if !self.derived.is_empty() {
+            let derived: Vec<(&str, Json)> = self
+                .derived
+                .iter()
+                .map(|(k, &v)| (k.as_str(), Json::num(v)))
+                .collect();
+            obj.push(("derived", Json::obj(derived)));
+        }
+        Json::obj(obj)
     }
 
     /// Write one JSON document summarizing every recorded result to `path`
@@ -174,6 +188,15 @@ impl Bench {
             std::fs::create_dir_all(parent)?;
         }
         std::fs::write(path, doc.to_string())
+    }
+
+    /// Record a derived scalar (ratio, counter, …) for the summary
+    /// document. Non-finite values are dropped — a missing input must not
+    /// poison the summary JSON.
+    pub fn note(&mut self, name: &str, value: f64) {
+        if value.is_finite() {
+            self.derived.insert(name.to_string(), value);
+        }
     }
 
     /// Mean seconds of a recorded result by exact name, if present.
@@ -310,7 +333,7 @@ mod tests {
             warmup_iters: 1,
             max_iters: 10,
             budget: Duration::from_millis(200),
-            results: Vec::new(),
+            ..Default::default()
         };
         let mut x = 0u64;
         let r = b.run("noop", || {
@@ -369,7 +392,7 @@ mod tests {
             warmup_iters: 0,
             max_iters: 2,
             budget: Duration::from_millis(50),
-            results: Vec::new(),
+            ..Default::default()
         };
         b.run("a", || {});
         let path = std::env::temp_dir().join("dsa_bench_test").join("s.json");
@@ -380,5 +403,24 @@ mod tests {
             doc.get("results").and_then(|r| r.as_arr()).map(|a| a.len()),
             Some(1)
         );
+    }
+
+    #[test]
+    fn derived_notes_round_trip_and_drop_nonfinite() {
+        let mut b = Bench::default();
+        assert!(b.summary_json("unit").get("derived").is_none());
+        b.note("pool_vs_spawn/dense/l64", 1.75);
+        b.note("bogus", f64::NAN);
+        b.note("bogus2", f64::INFINITY);
+        let doc = b.summary_json("unit");
+        let derived = doc.get("derived").expect("derived section");
+        assert_eq!(
+            derived.get("pool_vs_spawn/dense/l64").and_then(|v| v.as_f64()),
+            Some(1.75)
+        );
+        assert!(derived.get("bogus").is_none());
+        assert!(derived.get("bogus2").is_none());
+        // derived entries never leak into the per-kernel regression diff
+        assert!(summary_means(&doc).is_empty());
     }
 }

@@ -118,6 +118,7 @@ fn engine_serves_and_model_beats_chance() {
                 queue_cap: 128,
             },
             preload: true,
+            router: None,
         },
     )
     .expect("engine");

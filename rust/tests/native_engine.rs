@@ -7,7 +7,9 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::time::Duration;
 
-use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig, NativeModelConfig};
+use dsa_serve::coordinator::{
+    AdaptiveRouter, BatchPolicy, Engine, EngineConfig, NativeModelConfig, Rung,
+};
 use dsa_serve::server;
 use dsa_serve::util::json::Json;
 use dsa_serve::workload::{Workload, WorkloadConfig};
@@ -28,6 +30,7 @@ fn engine(variant: &str) -> Engine {
                 queue_cap: 128,
             },
             preload: true,
+            router: None,
         },
     )
     .expect("native engine")
@@ -137,6 +140,81 @@ fn unknown_default_variant_fails_startup() {
     assert!(r.is_err(), "preload of unknown variant must fail startup");
 }
 
+/// The engine worker drives `AdaptiveRouter::select` from live queue
+/// depth: a burst of default-variant requests escalates later batches to
+/// the sparse rung, the final (empty-backlog) batch de-escalates back to
+/// dense, and every decision is visible in the metrics JSON alongside
+/// the worker-pool counters.
+#[test]
+fn adaptive_router_routes_under_load_and_reports() {
+    let engine = Engine::start_native(
+        NativeModelConfig {
+            seq_len: SEQ_LEN,
+            ..Default::default()
+        },
+        EngineConfig {
+            default_variant: "dense".to_string(),
+            policy: BatchPolicy {
+                max_batch: 4,
+                // Generous deadline: the whole burst is enqueued long
+                // before the first deadline-driven cut could fire, so
+                // later batches deterministically observe a backlog.
+                max_wait: Duration::from_millis(50),
+                queue_cap: 128,
+            },
+            preload: true,
+            router: Some(AdaptiveRouter::new(
+                vec![
+                    Rung { variant: "dense".into(), min_queue: 0 },
+                    Rung { variant: "dsa90".into(), min_queue: 2 },
+                ],
+                0,
+            )),
+        },
+    )
+    .expect("native engine with router");
+
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len: SEQ_LEN,
+        seed: 7,
+        ..Default::default()
+    });
+    let trace = wl.trace(33);
+    let mut rxs = Vec::new();
+    for r in trace {
+        rxs.push(engine.submit(r.tokens, None).expect("submit"));
+    }
+    let mut variants: Vec<String> = Vec::new();
+    for rx in rxs {
+        variants.push(rx.recv().expect("response").variant);
+    }
+    assert!(
+        variants.iter().all(|v| v == "dense" || v == "dsa90"),
+        "router must only serve ladder rungs, got {variants:?}"
+    );
+    assert!(
+        variants.iter().any(|v| v == "dsa90"),
+        "burst backlog must escalate at least one batch to dsa90"
+    );
+    // The last batch leaves an empty queue, so the ladder ends de-escalated.
+    assert_eq!(variants.last().map(String::as_str), Some("dense"));
+
+    let m = engine.metrics.to_json();
+    let router = m.get("router").expect("router section in metrics");
+    assert_eq!(router.get("rung").and_then(|r| r.as_str()), Some("dense"));
+    let routed = router.get("routed_batches").expect("routed_batches");
+    let count = |v: &str| routed.get(v).and_then(|x| x.as_f64()).unwrap_or(0.0);
+    let batches = m.get("batches").and_then(|b| b.as_f64()).expect("batches");
+    assert!(count("dsa90") >= 1.0, "metrics must record the escalation");
+    assert_eq!(
+        count("dense") + count("dsa90"),
+        batches,
+        "every batch decision must be recorded"
+    );
+    let pool = m.get("pool").expect("pool section in metrics");
+    assert!(pool.get("workers").and_then(|w| w.as_f64()).unwrap_or(0.0) >= 1.0);
+}
+
 #[test]
 fn server_protocol_roundtrip() {
     let engine = Arc::new(engine("dsa90"));
@@ -169,6 +247,10 @@ fn server_protocol_roundtrip() {
             .unwrap_or(0.0)
             >= 1.0
     );
+    // Worker-pool counters ride along in the stats response once a batch
+    // has executed; no router section without a configured router.
+    assert!(metrics.get("pool").is_some(), "pool stats in server metrics");
+    assert!(metrics.get("router").is_none());
 
     // malformed input → structured error, no panic
     assert!(server::handle_line("{nope", &engine, &stop).is_err());
