@@ -23,8 +23,9 @@ help:
 	@echo "  build          cargo build --release"
 	@echo "  test           cargo test -q"
 	@echo "  bench          all native benches; writes results/BENCH_kernels.json"
-	@echo "                 (incl. the spawn-vs-pool dispatch-overhead sweep across"
-	@echo "                 l=64..2000; ratios land under 'derived' in the summary;"
+	@echo "                 (incl. the fused-vs-unfused kernel sweep and the"
+	@echo "                 spawn-vs-pool dispatch-overhead sweep across l=64..2000;"
+	@echo "                 ratios land under 'derived' in the summary;"
 	@echo "                 DSA_BENCH_SMOKE=1 shrinks budgets for CI smoke runs)"
 	@echo "  bench-baseline full kernel bench, then reminds you to commit the"
 	@echo "                 regenerated results/BENCH_kernels.json as the gating"
@@ -32,7 +33,8 @@ help:
 	@echo "  bench-compare  perf gate: re-bench kernels and diff vs the committed"
 	@echo "                 results/BENCH_kernels.json (fails on >25% regression;"
 	@echo "                 commit the regenerated file to accept new numbers);"
-	@echo "                 also prints headline SIMD / batched / pool-vs-spawn ratios"
+	@echo "                 also prints headline SIMD / batched / fused-vs-unfused"
+	@echo "                 (target >= 1.3x dense at l >= 1024) / pool-vs-spawn ratios"
 	@echo "  bench-serve    native-backend serving rate sweep -> results/BENCH_serving_native.json"
 	@echo "                 (dsa-serve bench-serve: --rates validates entries — finite,"
 	@echo "                 >= 0, no duplicates; --adaptive on enables queue-depth"

@@ -112,7 +112,10 @@ impl InferBackend for NativeBackend {
         self.ensure_kernel(variant)?;
         // Warm every worker of the process-wide pool for this model's
         // problem size: the first real request then dispatches with zero
-        // thread spawns and zero scratch allocations.
+        // thread spawns and zero scratch allocations. `(l, l)` covers the
+        // fused tiled kernels too — their key-tile score buffer is the
+        // `[..tile]` prefix of the same scratch row, and the per-chunk
+        // DSA buffers are bounded by `keep <= l`.
         let l = self.model.seq_len();
         crate::kernels::pool::WorkerPool::global().warm(l, l);
         Ok(())

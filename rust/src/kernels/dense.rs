@@ -1,13 +1,47 @@
-//! Dense attention reference: `softmax(Q K^T / sqrt(dk)) V` over row-major
-//! f32 buffers. This is the baseline every sparse path is validated
-//! against: at `keep = l` the dynamic-sparse pipeline in
-//! [`super::sparse`] performs the exact same float operations in the same
-//! order, so the two agree bit for bit. Both paths share one inner-product
-//! implementation ([`super::simd`]) so that guarantee survives the SIMD
-//! dispatch: whatever tier runs, it runs on both sides.
+//! Dense attention: `softmax(Q K^T / sqrt(dk)) V` over row-major f32
+//! buffers, in two forms.
+//!
+//! * **Fused, cache-tiled, online softmax** ([`attention_rows_fused_scratch`])
+//!   — the production path. Query rows are processed in [`QUERY_BLOCK`]-row
+//!   blocks against [`KEY_TILE`]-key K/V tiles; each row carries a running
+//!   maximum and denominator (flash-attention-style rescaling via
+//!   [`online_rescale`] / [`online_finish`]) and accumulates its
+//!   unnormalized context directly in the output row. The `l`-length score
+//!   row, the separate softmax pass and the separate weighted-sum pass of
+//!   the unfused form collapse into one pass with an `O(tile · d)` working
+//!   set — each K/V tile is read once per query block instead of once per
+//!   query row, which is what the paper's memory-traffic bottleneck
+//!   argument asks for.
+//! * **Unfused reference** ([`attention_rows_scratch`]) — score row →
+//!   [`softmax_in_place`] → weighted sum, three passes. Retained as the
+//!   property-test oracle and the bench comparator; the fused kernel must
+//!   stay within a tight tolerance of it (asserted by the tests, including
+//!   ragged `l` vs tile, `l` smaller than one tile and fully-masked rows).
+//!
+//! At `keep = l` the dynamic-sparse pipeline in [`super::sparse`] performs
+//! the exact same float operations in the same order — unfused matching
+//! unfused and fused matching fused **bit for bit**. Both paths share one
+//! inner-product implementation ([`super::simd`]) so that guarantee
+//! survives the SIMD dispatch: whatever tier runs, it runs on both sides.
 
 use super::scratch::Scratch;
 use super::simd;
+
+/// Keys (and value rows) per K/V tile of the fused kernels. At the bench
+/// head width `d = 64` one K tile plus one V tile is `2 · 256 · 64 · 4 B
+/// = 128 KiB` — resident in any contemporary L2 — and the per-row score
+/// buffer is `tile` floats instead of `l`. Fixed (not autotuned) because
+/// the fused outputs depend on the tile size: one constant keeps results
+/// bit-identical across thread counts, dispatch backends and batch
+/// shapes.
+pub const KEY_TILE: usize = 256;
+
+/// Query rows processed per tile pass of the fused kernels: each K/V tile
+/// is streamed from memory once and reused by this many query rows, so
+/// tile traffic drops by `QUERY_BLOCK`× vs the unfused per-row streaming.
+/// Per-row results never depend on this blocking (each row owns its
+/// running max / denominator / accumulator) — only locality does.
+pub const QUERY_BLOCK: usize = 8;
 
 /// Scaled attention scores for query row `r`:
 /// `out[c] = (q_r . k_c) / sqrt(dk)`.
@@ -54,6 +88,175 @@ pub fn softmax_in_place(row: &mut [f32]) {
             *x *= inv;
         }
     }
+}
+
+/// Online-softmax tile step, part 1: fold a tile's score maximum
+/// `tile_max` into the row's running maximum `m`, rescaling the running
+/// denominator `den` and the unnormalized accumulator row `acc` by
+/// `exp(m_old - m_new)` when the maximum moves. Returns whether the row
+/// is currently *accumulable* — `m` finite. A row whose maximum never
+/// becomes finite (all scores `-inf`/NaN) or reaches `+inf` accumulates
+/// nothing and is zeroed by [`online_finish`]. Callers of a skipped tile
+/// must still record NaN scores seen while `m` is `-inf` (the
+/// `nan_pending` input of [`online_finish`]) — the unfused softmax skips
+/// NaN in its max scan but the NaN weights poison the row once the max
+/// turns finite, and the fused kernels reproduce that exactly.
+#[inline]
+pub fn online_rescale(tile_max: f32, m: &mut f32, den: &mut f32, acc: &mut [f32]) -> bool {
+    if tile_max > *m {
+        if m.is_finite() {
+            let c = (*m - tile_max).exp();
+            *den *= c;
+            simd::scale_f32(acc, c);
+        }
+        *m = tile_max;
+    }
+    m.is_finite()
+}
+
+/// Online-softmax finalization, part 2: after every tile has been folded
+/// in, normalize the accumulator by the running denominator. Matches the
+/// unfused [`softmax_in_place`] + weighted-sum pass case for case:
+/// degenerate rows (non-finite running max: fully masked, or a `+inf`
+/// score — NaN entries notwithstanding, since the max scan skips NaN)
+/// become exactly zero; `nan_pending` (a NaN score seen in a tile skipped
+/// while the max was still `-inf`) poisons the whole row to NaN exactly
+/// as the unfused NaN weights would; a zero/NaN denominator leaves the
+/// accumulator unnormalized (NaN scores seen *after* the max turned
+/// finite already poisoned `den` and `acc` through the exp/axpy path).
+#[inline]
+pub fn online_finish(m: f32, den: f32, nan_pending: bool, acc: &mut [f32]) {
+    if !m.is_finite() {
+        acc.fill(0.0);
+    } else if nan_pending {
+        acc.fill(f32::NAN);
+    } else if den > 0.0 {
+        simd::scale_f32(acc, 1.0 / den);
+    }
+}
+
+/// Fused dense attention for query rows `r0..r1` at the default
+/// [`KEY_TILE`]: one pass over K/V per query block, no `l`-length score
+/// row, no separate softmax or weighted-sum pass. Row ranges are
+/// independent and per-row results do not depend on `r0`/`r1` or the
+/// query blocking, so disjoint ranges parallelize bit-identically to a
+/// single-threaded pass (asserted by the `parallel` tests).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_rows_fused_scratch(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+    scratch: &mut Scratch,
+) {
+    attention_rows_fused_tile_scratch(q, k, v, l, dk, dv, r0, r1, out, scratch, KEY_TILE);
+}
+
+/// [`attention_rows_fused_scratch`] with an explicit tile size (the
+/// property tests sweep it; production uses [`KEY_TILE`], and fused
+/// outputs are only comparable bit-for-bit at equal tile sizes). The
+/// score tile reuses `scratch.row`, so a warm scratch runs the whole loop
+/// allocation-free; running max / denominator live on the stack.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_rows_fused_tile_scratch(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+    scratch: &mut Scratch,
+    tile: usize,
+) {
+    debug_assert_eq!(out.len(), (r1 - r0) * dv);
+    if r0 == r1 {
+        return;
+    }
+    let tile = tile.clamp(1, l.max(1));
+    scratch.reserve(l, 0);
+    let scale = 1.0 / (dk as f32).sqrt();
+    let mut rb = r0;
+    while rb < r1 {
+        let re = (rb + QUERY_BLOCK).min(r1);
+        let mut mx = [f32::NEG_INFINITY; QUERY_BLOCK];
+        let mut den = [0.0f32; QUERY_BLOCK];
+        let mut nanp = [false; QUERY_BLOCK];
+        out[(rb - r0) * dv..(re - r0) * dv].fill(0.0);
+        let mut c0 = 0;
+        while c0 < l {
+            let c1 = (c0 + tile).min(l);
+            let buf = &mut scratch.row[..c1 - c0];
+            for r in rb..re {
+                let bi = r - rb;
+                let qr = &q[r * dk..(r + 1) * dk];
+                for (j, o) in buf.iter_mut().enumerate() {
+                    let c = c0 + j;
+                    *o = simd::dot_f32(qr, &k[c * dk..(c + 1) * dk]) * scale;
+                }
+                let orow = &mut out[(r - r0) * dv..(r - r0 + 1) * dv];
+                if online_rescale(simd::max_f32(buf), &mut mx[bi], &mut den[bi], orow) {
+                    let m = mx[bi];
+                    for (j, &s) in buf.iter().enumerate() {
+                        let w = (s - m).exp();
+                        den[bi] += w;
+                        if w != 0.0 {
+                            let c = c0 + j;
+                            simd::axpy_f32(orow, w, &v[c * dv..(c + 1) * dv]);
+                        }
+                    }
+                } else if mx[bi] == f32::NEG_INFINITY {
+                    nanp[bi] = nanp[bi] || buf.iter().any(|s| s.is_nan());
+                }
+            }
+            c0 = c1;
+        }
+        for r in rb..re {
+            let orow = &mut out[(r - r0) * dv..(r - r0 + 1) * dv];
+            online_finish(mx[r - rb], den[r - rb], nanp[r - rb], orow);
+        }
+        rb = re;
+    }
+}
+
+/// Full fused dense attention at the default [`KEY_TILE`]: returns the
+/// `l x dv` context matrix. The single-threaded fused reference the
+/// multi-threaded fused drivers are bit-identical to.
+pub fn attention_fused(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+) -> Vec<f32> {
+    attention_fused_tile(q, k, v, l, dk, dv, KEY_TILE)
+}
+
+/// [`attention_fused`] with an explicit tile size (test sweeps).
+pub fn attention_fused_tile(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    tile: usize,
+) -> Vec<f32> {
+    assert_eq!(q.len(), l * dk, "q shape");
+    assert_eq!(k.len(), l * dk, "k shape");
+    assert_eq!(v.len(), l * dv, "v shape");
+    let mut out = vec![0f32; l * dv];
+    let mut scratch = Scratch::new();
+    attention_rows_fused_tile_scratch(q, k, v, l, dk, dv, 0, l, &mut out, &mut scratch, tile);
+    out
 }
 
 /// Dense attention for query rows `r0..r1`, writing the `(r1 - r0) x dv`
@@ -111,7 +314,9 @@ pub fn attention_rows_scratch(
     }
 }
 
-/// Full dense attention: returns the `l x dv` context matrix.
+/// Full **unfused** dense attention: returns the `l x dv` context matrix.
+/// The three-pass reference the fused kernels are property-tested against
+/// and the bench comparator of the fused-vs-unfused sweep.
 pub fn attention(q: &[f32], k: &[f32], v: &[f32], l: usize, dk: usize, dv: usize) -> Vec<f32> {
     assert_eq!(q.len(), l * dk, "q shape");
     assert_eq!(k.len(), l * dk, "k shape");
@@ -240,6 +445,148 @@ mod tests {
         attention_rows_scratch(&q, &k, &v, l, dk, dv, 0, l, &mut again, &mut scratch);
         assert_eq!(scratch.grow_events(), warm, "hot loop allocated");
         assert_eq!(out, again, "scratch reuse changed results");
+    }
+
+    /// Tentpole invariant: the fused online-softmax kernel matches the
+    /// unfused three-pass reference within a tight tolerance — across
+    /// tile sizes (including `tile = 1`, tiles that do not divide `l`,
+    /// and tiles larger than `l`), ragged shapes, and NaN-bearing keys
+    /// (a NaN key column makes that column's score NaN in every row, so
+    /// small tiles hit the nan-pending path where the NaN tile is seen
+    /// while the running max is still `-inf`).
+    #[test]
+    fn fused_matches_unfused_across_tiles_prop() {
+        use crate::util::prop::{forall, Config};
+        use crate::util::rng::Rng;
+        forall(
+            &Config { cases: 24, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let l = 2 + rng.below(3 * size as u64) as usize;
+                let dk = 1 + rng.below(16) as usize;
+                let dv = 1 + rng.below(16) as usize;
+                // Tile candidates deliberately straddle l: smaller, equal,
+                // non-dividing, and larger than one tile.
+                let tiles = [1, 2, 3, 5, 8, l / 2, l, l + 7, KEY_TILE];
+                let tile = tiles[rng.below(tiles.len() as u64) as usize].max(1);
+                let q: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+                let mut k: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+                let v: Vec<f32> = (0..l * dv).map(|_| rng.normal() as f32).collect();
+                if size > 16 && rng.f64() < 0.3 {
+                    let i = rng.below((l * dk) as u64) as usize;
+                    k[i] = f32::NAN;
+                }
+                (q, k, v, l, dk, dv, tile)
+            },
+            |(q, k, v, l, dk, dv, tile)| {
+                let fused = attention_fused_tile(q, k, v, *l, *dk, *dv, *tile);
+                let want = attention(q, k, v, *l, *dk, *dv);
+                fused.iter().zip(&want).all(|(a, b)| {
+                    (a.is_nan() && b.is_nan()) || (a - b).abs() <= 1e-5 + 1e-5 * b.abs()
+                })
+            },
+        );
+    }
+
+    /// The nan-pending path, pinned: with `tile = 1` the NaN score column
+    /// is processed while the row's running max is still `-inf` (the max
+    /// scan skips NaN), yet the unfused softmax poisons the whole row
+    /// once its global max is finite — the fused kernel must agree at
+    /// every tile size, not just the ones where the NaN shares a tile
+    /// with a finite score.
+    #[test]
+    fn fused_nan_scores_poison_rows_like_unfused() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        let (l, dk, dv) = (6, 3, 2);
+        let q: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let mut k: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..l * dv).map(|_| rng.normal() as f32).collect();
+        k[0] = f32::NAN; // key row 0 => score column 0 is NaN in every row
+        let want = attention(&q, &k, &v, l, dk, dv);
+        assert!(want.iter().all(|x| x.is_nan()), "oracle sanity: NaN weight poisons rows");
+        for tile in [1, 2, 3, l, KEY_TILE] {
+            let got = attention_fused_tile(&q, &k, &v, l, dk, dv, tile);
+            assert!(
+                got.iter().all(|x| x.is_nan()),
+                "fused must poison NaN-scored rows like the oracle (tile {tile})"
+            );
+        }
+    }
+
+    /// Degenerate rows through the fused path: a fully `-inf` score row
+    /// (fully masked) and a `+inf`-bearing row both collapse to exactly
+    /// zero, matching `softmax_in_place`'s semantics bitwise.
+    #[test]
+    fn fused_fully_masked_and_inf_rows_are_zero() {
+        let (l, dk, dv) = (9, 3, 4);
+        let q = vec![1.0f32; l * dk];
+        // Every key -inf => every score -inf => every row fully masked.
+        let k = vec![f32::NEG_INFINITY; l * dk];
+        let v: Vec<f32> = (0..l * dv).map(|i| i as f32).collect();
+        for tile in [1, 2, 4, l, KEY_TILE] {
+            assert_eq!(
+                attention_fused_tile(&q, &k, &v, l, dk, dv, tile),
+                vec![0.0; l * dv],
+                "fully-masked rows must be exactly zero (tile {tile})"
+            );
+        }
+        // One +inf key: that column's score is +inf in every row, so the
+        // unfused softmax zeroes every row; fused must agree even when
+        // the +inf lands mid-stream after finite tiles accumulated.
+        let mut k2 = vec![1.0f32; l * dk];
+        k2[5 * dk] = f32::INFINITY;
+        let want = attention(&q, &k2, &v, l, dk, dv);
+        assert_eq!(want, vec![0.0; l * dv], "oracle sanity");
+        for tile in [1, 2, 3, l, KEY_TILE] {
+            assert_eq!(
+                attention_fused_tile(&q, &k2, &v, l, dk, dv, tile),
+                want,
+                "+inf rows must zero through the fused path (tile {tile})"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_warm_scratch_rows_are_allocation_free() {
+        use crate::kernels::scratch::Scratch;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        let (l, dk, dv) = (37, 7, 5);
+        let q: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..l * dv).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0f32; l * dv];
+        let mut scratch = Scratch::new();
+        attention_rows_fused_scratch(&q, &k, &v, l, dk, dv, 0, l, &mut out, &mut scratch);
+        let warm = scratch.grow_events();
+        let mut again = vec![0f32; l * dv];
+        attention_rows_fused_scratch(&q, &k, &v, l, dk, dv, 0, l, &mut again, &mut scratch);
+        assert_eq!(scratch.grow_events(), warm, "fused hot loop allocated");
+        assert_eq!(out, again, "scratch reuse changed results");
+    }
+
+    /// Per-row fused results are independent of the row-range split (the
+    /// query blocking restarts at each range boundary but carries no
+    /// cross-row state), so any partition reproduces the whole-matrix
+    /// pass bit for bit — the invariant row-parallel execution rests on.
+    #[test]
+    fn fused_row_splits_are_bitwise_stable() {
+        use crate::kernels::scratch::Scratch;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(29);
+        let (l, dk, dv) = (29, 6, 4); // not a QUERY_BLOCK multiple
+        let q: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..l * dv).map(|_| rng.normal() as f32).collect();
+        let whole = attention_fused(&q, &k, &v, l, dk, dv);
+        for mid in [1, 5, QUERY_BLOCK, 13, l - 1] {
+            let mut split = vec![0f32; l * dv];
+            let (a, b) = split.split_at_mut(mid * dv);
+            let mut scratch = Scratch::new();
+            attention_rows_fused_scratch(&q, &k, &v, l, dk, dv, 0, mid, a, &mut scratch);
+            attention_rows_fused_scratch(&q, &k, &v, l, dk, dv, mid, l, b, &mut scratch);
+            assert_eq!(whole, split, "split at {mid}");
+        }
     }
 
     #[test]

@@ -7,12 +7,19 @@
 //! runs as **one** dispatch with workers balanced over `(batch, head,
 //! row-range)` — bit-identical to dispatching each head separately.
 //!
+//! Every dispatch runs the **fused** tiled online-softmax kernels (see
+//! `kernels::dense` / `kernels::sparse`) — the unfused three-pass forms
+//! survive only as the property-test oracle and bench comparator, reached
+//! directly (`dense::attention`, `sparse::dsa_attention`,
+//! `parallel::*_unfused_mt_exec`), never through this surface.
+//!
 //! Multi-threaded forwards (`threads != 1`) execute on the process-wide
 //! persistent [`WorkerPool`](super::pool::WorkerPool): one pool of parked
 //! workers serves every kernel the engine, benches and tests dispatch, so
-//! no `forward` call pays thread spawn/join (see `kernels::pool`).
+//! no `forward` call pays thread spawn/join (see `kernels::pool`);
+//! `threads == 1` runs inline on the calling thread's warm local scratch.
 
-use super::{dense, parallel, sparse};
+use super::parallel;
 
 /// One single-head attention problem, row-major f32.
 #[derive(Debug, Clone, Copy)]
@@ -104,8 +111,9 @@ pub trait KernelDispatch: Send + Sync {
     }
 }
 
-/// Dense attention baseline (`threads`: 0 = one per core, 1 = reference
-/// single-threaded path).
+/// Dense attention baseline — fused tiled kernel with online softmax
+/// (`threads`: 0 = one per core, 1 = single-threaded on the calling
+/// thread's warm local scratch).
 #[derive(Debug, Clone)]
 pub struct DenseKernel {
     pub threads: usize,
@@ -122,11 +130,7 @@ impl KernelDispatch for DenseKernel {
 
     fn forward(&self, x: &AttnInput) -> Vec<f32> {
         x.validate();
-        if self.threads == 1 {
-            dense::attention(x.q, x.k, x.v, x.l, x.dk, x.dv)
-        } else {
-            parallel::dense_attention_mt(x.q, x.k, x.v, x.l, x.dk, x.dv, self.threads)
-        }
+        parallel::dense_attention_mt(x.q, x.k, x.v, x.l, x.dk, x.dv, self.threads)
     }
 
     fn forward_batch(&self, x: &AttnBatch) -> Vec<f32> {
@@ -145,7 +149,8 @@ impl KernelDispatch for DenseKernel {
     }
 }
 
-/// Dynamic-sparse attention at a target sparsity ratio in `(0, 1)`.
+/// Dynamic-sparse attention at a target sparsity ratio in `(0, 1)` —
+/// fused per-row predict → top-k → SDDMM/online-softmax/SpMM pipeline.
 #[derive(Debug, Clone)]
 pub struct SparseKernel {
     pub sparsity: f64,
@@ -171,11 +176,7 @@ impl KernelDispatch for SparseKernel {
     fn forward(&self, x: &AttnInput) -> Vec<f32> {
         x.validate();
         let keep = self.keep_for(x.l);
-        if self.threads == 1 {
-            sparse::dsa_attention(x.q, x.k, x.v, x.l, x.dk, x.dv, keep)
-        } else {
-            parallel::dsa_attention_mt(x.q, x.k, x.v, x.l, x.dk, x.dv, keep, self.threads)
-        }
+        parallel::dsa_attention_mt(x.q, x.k, x.v, x.l, x.dk, x.dv, keep, self.threads)
     }
 
     fn forward_batch(&self, x: &AttnBatch) -> Vec<f32> {
@@ -296,6 +297,38 @@ mod tests {
         let kernel = for_variant("dense", 2).unwrap();
         let batch = AttnBatch { q: &[], k: &[], v: &[], b: 0, h: 4, l: 8, dk: 2, dv: 2 };
         assert!(kernel.forward_batch(&batch).is_empty());
+    }
+
+    /// The dispatch surface now runs the fused kernels: every variant and
+    /// thread count must stay within the reassociation tolerance of the
+    /// retained unfused oracle (`dense::attention` /
+    /// `sparse::dsa_attention`) — the guarantee the engine's numerics
+    /// rest on after the fusion switch.
+    #[test]
+    fn fused_dispatch_matches_unfused_oracle() {
+        use crate::kernels::{dense, sparse};
+        let mut rng = Rng::new(47);
+        let (l, dk, dv) = (67, 7, 6);
+        let q: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..l * dv).map(|_| rng.normal() as f32).collect();
+        let x = AttnInput { q: &q, k: &k, v: &v, l, dk, dv };
+        for variant in ["dense", "dsa90", "dsa99"] {
+            let kernel1 = for_variant(variant, 1).unwrap();
+            let want = match kernel1.keep(l) {
+                None => dense::attention(&q, &k, &v, l, dk, dv),
+                Some(keep) => sparse::dsa_attention(&q, &k, &v, l, dk, dv, keep),
+            };
+            for threads in [1, 2, 8] {
+                let got = for_variant(variant, threads).unwrap().forward(&x);
+                for (a, b) in got.iter().zip(&want) {
+                    assert!(
+                        (a - b).abs() <= 1e-5 + 1e-5 * b.abs(),
+                        "{variant} t{threads} diverged from the unfused oracle"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -3,28 +3,38 @@
 //! are present, and the measured counterpart the analytical cost models
 //! (`costmodel`) are validated against.
 //!
-//! * [`dense`] — dense attention baseline (per-row, single-threaded
-//!   reference).
+//! * [`dense`] — dense attention two ways: the production **fused,
+//!   cache-tiled kernel with online softmax** (query blocks × K/V tiles,
+//!   running max/denominator per row — one pass over the data) and the
+//!   unfused three-pass reference it is property-tested against.
 //! * [`sparse`] — the dynamic pipeline of Eq. (4): int8 approximate-score
 //!   prediction → exact row top-k mask (`sparse::topk`) → SDDMM → masked
-//!   softmax → SpMM over [`crate::sparse::Csr`].
-//! * [`simd`] — the shared inner products (f32 dot/axpy, int8×int8 dot):
-//!   manual 8-lane unrolling, AVX2-specialized at runtime, with a scalar
-//!   oracle every tier is property-tested against.
-//! * [`scratch`] — reusable per-worker buffers so the row hot loops are
-//!   allocation-free (observable via a grow counter).
+//!   softmax → SpMM; production runs the **fused** per-row form (one pass
+//!   over the kept columns, no materialized score matrix), with the
+//!   unfused per-row and whole-matrix [`crate::sparse::Csr`] references
+//!   retained as oracles. Mask selection is bitwise identical across all
+//!   of them.
+//! * [`simd`] — the shared lane primitives (f32 dot/axpy, int8×int8 dot,
+//!   tile max, rescale): manual 8-lane unrolling, AVX2- and
+//!   AVX-512-specialized at runtime, with a scalar oracle every tier is
+//!   property-tested against.
+//! * [`scratch`] — reusable per-worker buffers so the row hot loops
+//!   (fused tiles included) are allocation-free (observable via a grow
+//!   counter); also hosts the whole-matrix predictor's score buffer.
 //! * [`pool`] — the persistent, channel-fed worker pool (parked workers,
 //!   warm per-worker scratch, panic-safe join) every multi-threaded
 //!   driver dispatches through; one process-wide pool serves the engine,
 //!   benches and tests.
 //! * [`parallel`] — row-parallel multi-threaded drivers with bit-identical
 //!   results (rows are independent end to end), for single-head problems
-//!   and batched multi-head `[b, h, l, d]` dispatches alike; each driver
-//!   runs on the pool by default or per-dispatch scoped spawns
-//!   ([`parallel::Exec`], the benchmarked comparison).
+//!   and batched multi-head `[b, h, l, d]` dispatches alike; work items
+//!   are query-block-aligned row blocks, fused by default with
+//!   `*_unfused_mt_exec` comparators, on the pool or per-dispatch scoped
+//!   spawns ([`parallel::Exec`], the benchmarked comparison).
 //! * [`dispatch`] — the [`KernelDispatch`] trait mapping serving variant
-//!   names ("dense", "dsa90", …) to kernel implementations, over one
-//!   [`AttnInput`] problem or one [`AttnBatch`] per engine batch.
+//!   names ("dense", "dsa90", …) to kernel implementations (fused paths
+//!   throughout), over one [`AttnInput`] problem or one [`AttnBatch`] per
+//!   engine batch.
 //! * [`model`] — a hand-constructed, training-free needle-counting
 //!   classifier over these kernels; the model behind
 //!   `coordinator::backend::NativeBackend`.

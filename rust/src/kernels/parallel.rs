@@ -2,11 +2,19 @@
 //!
 //! Attention rows are independent end to end — scoring, mask selection,
 //! SDDMM, masked softmax and SpMM — so the work is split into contiguous
-//! row chunks, one per worker, and each worker writes a disjoint slice of
-//! the output through its own reusable [`Scratch`]. Because every chunk
-//! performs exactly the operations the single-threaded reference would,
-//! results are **bit-identical** regardless of thread count or execution
-//! backend (asserted by the property tests).
+//! row-block work items (chunk boundaries aligned to the fused kernels'
+//! [`dense::QUERY_BLOCK`], so no query block's tile pass straddles two
+//! workers), and each worker writes a disjoint slice of the output
+//! through its own reusable [`Scratch`]. Per-row results never depend on
+//! the chunking, thread count or execution backend, so every driver is
+//! **bit-identical** to its single-threaded reference (asserted by the
+//! property tests).
+//!
+//! The default drivers run the **fused** tiled online-softmax kernels
+//! ([`dense::attention_rows_fused_scratch`],
+//! [`sparse::dsa_attention_rows_fused_scratch`]); the unfused three-pass
+//! forms stay available as `*_unfused_mt_exec` — the property-test oracle
+//! and the fused-vs-unfused bench comparator.
 //!
 //! Two execution backends share the chunking ([`Exec`]):
 //!
@@ -77,7 +85,15 @@ where
         pool::with_local_scratch(|scratch| f(0, rows, out, scratch));
         return;
     }
-    let chunk = rows.div_ceil(threads);
+    // Work items are whole row-blocks: align the chunk size down to a
+    // QUERY_BLOCK multiple so a fused query block's K/V tile pass never
+    // splits across two workers (a few extra sub-`threads` items at the
+    // tail just queue on the pool). Outputs are chunking-independent, so
+    // this is purely a locality/balance choice.
+    let mut chunk = rows.div_ceil(threads);
+    if chunk > dense::QUERY_BLOCK {
+        chunk -= chunk % dense::QUERY_BLOCK;
+    }
     let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(threads);
     let mut rest = out;
     let mut r0 = 0;
@@ -112,8 +128,10 @@ where
     }
 }
 
-/// Multi-threaded dense attention on the global pool (`threads = 0` → one
-/// chunk per core).
+/// Multi-threaded **fused** dense attention on the global pool
+/// (`threads = 0` → one chunk per core; `threads = 1` runs inline on the
+/// calling thread's warm local scratch). Bit-identical to
+/// [`dense::attention_fused`].
 pub fn dense_attention_mt(
     q: &[f32],
     k: &[f32],
@@ -144,14 +162,41 @@ pub fn dense_attention_mt_exec(
     let mut out = vec![0f32; l * dv];
     let threads = effective_threads(threads);
     par_row_chunks(l, dv, threads, exec, &mut out, |r0, r1, slice, scratch| {
+        dense::attention_rows_fused_scratch(q, k, v, l, dk, dv, r0, r1, slice, scratch);
+    });
+    out
+}
+
+/// Multi-threaded **unfused** dense attention — the three-pass reference
+/// kernel under the same chunking. Retained as the property-test oracle's
+/// parallel form and the fused-vs-unfused bench comparator; bit-identical
+/// to [`dense::attention`].
+#[allow(clippy::too_many_arguments)]
+pub fn dense_attention_unfused_mt_exec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    threads: usize,
+    exec: Exec<'_>,
+) -> Vec<f32> {
+    assert_eq!(q.len(), l * dk, "q shape");
+    assert_eq!(k.len(), l * dk, "k shape");
+    assert_eq!(v.len(), l * dv, "v shape");
+    let mut out = vec![0f32; l * dv];
+    let threads = effective_threads(threads);
+    par_row_chunks(l, dv, threads, exec, &mut out, |r0, r1, slice, scratch| {
         dense::attention_rows_scratch(q, k, v, l, dk, dv, r0, r1, slice, scratch);
     });
     out
 }
 
-/// Multi-threaded dynamic-sparse attention on the global pool: Q/K are
-/// quantized once, then each worker runs the full per-row DSA pipeline
-/// over its chunk.
+/// Multi-threaded **fused** dynamic-sparse attention on the global pool:
+/// Q/K are quantized once, then each worker runs the fused per-row DSA
+/// pipeline (predict → top-k → fused SDDMM/online-softmax/SpMM) over its
+/// row blocks. Bit-identical to [`sparse::dsa_attention_fused`].
 #[allow(clippy::too_many_arguments)]
 pub fn dsa_attention_mt(
     q: &[f32],
@@ -169,6 +214,34 @@ pub fn dsa_attention_mt(
 /// [`dsa_attention_mt`] with an explicit execution backend.
 #[allow(clippy::too_many_arguments)]
 pub fn dsa_attention_mt_exec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+    threads: usize,
+    exec: Exec<'_>,
+) -> Vec<f32> {
+    assert_eq!(v.len(), l * dv, "v shape");
+    let scorer = ApproxScorer::new(q, k, l, dk);
+    let mut out = vec![0f32; l * dv];
+    let threads = effective_threads(threads);
+    par_row_chunks(l, dv, threads, exec, &mut out, |r0, r1, slice, scratch| {
+        sparse::dsa_attention_rows_fused_scratch(
+            q, k, v, l, dk, dv, keep, &scorer, r0, r1, slice, scratch,
+        );
+    });
+    out
+}
+
+/// Multi-threaded **unfused** dynamic-sparse attention — the oracle
+/// pipeline under the same chunking, kept for property tests and the
+/// fused-vs-unfused bench sweep; bit-identical to
+/// [`sparse::dsa_attention`].
+#[allow(clippy::too_many_arguments)]
+pub fn dsa_attention_unfused_mt_exec(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -208,10 +281,10 @@ where
     }
 }
 
-/// Batched multi-head dense attention over `[b, h, l, d]` row-major
-/// buffers: one dispatch, workers split the `b * h * l` global row space.
-/// Bit-identical to running [`dense_attention_mt`] per `(batch, head)`
-/// problem and concatenating (asserted by the tests).
+/// Batched multi-head **fused** dense attention over `[b, h, l, d]`
+/// row-major buffers: one dispatch, workers split the `b * h * l` global
+/// row space. Bit-identical to running [`dense_attention_mt`] per
+/// `(batch, head)` problem and concatenating (asserted by the tests).
 #[allow(clippy::too_many_arguments)]
 pub fn dense_attention_batch_mt(
     q: &[f32],
@@ -250,7 +323,7 @@ pub fn dense_attention_batch_mt_exec(
     let threads = effective_threads(threads);
     par_row_chunks(rows, dv, threads, exec, &mut out, |g0, g1, slice, scratch| {
         for_problem_ranges(l, g0, g1, |pi, r0, r1, off| {
-            dense::attention_rows_scratch(
+            dense::attention_rows_fused_scratch(
                 &q[pi * l * dk..(pi + 1) * l * dk],
                 &k[pi * l * dk..(pi + 1) * l * dk],
                 &v[pi * l * dv..(pi + 1) * l * dv],
@@ -267,11 +340,12 @@ pub fn dense_attention_batch_mt_exec(
     out
 }
 
-/// Batched multi-head dynamic-sparse attention over `[b, h, l, d]`
-/// buffers. Each `(batch, head)` problem gets its own quantized scorer —
-/// exactly what a per-head dispatch would build, so masks and outputs are
-/// bit-identical to [`dsa_attention_mt`] per problem (asserted by the
-/// tests); workers then split the global row space as in the dense path.
+/// Batched multi-head **fused** dynamic-sparse attention over
+/// `[b, h, l, d]` buffers. Each `(batch, head)` problem gets its own
+/// quantized scorer — exactly what a per-head dispatch would build, so
+/// masks and outputs are bit-identical to [`dsa_attention_mt`] per
+/// problem (asserted by the tests); workers then split the global row
+/// space as in the dense path.
 #[allow(clippy::too_many_arguments)]
 pub fn dsa_attention_batch_mt(
     q: &[f32],
@@ -322,7 +396,7 @@ pub fn dsa_attention_batch_mt_exec(
     let threads = effective_threads(threads);
     par_row_chunks(rows, dv, threads, exec, &mut out, |g0, g1, slice, scratch| {
         for_problem_ranges(l, g0, g1, |pi, r0, r1, off| {
-            sparse::dsa_attention_rows_scratch(
+            sparse::dsa_attention_rows_fused_scratch(
                 &q[pi * l * dk..(pi + 1) * l * dk],
                 &k[pi * l * dk..(pi + 1) * l * dk],
                 &v[pi * l * dv..(pi + 1) * l * dv],
@@ -347,6 +421,11 @@ mod tests {
     use crate::util::prop::{forall, Config};
     use crate::util::rng::Rng;
 
+    // Short local names for the unfused comparators (keeps the assertion
+    // lines readable).
+    use super::dense_attention_unfused_mt_exec as dense_unfused;
+    use super::dsa_attention_unfused_mt_exec as dsa_unfused;
+
     fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
         (0..n).map(|_| rng.normal() as f32).collect()
     }
@@ -364,10 +443,13 @@ mod tests {
         let q = randv(&mut rng, l * dk);
         let k = randv(&mut rng, l * dk);
         let v = randv(&mut rng, l * dv);
-        let st = dense::attention(&q, &k, &v, l, dk, dv);
+        let fused_st = dense::attention_fused(&q, &k, &v, l, dk, dv);
+        let unfused_st = dense::attention(&q, &k, &v, l, dk, dv);
         for threads in [1, 2, 3, 8, 64, 200] {
             let mt = dense_attention_mt(&q, &k, &v, l, dk, dv, threads);
-            assert_eq!(st, mt, "threads={threads}");
+            assert_eq!(fused_st, mt, "fused threads={threads}");
+            let mt = dense_unfused(&q, &k, &v, l, dk, dv, threads, Exec::global_pool());
+            assert_eq!(unfused_st, mt, "unfused threads={threads}");
         }
     }
 
@@ -379,17 +461,21 @@ mod tests {
         let k = randv(&mut rng, l * dk);
         let v = randv(&mut rng, l * dv);
         for keep in [1, 6, 61] {
-            let st = sparse::dsa_attention(&q, &k, &v, l, dk, dv, keep);
+            let fused_st = sparse::dsa_attention_fused(&q, &k, &v, l, dk, dv, keep);
+            let unfused_st = sparse::dsa_attention(&q, &k, &v, l, dk, dv, keep);
             for threads in [2, 5, 16] {
                 let mt = dsa_attention_mt(&q, &k, &v, l, dk, dv, keep, threads);
-                assert_eq!(st, mt, "keep={keep} threads={threads}");
+                assert_eq!(fused_st, mt, "fused keep={keep} threads={threads}");
+                let mt = dsa_unfused(&q, &k, &v, l, dk, dv, keep, threads, Exec::global_pool());
+                assert_eq!(unfused_st, mt, "unfused keep={keep} threads={threads}");
             }
         }
     }
 
     /// The tentpole invariant: for random problems, the pool-based
     /// drivers are bit-identical to both the per-dispatch spawn drivers
-    /// and the single-threaded reference — across thread counts
+    /// and their single-threaded references — fused drivers against the
+    /// fused references, unfused against unfused — across thread counts
     /// {1, 2, 7, num_cpus} and a pool smaller than the chunk count.
     #[test]
     fn pool_and_spawn_drivers_bit_identical_property() {
@@ -409,13 +495,17 @@ mod tests {
             },
             |(l, dk, dv, keep, q, k, v)| {
                 let (l, dk, dv, keep) = (*l, *dk, *dv, *keep);
-                let dense_ref = dense::attention(q, k, v, l, dk, dv);
-                let dsa_ref = sparse::dsa_attention(q, k, v, l, dk, dv, keep);
+                let dense_ref = dense::attention_fused(q, k, v, l, dk, dv);
+                let dense_u = dense::attention(q, k, v, l, dk, dv);
+                let dsa_ref = sparse::dsa_attention_fused(q, k, v, l, dk, dv, keep);
+                let dsa_u = sparse::dsa_attention(q, k, v, l, dk, dv, keep);
                 for threads in [1usize, 2, 7, ncpu] {
                     for exec in [Exec::Spawn, Exec::Pool(&pool)] {
                         let d = dense_attention_mt_exec(q, k, v, l, dk, dv, threads, exec);
                         let s = dsa_attention_mt_exec(q, k, v, l, dk, dv, keep, threads, exec);
-                        if d != dense_ref || s != dsa_ref {
+                        let du = dense_unfused(q, k, v, l, dk, dv, threads, exec);
+                        let su = dsa_unfused(q, k, v, l, dk, dv, keep, threads, exec);
+                        if d != dense_ref || s != dsa_ref || du != dense_u || su != dsa_u {
                             return false;
                         }
                     }
@@ -445,7 +535,7 @@ mod tests {
         let v = randv(&mut rng, p * l * dv);
         let mut looped = Vec::with_capacity(p * l * dv);
         for pi in 0..p {
-            looped.extend(dense::attention(
+            looped.extend(dense::attention_fused(
                 &q[pi * l * dk..(pi + 1) * l * dk],
                 &k[pi * l * dk..(pi + 1) * l * dk],
                 &v[pi * l * dv..(pi + 1) * l * dv],
@@ -475,7 +565,7 @@ mod tests {
         for keep in [1, 5, 23] {
             let mut looped = Vec::with_capacity(p * l * dv);
             for pi in 0..p {
-                looped.extend(sparse::dsa_attention(
+                looped.extend(sparse::dsa_attention_fused(
                     &q[pi * l * dk..(pi + 1) * l * dk],
                     &k[pi * l * dk..(pi + 1) * l * dk],
                     &v[pi * l * dv..(pi + 1) * l * dv],

@@ -8,7 +8,12 @@
 //! spawned once, park on a condvar when the queue is empty, and each owns
 //! one [`Scratch`] that stays warm across dispatches — so a steady-state
 //! dispatch does zero thread creation and zero allocation (asserted by
-//! the scratch grow-counter tests).
+//! the scratch grow-counter tests). Work items are the row-parallel
+//! drivers' query-block-aligned row blocks (see `kernels::parallel`);
+//! [`WorkerPool::warm`] pre-grows every buffer the fused tiled kernels
+//! touch — their key-tile score buffer is the `[..tile]` prefix of the
+//! same scratch row the unfused kernels use, so one `(l, keep)` warm-up
+//! covers both shapes.
 //!
 //! Design:
 //!

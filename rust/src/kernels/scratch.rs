@@ -1,13 +1,19 @@
 //! Reusable per-worker scratch buffers for the attention row drivers.
 //!
 //! The hot row loops (dense scoring/accumulation and the per-row DSA
-//! pipeline) need an `l`-length score row, a `keep`-length softmax row and
-//! a kept-column index buffer. Allocating those per call — let alone per
-//! row, as the old `topk_row_indices` return value did — puts the
-//! allocator on the hot path. Each worker thread instead owns one
-//! [`Scratch`] for the lifetime of a dispatch: buffers grow monotonically
-//! to the largest problem seen and are reused across every row and every
-//! `(batch, head)` problem the worker processes.
+//! pipeline, fused and unfused alike) need an `l`-length score row — which
+//! doubles as the fused kernels' key-tile score buffer — a `keep`-length
+//! softmax/chunk-score row and a kept-column index buffer. Allocating
+//! those per call — let alone per row, as the old `topk_row_indices`
+//! return value did — puts the allocator on the hot path. Each worker
+//! thread instead owns one [`Scratch`] for the lifetime of a dispatch:
+//! buffers grow monotonically to the largest problem seen and are reused
+//! across every row and every `(batch, head)` problem the worker
+//! processes. (The fused kernels' per-row running max / denominator are
+//! `QUERY_BLOCK`-sized stack arrays — nothing to pool.) The whole-matrix
+//! predictor reference additionally routes its `l x l` approximate-score
+//! matrix through [`Scratch::scores`] ([`Scratch::reserve_scores`]), so
+//! even that path stops allocating once warm.
 //!
 //! Growth is observable: every buffer grow bumps both the instance counter
 //! ([`Scratch::grow_events`]) and a process-wide counter
@@ -30,13 +36,20 @@ pub fn grow_events() -> u64 {
 /// a problem and the drivers index the buffers directly.
 #[derive(Debug, Default)]
 pub struct Scratch {
-    /// Score row of the current problem (`l` entries live).
+    /// Score row of the current problem (`l` entries live; the fused
+    /// kernels use its `[..tile]` prefix as the key-tile score buffer).
     pub row: Vec<f32>,
-    /// Softmax row over the kept entries (used via `clear` + `push`).
+    /// Softmax row over the kept entries (used via `clear` + `push`; the
+    /// fused DSA driver reuses it as the per-chunk exact-score buffer).
     pub vals: Vec<f32>,
     /// Kept column indices (doubles as the top-k selection buffer, so its
     /// capacity is `l`, not `keep`).
     pub kept: Vec<usize>,
+    /// Whole-matrix approximate-score buffer (`l * l`), grown only by the
+    /// unfused whole-matrix reference via [`Scratch::reserve_scores`] —
+    /// the per-row fused paths never touch it, so warming `(l, keep)`
+    /// never pays for it.
+    pub scores: Vec<f32>,
     grows: u64,
 }
 
@@ -80,6 +93,17 @@ impl Scratch {
             self.kept.reserve(need);
         }
     }
+
+    /// Ensure `scores` holds at least `n` initialized entries (the
+    /// whole-matrix predictor reference passes `l * l`). Kept separate
+    /// from [`Scratch::reserve`] so per-row pipelines and pool warm-up
+    /// never allocate a quadratic buffer they will not use.
+    pub fn reserve_scores(&mut self, n: usize) {
+        if self.scores.len() < n {
+            self.note_grow();
+            self.scores.resize(n, 0.0);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -90,16 +114,29 @@ mod tests {
     fn warm_scratch_never_regrows() {
         let mut s = Scratch::new();
         s.reserve(64, 9);
+        s.reserve_scores(64 * 64);
         let warm = s.grow_events();
         assert!(warm >= 1);
         for _ in 0..100 {
             s.reserve(64, 9);
             s.reserve(13, 2); // smaller problems must not shrink or grow
+            s.reserve_scores(64 * 64);
+            s.reserve_scores(13 * 13);
         }
         assert_eq!(s.grow_events(), warm, "warm scratch reallocated");
         assert!(s.row.len() >= 64);
         assert!(s.vals.capacity() >= 9);
         assert!(s.kept.capacity() >= 64);
+        assert!(s.scores.len() >= 64 * 64);
+    }
+
+    /// `reserve` (the pool-warm path) never grows the quadratic `scores`
+    /// buffer — only the whole-matrix predictor reference pays for it.
+    #[test]
+    fn reserve_never_touches_scores() {
+        let mut s = Scratch::new();
+        s.reserve(256, 256);
+        assert_eq!(s.scores.capacity(), 0, "warm-up must not allocate l*l");
     }
 
     #[test]

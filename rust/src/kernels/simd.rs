@@ -1,9 +1,12 @@
-//! SIMD inner products shared by every native kernel hot loop.
+//! SIMD lane primitives shared by every native kernel hot loop.
 //!
-//! All three inner products of the DSA pipeline route through this module:
-//! the f32 dot behind dense scoring and SDDMM, the f32 axpy behind dense
-//! accumulation and SpMM, and the int8×int8 dot behind the approximate
-//! score predictor. Three tiers, selected at runtime per call:
+//! All three inner products of the DSA pipeline route through this module
+//! — the f32 dot behind dense scoring and SDDMM, the f32 axpy behind
+//! dense accumulation and SpMM, and the int8×int8 dot behind the
+//! approximate score predictor — plus the tile-wide primitives of the
+//! fused online-softmax kernels: [`max_f32`] (running-max update over a
+//! score tile) and [`scale_f32`] (accumulator/denominator rescale when
+//! the running max moves). Four tiers, selected at runtime per call:
 //!
 //! * [`scalar`] — strictly-ordered reference loops, the correctness oracle
 //!   every other tier is property-tested against.
@@ -12,16 +15,23 @@
 //!   lanes is what lets LLVM vectorize it at all: a single f32 accumulator
 //!   forces sequential adds (float addition is not associative), so the
 //!   scalar loop can never be packed.
-//! * AVX2(+FMA) — the same lane kernels recompiled under
+//! * AVX2(+FMA) — the same 8-lane kernels recompiled under
 //!   `#[target_feature]` so they use 256-bit registers, selected when
 //!   `is_x86_feature_detected!` says the host supports them. Because the
 //!   lane code is identical, the AVX2 tier is bit-identical to the
 //!   portable tier; only the scalar tier differs (by summation order,
 //!   within `~1e-5` relative on attention-scale inputs).
+//! * AVX-512 — 16-lane versions of the same kernels (`lanes16`)
+//!   recompiled for `avx512f`(+`avx512bw` for the int8 dot); target
+//!   features stable since Rust 1.89, probed at runtime like AVX2. The
+//!   wider reduction tree reassociates the f32 dot differently from the
+//!   8-lane tiers (same `~1e-5` envelope vs the oracle); max / scale /
+//!   axpy are exact elementwise ops and stay bit-identical everywhere.
 //!
 //! The int8 dot accumulates in i32, where order is irrelevant — every tier
-//! is **bitwise identical**, so mask selection (and therefore the whole
-//! sparse pattern) never depends on the ISA the host happens to have.
+//! (scalar, 8-lane, 16-lane) is **bitwise identical**, so mask selection
+//! (and therefore the whole sparse pattern) never depends on the ISA the
+//! host happens to have.
 //!
 //! [`set_mode`] flips every dispatched call site between [`Mode::Scalar`]
 //! and [`Mode::Simd`] process-wide; the benches sweep it to measure the
@@ -72,6 +82,14 @@ fn avx2_fma() -> bool {
     is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
 }
 
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+#[inline]
+fn avx512() -> bool {
+    // AVX-512 target features are stable since Rust 1.89; avx512bw is
+    // required by the widened int8 dot, avx512f by everything else.
+    is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512bw")
+}
+
 /// Human-readable name of the instruction set the dispatched calls run on
 /// (shows up in bench output and engine startup logs).
 pub fn active_isa() -> &'static str {
@@ -80,6 +98,9 @@ pub fn active_isa() -> &'static str {
         Mode::Simd => {
             #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
             {
+                if avx512() {
+                    return "avx512";
+                }
                 if avx2_fma() {
                     return "avx2+fma";
                 }
@@ -98,6 +119,10 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
         Mode::Simd => {
             #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
             {
+                if avx512() {
+                    // SAFETY: guarded by the runtime feature probe above.
+                    return unsafe { x86_512::dot_f32_avx512(a, b) };
+                }
                 if avx2_fma() {
                     // SAFETY: guarded by the runtime feature probe above.
                     return unsafe { x86::dot_f32_avx2(a, b) };
@@ -118,6 +143,11 @@ pub fn axpy_f32(out: &mut [f32], w: f32, x: &[f32]) {
         Mode::Simd => {
             #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
             {
+                if avx512() {
+                    // SAFETY: guarded by the runtime feature probe above.
+                    unsafe { x86_512::axpy_f32_avx512(out, w, x) };
+                    return;
+                }
                 if avx2_fma() {
                     // SAFETY: guarded by the runtime feature probe above.
                     unsafe { x86::axpy_f32_avx2(out, w, x) };
@@ -125,6 +155,58 @@ pub fn axpy_f32(out: &mut [f32], w: f32, x: &[f32]) {
                 }
             }
             lanes::axpy_f32(out, w, x)
+        }
+    }
+}
+
+/// Maximum over `x` with NaN entries skipped (`f32::NEG_INFINITY` for an
+/// empty or all-NaN slice) — the running-max update of the fused
+/// online-softmax kernels. The maximum is an exact (order-independent)
+/// reduction, so every tier returns the same value; NaN handling matches
+/// the unfused `softmax_in_place` max loop (`x > m` is false for NaN).
+#[inline]
+pub fn max_f32(x: &[f32]) -> f32 {
+    match mode() {
+        Mode::Scalar => scalar::max_f32(x),
+        Mode::Simd => {
+            #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+            {
+                if avx512() {
+                    // SAFETY: guarded by the runtime feature probe above.
+                    return unsafe { x86_512::max_f32_avx512(x) };
+                }
+                if avx2_fma() {
+                    // SAFETY: guarded by the runtime feature probe above.
+                    return unsafe { x86::max_f32_avx2(x) };
+                }
+            }
+            lanes::max_f32(x)
+        }
+    }
+}
+
+/// `x[i] *= s` — the accumulator/denominator rescale of the fused
+/// online-softmax kernels (and their final `1/denominator`
+/// normalization). Elementwise, so every tier is bit-identical.
+#[inline]
+pub fn scale_f32(x: &mut [f32], s: f32) {
+    match mode() {
+        Mode::Scalar => scalar::scale_f32(x, s),
+        Mode::Simd => {
+            #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+            {
+                if avx512() {
+                    // SAFETY: guarded by the runtime feature probe above.
+                    unsafe { x86_512::scale_f32_avx512(x, s) };
+                    return;
+                }
+                if avx2_fma() {
+                    // SAFETY: guarded by the runtime feature probe above.
+                    unsafe { x86::scale_f32_avx2(x, s) };
+                    return;
+                }
+            }
+            lanes::scale_f32(x, s)
         }
     }
 }
@@ -142,6 +224,10 @@ pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
         Mode::Simd => {
             #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
             {
+                if avx512() {
+                    // SAFETY: guarded by the runtime feature probe above.
+                    return unsafe { x86_512::dot_i8_avx512(a, b) };
+                }
                 if avx2_fma() {
                     // SAFETY: guarded by the runtime feature probe above.
                     return unsafe { x86::dot_i8_avx2(a, b) };
@@ -183,20 +269,42 @@ pub mod scalar {
         }
         acc
     }
+
+    /// Sequential max with NaN skipped (`-inf` for empty / all-NaN).
+    #[inline]
+    pub fn max_f32(x: &[f32]) -> f32 {
+        let mut m = f32::NEG_INFINITY;
+        for &v in x {
+            if v > m {
+                m = v;
+            }
+        }
+        m
+    }
+
+    /// Elementwise `x[i] *= s`.
+    #[inline]
+    pub fn scale_f32(x: &mut [f32], s: f32) {
+        for o in x {
+            *o *= s;
+        }
+    }
 }
 
-/// Manually lane-unrolled kernels on plain stable Rust. Eight independent
-/// accumulators expose the data parallelism LLVM needs to emit packed
-/// instructions; the fixed reduction tree at the end keeps results
-/// identical whether the body compiles to SSE2, AVX2, or stays scalar.
-mod lanes {
-    use super::LANES;
-
+/// Width-generic lane-kernel bodies shared by every lane count. Only the
+/// f32 dot's final reduction is genuinely width-specific (its fixed
+/// pairwise tree decides the summation order, so each width hand-writes
+/// its own in [`lanes`] / [`lanes16`]); axpy, int8 dot, max and scale
+/// are order-insensitive, so one generic body keeps the 8- and 16-lane
+/// tiers from drifting apart.
+mod wide {
+    /// Lane accumulators + sequential tail of the f32 dot. The caller
+    /// applies its width's fixed pairwise reduction tree.
     #[inline(always)]
-    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
-        let mut acc = [0.0f32; LANES];
-        let mut ca = a.chunks_exact(LANES);
-        let mut cb = b.chunks_exact(LANES);
+    pub fn dot_f32_acc<const N: usize>(a: &[f32], b: &[f32]) -> ([f32; N], f32) {
+        let mut acc = [0.0f32; N];
+        let mut ca = a.chunks_exact(N);
+        let mut cb = b.chunks_exact(N);
         for (xa, xb) in (&mut ca).zip(&mut cb) {
             for ((s, &x), &y) in acc.iter_mut().zip(xa).zip(xb) {
                 *s += x * y;
@@ -206,19 +314,16 @@ mod lanes {
         for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
             tail += x * y;
         }
-        // Fixed pairwise reduction: the same order on every ISA.
-        let s0 = (acc[0] + acc[4]) + (acc[1] + acc[5]);
-        let s1 = (acc[2] + acc[6]) + (acc[3] + acc[7]);
-        (s0 + s1) + tail
+        (acc, tail)
     }
 
     #[inline(always)]
-    pub fn axpy_f32(out: &mut [f32], w: f32, x: &[f32]) {
+    pub fn axpy_f32<const N: usize>(out: &mut [f32], w: f32, x: &[f32]) {
         // Elementwise: the plain zip already vectorizes (no reduction),
-        // the unrolled form just helps the AVX2 recompile use full-width
-        // stores on the exact-chunk body.
-        let mut co = out.chunks_exact_mut(LANES);
-        let mut cx = x.chunks_exact(LANES);
+        // the unrolled form just helps the target_feature recompiles use
+        // full-width stores on the exact-chunk body.
+        let mut co = out.chunks_exact_mut(N);
+        let mut cx = x.chunks_exact(N);
         for (xo, xx) in (&mut co).zip(&mut cx) {
             for (o, &v) in xo.iter_mut().zip(xx) {
                 *o += w * v;
@@ -230,10 +335,10 @@ mod lanes {
     }
 
     #[inline(always)]
-    pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
-        let mut acc = [0i32; LANES];
-        let mut ca = a.chunks_exact(LANES);
-        let mut cb = b.chunks_exact(LANES);
+    pub fn dot_i8<const N: usize>(a: &[i8], b: &[i8]) -> i32 {
+        let mut acc = [0i32; N];
+        let mut ca = a.chunks_exact(N);
+        let mut cb = b.chunks_exact(N);
         for (xa, xb) in (&mut ca).zip(&mut cb) {
             for ((s, &x), &y) in acc.iter_mut().zip(xa).zip(xb) {
                 *s += x as i32 * y as i32;
@@ -244,6 +349,129 @@ mod lanes {
             tail += x as i32 * y as i32;
         }
         acc.iter().sum::<i32>() + tail
+    }
+
+    #[inline(always)]
+    pub fn max_f32<const N: usize>(x: &[f32]) -> f32 {
+        let mut acc = [f32::NEG_INFINITY; N];
+        let mut cx = x.chunks_exact(N);
+        for xa in &mut cx {
+            for (m, &v) in acc.iter_mut().zip(xa) {
+                if v > *m {
+                    *m = v;
+                }
+            }
+        }
+        // The maximum is exact, so merging lanes and remainder in any
+        // order gives the same result as the scalar loop.
+        let mut m = f32::NEG_INFINITY;
+        for &v in cx.remainder() {
+            if v > m {
+                m = v;
+            }
+        }
+        for &lane in &acc {
+            if lane > m {
+                m = lane;
+            }
+        }
+        m
+    }
+
+    #[inline(always)]
+    pub fn scale_f32<const N: usize>(x: &mut [f32], s: f32) {
+        let mut cx = x.chunks_exact_mut(N);
+        for xa in &mut cx {
+            for o in xa {
+                *o *= s;
+            }
+        }
+        for o in cx.into_remainder() {
+            *o *= s;
+        }
+    }
+}
+
+/// The 8-lane kernels ([`wide`] at `N = 8`) on plain stable Rust. Eight
+/// independent accumulators expose the data parallelism LLVM needs to
+/// emit packed instructions; the fixed reduction tree of the f32 dot
+/// keeps results identical whether the body compiles to SSE2, AVX2, or
+/// stays scalar.
+mod lanes {
+    use super::{wide, LANES};
+
+    #[inline(always)]
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let (acc, tail) = wide::dot_f32_acc::<LANES>(a, b);
+        // Fixed pairwise reduction: the same order on every ISA.
+        let s0 = (acc[0] + acc[4]) + (acc[1] + acc[5]);
+        let s1 = (acc[2] + acc[6]) + (acc[3] + acc[7]);
+        (s0 + s1) + tail
+    }
+
+    #[inline(always)]
+    pub fn axpy_f32(out: &mut [f32], w: f32, x: &[f32]) {
+        wide::axpy_f32::<LANES>(out, w, x)
+    }
+
+    #[inline(always)]
+    pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        wide::dot_i8::<LANES>(a, b)
+    }
+
+    #[inline(always)]
+    pub fn max_f32(x: &[f32]) -> f32 {
+        wide::max_f32::<LANES>(x)
+    }
+
+    #[inline(always)]
+    pub fn scale_f32(x: &mut [f32], s: f32) {
+        wide::scale_f32::<LANES>(x, s)
+    }
+}
+
+/// The 16-lane kernels ([`wide`] at `N = 16`) for the AVX-512 recompile.
+/// The f32 dot's wider fixed reduction tree reassociates differently
+/// from the 8-lane tiers (within the oracle tolerance); the int8 dot,
+/// max, scale and axpy share [`wide`]'s order-insensitive bodies and
+/// stay bitwise tier-independent.
+// Reached only through the AVX-512 wrappers (and the tests), so on
+// non-x86 targets the bodies are intentionally unreferenced.
+#[cfg_attr(not(any(target_arch = "x86", target_arch = "x86_64")), allow(dead_code))]
+mod lanes16 {
+    use super::wide;
+
+    const LANES16: usize = 16;
+
+    #[inline(always)]
+    pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let (acc, tail) = wide::dot_f32_acc::<LANES16>(a, b);
+        // Fixed pairwise reduction: the same order on every ISA.
+        let s0 = (acc[0] + acc[8]) + (acc[1] + acc[9]);
+        let s1 = (acc[2] + acc[10]) + (acc[3] + acc[11]);
+        let s2 = (acc[4] + acc[12]) + (acc[5] + acc[13]);
+        let s3 = (acc[6] + acc[14]) + (acc[7] + acc[15]);
+        ((s0 + s1) + (s2 + s3)) + tail
+    }
+
+    #[inline(always)]
+    pub fn axpy_f32(out: &mut [f32], w: f32, x: &[f32]) {
+        wide::axpy_f32::<LANES16>(out, w, x)
+    }
+
+    #[inline(always)]
+    pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        wide::dot_i8::<LANES16>(a, b)
+    }
+
+    #[inline(always)]
+    pub fn max_f32(x: &[f32]) -> f32 {
+        wide::max_f32::<LANES16>(x)
+    }
+
+    #[inline(always)]
+    pub fn scale_f32(x: &mut [f32], s: f32) {
+        wide::scale_f32::<LANES16>(x, s)
     }
 }
 
@@ -275,6 +503,65 @@ mod x86 {
     #[target_feature(enable = "fma")]
     pub unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
         super::lanes::dot_i8(a, b)
+    }
+
+    /// # Safety
+    /// The host CPU must support AVX2 and FMA.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn max_f32_avx2(x: &[f32]) -> f32 {
+        super::lanes::max_f32(x)
+    }
+
+    /// # Safety
+    /// The host CPU must support AVX2 and FMA.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn scale_f32_avx2(x: &mut [f32], s: f32) {
+        super::lanes::scale_f32(x, s)
+    }
+}
+
+/// The 16-lane kernels recompiled for AVX-512 via `#[target_feature]`
+/// (stable since Rust 1.89): `#[inline(always)]` on the lane bodies lets
+/// them inline here and pick up 512-bit codegen. Callers must verify
+/// support first (see the dispatchers above).
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod x86_512 {
+    /// # Safety
+    /// The host CPU must support AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot_f32_avx512(a: &[f32], b: &[f32]) -> f32 {
+        super::lanes16::dot_f32(a, b)
+    }
+
+    /// # Safety
+    /// The host CPU must support AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn axpy_f32_avx512(out: &mut [f32], w: f32, x: &[f32]) {
+        super::lanes16::axpy_f32(out, w, x)
+    }
+
+    /// # Safety
+    /// The host CPU must support AVX-512F and AVX-512BW (the widened
+    /// int8 -> i32 body needs the byte/word instructions).
+    #[target_feature(enable = "avx512f,avx512bw")]
+    pub unsafe fn dot_i8_avx512(a: &[i8], b: &[i8]) -> i32 {
+        super::lanes16::dot_i8(a, b)
+    }
+
+    /// # Safety
+    /// The host CPU must support AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn max_f32_avx512(x: &[f32]) -> f32 {
+        super::lanes16::max_f32(x)
+    }
+
+    /// # Safety
+    /// The host CPU must support AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn scale_f32_avx512(x: &mut [f32], s: f32) {
+        super::lanes16::scale_f32(x, s)
     }
 }
 
@@ -401,5 +688,139 @@ mod tests {
         let v = dot_f32(&a, &b);
         assert_eq!(s.is_finite(), v.is_finite());
         assert_eq!(s.is_nan(), v.is_nan());
+    }
+
+    /// The 16-lane (AVX-512) kernel bodies are plain stable Rust, so they
+    /// are testable on any host: f32 dot within reassociation tolerance
+    /// of the oracle, int8 dot / axpy / max / scale bitwise — across all
+    /// 0..16 remainder residues.
+    #[test]
+    fn lanes16_matches_scalar_prop() {
+        forall(
+            &Config { cases: 96, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let n = rng.below(2 + 2 * size as u64) as usize;
+                let a = randv(rng, n);
+                let b = randv(rng, n);
+                let ai: Vec<i8> =
+                    (0..n).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+                let bi: Vec<i8> =
+                    (0..n).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+                let w = rng.normal() as f32;
+                (a, b, ai, bi, w)
+            },
+            |(a, b, ai, bi, w)| {
+                let oracle = scalar::dot_f32(a, b);
+                let tol = 1e-5f32 * oracle.abs().max(a.len() as f32);
+                if (lanes16::dot_f32(a, b) - oracle).abs() > tol {
+                    return false;
+                }
+                if lanes16::dot_i8(ai, bi) != scalar::dot_i8(ai, bi) {
+                    return false;
+                }
+                if lanes16::max_f32(a) != scalar::max_f32(a) {
+                    return false;
+                }
+                let mut x = a.clone();
+                let mut y = a.clone();
+                lanes16::axpy_f32(&mut x, *w, b);
+                scalar::axpy_f32(&mut y, *w, b);
+                if x != y {
+                    return false;
+                }
+                let mut x = a.clone();
+                let mut y = a.clone();
+                lanes16::scale_f32(&mut x, *w);
+                scalar::scale_f32(&mut y, *w);
+                x == y
+            },
+        );
+    }
+
+    /// When the host actually has AVX-512, the recompiled wrappers must
+    /// agree with their plain 16-lane bodies bit for bit (identical lane
+    /// code, only the codegen target differs). Skipped silently elsewhere.
+    #[test]
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    fn avx512_wrappers_match_lanes16_when_supported() {
+        if !super::avx512() {
+            return;
+        }
+        let mut rng = Rng::new(13);
+        for n in [0usize, 1, 7, 16, 17, 63, 256] {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            // SAFETY: probe checked above.
+            unsafe {
+                assert_eq!(x86_512::dot_f32_avx512(&a, &b), lanes16::dot_f32(&a, &b));
+                assert_eq!(x86_512::max_f32_avx512(&a), lanes16::max_f32(&a));
+                let mut x = a.clone();
+                let mut y = a.clone();
+                x86_512::axpy_f32_avx512(&mut x, 1.5, &b);
+                lanes16::axpy_f32(&mut y, 1.5, &b);
+                assert_eq!(x, y);
+                let ai: Vec<i8> = a.iter().map(|&v| (v * 30.0) as i8).collect();
+                let bi: Vec<i8> = b.iter().map(|&v| (v * 30.0) as i8).collect();
+                assert_eq!(x86_512::dot_i8_avx512(&ai, &bi), lanes16::dot_i8(&ai, &bi));
+                let mut x = a.clone();
+                let mut y = a;
+                x86_512::scale_f32_avx512(&mut x, 0.25);
+                lanes16::scale_f32(&mut y, 0.25);
+                assert_eq!(x, y);
+            }
+        }
+    }
+
+    /// The dispatched max is bitwise equal to the scalar loop (the
+    /// maximum is exact) across remainder residues, and NaN entries are
+    /// skipped exactly like `softmax_in_place`'s `x > m` scan.
+    #[test]
+    fn max_f32_matches_scalar_bitwise_prop() {
+        forall(
+            &Config { cases: 64, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let n = rng.below(2 + 2 * size as u64) as usize;
+                let mut a = randv(rng, n);
+                if size > 8 && n > 0 && rng.f64() < 0.4 {
+                    let i = rng.below(n as u64) as usize;
+                    a[i] = f32::NAN;
+                }
+                a
+            },
+            |a| {
+                let got = max_f32(a);
+                let want = scalar::max_f32(a);
+                got == want || (got.is_nan() && want.is_nan())
+            },
+        );
+    }
+
+    #[test]
+    fn max_f32_edge_cases() {
+        assert_eq!(max_f32(&[]), f32::NEG_INFINITY);
+        assert_eq!(max_f32(&[f32::NAN, f32::NAN]), f32::NEG_INFINITY);
+        assert_eq!(max_f32(&[f32::NEG_INFINITY; 20]), f32::NEG_INFINITY);
+        assert_eq!(max_f32(&[1.0, f32::NAN, 3.0, 2.0]), 3.0);
+        assert_eq!(max_f32(&[-2.0, f32::INFINITY, 1.0]), f32::INFINITY);
+    }
+
+    /// scale is elementwise, so the dispatched tier is bitwise equal to
+    /// the oracle in every tier.
+    #[test]
+    fn scale_f32_matches_scalar_bitwise_prop() {
+        forall(
+            &Config { cases: 64, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let n = rng.below(2 + 2 * size as u64) as usize;
+                (randv(rng, n), rng.normal() as f32)
+            },
+            |(x, s)| {
+                let mut a = x.clone();
+                let mut b = x.clone();
+                scale_f32(&mut a, *s);
+                scalar::scale_f32(&mut b, *s);
+                a == b
+            },
+        );
     }
 }

@@ -2,17 +2,32 @@
 //! approximate scores predict a per-input row top-k mask, and only the
 //! surviving entries run through SDDMM → masked softmax → SpMM.
 //!
-//! Two equivalent drivers are provided:
+//! Three equivalent drivers are provided:
 //!
+//! * [`dsa_attention_rows_fused_scratch`] — the production path: per row,
+//!   predict (int8 scores into the scratch row) → exact top-k → then a
+//!   **fused** SDDMM + online softmax + SpMM over the kept columns in
+//!   [`super::dense::KEY_TILE`]-sized chunks, accumulating straight into
+//!   the output row ([`super::dense::online_rescale`] /
+//!   [`super::dense::online_finish`]). No full approximate-score matrix,
+//!   no intermediate `Vec` returns, no separate softmax pass — the whole
+//!   per-row pipeline runs out of one [`Scratch`].
+//! * [`dsa_attention_rows`] — the unfused row-range form (SDDMM row →
+//!   [`softmax_in_place`] → SpMM row), retained as the oracle the fused
+//!   driver is property-tested against.
 //! * [`dsa_attention`] — the whole-matrix reference: full approximate-score
-//!   matrix → [`crate::sparse::topk::topk_mask_exact`] →
-//!   [`crate::sparse::Csr`] → [`sddmm`] → [`masked_softmax`] → [`spmm`].
-//! * [`dsa_attention_rows`] — the row-range form the multi-threaded path
-//!   ([`super::parallel`]) drives. Every stage is row-local, so both
-//!   drivers perform identical float operations per row and agree bit for
-//!   bit — and at `keep = l` they also match [`super::dense`] exactly.
+//!   matrix (through `Scratch::scores`, see
+//!   [`ApproxScorer::full_into`]) → [`crate::sparse::topk::topk_mask_exact`]
+//!   → [`crate::sparse::Csr`] → [`sddmm`] → [`masked_softmax`] → [`spmm`].
+//!
+//! All three select **bitwise-identical masks** (same int8 scores, same
+//! exact row top-k — the int8 dot is tier-independent, see
+//! [`super::simd`]); the unfused drivers agree bit for bit with each
+//! other, the fused driver within a tight tolerance (reassociated
+//! softmax). At `keep = l`, unfused matches unfused dense and fused
+//! matches fused dense exactly.
 
-use super::dense::softmax_in_place;
+use super::dense::{self, softmax_in_place};
 use super::scratch::Scratch;
 use super::simd;
 use crate::sparse::{topk, Csr};
@@ -72,17 +87,30 @@ impl ApproxScorer {
         }
     }
 
-    /// The full `l x l` approximate score matrix.
-    pub fn full(&self) -> Vec<f32> {
-        let mut out = vec![0f32; self.l * self.l];
+    /// The full `l x l` approximate score matrix, written into a
+    /// caller-owned buffer — route it through [`Scratch::scores`] (see
+    /// [`Scratch::reserve_scores`]) and repeated dispatches are
+    /// allocation-free once the scratch is warm (asserted by the tests).
+    pub fn full_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.l * self.l, "scores shape");
         for (r, row) in out.chunks_exact_mut(self.l).enumerate() {
             self.score_row(r, row);
         }
+    }
+
+    /// The full `l x l` approximate score matrix as a fresh `Vec` —
+    /// convenience for tests/offline analysis; hot paths use
+    /// [`ApproxScorer::full_into`] (or [`ApproxScorer::score_row`] per
+    /// row) so no `l x l` buffer is allocated per dispatch.
+    pub fn full(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.l * self.l];
+        self.full_into(&mut out);
         out
     }
 }
 
-/// Full approximate score matrix for `q`/`k` (convenience wrapper).
+/// Full approximate score matrix for `q`/`k` (allocating convenience
+/// wrapper over [`ApproxScorer::full`] — tests/offline analysis only).
 pub fn approx_scores(q: &[f32], k: &[f32], l: usize, dk: usize) -> Vec<f32> {
     ApproxScorer::new(q, k, l, dk).full()
 }
@@ -131,7 +159,9 @@ pub fn spmm(pattern: &Csr, vals: &[f32], v: &[f32], dv: usize) -> Vec<f32> {
     out
 }
 
-/// Whole-matrix dynamic-sparse attention reference (single-threaded).
+/// Whole-matrix dynamic-sparse attention reference (single-threaded,
+/// unfused). Allocates a throwaway scratch; see
+/// [`dsa_attention_scratch`] for the reusable-buffer form.
 pub fn dsa_attention(
     q: &[f32],
     k: &[f32],
@@ -141,9 +171,33 @@ pub fn dsa_attention(
     dv: usize,
     keep: usize,
 ) -> Vec<f32> {
+    let mut scratch = Scratch::new();
+    dsa_attention_scratch(q, k, v, l, dk, dv, keep, &mut scratch)
+}
+
+/// [`dsa_attention`] over a caller-owned [`Scratch`]: the approximate
+/// score matrix lives in `scratch.scores` ([`ApproxScorer::full_into`])
+/// instead of a fresh `l x l` `Vec` per call, so the prediction stage of
+/// a warm scratch records zero grow events (asserted by the tests). The
+/// mask/CSR/value stages still allocate — this is the reference path, not
+/// the hot one; serving traffic runs the fused row drivers.
+#[allow(clippy::too_many_arguments)]
+pub fn dsa_attention_scratch(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+    scratch: &mut Scratch,
+) -> Vec<f32> {
     assert_eq!(v.len(), l * dv, "v shape");
-    let scores = approx_scores(q, k, l, dk);
-    let mask = topk::topk_mask_exact(&scores, l, l, keep);
+    scratch.reserve_scores(l * l);
+    let scorer = ApproxScorer::new(q, k, l, dk);
+    let scores = &mut scratch.scores[..l * l];
+    scorer.full_into(scores);
+    let mask = topk::topk_mask_exact(scores, l, l, keep);
     let pattern = Csr::from_mask(&mask);
     let mut vals = sddmm(q, k, dk, &pattern);
     masked_softmax(&pattern, &mut vals);
@@ -217,6 +271,123 @@ pub fn dsa_attention_rows_scratch(
             }
         }
     }
+}
+
+/// The **fused** per-row DSA pipeline for query rows `r0..r1` at the
+/// default [`dense::KEY_TILE`]: predict → exact top-k → SDDMM + online
+/// softmax + SpMM in one pass over the kept columns, accumulating
+/// directly into `out`. Mask selection is bitwise identical to the
+/// unfused drivers (same scorer, same [`topk::topk_row_indices_into`]);
+/// the context rows match them within reassociation tolerance — and at
+/// `keep = l` match [`dense::attention_rows_fused_tile_scratch`] at the
+/// same tile size bit for bit (identical operations in identical order).
+#[allow(clippy::too_many_arguments)]
+pub fn dsa_attention_rows_fused_scratch(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+    scorer: &ApproxScorer,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+    scratch: &mut Scratch,
+) {
+    dsa_attention_rows_fused_tile_scratch(
+        q, k, v, l, dk, dv, keep, scorer, r0, r1, out, scratch, dense::KEY_TILE,
+    );
+}
+
+/// [`dsa_attention_rows_fused_scratch`] with an explicit tile size (test
+/// sweeps). The approximate score row reuses `scratch.row`, the kept
+/// indices `scratch.kept` and the per-chunk exact scores `scratch.vals`,
+/// so a warm scratch runs the whole loop allocation-free.
+#[allow(clippy::too_many_arguments)]
+pub fn dsa_attention_rows_fused_tile_scratch(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+    scorer: &ApproxScorer,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+    scratch: &mut Scratch,
+    tile: usize,
+) {
+    debug_assert_eq!(out.len(), (r1 - r0) * dv);
+    let tile = tile.clamp(1, l.max(1));
+    scratch.reserve(l, keep.min(l.max(1)));
+    let scale = 1.0 / (dk as f32).sqrt();
+    for r in r0..r1 {
+        scorer.score_row(r, &mut scratch.row[..l]);
+        topk::topk_row_indices_into(&scratch.row[..l], keep, &mut scratch.kept);
+        let qr = &q[r * dk..(r + 1) * dk];
+        let orow = &mut out[(r - r0) * dv..(r - r0 + 1) * dv];
+        orow.fill(0.0);
+        let (mut m, mut den, mut nanp) = (f32::NEG_INFINITY, 0.0f32, false);
+        for chunk in scratch.kept.chunks(tile) {
+            scratch.vals.clear();
+            for &c in chunk {
+                scratch.vals.push(simd::dot_f32(qr, &k[c * dk..(c + 1) * dk]) * scale);
+            }
+            if dense::online_rescale(simd::max_f32(&scratch.vals), &mut m, &mut den, orow) {
+                for (&c, &s) in chunk.iter().zip(scratch.vals.iter()) {
+                    let w = (s - m).exp();
+                    den += w;
+                    if w != 0.0 {
+                        simd::axpy_f32(orow, w, &v[c * dv..(c + 1) * dv]);
+                    }
+                }
+            } else if m == f32::NEG_INFINITY {
+                nanp = nanp || scratch.vals.iter().any(|s| s.is_nan());
+            }
+        }
+        dense::online_finish(m, den, nanp, orow);
+    }
+}
+
+/// Full fused dynamic-sparse attention at the default
+/// [`dense::KEY_TILE`]: the single-threaded fused reference the
+/// multi-threaded fused drivers are bit-identical to.
+pub fn dsa_attention_fused(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+) -> Vec<f32> {
+    dsa_attention_fused_tile(q, k, v, l, dk, dv, keep, dense::KEY_TILE)
+}
+
+/// [`dsa_attention_fused`] with an explicit tile size (test sweeps).
+#[allow(clippy::too_many_arguments)]
+pub fn dsa_attention_fused_tile(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+    tile: usize,
+) -> Vec<f32> {
+    assert_eq!(v.len(), l * dv, "v shape");
+    let scorer = ApproxScorer::new(q, k, l, dk);
+    let mut out = vec![0f32; l * dv];
+    let mut scratch = Scratch::new();
+    dsa_attention_rows_fused_tile_scratch(
+        q, k, v, l, dk, dv, keep, &scorer, 0, l, &mut out, &mut scratch, tile,
+    );
+    out
 }
 
 #[cfg(test)]
@@ -436,6 +607,207 @@ mod tests {
         assert_eq!(scratch.grow_events(), warm, "hot loop allocated");
         assert_eq!(out, again, "scratch reuse changed results");
         assert_eq!(out, dsa_attention(&q, &k, &v, l, dk, dv, keep));
+    }
+
+    /// Tentpole invariant: the fused per-row pipeline matches the unfused
+    /// oracle within a tight tolerance across tile sizes (dividing and
+    /// non-dividing `keep`, larger than `keep`), ragged shapes, and
+    /// NaN-bearing keys (NaN quantizes to 0 for the predictor; rows that
+    /// keep the NaN column get a NaN exact score, hitting the nan-pending
+    /// path at small tiles) — and selects bitwise-identical masks by
+    /// construction (same scorer, same top-k primitive; the output
+    /// agreement below would fail on any mask divergence long before the
+    /// tolerance did).
+    #[test]
+    fn fused_matches_unfused_across_tiles_prop() {
+        forall(
+            &Config { cases: 24, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let l = 2 + rng.below(3 * size as u64) as usize;
+                let dk = 1 + rng.below(12) as usize;
+                let dv = 1 + rng.below(12) as usize;
+                let keep = 1 + rng.below(l as u64) as usize;
+                let tiles = [1, 2, 3, 5, 8, keep, keep + 3, l, super::dense::KEY_TILE];
+                let tile = tiles[rng.below(tiles.len() as u64) as usize].max(1);
+                let q = randv(rng, l * dk);
+                let mut k = randv(rng, l * dk);
+                let v = randv(rng, l * dv);
+                if size > 16 && rng.f64() < 0.3 {
+                    let i = rng.below((l * dk) as u64) as usize;
+                    k[i] = f32::NAN;
+                }
+                (q, k, v, l, dk, dv, keep, tile)
+            },
+            |(q, k, v, l, dk, dv, keep, tile)| {
+                let fused = dsa_attention_fused_tile(q, k, v, *l, *dk, *dv, *keep, *tile);
+                let want = dsa_attention(q, k, v, *l, *dk, *dv, *keep);
+                fused.iter().zip(&want).all(|(a, b)| {
+                    (a.is_nan() && b.is_nan()) || (a - b).abs() <= 1e-5 + 1e-5 * b.abs()
+                })
+            },
+        );
+    }
+
+    /// The nan-pending path, pinned (see the dense twin): a NaN key makes
+    /// the kept column's exact score NaN; with `tile = 1` that chunk is
+    /// folded in while the running max is still `-inf`, and the fused
+    /// kernel must still poison exactly the rows the unfused oracle does
+    /// (rows that did not keep the NaN column stay finite and close).
+    #[test]
+    fn fused_nan_scores_poison_rows_like_unfused() {
+        let mut rng = Rng::new(78);
+        let (l, dk, dv) = (9, 4, 3);
+        let q = randv(&mut rng, l * dk);
+        let mut k = randv(&mut rng, l * dk);
+        let v = randv(&mut rng, l * dv);
+        k[0] = f32::NAN; // key row 0 => exact score of column 0 is NaN everywhere
+        for keep in [2, l] {
+            let want = dsa_attention(&q, &k, &v, l, dk, dv, keep);
+            for tile in [1, 2, 3, l, super::dense::KEY_TILE] {
+                let got = dsa_attention_fused_tile(&q, &k, &v, l, dk, dv, keep, tile);
+                for (a, b) in got.iter().zip(&want) {
+                    assert!(
+                        (a.is_nan() && b.is_nan())
+                            || (a - b).abs() <= 1e-5 + 1e-5 * b.abs(),
+                        "keep={keep} tile={tile}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// At `keep = l` the kept list is exactly `0..l` in ascending order,
+    /// so the fused DSA pipeline performs the fused dense kernel's float
+    /// operations in the same order — **bit for bit**, at every tile
+    /// size. The dense-equivalent guarantee of the unfused pair, carried
+    /// over to the fused pair.
+    #[test]
+    fn fused_at_full_keep_matches_fused_dense_bitwise_prop() {
+        forall(
+            &Config { cases: 16, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let l = 2 + rng.below(4 * size as u64) as usize;
+                let dk = 1 + rng.below(16) as usize;
+                let dv = 1 + rng.below(16) as usize;
+                let tiles = [1, 3, 8, l / 2, l, l + 5];
+                let tile = tiles[rng.below(tiles.len() as u64) as usize].max(1);
+                let q = randv(rng, l * dk);
+                let k = randv(rng, l * dk);
+                let v = randv(rng, l * dv);
+                (q, k, v, l, dk, dv, tile)
+            },
+            |(q, k, v, l, dk, dv, tile)| {
+                let dense = dense::attention_fused_tile(q, k, v, *l, *dk, *dv, *tile);
+                let sparse = dsa_attention_fused_tile(q, k, v, *l, *dk, *dv, *l, *tile);
+                dense == sparse
+            },
+        );
+    }
+
+    /// Mask selection is shared between fused and unfused drivers: the
+    /// per-row `topk_row_indices_into` selection over the scorer's row
+    /// equals the whole-matrix `topk_mask_exact` rows bit for bit — the
+    /// int8 predictor path is untouched by the fusion.
+    #[test]
+    fn fused_mask_selection_is_bitwise_identical_prop() {
+        forall(
+            &Config { cases: 16, ..Default::default() },
+            |rng: &mut Rng, size| {
+                let l = 2 + rng.below(3 * size as u64) as usize;
+                let dk = 1 + rng.below(10) as usize;
+                let keep = 1 + rng.below(l as u64) as usize;
+                let q = randv(rng, l * dk);
+                let k = randv(rng, l * dk);
+                (q, k, l, dk, keep)
+            },
+            |(q, k, l, dk, keep)| {
+                let scorer = ApproxScorer::new(q, k, *l, *dk);
+                let mask = topk::topk_mask_exact(&scorer.full(), *l, *l, *keep);
+                let mut srow = vec![0f32; *l];
+                let mut kept = Vec::new();
+                (0..*l).all(|r| {
+                    scorer.score_row(r, &mut srow);
+                    topk::topk_row_indices_into(&srow, *keep, &mut kept);
+                    kept == mask.row_cols(r)
+                })
+            },
+        );
+    }
+
+    /// Fully-masked rows through the fused path: when every kept score is
+    /// `-inf`, the unfused pipeline renormalizes the row to exact zeros —
+    /// the fused online softmax must agree bitwise at every tile size.
+    #[test]
+    fn fused_fully_masked_rows_zero() {
+        let (l, dk, dv, keep) = (7, 3, 4, 3);
+        // All-ones queries against all -inf keys: every exact SDDMM score
+        // is -inf, so every row is fully masked whatever the mask says.
+        let q = vec![1.0f32; l * dk];
+        let k = vec![f32::NEG_INFINITY; l * dk];
+        let v: Vec<f32> = (0..l * dv).map(|i| i as f32).collect();
+        let want = dsa_attention(&q, &k, &v, l, dk, dv, keep);
+        assert_eq!(want, vec![0.0; l * dv], "oracle sanity");
+        for tile in [1, 2, keep, l, super::dense::KEY_TILE] {
+            assert_eq!(
+                dsa_attention_fused_tile(&q, &k, &v, l, dk, dv, keep, tile),
+                want,
+                "fully-masked rows must be exactly zero (tile {tile})"
+            );
+        }
+    }
+
+    /// The predictor path is allocation-free under warm scratch: the
+    /// whole-matrix reference routes its `l x l` approximate scores
+    /// through `Scratch::scores`, and repeated calls record zero grow
+    /// events once warm (the satellite fix for `approx_scores` /
+    /// `ApproxScorer::full` returning fresh `Vec`s per dispatch).
+    #[test]
+    fn warm_scratch_predictor_is_allocation_free() {
+        let mut rng = Rng::new(17);
+        let (l, dk, dv, keep) = (23, 6, 4, 5);
+        let q = randv(&mut rng, l * dk);
+        let k = randv(&mut rng, l * dk);
+        let v = randv(&mut rng, l * dv);
+        let scorer = ApproxScorer::new(&q, &k, l, dk);
+        let mut scratch = Scratch::new();
+        // full_into through the scratch scores buffer
+        scratch.reserve_scores(l * l);
+        scorer.full_into(&mut scratch.scores[..l * l]);
+        let warm = scratch.grow_events();
+        scratch.reserve_scores(l * l);
+        scorer.full_into(&mut scratch.scores[..l * l]);
+        assert_eq!(scratch.grow_events(), warm, "warm full_into allocated");
+        assert_eq!(&scratch.scores[..l * l], &scorer.full()[..], "values drifted");
+        // and the whole-matrix reference driver on the same scratch
+        let first = dsa_attention_scratch(&q, &k, &v, l, dk, dv, keep, &mut scratch);
+        let warm = scratch.grow_events();
+        let again = dsa_attention_scratch(&q, &k, &v, l, dk, dv, keep, &mut scratch);
+        assert_eq!(scratch.grow_events(), warm, "warm predictor path allocated");
+        assert_eq!(first, again);
+        assert_eq!(first, dsa_attention(&q, &k, &v, l, dk, dv, keep));
+    }
+
+    #[test]
+    fn fused_warm_scratch_rows_are_allocation_free() {
+        let mut rng = Rng::new(12);
+        let (l, dk, dv, keep) = (41, 9, 6, 7);
+        let q = randv(&mut rng, l * dk);
+        let k = randv(&mut rng, l * dk);
+        let v = randv(&mut rng, l * dv);
+        let scorer = ApproxScorer::new(&q, &k, l, dk);
+        let mut out = vec![0f32; l * dv];
+        let mut scratch = Scratch::new();
+        dsa_attention_rows_fused_scratch(
+            &q, &k, &v, l, dk, dv, keep, &scorer, 0, l, &mut out, &mut scratch,
+        );
+        let warm = scratch.grow_events();
+        let mut again = vec![0f32; l * dv];
+        dsa_attention_rows_fused_scratch(
+            &q, &k, &v, l, dk, dv, keep, &scorer, 0, l, &mut again, &mut scratch,
+        );
+        assert_eq!(scratch.grow_events(), warm, "fused hot loop allocated");
+        assert_eq!(out, again, "scratch reuse changed results");
+        assert_eq!(out, dsa_attention_fused(&q, &k, &v, l, dk, dv, keep));
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`kernels`] | native DSA pipeline: dense baseline, int8 score prediction, SDDMM, masked softmax, SpMM; SIMD inner products (`kernels::simd`, AVX2-specialized with a scalar oracle), allocation-free per-worker scratch, a persistent worker pool (`kernels::pool`: parked channel-fed workers with warm scratch — one pool serves the whole process), row-parallel drivers for single-head and batched multi-head `[b, h, l, d]` problems (pool-backed by default, scoped-spawn kept as the benchmarked comparator), `KernelDispatch` |
+//! | [`kernels`] | native DSA pipeline, served through **fused, cache-tiled kernels with online softmax** (query blocks × K/V tiles, one pass over the data; unfused three-pass forms retained as property-test oracles and bench comparators): dense baseline, int8 score prediction, SDDMM, masked softmax, SpMM; SIMD lane primitives (`kernels::simd`: dot/axpy/max/rescale, AVX2- and AVX-512-specialized with a scalar oracle), allocation-free per-worker scratch (incl. the predictor's score buffers), a persistent worker pool (`kernels::pool`: parked channel-fed workers with warm scratch — one pool serves the whole process), row-parallel drivers over query-block-aligned row blocks for single-head and batched multi-head `[b, h, l, d]` problems (pool-backed by default, scoped-spawn kept as the benchmarked comparator), `KernelDispatch` |
 //! | [`runtime`] | artifact manifest (always) + PJRT client/registry (`xla` feature) |
 //! | [`coordinator`] | dynamic batcher, backends, engine worker, queue-depth adaptive variant router, metrics (incl. router decisions + pool counters) |
 //! | [`server`] | line-JSON TCP front end + client |

@@ -402,6 +402,33 @@ fn cmd_bench_compare(rest: &[String]) -> Result<()> {
             None => println!("  {label}: (missing bench names)"),
         }
     }
+    // Dataflow-fusion dividend: the fused tiled online-softmax kernels
+    // touch each K/V element once per query block; the unfused three-pass
+    // forms stream full K (then V) per query row. Single-threaded, so the
+    // ratio isolates the kernel dataflow; the win grows with l as the row
+    // working set falls out of cache.
+    println!("\n== fused vs unfused kernels (unfused/fused, >1 = fused wins) ==");
+    for l in [64usize, 128, 256, 512, 1024, 2000] {
+        let dense = headline(
+            &format!("native/dense/l{l}/h1/st-unfused/simd"),
+            &format!("native/dense/l{l}/h1/st-fused/simd"),
+        );
+        let dsa = headline(
+            &format!("native/dsa/l{l}/s90/h1/st-unfused/simd"),
+            &format!("native/dsa/l{l}/s90/h1/st-fused/simd"),
+        );
+        match (dense, dsa) {
+            (Some(d), Some(s)) => {
+                let gate = if l >= 1024 && d < 1.3 {
+                    " BELOW TARGET (dense >= 1.3x at l >= 1024)"
+                } else {
+                    ""
+                };
+                println!("  l={l:<5} dense {d:.2}x   dsa90 {s:.2}x{gate}");
+            }
+            _ => println!("  l={l:<5} (missing bench names)"),
+        }
+    }
     // Persistent-pool dividend: same kernels, same chunking — only the
     // per-dispatch spawn/join differs, so the ratio isolates the overhead
     // the pool removes. The win concentrates at small l.
