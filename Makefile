@@ -15,7 +15,7 @@
 CARGO_MANIFEST := rust/Cargo.toml
 BENCH_BASELINE := results/BENCH_kernels.baseline.json
 
-.PHONY: help verify build test bench bench-baseline bench-compare bench-serve fmt clippy pytest artifacts clean
+.PHONY: help verify build test bench bench-baseline bench-compare bench-serve tile-plan fmt clippy pytest artifacts clean
 
 help:
 	@echo "Targets:"
@@ -39,6 +39,9 @@ help:
 	@echo "                 (dsa-serve bench-serve: --rates validates entries — finite,"
 	@echo "                 >= 0, no duplicates; --adaptive on enables queue-depth"
 	@echo "                 variant routing, decisions visible in metrics)"
+	@echo "  tile-plan      regenerate results/TILE_PLAN.json from the in-source"
+	@echo "                 kernels::tiles::TILE_TABLE (tune entries with the"
+	@echo "                 bench_kernels tile sweep; CI gates drift via --check)"
 	@echo "  fmt / clippy   style gates (CI-enforced)"
 	@echo "  pytest         python tests (artifact/optional-dep tests auto-skip)"
 	@echo "  artifacts      OPTIONAL, needs jax: AOT-lower the PJRT artifacts"
@@ -76,6 +79,12 @@ bench-compare:
 	cargo bench --manifest-path $(CARGO_MANIFEST) --bench bench_kernels
 	cargo run --release --manifest-path $(CARGO_MANIFEST) --bin dsa-serve -- bench-compare \
 		--baseline $(BENCH_BASELINE) --fresh results/BENCH_kernels.json --max-regress 0.25
+
+## regenerate the derived tile-table artifact from kernels::tiles::TILE_TABLE
+## (run after committing tuned rows from the bench_kernels tile sweep; CI
+## verifies consistency with `dsa-serve tile-plan --check`)
+tile-plan:
+	cargo run --release --manifest-path $(CARGO_MANIFEST) --bin dsa-serve -- tile-plan
 
 ## open-loop serving rate sweep against the hermetic native backend
 bench-serve:

@@ -8,6 +8,7 @@
 
 use dsa_serve::util::error::Result;
 use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
+use dsa_serve::kernels::Variant;
 use dsa_serve::runtime::registry::Manifest;
 use dsa_serve::workload::{Workload, WorkloadConfig};
 
@@ -24,7 +25,7 @@ fn main() -> Result<()> {
         let engine = Engine::start(
             manifest.clone(),
             EngineConfig {
-                default_variant: variant.to_string(),
+                default_variant: variant.parse::<Variant>()?,
                 policy: BatchPolicy::default(),
                 preload: true,
                 router: None,

@@ -14,6 +14,7 @@ use std::time::Instant;
 
 use dsa_serve::util::error::Result;
 use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
+use dsa_serve::kernels::Variant;
 use dsa_serve::runtime::registry::Manifest;
 use dsa_serve::server;
 use dsa_serve::util::json::Json;
@@ -39,10 +40,13 @@ fn main() -> Result<()> {
 
     let mut rows = Vec::new();
     for variant in &variants {
+        // Manifest variant names parse once here; unknown ones are a
+        // manifest bug worth surfacing, not silently serving.
+        let typed = variant.parse::<Variant>()?;
         let engine = Arc::new(Engine::start(
             manifest.clone(),
             EngineConfig {
-                default_variant: variant.clone(),
+                default_variant: typed,
                 policy: BatchPolicy::default(),
                 preload: true,
                 router: None,

@@ -10,6 +10,11 @@
 //! and a spawn-vs-pool sweep (`l ∈ {64, 128, 256, 1024, 2000}`) isolating
 //! the per-dispatch overhead the persistent worker pool removes; both
 //! sweeps' ratios are recorded under `"derived"` in the summary JSON.
+//! A **tile sweep** (candidate `key_tile` × `query_block` geometries per
+//! shape, st fused) acts as the offline tuner for the committed per-shape
+//! tile table (`kernels::tiles::TILE_TABLE`): winning rows print as
+//! ready-to-commit table entries and land under `"derived"` as
+//! `tile_plan/...` notes.
 //! Runs hermetically — no artifacts required — and tracks the perf
 //! trajectory via `results/bench.jsonl`, a `results/BENCH_kernels.json`
 //! summary, and a printed diff against the previously committed summary
@@ -27,7 +32,8 @@ use std::time::Duration;
 use dsa_serve::kernels::parallel::Exec;
 use dsa_serve::kernels::simd::{self, Mode};
 use dsa_serve::kernels::{
-    dense, for_variant, parallel, scratch, sparse, AttnBatch, SparseKernel, WorkerPool,
+    dense, parallel, scratch, sparse, AttnBatch, KernelSpec, SparseKernel, Tile, Variant,
+    WorkerPool,
 };
 use dsa_serve::util::bench::{diff_baseline, results_path, Bench};
 use dsa_serve::util::json;
@@ -121,7 +127,7 @@ fn main() {
             b.run(&format!("native/dense/l{l}/h1/mt/{tag}"), || {
                 std::hint::black_box(parallel::dense_attention_mt(&q, &k, &v, l, dk, dv, 0));
             });
-            let keep90 = SparseKernel { sparsity: 0.90, threads: 1 }.keep_for(l);
+            let keep90 = SparseKernel::with_threads(0.90, 1).keep_for(l);
             b.run(&format!("native/dsa/l{l}/s90/h1/st/{tag}"), || {
                 std::hint::black_box(sparse::dsa_attention_fused(&q, &k, &v, l, dk, dv, keep90));
             });
@@ -133,7 +139,7 @@ fn main() {
         }
         simd::set_mode(Mode::Simd);
         for sparsity in [0.95f64, 0.99] {
-            let keep = SparseKernel { sparsity, threads: 1 }.keep_for(l);
+            let keep = SparseKernel::with_threads(sparsity, 1).keep_for(l);
             let tag = (sparsity * 100.0) as u32;
             b.run(&format!("native/dsa/l{l}/s{tag}/h1/st/simd"), || {
                 std::hint::black_box(sparse::dsa_attention_fused(&q, &k, &v, l, dk, dv, keep));
@@ -151,9 +157,13 @@ fn main() {
         let kb = randv(p * l * dk, &mut rng);
         let vb = randv(p * l * dv, &mut rng);
         let batch = AttnBatch { q: &qb, k: &kb, v: &vb, b: 1, h: p, l, dk, dv };
-        for variant in ["dense", "dsa90"] {
-            let kernel = for_variant(variant, 0).expect("variant");
-            let vtag = if variant == "dense" {
+        for variant in [Variant::Dense, Variant::Dsa { pct: 90 }] {
+            // Typed dispatch: the bench builds kernels exactly the way
+            // the serving backend does — Variant through the registry.
+            let kernel = variant
+                .build(&KernelSpec::with_threads(0))
+                .expect("native variant");
+            let vtag = if variant == Variant::Dense {
                 format!("native/dense/l{l}/h{p}")
             } else {
                 format!("native/dsa/l{l}/s90/h{p}")
@@ -184,7 +194,7 @@ fn main() {
         let q = randv(l * dk, &mut rng);
         let k = randv(l * dk, &mut rng);
         let v = randv(l * dv, &mut rng);
-        let keep90 = SparseKernel { sparsity: 0.90, threads: 1 }.keep_for(l);
+        let keep90 = SparseKernel::with_threads(0.90, 1).keep_for(l);
         b.run(&format!("native/dense/l{l}/h1/st-fused/simd"), || {
             std::hint::black_box(dense::attention_fused(&q, &k, &v, l, dk, dv));
         });
@@ -212,7 +222,7 @@ fn main() {
         let q = randv(l * dk, &mut rng);
         let k = randv(l * dk, &mut rng);
         let v = randv(l * dv, &mut rng);
-        let keep90 = SparseKernel { sparsity: 0.90, threads: 1 }.keep_for(l);
+        let keep90 = SparseKernel::with_threads(0.90, 1).keep_for(l);
         b.run(&format!("native/dense/l{l}/h1/mt-spawn/simd"), || {
             std::hint::black_box(parallel::dense_attention_mt_exec(
                 &q, &k, &v, l, dk, dv, 0, Exec::Spawn,
@@ -233,6 +243,49 @@ fn main() {
                 &q, &k, &v, l, dk, dv, keep90, 0, Exec::Pool(pool),
             ));
         });
+    }
+
+    // Tile sweep — the OFFLINE TUNER behind the committed per-shape tile
+    // table (kernels::tiles::TILE_TABLE): time the fused kernels at
+    // candidate (key_tile, query_block) geometries per shape,
+    // single-threaded so the ratio isolates tile locality. The winning
+    // rows are printed as ready-to-commit TILE_TABLE entries (then run
+    // `dsa-serve tile-plan` to refresh the derived JSON); because a
+    // TilePlan fixes the tile per (l, dk) before dispatch, committing a
+    // tuned row never breaks the bit-identical-across-thread-counts
+    // invariant.
+    // A TilePlan row is keyed by (l, dk) only, yet it governs dispatches
+    // at EVERY value width — the bench head width (dv = 64) and the
+    // serving classifier's one-hot width (dv = VOCAB = 256), whose V-tile
+    // working set is 4x larger. So the sweep times both widths and the
+    // suggestion below only fires when a tile wins at both.
+    let tile_sweep_l: &[usize] = if smoke { &[256] } else { &[256, 1024, 2000] };
+    let tile_sweep_dv = [64usize, 256];
+    let key_tiles = [64usize, 128, 256, 512];
+    let query_blocks = [4usize, 8, 16];
+    for &l in tile_sweep_l {
+        let q = randv(l * dk, &mut rng);
+        let k = randv(l * dk, &mut rng);
+        let keep90 = SparseKernel::with_threads(0.90, 1).keep_for(l);
+        for &tdv in &tile_sweep_dv {
+            let v = randv(l * tdv, &mut rng);
+            for &kt in &key_tiles {
+                for &qb in &query_blocks {
+                    let tile = Tile { key_tile: kt, query_block: qb };
+                    b.run(&format!("native/dense/l{l}/h1/dv{tdv}/st-kt{kt}-qb{qb}/simd"), || {
+                        std::hint::black_box(dense::attention_fused_tiled(
+                            &q, &k, &v, l, dk, tdv, tile,
+                        ));
+                    });
+                }
+                // DSA results depend on key_tile only (per-row pipeline).
+                b.run(&format!("native/dsa/l{l}/s90/h1/dv{tdv}/st-kt{kt}/simd"), || {
+                    std::hint::black_box(sparse::dsa_attention_fused_tile(
+                        &q, &k, &v, l, dk, tdv, keep90, kt,
+                    ));
+                });
+            }
+        }
     }
 
     println!(
@@ -344,6 +397,87 @@ fn main() {
         "  pool: {:?} (one process-wide pool; parked workers, warm scratch)",
         pool.stats()
     );
+
+    println!("\n=== tile sweep (st fused, dk=64, dv in {{64, 256}}) — TILE_TABLE tuner ===");
+    // A committed (l, dk) row is VARIANT- and WIDTH-BLIND: TilePlan::lookup
+    // governs dense AND sparse dispatches at that shape, at every value
+    // width. The suggestion therefore optimizes the combined
+    // dense + dsa90 cost summed over both swept dv widths, and refuses
+    // any row that regresses any single (kernel, dv) cell — a one-sided
+    // win (e.g. dense-only at dv=64) that would slow the serving path
+    // (dsa rungs, dv=256) never gets suggested.
+    let mut suggested: Vec<(usize, usize, usize, usize)> = Vec::new();
+    for &l in tile_sweep_l {
+        let dense_mean = |tdv: usize, kt: usize, qb: usize| -> Option<f64> {
+            b.mean_of(&format!("native/dense/l{l}/h1/dv{tdv}/st-kt{kt}-qb{qb}/simd"))
+        };
+        let dsa_mean = |tdv: usize, kt: usize| -> Option<f64> {
+            b.mean_of(&format!("native/dsa/l{l}/s90/h1/dv{tdv}/st-kt{kt}/simd"))
+        };
+        // Combined cost of running every swept (kernel, dv) cell at
+        // (kt, qb); None if any cell is missing.
+        let combined = |kt: usize, qb: usize| -> Option<f64> {
+            let mut total = 0.0;
+            for &tdv in &tile_sweep_dv {
+                total += dense_mean(tdv, kt, qb)? + dsa_mean(tdv, kt)?;
+            }
+            Some(total)
+        };
+        let mut best = (f64::INFINITY, 0usize, 0usize);
+        for &kt in &key_tiles {
+            for &qb in &query_blocks {
+                if let Some(c) = combined(kt, qb) {
+                    if c < best.0 {
+                        best = (c, kt, qb);
+                    }
+                }
+            }
+        }
+        let (best_cost, kt, qb) = best;
+        let (dkt, dqb) = (dense::KEY_TILE, dense::QUERY_BLOCK);
+        let gain = combined(dkt, dqb).map_or(f64::NAN, |c| c / best_cost);
+        // Per-cell gains vs the default tile; the minimum gates the
+        // suggestion (no cell may regress). Notes are collected first and
+        // recorded after the measurement closures' last use (they borrow
+        // the bench immutably; `note` needs it mutably).
+        let mut min_cell_gain = f64::INFINITY;
+        let mut cell_notes: Vec<(String, f64)> = Vec::new();
+        for &tdv in &tile_sweep_dv {
+            let dg = dense_mean(tdv, dkt, dqb)
+                .zip(dense_mean(tdv, kt, qb))
+                .map_or(f64::NAN, |(a, b)| a / b);
+            let sg = dsa_mean(tdv, dkt)
+                .zip(dsa_mean(tdv, kt))
+                .map_or(f64::NAN, |(a, b)| a / b);
+            min_cell_gain = min_cell_gain.min(dg).min(sg);
+            cell_notes.push((format!("tile_plan/l{l}/dk{dk}/dv{tdv}/dense_gain_vs_default"), dg));
+            cell_notes.push((format!("tile_plan/l{l}/dk{dk}/dv{tdv}/dsa90_gain_vs_default"), sg));
+        }
+        for (name, val) in &cell_notes {
+            b.note(name, *val);
+        }
+        println!(
+            "  l={l:<5} best kt={kt:<4} qb={qb:<3} combined {gain:.2}x vs default {dkt}x{dqb} \
+             (worst cell {min_cell_gain:.2}x)"
+        );
+        b.note(&format!("tile_plan/l{l}/dk{dk}/key_tile"), kt as f64);
+        b.note(&format!("tile_plan/l{l}/dk{dk}/query_block"), qb as f64);
+        b.note(&format!("tile_plan/l{l}/dk{dk}/combined_gain_vs_default"), gain);
+        // Only suggest rows that beat the fallback on the COMBINED cost by
+        // a margin worth committing (2%+) without regressing any cell:
+        // a noise-level or one-sided win is not provenance.
+        if (kt, qb) != (dkt, dqb) && gain >= 1.02 && min_cell_gain >= 1.0 {
+            suggested.push((l, dk, kt, qb));
+        }
+    }
+    if suggested.is_empty() {
+        println!("  no tuned row beats the fallback by >= 2% combined — keep TILE_TABLE empty");
+    } else {
+        println!("  suggested TILE_TABLE rows (copy into kernels/tiles.rs, then run tile-plan):");
+        for (l, dk, kt, qb) in &suggested {
+            println!("    ({l}, {dk}, {kt}, {qb}),");
+        }
+    }
 
     #[cfg(feature = "xla")]
     pjrt_kernels(&mut b);

@@ -9,6 +9,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
+use dsa_serve::kernels::Variant;
 use dsa_serve::runtime::registry::{Manifest, Registry};
 use dsa_serve::runtime::Arg;
 use dsa_serve::util::bench::Bench;
@@ -77,11 +78,15 @@ fn main() {
     // ---- engine: closed-loop throughput + batcher overhead --------------
     println!("\n=== engine closed-loop (dynamic batcher) ===");
     for variant in &manifest.variants {
+        let Ok(typed) = variant.parse::<Variant>() else {
+            println!("engine/{variant}: unknown variant name in manifest, skipping");
+            continue;
+        };
         let engine = Arc::new(
             Engine::start(
                 manifest.clone(),
                 EngineConfig {
-                    default_variant: variant.clone(),
+                    default_variant: typed,
                     policy: BatchPolicy {
                         max_batch: *manifest.batch_buckets.iter().max().unwrap_or(&8),
                         max_wait: Duration::from_millis(2),

@@ -5,7 +5,16 @@
 //!
 //! * [`NativeBackend`] — always available: the hand-constructed classifier
 //!   over the native DSA kernels (`kernels::model`), so a fresh checkout
-//!   serves real traffic with no artifacts and no PJRT.
+//!   serves real traffic with no artifacts and no PJRT. Kernels are built
+//!   from the typed [`Variant`] through the configured
+//!   [`KernelRegistry`](crate::kernels::KernelRegistry)
+//!   (`NativeModelConfig::registry`; default = the process-wide global
+//!   one) at the backend's [`KernelSpec`] (threads + exec policy +
+//!   per-shape tile plan), and
+//!   batches execute through the allocation-free
+//!   `logits_batch_into` path over warm per-bucket buffers
+//!   ([`ModelScratch`]) — the steady-state serving loop performs **zero
+//!   per-batch output allocations** (asserted by the warm-dispatch test).
 //! * `ArtifactBackend` (`xla` feature) — AOT-compiled HLO modules executed
 //!   through the PJRT registry, as produced by `make artifacts`.
 //!
@@ -14,9 +23,10 @@
 //! backend is never required to be `Send`.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use crate::kernels::dispatch::{for_variant, KernelDispatch};
-use crate::kernels::model::NativeClassifier;
+use crate::kernels::dispatch::{KernelDispatch, KernelRegistry, KernelSpec, Variant};
+use crate::kernels::model::{ModelScratch, NativeClassifier};
 use crate::util::error::{bail, Context, Result};
 
 /// What the engine worker needs from an execution backend.
@@ -33,11 +43,26 @@ pub trait InferBackend {
 
     /// Warm up `variant` (compile executables / instantiate kernels).
     /// Errors abort engine startup.
-    fn preload(&mut self, variant: &str) -> Result<()>;
+    fn preload(&mut self, variant: Variant) -> Result<()>;
 
-    /// Execute `bucket * seq_len()` tokens, returning `bucket * classes()`
-    /// logits.
-    fn run(&mut self, variant: &str, tokens: &[i32], bucket: usize) -> Result<Vec<f32>>;
+    /// Execute `bucket * seq_len()` tokens, writing `bucket * classes()`
+    /// logits into `logits` (cleared first). The engine worker owns one
+    /// warm `logits` buffer across batches, so a steady-state backend
+    /// performs no per-batch output allocation.
+    fn run_into(
+        &mut self,
+        variant: Variant,
+        tokens: &[i32],
+        bucket: usize,
+        logits: &mut Vec<f32>,
+    ) -> Result<()>;
+
+    /// Allocating convenience over [`InferBackend::run_into`].
+    fn run(&mut self, variant: Variant, tokens: &[i32], bucket: usize) -> Result<Vec<f32>> {
+        let mut logits = Vec::new();
+        self.run_into(variant, tokens, bucket, &mut logits)?;
+        Ok(logits)
+    }
 }
 
 /// Configuration of the hermetic native backend.
@@ -46,16 +71,27 @@ pub struct NativeModelConfig {
     pub seq_len: usize,
     /// Seed of the classifier's embedding table.
     pub seed: u64,
-    /// Worker threads per attention call (0 = one per core).
-    pub threads: usize,
+    /// How attention dispatches execute: worker threads (0 = one per
+    /// core), pool-vs-spawn policy, and the per-shape tile plan —
+    /// replacing the bare `threads: usize` this config used to carry.
+    pub spec: KernelSpec,
+    /// Kernel registry the backend builds variants from; `None` = the
+    /// process-wide [`KernelRegistry::global`]. This is the embedder's
+    /// plug-in point: register a custom variant family here and the
+    /// serving stack picks it up without any in-crate edits.
+    pub registry: Option<Arc<KernelRegistry>>,
 }
 
 impl Default for NativeModelConfig {
-    fn default() -> Self {
+    /// The serving defaults: `seq_len = 256`, fixed seed, default
+    /// [`KernelSpec`] (all cores, pool execution, committed tile table),
+    /// global registry.
+    fn default() -> NativeModelConfig {
         NativeModelConfig {
             seq_len: 256,
             seed: 0xD5A,
-            threads: 0,
+            spec: KernelSpec::default(),
+            registry: None,
         }
     }
 }
@@ -63,16 +99,22 @@ impl Default for NativeModelConfig {
 /// Native-kernel backend: no artifacts, no PJRT, no external crates.
 pub struct NativeBackend {
     model: NativeClassifier,
-    threads: usize,
-    kernels: HashMap<String, Box<dyn KernelDispatch>>,
+    spec: KernelSpec,
+    registry: Option<Arc<KernelRegistry>>,
+    kernels: HashMap<Variant, Box<dyn KernelDispatch>>,
+    /// Warm per-bucket batch buffers (Q/K/V + context output), reused
+    /// across every batch this backend executes.
+    scratch: ModelScratch,
 }
 
 impl NativeBackend {
     pub fn new(cfg: NativeModelConfig) -> NativeBackend {
         NativeBackend {
             model: NativeClassifier::new(cfg.seq_len, cfg.seed),
-            threads: cfg.threads,
+            spec: cfg.spec,
+            registry: cfg.registry,
             kernels: HashMap::new(),
+            scratch: ModelScratch::new(),
         }
     }
 
@@ -85,13 +127,24 @@ impl NativeBackend {
         Ok(Box::new(NativeBackend::new(cfg)))
     }
 
-    fn ensure_kernel(&mut self, variant: &str) -> Result<()> {
-        if !self.kernels.contains_key(variant) {
-            let k = for_variant(variant, self.threads)
-                .with_context(|| format!("unknown serving variant {variant:?}"))?;
-            self.kernels.insert(variant.to_string(), k);
+    fn ensure_kernel(&mut self, variant: Variant) -> Result<()> {
+        if !self.kernels.contains_key(&variant) {
+            // The registry decides which family builds the kernel — new
+            // families plug in there (via `NativeModelConfig::registry`
+            // or the global default), not here.
+            let registry = self.registry.as_deref().unwrap_or_else(KernelRegistry::global);
+            let k = registry
+                .build(&variant, &self.spec)
+                .with_context(|| format!("no registered kernel family for variant {variant}"))?;
+            self.kernels.insert(variant, k);
         }
         Ok(())
+    }
+
+    /// Batch-buffer grow events so far (warm steady state records none;
+    /// see the warm-dispatch test).
+    pub fn scratch_grows(&self) -> u64 {
+        self.scratch.grow_events()
     }
 }
 
@@ -108,7 +161,7 @@ impl InferBackend for NativeBackend {
         n.max(1)
     }
 
-    fn preload(&mut self, variant: &str) -> Result<()> {
+    fn preload(&mut self, variant: Variant) -> Result<()> {
         self.ensure_kernel(variant)?;
         // Warm every worker of the process-wide pool for this model's
         // problem size: the first real request then dispatches with zero
@@ -121,9 +174,15 @@ impl InferBackend for NativeBackend {
         Ok(())
     }
 
-    fn run(&mut self, variant: &str, tokens: &[i32], bucket: usize) -> Result<Vec<f32>> {
+    fn run_into(
+        &mut self,
+        variant: Variant,
+        tokens: &[i32],
+        bucket: usize,
+        logits: &mut Vec<f32>,
+    ) -> Result<()> {
         self.ensure_kernel(variant)?;
-        let kernel = self.kernels.get(variant).expect("just inserted").as_ref();
+        let kernel = self.kernels.get(&variant).expect("just inserted").as_ref();
         let sl = self.model.seq_len();
         if tokens.len() != bucket * sl {
             bail!(
@@ -131,11 +190,14 @@ impl InferBackend for NativeBackend {
                 tokens.len()
             );
         }
-        // One batched dispatch for the whole bucket: the kernels
-        // parallelize over (sequence, row-range) work items and pay the
-        // thread spawn/join cost once per batch instead of once per
-        // sequence. Bit-identical to the per-sequence loop it replaced.
-        Ok(self.model.logits_batch(tokens, bucket, kernel))
+        // One batched dispatch for the whole bucket, written into the
+        // backend's warm buffers: the kernels parallelize over (sequence,
+        // row-range) work items, pay the dispatch cost once per batch,
+        // and — once the buffers have seen the bucket size — allocate
+        // nothing. Bit-identical to the per-sequence loop it replaced.
+        self.model
+            .logits_batch_into(tokens, bucket, kernel, &mut self.scratch, logits);
+        Ok(())
     }
 }
 
@@ -170,32 +232,46 @@ impl InferBackend for ArtifactBackend {
         self.registry.manifest.bucket_for(n)
     }
 
-    fn preload(&mut self, variant: &str) -> Result<()> {
-        match self.registry.preload_classifiers(variant)? {
+    fn preload(&mut self, variant: Variant) -> Result<()> {
+        // Artifact manifests key modules by the rendered variant name —
+        // Display, not a string parse.
+        match self.registry.preload_classifiers(&variant.to_string())? {
             0 => bail!("no classifier modules for variant {variant}"),
             _ => Ok(()),
         }
     }
 
-    fn run(&mut self, variant: &str, tokens: &[i32], bucket: usize) -> Result<Vec<f32>> {
+    fn run_into(
+        &mut self,
+        variant: Variant,
+        tokens: &[i32],
+        bucket: usize,
+        logits: &mut Vec<f32>,
+    ) -> Result<()> {
+        let vname = variant.to_string();
         let info = self
             .registry
             .manifest
-            .classifier(variant, bucket)
-            .with_context(|| format!("no classifier for variant={variant} bucket={bucket}"))?;
+            .classifier(&vname, bucket)
+            .with_context(|| format!("no classifier for variant={vname} bucket={bucket}"))?;
         let name = info.name.clone();
         let exe = self.registry.load(&name)?;
         let out = exe.run_f32(&[crate::runtime::Arg::i32(
             tokens.to_vec(),
             &[bucket, self.seq_len()],
         )])?;
-        out.into_iter().next().context("empty execution result")
+        let out = out.into_iter().next().context("empty execution result")?;
+        logits.clear();
+        logits.extend_from_slice(&out);
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const DSA90: Variant = Variant::Dsa { pct: 90 };
 
     #[test]
     fn native_backend_runs_batches() {
@@ -207,13 +283,40 @@ mod tests {
         assert_eq!(b.classes(), 2);
         assert_eq!(b.bucket_for(0), 1);
         assert_eq!(b.bucket_for(5), 5);
-        b.preload("dense").unwrap();
-        assert!(b.preload("bogus").is_err());
+        b.preload(Variant::Dense).unwrap();
         let tokens = vec![7i32; 2 * 256];
-        let logits = b.run("dsa90", &tokens, 2).unwrap();
+        let logits = b.run(DSA90, &tokens, 2).unwrap();
         assert_eq!(logits.len(), 4);
         assert!(logits.iter().all(|x| x.is_finite()));
-        assert!(b.run("dsa90", &tokens, 3).is_err()); // wrong bucket
+        assert!(b.run(DSA90, &tokens, 3).is_err()); // wrong bucket
+    }
+
+    /// The registry plug-in point actually reaches serving: a backend
+    /// configured with a custom registry builds kernels from it (here, a
+    /// registry that only knows the dense family — DSA variants fail
+    /// preload with "no registered kernel family" instead of silently
+    /// falling back to the global registry).
+    #[test]
+    fn custom_registry_drives_kernel_construction() {
+        use crate::kernels::dispatch::DenseKernel;
+        let mut registry = KernelRegistry::empty();
+        registry.register("dense-only", |variant, spec| match variant {
+            Variant::Dense => Some(Box::new(DenseKernel::new(spec.clone()))),
+            _ => None,
+        });
+        let mut b = NativeBackend::new(NativeModelConfig {
+            registry: Some(Arc::new(registry)),
+            ..Default::default()
+        });
+        b.preload(Variant::Dense).unwrap();
+        let err = b.preload(DSA90).expect_err("family not registered");
+        assert!(
+            format!("{err:#}").contains("no registered kernel family"),
+            "custom registry must be consulted, not the global one"
+        );
+        let tokens = vec![7i32; 256];
+        assert_eq!(b.run(Variant::Dense, &tokens, 1).unwrap().len(), 2);
+        assert!(b.run(DSA90, &tokens, 1).is_err());
     }
 
     #[test]
@@ -229,11 +332,51 @@ mod tests {
         for _ in 0..3 {
             tokens.extend(wl.next_request().tokens);
         }
-        let batched = b.run("dense", &tokens, 3).unwrap();
+        let batched = b.run(Variant::Dense, &tokens, 3).unwrap();
         let mut looped = Vec::new();
         for seq in tokens.chunks_exact(256) {
-            looped.extend(b.run("dense", seq, 1).unwrap());
+            looped.extend(b.run(Variant::Dense, seq, 1).unwrap());
         }
         assert_eq!(batched, looped);
+    }
+
+    /// The engine-facing acceptance test for the allocation-free serving
+    /// path (warm-scratch style): once the backend has executed a bucket
+    /// size, further batches at that size — same or different variants —
+    /// record **zero** batch-buffer grows and reuse the worker-owned
+    /// logits buffer without regrowing it.
+    #[test]
+    fn warm_backend_dispatch_is_allocation_free() {
+        use crate::workload::{Workload, WorkloadConfig};
+        let mut b = NativeBackend::new(NativeModelConfig::default());
+        b.preload(Variant::Dense).unwrap();
+        b.preload(DSA90).unwrap();
+        let mut wl = Workload::new(WorkloadConfig {
+            seq_len: 256,
+            seed: 2024,
+            ..Default::default()
+        });
+        let bucket = 4;
+        let mut tokens = Vec::with_capacity(bucket * 256);
+        for _ in 0..bucket {
+            tokens.extend(wl.next_request().tokens);
+        }
+        // Cold pass grows the buffers (and lazily, nothing else after).
+        let mut logits = Vec::new();
+        b.run_into(Variant::Dense, &tokens, bucket, &mut logits).unwrap();
+        let first = logits.clone();
+        let warm = b.scratch_grows();
+        let warm_cap = logits.capacity();
+        assert!(warm >= 1, "cold dispatch must have grown the batch buffers");
+        // Steady state: same bucket, both variants, smaller buckets.
+        for _ in 0..3 {
+            b.run_into(Variant::Dense, &tokens, bucket, &mut logits).unwrap();
+            assert_eq!(logits, first, "warm dispatch changed logits");
+            b.run_into(DSA90, &tokens, bucket, &mut logits).unwrap();
+            b.run_into(Variant::Dense, &tokens[..256], 1, &mut logits).unwrap();
+            assert_eq!(&logits[..], &first[..2]);
+        }
+        assert_eq!(b.scratch_grows(), warm, "warm dispatch allocated batch buffers");
+        assert_eq!(logits.capacity(), warm_cap, "worker logits buffer regrew");
     }
 }

@@ -106,7 +106,7 @@ impl Batcher {
         let Some(head) = self.queue.pop_front() else {
             return Vec::new();
         };
-        let variant = head.variant.clone();
+        let variant = head.variant;
         let mut batch = vec![head];
         let mut i = 0;
         while i < self.queue.len() && batch.len() < self.policy.max_batch {
@@ -128,7 +128,7 @@ mod tests {
     fn req(id: u64, variant: Option<&str>) -> InferRequest {
         let mut r = InferRequest::new(id, vec![0; 4]);
         if let Some(v) = variant {
-            r = r.with_variant(v);
+            r = r.with_variant(v.parse::<crate::kernels::Variant>().unwrap());
         }
         r
     }

@@ -31,12 +31,16 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::request::{InferRequest, InferResponse};
 use super::router::AdaptiveRouter;
+use crate::kernels::Variant;
 use crate::util::error::{bail, Context, Result};
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
-    pub default_variant: String,
+    /// Typed serving variant for batches without an override — parse CLI
+    /// or config strings once via `Variant::from_str` before building
+    /// this (an unknown variant can then never reach the worker loop).
+    pub default_variant: Variant,
     pub policy: BatchPolicy,
     /// Eagerly warm up the default variant at startup.
     pub preload: bool,
@@ -51,7 +55,7 @@ pub struct EngineConfig {
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
-            default_variant: "dsa90".to_string(),
+            default_variant: Variant::Dsa { pct: 90 },
             policy: BatchPolicy::default(),
             preload: true,
             router: None,
@@ -101,7 +105,7 @@ impl Engine {
                         }
                     };
                     if cfg.preload {
-                        if let Err(e) = backend.preload(&cfg.default_variant) {
+                        if let Err(e) = backend.preload(cfg.default_variant) {
                             let _ = ready_tx.send(Err(e.context("preload")));
                             return;
                         }
@@ -168,10 +172,13 @@ impl Engine {
     }
 
     /// Submit a request; returns the channel delivering its response.
+    /// The variant override is typed — protocol/CLI strings are parsed
+    /// once at their boundary (`Variant::from_str`), so a bad name is
+    /// rejected before it ever reaches the queue.
     pub fn submit(
         &self,
         tokens: Vec<i32>,
-        variant: Option<String>,
+        variant: Option<Variant>,
     ) -> Result<Receiver<InferResponse>> {
         if tokens.len() != self.seq_len {
             bail!(
@@ -191,7 +198,7 @@ impl Engine {
     }
 
     /// Convenience: submit and block for the response.
-    pub fn infer(&self, tokens: Vec<i32>, variant: Option<String>) -> Result<InferResponse> {
+    pub fn infer(&self, tokens: Vec<i32>, variant: Option<Variant>) -> Result<InferResponse> {
         let rx = self.submit(tokens, variant)?;
         rx.recv().context("engine dropped request")
     }
@@ -224,6 +231,11 @@ fn worker_loop(
     // Response channels parked by request id.
     let mut waiters: std::collections::HashMap<u64, Sender<InferResponse>> =
         std::collections::HashMap::new();
+    // Warm per-batch buffers, reused across every batch this worker
+    // executes: together with the backend's own batch buffers
+    // (`ModelScratch`) and `forward_batch_into`, the steady-state loop
+    // performs zero per-batch output allocations.
+    let mut buffers = BatchBuffers::default();
 
     'outer: while running.load(Ordering::SeqCst) {
         // Sleep until the next deadline (or a message arrives).
@@ -273,7 +285,9 @@ fn worker_loop(
             // Live load signal for the router: the backlog this batch
             // leaves behind in the queue.
             let depth = batcher.len();
-            execute_batch(backend, &cfg, &mut router, depth, batch, &mut waiters, &metrics);
+            execute_batch(
+                backend, &cfg, &mut router, depth, batch, &mut waiters, &metrics, &mut buffers,
+            );
         }
     }
 
@@ -281,8 +295,20 @@ fn worker_loop(
     while !batcher.is_empty() {
         let batch = batcher.cut();
         let depth = batcher.len();
-        execute_batch(backend, &cfg, &mut router, depth, batch, &mut waiters, &metrics);
+        execute_batch(
+            backend, &cfg, &mut router, depth, batch, &mut waiters, &metrics, &mut buffers,
+        );
     }
+}
+
+/// Worker-owned buffers reused across batches (padded token input and
+/// backend logits output). They grow to the largest bucket seen and stay
+/// warm: the steady-state per-batch path allocates neither.
+#[derive(Default)]
+struct BatchBuffers {
+    tokens: Vec<i32>,
+    logits: Vec<f32>,
+    lat_pairs: Vec<(f64, f64)>,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -294,28 +320,30 @@ fn execute_batch(
     batch: Vec<InferRequest>,
     waiters: &mut std::collections::HashMap<u64, Sender<InferResponse>>,
     metrics: &Metrics,
+    buffers: &mut BatchBuffers,
 ) {
     // Explicit per-request variant overrides always win; otherwise the
     // adaptive router (when configured) picks the rung for the current
     // load, and the decision is recorded before the batch runs.
-    let variant = match &batch[0].variant {
-        Some(v) => v.clone(),
+    let variant = match batch[0].variant {
+        Some(v) => v,
         None => match router.as_mut() {
             Some(r) => {
-                let v = r.select(queue_depth).to_string();
-                metrics.record_routed(&v);
+                let v = r.select(queue_depth);
+                metrics.record_routed(v);
                 v
             }
-            None => cfg.default_variant.clone(),
+            None => cfg.default_variant,
         },
     };
     let n = batch.len();
     let bucket = backend.bucket_for(n);
-    let seq_len = backend.seq_len();
     let classes = backend.classes();
 
-    // Pad to the bucket with the first request's tokens.
-    let mut tokens = Vec::with_capacity(bucket * seq_len);
+    // Pad to the bucket with the first request's tokens, into the warm
+    // worker-owned buffer.
+    let tokens = &mut buffers.tokens;
+    tokens.clear();
     for r in &batch {
         tokens.extend_from_slice(&r.tokens);
     }
@@ -324,21 +352,20 @@ fn execute_batch(
     }
 
     let exec_start = Instant::now();
-    let logits = match backend.run(&variant, &tokens, bucket) {
-        Ok(o) => o,
-        Err(e) => {
-            crate::log_error!("executing variant={variant} bucket={bucket}: {e}");
-            for r in &batch {
-                waiters.remove(&r.id);
-            }
-            return;
+    let logits = &mut buffers.logits;
+    if let Err(e) = backend.run_into(variant, tokens, bucket, logits) {
+        crate::log_error!("executing variant={variant} bucket={bucket}: {e}");
+        for r in &batch {
+            waiters.remove(&r.id);
         }
-    };
+        return;
+    }
     debug_assert_eq!(logits.len(), bucket * classes);
 
     let done = Instant::now();
     let mut responses = Vec::with_capacity(n);
-    let mut lat_pairs = Vec::with_capacity(n);
+    let lat_pairs = &mut buffers.lat_pairs;
+    lat_pairs.clear();
     for (i, r) in batch.iter().enumerate() {
         let l = logits[i * classes..(i + 1) * classes].to_vec();
         let resp = InferResponse {
@@ -349,7 +376,7 @@ fn execute_batch(
             queue_time: exec_start.duration_since(r.enqueued),
             batch_size: n,
             bucket,
-            variant: variant.clone(),
+            variant,
         };
         lat_pairs.push((
             resp.latency.as_secs_f64(),
@@ -359,7 +386,7 @@ fn execute_batch(
     }
     // Record metrics BEFORE waking waiters: a client that reads its reply
     // and immediately queries /metrics must see its own request counted.
-    metrics.record_batch(&variant, n, &lat_pairs);
+    metrics.record_batch(variant, n, lat_pairs);
     // Pool counters ride along when the native kernels have started the
     // global pool; a PJRT-only serving path must not spawn one just to
     // report zeros.

@@ -8,22 +8,26 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::kernels::pool::PoolStats;
+use crate::kernels::Variant;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 #[derive(Default)]
 struct Inner {
-    latency: BTreeMap<String, Summary>,
-    queue_time: BTreeMap<String, Summary>,
+    // Keyed by the typed `Variant` (Copy + Ord): the per-batch recording
+    // path allocates no key strings — names render via Display only when
+    // a report/JSON snapshot is taken.
+    latency: BTreeMap<Variant, Summary>,
+    queue_time: BTreeMap<Variant, Summary>,
     batch_occupancy: Summary,
     completed: u64,
     rejected: u64,
     batches: u64,
     started: Option<Instant>,
     /// Adaptive-router decisions: variant -> batches routed there.
-    routed: BTreeMap<String, u64>,
+    routed: BTreeMap<Variant, u64>,
     /// Most recent router rung (None until the router decides once).
-    router_rung: Option<String>,
+    router_rung: Option<Variant>,
     /// Latest worker-pool snapshot (None until a batch executed).
     pool: Option<PoolStats>,
 }
@@ -41,16 +45,19 @@ impl Metrics {
         m
     }
 
-    pub fn record_batch(&self, variant: &str, occupancy: usize, latencies_s: &[(f64, f64)]) {
+    /// Record one executed batch under the typed serving variant —
+    /// allocation-free: the `Variant` key is `Copy`, so nothing is
+    /// heap-allocated inside the metrics mutex on the per-batch path.
+    pub fn record_batch(&self, variant: Variant, occupancy: usize, latencies_s: &[(f64, f64)]) {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
         g.batch_occupancy.add(occupancy as f64);
         g.completed += latencies_s.len() as u64;
-        let lat = g.latency.entry(variant.to_string()).or_default();
+        let lat = g.latency.entry(variant).or_default();
         for (l, _) in latencies_s {
             lat.add(*l);
         }
-        let qt = g.queue_time.entry(variant.to_string()).or_default();
+        let qt = g.queue_time.entry(variant).or_default();
         for (_, q) in latencies_s {
             qt.add(*q);
         }
@@ -61,10 +68,10 @@ impl Metrics {
     }
 
     /// Record an adaptive-router decision: one batch routed to `variant`.
-    pub fn record_routed(&self, variant: &str) {
+    pub fn record_routed(&self, variant: Variant) {
         let mut g = self.inner.lock().unwrap();
-        *g.routed.entry(variant.to_string()).or_insert(0) += 1;
-        g.router_rung = Some(variant.to_string());
+        *g.routed.entry(variant).or_insert(0) += 1;
+        g.router_rung = Some(variant);
     }
 
     /// Record the latest worker-pool counters (taken after each batch).
@@ -102,7 +109,7 @@ impl Metrics {
                 }
             }
         );
-        let variants: Vec<String> = g.latency.keys().cloned().collect();
+        let variants: Vec<Variant> = g.latency.keys().copied().collect();
         for v in variants {
             let line = g.latency.get_mut(&v).unwrap().report_ms(&format!("  {v} latency"));
             s.push_str(&line);
@@ -146,12 +153,12 @@ impl Metrics {
                 Json::num(g.completed as f64 / t0.elapsed().as_secs_f64().max(1e-9)),
             ));
         }
-        let variants: Vec<String> = g.latency.keys().cloned().collect();
+        let variants: Vec<Variant> = g.latency.keys().copied().collect();
         let mut per_variant = Vec::new();
         for v in variants {
             let lat = g.latency.get_mut(&v).unwrap();
             per_variant.push(Json::obj(vec![
-                ("variant", Json::str(v.clone())),
+                ("variant", Json::str(v.to_string())),
                 ("n", Json::num(lat.len() as f64)),
                 ("mean_ms", Json::num(lat.mean() * 1e3)),
                 ("p50_ms", Json::num(lat.percentile(50.0) * 1e3)),
@@ -160,17 +167,18 @@ impl Metrics {
             ]));
         }
         obj.push(("variants", Json::Arr(per_variant)));
-        if let Some(rung) = &g.router_rung {
-            let routed: Vec<(&str, Json)> = g
-                .routed
-                .iter()
-                .map(|(v, &n)| (v.as_str(), Json::num(n as f64)))
-                .collect();
+        if let Some(rung) = g.router_rung {
+            let routed = Json::Obj(
+                g.routed
+                    .iter()
+                    .map(|(v, &n)| (v.to_string(), Json::num(n as f64)))
+                    .collect(),
+            );
             obj.push((
                 "router",
                 Json::obj(vec![
-                    ("rung", Json::str(rung.clone())),
-                    ("routed_batches", Json::obj(routed)),
+                    ("rung", Json::str(rung.to_string())),
+                    ("routed_batches", routed),
                 ]),
             ));
         }
@@ -197,8 +205,9 @@ mod tests {
     #[test]
     fn records_and_reports() {
         let m = Metrics::new();
-        m.record_batch("dense", 3, &[(0.010, 0.001), (0.012, 0.002), (0.011, 0.001)]);
-        m.record_batch("dense", 1, &[(0.020, 0.005)]);
+        let dense = Variant::Dense;
+        m.record_batch(dense, 3, &[(0.010, 0.001), (0.012, 0.002), (0.011, 0.001)]);
+        m.record_batch(dense, 1, &[(0.020, 0.005)]);
         m.record_rejected(2);
         assert_eq!(m.completed(), 4);
         let j = m.to_json();
@@ -214,9 +223,9 @@ mod tests {
     #[test]
     fn router_and_pool_sections_surface() {
         let m = Metrics::new();
-        m.record_routed("dense");
-        m.record_routed("dsa90");
-        m.record_routed("dsa90");
+        m.record_routed(Variant::Dense);
+        m.record_routed(Variant::Dsa { pct: 90 });
+        m.record_routed(Variant::Dsa { pct: 90 });
         m.record_pool(PoolStats {
             workers: 4,
             dispatches: 7,

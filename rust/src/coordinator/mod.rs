@@ -1,15 +1,21 @@
 //! L3 coordinator: the serving-side contribution of the stack.
 //!
-//! * [`request`] — request/response types.
+//! * [`request`] — request/response types; variants are the typed
+//!   `kernels::Variant` end to end (strings parse once at the
+//!   protocol/CLI boundary).
 //! * [`batcher`] — dynamic batching policy (max-batch / deadline / variant
 //!   grouping / backpressure).
-//! * [`backend`] — execution backends: hermetic native kernels (always)
-//!   and PJRT artifacts (`xla` feature).
+//! * [`backend`] — execution backends: hermetic native kernels (always;
+//!   kernels built from `Variant` via the global `KernelRegistry`, batches
+//!   run through warm buffers + `forward_batch_into`, so the steady-state
+//!   loop makes zero per-batch output allocations) and PJRT artifacts
+//!   (`xla` feature).
 //! * [`engine`] — worker loop: batch → route variant (optionally via the
-//!   adaptive router) → pad to bucket → backend execute → fan out
-//!   responses.
+//!   adaptive router) → pad to bucket (warm worker-owned buffers) →
+//!   backend `run_into` → fan out responses.
 //! * [`router`] — queue-depth-driven variant ladder (dense → dsa90 →
-//!   dsa95) the engine worker consults per batch.
+//!   dsa95) the engine worker consults per batch; typed rungs,
+//!   `AdaptiveRouter::from_pairs` validates names at construction.
 //! * [`metrics`] — latency/throughput/occupancy accounting plus router
 //!   decisions and worker-pool counters.
 

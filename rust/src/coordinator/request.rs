@@ -1,14 +1,20 @@
-//! Request / response types flowing through the serving engine.
+//! Request / response types flowing through the serving engine. Variants
+//! are carried as the typed [`Variant`] — parsing happens once at the
+//! protocol/CLI boundary (`Variant::from_str`), so an unknown variant can
+//! never reach the batcher or a backend.
 
 use std::time::{Duration, Instant};
+
+use crate::kernels::Variant;
 
 /// A single classification request (token ids, already tokenized).
 #[derive(Debug, Clone)]
 pub struct InferRequest {
     pub id: u64,
     pub tokens: Vec<i32>,
-    /// Model variant override ("dense", "dsa90", ...); None = engine default.
-    pub variant: Option<String>,
+    /// Model variant override; `None` = engine default (or the adaptive
+    /// router's pick).
+    pub variant: Option<Variant>,
     pub enqueued: Instant,
 }
 
@@ -22,8 +28,8 @@ impl InferRequest {
         }
     }
 
-    pub fn with_variant(mut self, v: impl Into<String>) -> Self {
-        self.variant = Some(v.into());
+    pub fn with_variant(mut self, v: Variant) -> Self {
+        self.variant = Some(v);
         self
     }
 }
@@ -42,7 +48,9 @@ pub struct InferResponse {
     pub batch_size: usize,
     /// Executable bucket it ran under (after padding).
     pub bucket: usize,
-    pub variant: String,
+    /// The variant that actually served this request (typed; render with
+    /// `to_string()` at protocol boundaries).
+    pub variant: Variant,
 }
 
 impl InferResponse {

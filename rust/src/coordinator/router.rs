@@ -10,11 +10,20 @@
 //! decision is recorded in `Metrics` (`router` section of the stats
 //! JSON). The ablation bench exercises the same ladder (`bench_serving`
 //! closed-loop rows give the per-variant costs the thresholds encode).
+//!
+//! Rungs carry the **typed** [`Variant`]: a ladder built from
+//! configuration strings goes through [`AdaptiveRouter::from_pairs`],
+//! which validates every rung via `Variant::from_str` at construction —
+//! a typo'd rung fails engine startup instead of silently routing batches
+//! to a dead variant at runtime.
+
+use crate::kernels::Variant;
+use crate::util::error::{bail, Context, Result};
 
 /// One rung of the policy ladder.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct Rung {
-    pub variant: String,
+    pub variant: Variant,
     /// Route here once queue depth is >= this threshold.
     pub min_queue: usize,
 }
@@ -31,37 +40,69 @@ pub struct AdaptiveRouter {
 }
 
 impl AdaptiveRouter {
-    /// Build from (variant, min_queue) pairs.
-    ///
-    /// Panics if empty, unsorted, or rung 0 is not the zero-threshold rung.
+    /// Build from typed rungs, panicking on a malformed ladder
+    /// (programmer error in code-constructed ladders; config-derived
+    /// ladders go through [`AdaptiveRouter::from_pairs`], which returns
+    /// `Err` instead). Both paths share [`AdaptiveRouter::from_rungs`],
+    /// so the two construction routes can never enforce different rules.
     pub fn new(rungs: Vec<Rung>, hysteresis: usize) -> Self {
-        assert!(!rungs.is_empty(), "need at least one rung");
-        assert_eq!(rungs[0].min_queue, 0, "rung 0 must cover empty queues");
-        assert!(
-            rungs.windows(2).all(|w| w[0].min_queue < w[1].min_queue),
-            "rungs must be strictly ascending in min_queue"
-        );
-        AdaptiveRouter {
-            rungs,
-            hysteresis,
-            current: 0,
+        AdaptiveRouter::from_rungs(rungs, hysteresis).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// The single validating constructor: non-empty ladder, rung 0 covers
+    /// depth 0, thresholds strictly ascending.
+    pub fn from_rungs(rungs: Vec<Rung>, hysteresis: usize) -> Result<AdaptiveRouter> {
+        if rungs.is_empty() {
+            bail!("router ladder needs at least one rung");
         }
+        if rungs[0].min_queue != 0 {
+            bail!(
+                "router rung 0 ({}) must have min_queue 0 to cover empty queues",
+                rungs[0].variant
+            );
+        }
+        if let Some(w) = rungs.windows(2).find(|w| w[0].min_queue >= w[1].min_queue) {
+            bail!(
+                "router rungs must be strictly ascending in min_queue ({} at {} then {} at {})",
+                w[0].variant,
+                w[0].min_queue,
+                w[1].variant,
+                w[1].min_queue
+            );
+        }
+        Ok(AdaptiveRouter { rungs, hysteresis, current: 0 })
+    }
+
+    /// Build a ladder from `(variant name, min_queue)` pairs, validating
+    /// each name via `Variant::from_str` (the error names the offending
+    /// rung) before handing the typed rungs to
+    /// [`AdaptiveRouter::from_rungs`] — a bad config fails engine startup
+    /// instead of routing to a dead variant at runtime.
+    pub fn from_pairs(pairs: &[(&str, usize)], hysteresis: usize) -> Result<AdaptiveRouter> {
+        let mut rungs = Vec::with_capacity(pairs.len());
+        for (name, min_queue) in pairs {
+            let variant = name
+                .parse::<Variant>()
+                .with_context(|| format!("router rung at min_queue {min_queue}"))?;
+            rungs.push(Rung { variant, min_queue: *min_queue });
+        }
+        AdaptiveRouter::from_rungs(rungs, hysteresis)
     }
 
     /// The ladder used by the serving example: dense → dsa90 → dsa95.
     pub fn default_ladder() -> Self {
         AdaptiveRouter::new(
             vec![
-                Rung { variant: "dense".into(), min_queue: 0 },
-                Rung { variant: "dsa90".into(), min_queue: 8 },
-                Rung { variant: "dsa95".into(), min_queue: 32 },
+                Rung { variant: Variant::Dense, min_queue: 0 },
+                Rung { variant: Variant::Dsa { pct: 90 }, min_queue: 8 },
+                Rung { variant: Variant::Dsa { pct: 95 }, min_queue: 32 },
             ],
             2,
         )
     }
 
     /// Select the variant for the next batch given the current queue depth.
-    pub fn select(&mut self, queue_depth: usize) -> &str {
+    pub fn select(&mut self, queue_depth: usize) -> Variant {
         // escalate while the next rung's threshold is met
         while self.current + 1 < self.rungs.len()
             && queue_depth >= self.rungs[self.current + 1].min_queue
@@ -74,18 +115,18 @@ impl AdaptiveRouter {
         {
             self.current -= 1;
         }
-        &self.rungs[self.current].variant
+        self.rungs[self.current].variant
     }
 
-    pub fn current_variant(&self) -> &str {
-        &self.rungs[self.current].variant
+    pub fn current_variant(&self) -> Variant {
+        self.rungs[self.current].variant
     }
 
-    /// Variant name of every rung, densest first — the engine preloads
-    /// all of them at startup so a mid-burst escalation never pays (or
-    /// fails) lazy kernel instantiation.
-    pub fn variants(&self) -> impl Iterator<Item = &str> {
-        self.rungs.iter().map(|r| r.variant.as_str())
+    /// Variant of every rung, densest first — the engine preloads all of
+    /// them at startup so a mid-burst escalation never pays (or fails)
+    /// lazy kernel instantiation.
+    pub fn variants(&self) -> impl Iterator<Item = Variant> + '_ {
+        self.rungs.iter().map(|r| r.variant)
     }
 }
 
@@ -97,49 +138,80 @@ mod tests {
         AdaptiveRouter::default_ladder()
     }
 
+    const DENSE: Variant = Variant::Dense;
+    const DSA90: Variant = Variant::Dsa { pct: 90 };
+    const DSA95: Variant = Variant::Dsa { pct: 95 };
+
     #[test]
     fn exposes_rung_variants_in_order() {
         let r = ladder();
-        let vs: Vec<&str> = r.variants().collect();
-        assert_eq!(vs, vec!["dense", "dsa90", "dsa95"]);
+        let vs: Vec<Variant> = r.variants().collect();
+        assert_eq!(vs, vec![DENSE, DSA90, DSA95]);
     }
 
     #[test]
     fn starts_dense() {
         let mut r = ladder();
-        assert_eq!(r.select(0), "dense");
-        assert_eq!(r.select(7), "dense");
+        assert_eq!(r.select(0), DENSE);
+        assert_eq!(r.select(7), DENSE);
     }
 
     #[test]
     fn escalates_under_load() {
         let mut r = ladder();
-        assert_eq!(r.select(8), "dsa90");
-        assert_eq!(r.select(40), "dsa95");
+        assert_eq!(r.select(8), DSA90);
+        assert_eq!(r.select(40), DSA95);
     }
 
     #[test]
     fn skips_rungs_on_burst() {
         let mut r = ladder();
-        assert_eq!(r.select(100), "dsa95");
+        assert_eq!(r.select(100), DSA95);
     }
 
     #[test]
     fn hysteresis_prevents_flapping() {
         let mut r = ladder();
-        assert_eq!(r.select(8), "dsa90");
+        assert_eq!(r.select(8), DSA90);
         // depth 7 is below the threshold but inside the hysteresis band
-        assert_eq!(r.select(7), "dsa90");
-        assert_eq!(r.select(6), "dsa90");
+        assert_eq!(r.select(7), DSA90);
+        assert_eq!(r.select(6), DSA90);
         // only well below does it de-escalate
-        assert_eq!(r.select(5), "dense");
+        assert_eq!(r.select(5), DENSE);
     }
 
     #[test]
     fn de_escalates_fully_when_idle() {
         let mut r = ladder();
         r.select(100);
-        assert_eq!(r.select(0), "dense");
+        assert_eq!(r.select(0), DENSE);
+    }
+
+    /// The `from_pairs` satellite: valid ladders construct (typed,
+    /// matching the code-built equivalent), while a typo'd rung — or a
+    /// malformed ladder shape — fails with an error at construction, i.e.
+    /// at engine startup, never as a dead route at runtime.
+    #[test]
+    fn from_pairs_validates_rungs_at_construction() {
+        let r = AdaptiveRouter::from_pairs(&[("dense", 0), ("dsa90", 8), ("dsa95", 32)], 2)
+            .expect("valid ladder");
+        let vs: Vec<Variant> = r.variants().collect();
+        assert_eq!(vs, vec![DENSE, DSA90, DSA95]);
+
+        let typo = AdaptiveRouter::from_pairs(&[("dense", 0), ("dsa9O", 8)], 2);
+        let msg = format!("{:#}", typo.expect_err("typo'd rung must fail"));
+        assert!(msg.contains("dsa9O"), "error must name the bad variant: {msg}");
+        assert!(msg.contains("min_queue 8"), "error must locate the rung: {msg}");
+
+        assert!(AdaptiveRouter::from_pairs(&[], 1).is_err(), "empty ladder");
+        assert!(
+            AdaptiveRouter::from_pairs(&[("dense", 3)], 1).is_err(),
+            "first rung must cover depth 0"
+        );
+        assert!(
+            AdaptiveRouter::from_pairs(&[("dense", 0), ("dsa90", 5), ("dsa95", 5)], 1).is_err(),
+            "non-ascending thresholds"
+        );
     }
 
     #[test]
@@ -147,9 +219,9 @@ mod tests {
     fn rejects_unsorted_rungs() {
         AdaptiveRouter::new(
             vec![
-                Rung { variant: "a".into(), min_queue: 0 },
-                Rung { variant: "b".into(), min_queue: 5 },
-                Rung { variant: "c".into(), min_queue: 5 },
+                Rung { variant: DENSE, min_queue: 0 },
+                Rung { variant: DSA90, min_queue: 5 },
+                Rung { variant: DSA95, min_queue: 5 },
             ],
             1,
         );

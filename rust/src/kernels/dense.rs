@@ -26,21 +26,27 @@
 
 use super::scratch::Scratch;
 use super::simd;
+use super::tiles::{Tile, MAX_QUERY_BLOCK};
 
-/// Keys (and value rows) per K/V tile of the fused kernels. At the bench
+/// Keys (and value rows) per K/V tile of the fused kernels — the
+/// [`Tile::DEFAULT`] fallback every shape runs at unless a
+/// [`TilePlan`](super::tiles::TilePlan) entry overrides it. At the bench
 /// head width `d = 64` one K tile plus one V tile is `2 · 256 · 64 · 4 B
 /// = 128 KiB` — resident in any contemporary L2 — and the per-row score
-/// buffer is `tile` floats instead of `l`. Fixed (not autotuned) because
-/// the fused outputs depend on the tile size: one constant keeps results
-/// bit-identical across thread counts, dispatch backends and batch
-/// shapes.
+/// buffer is `tile` floats instead of `l`. The fused outputs depend on
+/// the tile size, so whatever tile runs must be **fixed per shape before
+/// dispatch** (one constant here, or one committed plan entry per
+/// `(l, dk)`): that keeps results bit-identical across thread counts,
+/// dispatch backends and batch shapes.
 pub const KEY_TILE: usize = 256;
 
-/// Query rows processed per tile pass of the fused kernels: each K/V tile
-/// is streamed from memory once and reused by this many query rows, so
-/// tile traffic drops by `QUERY_BLOCK`× vs the unfused per-row streaming.
-/// Per-row results never depend on this blocking (each row owns its
-/// running max / denominator / accumulator) — only locality does.
+/// Query rows processed per tile pass of the fused kernels (the
+/// [`Tile::DEFAULT`] fallback): each K/V tile is streamed from memory
+/// once and reused by this many query rows, so tile traffic drops by
+/// `QUERY_BLOCK`× vs the unfused per-row streaming. Per-row results never
+/// depend on this blocking (each row owns its running max / denominator /
+/// accumulator) — only locality does. Per-shape overrides are capped at
+/// [`MAX_QUERY_BLOCK`] (the kernels' stack-array bound).
 pub const QUERY_BLOCK: usize = 8;
 
 /// Scaled attention scores for query row `r`:
@@ -154,14 +160,12 @@ pub fn attention_rows_fused_scratch(
     out: &mut [f32],
     scratch: &mut Scratch,
 ) {
-    attention_rows_fused_tile_scratch(q, k, v, l, dk, dv, r0, r1, out, scratch, KEY_TILE);
+    attention_rows_fused_tiled_scratch(q, k, v, l, dk, dv, r0, r1, out, scratch, Tile::DEFAULT);
 }
 
-/// [`attention_rows_fused_scratch`] with an explicit tile size (the
-/// property tests sweep it; production uses [`KEY_TILE`], and fused
-/// outputs are only comparable bit-for-bit at equal tile sizes). The
-/// score tile reuses `scratch.row`, so a warm scratch runs the whole loop
-/// allocation-free; running max / denominator live on the stack.
+/// [`attention_rows_fused_scratch`] with an explicit key-tile size at the
+/// default query block (the property tests sweep it; fused outputs are
+/// only comparable bit-for-bit at equal key-tile sizes).
 #[allow(clippy::too_many_arguments)]
 pub fn attention_rows_fused_tile_scratch(
     q: &[f32],
@@ -176,23 +180,49 @@ pub fn attention_rows_fused_tile_scratch(
     scratch: &mut Scratch,
     tile: usize,
 ) {
+    let tile = Tile { key_tile: tile, query_block: QUERY_BLOCK };
+    attention_rows_fused_tiled_scratch(q, k, v, l, dk, dv, r0, r1, out, scratch, tile);
+}
+
+/// The fused-kernel primitive: [`attention_rows_fused_scratch`] with an
+/// explicit [`Tile`] geometry (one `TilePlan` entry — production resolves
+/// it per `(l, dk)` shape before dispatch, so results stay bit-identical
+/// across thread counts and backends; see `kernels::tiles`). The score
+/// tile reuses `scratch.row`, so a warm scratch runs the whole loop
+/// allocation-free; per-row running state lives in
+/// [`MAX_QUERY_BLOCK`]-sized stack arrays (the `query_block` cap).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_rows_fused_tiled_scratch(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+    scratch: &mut Scratch,
+    tile: Tile,
+) {
     debug_assert_eq!(out.len(), (r1 - r0) * dv);
     if r0 == r1 {
         return;
     }
-    let tile = tile.clamp(1, l.max(1));
+    let kt = tile.key_tile.clamp(1, l.max(1));
+    let qb = tile.query_block.clamp(1, MAX_QUERY_BLOCK);
     scratch.reserve(l, 0);
     let scale = 1.0 / (dk as f32).sqrt();
     let mut rb = r0;
     while rb < r1 {
-        let re = (rb + QUERY_BLOCK).min(r1);
-        let mut mx = [f32::NEG_INFINITY; QUERY_BLOCK];
-        let mut den = [0.0f32; QUERY_BLOCK];
-        let mut nanp = [false; QUERY_BLOCK];
+        let re = (rb + qb).min(r1);
+        let mut mx = [f32::NEG_INFINITY; MAX_QUERY_BLOCK];
+        let mut den = [0.0f32; MAX_QUERY_BLOCK];
+        let mut nanp = [false; MAX_QUERY_BLOCK];
         out[(rb - r0) * dv..(re - r0) * dv].fill(0.0);
         let mut c0 = 0;
         while c0 < l {
-            let c1 = (c0 + tile).min(l);
+            let c1 = (c0 + kt).min(l);
             let buf = &mut scratch.row[..c1 - c0];
             for r in rb..re {
                 let bi = r - rb;
@@ -240,7 +270,8 @@ pub fn attention_fused(
     attention_fused_tile(q, k, v, l, dk, dv, KEY_TILE)
 }
 
-/// [`attention_fused`] with an explicit tile size (test sweeps).
+/// [`attention_fused`] with an explicit key-tile size at the default
+/// query block (test sweeps).
 pub fn attention_fused_tile(
     q: &[f32],
     k: &[f32],
@@ -250,12 +281,28 @@ pub fn attention_fused_tile(
     dv: usize,
     tile: usize,
 ) -> Vec<f32> {
+    let tile = Tile { key_tile: tile, query_block: QUERY_BLOCK };
+    attention_fused_tiled(q, k, v, l, dk, dv, tile)
+}
+
+/// [`attention_fused`] with an explicit [`Tile`] geometry — the
+/// single-threaded reference of the per-shape `TilePlan` paths (and the
+/// `bench_kernels` tile-sweep kernel).
+pub fn attention_fused_tiled(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    tile: Tile,
+) -> Vec<f32> {
     assert_eq!(q.len(), l * dk, "q shape");
     assert_eq!(k.len(), l * dk, "k shape");
     assert_eq!(v.len(), l * dv, "v shape");
     let mut out = vec![0f32; l * dv];
     let mut scratch = Scratch::new();
-    attention_rows_fused_tile_scratch(q, k, v, l, dk, dv, 0, l, &mut out, &mut scratch, tile);
+    attention_rows_fused_tiled_scratch(q, k, v, l, dk, dv, 0, l, &mut out, &mut scratch, tile);
     out
 }
 
@@ -586,6 +633,33 @@ mod tests {
             attention_rows_fused_scratch(&q, &k, &v, l, dk, dv, 0, mid, a, &mut scratch);
             attention_rows_fused_scratch(&q, &k, &v, l, dk, dv, mid, l, b, &mut scratch);
             assert_eq!(whole, split, "split at {mid}");
+        }
+    }
+
+    /// The query block is pure locality: every row owns its running
+    /// max / denominator / accumulator, so any `query_block` (1 up to the
+    /// stack cap) reproduces the default bit for bit at equal key tile.
+    /// This is what lets a `TilePlan` tune `query_block` freely without
+    /// ever moving outputs.
+    #[test]
+    fn fused_query_block_never_changes_results() {
+        use crate::kernels::tiles::{Tile, MAX_QUERY_BLOCK};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(83);
+        let (l, dk, dv) = (43, 6, 5); // ragged vs every block size
+        let q: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..l * dv).map(|_| rng.normal() as f32).collect();
+        for kt in [1, 7, 64, KEY_TILE] {
+            let want = attention_fused_tile(&q, &k, &v, l, dk, dv, kt);
+            for qb in [1, 2, 3, 5, QUERY_BLOCK, 16, MAX_QUERY_BLOCK, MAX_QUERY_BLOCK + 9] {
+                let tile = Tile { key_tile: kt, query_block: qb };
+                assert_eq!(
+                    attention_fused_tiled(&q, &k, &v, l, dk, dv, tile),
+                    want,
+                    "key_tile={kt} query_block={qb} moved fused outputs"
+                );
+            }
         }
     }
 

@@ -1,25 +1,49 @@
-//! [`KernelDispatch`]: one call surface over the native attention paths so
-//! the engine backend, tests and benches can switch dense vs dynamic
-//! sparse (and single- vs multi-threaded) without caring which kernels
-//! run. Serving variant names ("dense", "dsa90", "dsa95", "dsa99", …)
-//! resolve through [`for_variant`]. Problems come in two shapes: one
-//! single-head [`AttnInput`], or a batched multi-head [`AttnBatch`] that
-//! runs as **one** dispatch with workers balanced over `(batch, head,
-//! row-range)` — bit-identical to dispatching each head separately.
+//! The typed kernel dispatch surface: one call boundary between the
+//! serving stack and the native attention paths.
 //!
-//! Every dispatch runs the **fused** tiled online-softmax kernels (see
-//! `kernels::dense` / `kernels::sparse`) — the unfused three-pass forms
-//! survive only as the property-test oracle and bench comparator, reached
-//! directly (`dense::attention`, `sparse::dsa_attention`,
+//! * [`Variant`] — the **single source of truth** for serving-variant
+//!   identity: a typed enum (`Dense`, `Dsa { pct }`, room for future
+//!   families) with `FromStr`/`Display`, so the engine, router, backend,
+//!   server protocol, CLI and benches all carry the same value instead of
+//!   re-parsing `"dsa90"` strings at every layer. A typo'd variant fails
+//!   at the parse boundary (CLI flag, protocol field, router rung), never
+//!   as a dead route at batch-execution time.
+//! * [`KernelSpec`] — *how* to run a kernel: worker `threads`, the
+//!   [`ExecPolicy`] (persistent pool vs per-dispatch spawn) and a
+//!   per-shape [`TilePlan`] resolved to one [`Tile`](super::tiles::Tile)
+//!   per `(l, dk)` **before** dispatch, which is what keeps fused outputs
+//!   bit-identical across thread counts, backends and batch shapes.
+//! * [`KernelDispatch`] — the kernel trait. The **write-into forms**
+//!   ([`KernelDispatch::forward_into`] /
+//!   [`KernelDispatch::forward_batch_into`]) are the primitives: they
+//!   fully overwrite a caller-owned output slice, so a warm buffer makes
+//!   the engine's steady-state batch loop allocation-free end to end. The
+//!   Vec-returning [`KernelDispatch::forward`] /
+//!   [`KernelDispatch::forward_batch`] survive as default-method
+//!   allocate-and-fill wrappers for tests and one-shot callers.
+//! * [`KernelRegistry`] — the pluggable construction point: variant
+//!   families register a builder `fn(&Variant, &KernelSpec) ->
+//!   Option<Box<dyn KernelDispatch>>`; new kernel families (e.g. N:M
+//!   structured sparsity) plug in here without touching the engine,
+//!   router, server or benches. [`for_variant`] survives only as a thin
+//!   parse-then-build shim over the global registry.
+//!
+//! Problems come in two shapes: one single-head [`AttnInput`], or a
+//! batched multi-head [`AttnBatch`] that runs as **one** dispatch with
+//! workers balanced over `(batch, head, row-range)` — bit-identical to
+//! dispatching each head separately. Every dispatch runs the **fused**
+//! tiled online-softmax kernels; the unfused three-pass forms survive
+//! only as property-test oracles and bench comparators, reached directly
+//! (`dense::attention`, `sparse::dsa_attention`,
 //! `parallel::*_unfused_mt_exec`), never through this surface.
-//!
-//! Multi-threaded forwards (`threads != 1`) execute on the process-wide
-//! persistent [`WorkerPool`](super::pool::WorkerPool): one pool of parked
-//! workers serves every kernel the engine, benches and tests dispatch, so
-//! no `forward` call pays thread spawn/join (see `kernels::pool`);
-//! `threads == 1` runs inline on the calling thread's warm local scratch.
 
-use super::parallel;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::OnceLock;
+
+use super::parallel::{self, Exec};
+use super::tiles::TilePlan;
+use crate::util::error::Error;
 
 /// One single-head attention problem, row-major f32.
 #[derive(Debug, Clone, Copy)]
@@ -86,7 +110,156 @@ impl<'a> AttnBatch<'a> {
     }
 }
 
-/// A selectable attention implementation.
+/// A serving variant, typed. This enum is the only place variant names
+/// are parsed ([`Variant::from_str`]) or rendered ([`fmt::Display`]);
+/// every other layer passes the value. `Dsa { pct }` carries the integer
+/// percent sparsity in `[1, 99]` (`"dsa90"` ⇔ `Dsa { pct: 90 }`), which
+/// keeps the type `Copy + Eq + Hash + Ord` — usable as a map key and in
+/// protocol round trips without float comparison hazards.
+///
+/// The field is public for ergonomic literals (`Variant::Dsa { pct: 90 }`
+/// is the crate idiom), so an out-of-range literal like
+/// `Dsa { pct: 150 }` is *representable* — but it **fails closed**:
+/// [`Variant::sparsity`] declines it, so no registry family claims it and
+/// the backend reports "no registered kernel family" at preload/startup
+/// instead of serving a variant whose name could never round-trip
+/// through [`Variant::from_str`]. Use [`Variant::dsa`] to validate
+/// runtime-derived percents up front.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Variant {
+    /// Dense attention baseline.
+    Dense,
+    /// Dynamic-sparse attention at `pct`% target sparsity (valid range
+    /// `[1, 99]`; out-of-range values build no kernel — see the enum
+    /// docs).
+    Dsa { pct: u8 },
+}
+
+impl Variant {
+    /// A DSA variant at `pct`% sparsity; `None` outside `[1, 99]`.
+    pub fn dsa(pct: u8) -> Option<Variant> {
+        (1..=99).contains(&pct).then_some(Variant::Dsa { pct })
+    }
+
+    /// Target sparsity ratio in `(0, 1)`; `None` for dense **and** for
+    /// out-of-range `Dsa` percents — the check that makes hand-rolled
+    /// invalid literals fail closed at kernel construction. Delegates to
+    /// [`Variant::dsa`] so the valid range lives in exactly one place.
+    pub fn sparsity(&self) -> Option<f64> {
+        match self {
+            Variant::Dense => None,
+            Variant::Dsa { pct } => Variant::dsa(*pct).map(|_| *pct as f64 / 100.0),
+        }
+    }
+
+    /// Build this variant's kernel from the global [`KernelRegistry`].
+    pub fn build(&self, spec: &KernelSpec) -> Option<Box<dyn KernelDispatch>> {
+        KernelRegistry::global().build(self, spec)
+    }
+}
+
+impl fmt::Display for Variant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Variant::Dense => write!(f, "dense"),
+            Variant::Dsa { pct } => write!(f, "dsa{pct}"),
+        }
+    }
+}
+
+impl FromStr for Variant {
+    type Err = Error;
+
+    /// Parse `"dense"` or `"dsa<pct>"` with integer percent in `[1, 99]`.
+    /// The one place in the crate variant strings become values.
+    fn from_str(s: &str) -> Result<Variant, Error> {
+        if s == "dense" {
+            return Ok(Variant::Dense);
+        }
+        let parsed = s
+            .strip_prefix("dsa")
+            .filter(|rest| !rest.is_empty() && rest.bytes().all(|b| b.is_ascii_digit()))
+            .and_then(|rest| rest.parse::<u8>().ok())
+            .and_then(Variant::dsa);
+        parsed.ok_or_else(|| {
+            Error::msg(format!(
+                "unknown serving variant {s:?} (expected \"dense\" or \"dsa<pct>\" \
+                 with pct in [1, 99], e.g. \"dsa90\")"
+            ))
+        })
+    }
+}
+
+/// How a multi-threaded dispatch executes its row chunks — the
+/// policy-level (owning) form of [`parallel::Exec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecPolicy {
+    /// The production default: tasks on the process-wide persistent
+    /// [`WorkerPool`](super::pool::WorkerPool) (parked workers, warm
+    /// per-worker scratch — no per-dispatch spawn/join).
+    #[default]
+    Pool,
+    /// Per-dispatch `std::thread::scope` spawns — the legacy path, kept
+    /// as the benchmarked comparator. Outputs are bit-identical to
+    /// [`ExecPolicy::Pool`] (chunking depends only on the thread count).
+    Spawn,
+}
+
+impl ExecPolicy {
+    /// Resolve to the parallel drivers' execution backend.
+    pub fn exec(self) -> Exec<'static> {
+        match self {
+            ExecPolicy::Pool => Exec::global_pool(),
+            ExecPolicy::Spawn => Exec::Spawn,
+        }
+    }
+}
+
+/// *How* to run a kernel — the construction-time execution parameters
+/// every kernel family consumes, replacing the bare `threads: usize` that
+/// used to be plumbed through every layer:
+///
+/// * `threads` — workers per dispatch (0 = one per core, 1 = inline on
+///   the calling thread's warm local scratch).
+/// * `exec` — pool vs spawn ([`ExecPolicy`]).
+/// * `tiles` — the per-shape [`TilePlan`]; each dispatch resolves one
+///   tile from `(l, dk)` alone, so outputs never depend on thread count,
+///   backend or batch shape.
+///
+/// `KernelSpec::default()` is the production configuration: all cores,
+/// pool execution, the committed tile table ([`TilePlan::committed`] —
+/// today equivalent to the `KEY_TILE = 256` / `QUERY_BLOCK = 8` fallback
+/// for every shape).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelSpec {
+    pub threads: usize,
+    pub exec: ExecPolicy,
+    pub tiles: TilePlan,
+}
+
+impl Default for KernelSpec {
+    fn default() -> KernelSpec {
+        KernelSpec {
+            threads: 0,
+            exec: ExecPolicy::Pool,
+            tiles: TilePlan::committed(),
+        }
+    }
+}
+
+impl KernelSpec {
+    /// The default spec at an explicit thread count — the shape every
+    /// pre-`KernelSpec` call site (`for_variant(name, threads)`) maps to.
+    pub fn with_threads(threads: usize) -> KernelSpec {
+        KernelSpec { threads, ..KernelSpec::default() }
+    }
+}
+
+/// A selectable attention implementation. [`KernelDispatch::forward_into`]
+/// is the primitive every implementation provides; the batched form and
+/// the Vec-returning conveniences have default implementations on top of
+/// it. Implementations must fully overwrite the output slice (stale data
+/// must never leak through), so callers may reuse warm buffers.
 pub trait KernelDispatch: Send + Sync {
     /// Human-readable identifier (shows up in bench/metrics output).
     fn name(&self) -> String;
@@ -94,48 +267,89 @@ pub trait KernelDispatch: Send + Sync {
     /// Kept entries per mask row at sequence length `l`; `None` = dense.
     fn keep(&self, l: usize) -> Option<usize>;
 
-    /// Compute the `l x dv` context matrix.
-    fn forward(&self, x: &AttnInput) -> Vec<f32>;
+    /// Compute the `l x dv` context matrix into `out` (`out.len() ==
+    /// l * dv`; arbitrary stale contents allowed — every row is
+    /// overwritten). The allocation-free primitive the serving hot path
+    /// runs.
+    fn forward_into(&self, x: &AttnInput, out: &mut [f32]);
 
-    /// Compute the `[b, h, l, dv]` context batch in one dispatch. The
-    /// default loops [`KernelDispatch::forward`] per problem; the native
-    /// kernels override it with a single row-parallel pass over the whole
-    /// batch. Implementations must match the looped form bit for bit.
-    fn forward_batch(&self, x: &AttnBatch) -> Vec<f32> {
+    /// Compute the `[b, h, l, dv]` context batch into `out` in one
+    /// dispatch. The default loops [`KernelDispatch::forward_into`] per
+    /// problem; the native kernels override it with a single row-parallel
+    /// pass over the whole batch. Implementations must match the looped
+    /// form bit for bit.
+    fn forward_batch_into(&self, x: &AttnBatch, out: &mut [f32]) {
         x.validate();
-        let mut out = Vec::with_capacity(x.problems() * x.l * x.dv);
+        let stride = x.l * x.dv;
+        assert_eq!(out.len(), x.problems() * stride, "out shape");
         for i in 0..x.problems() {
-            out.extend(self.forward(&x.problem(i)));
+            self.forward_into(&x.problem(i), &mut out[i * stride..(i + 1) * stride]);
         }
+    }
+
+    /// Allocating convenience over [`KernelDispatch::forward_into`].
+    fn forward(&self, x: &AttnInput) -> Vec<f32> {
+        let mut out = vec![0f32; x.l * x.dv];
+        self.forward_into(x, &mut out);
+        out
+    }
+
+    /// Allocating convenience over [`KernelDispatch::forward_batch_into`].
+    fn forward_batch(&self, x: &AttnBatch) -> Vec<f32> {
+        let mut out = vec![0f32; x.problems() * x.l * x.dv];
+        self.forward_batch_into(x, &mut out);
         out
     }
 }
 
-/// Dense attention baseline — fused tiled kernel with online softmax
-/// (`threads`: 0 = one per core, 1 = single-threaded on the calling
-/// thread's warm local scratch).
-#[derive(Debug, Clone)]
+/// Dense attention baseline — fused tiled kernel with online softmax,
+/// executed per the [`KernelSpec`].
+#[derive(Debug, Clone, Default)]
 pub struct DenseKernel {
-    pub threads: usize,
+    pub spec: KernelSpec,
+}
+
+impl DenseKernel {
+    pub fn new(spec: KernelSpec) -> DenseKernel {
+        DenseKernel { spec }
+    }
+
+    /// Default spec at an explicit thread count (0 = one per core).
+    pub fn with_threads(threads: usize) -> DenseKernel {
+        DenseKernel::new(KernelSpec::with_threads(threads))
+    }
 }
 
 impl KernelDispatch for DenseKernel {
     fn name(&self) -> String {
-        format!("dense(t{})", self.threads)
+        format!("dense(t{})", self.spec.threads)
     }
 
     fn keep(&self, _l: usize) -> Option<usize> {
         None
     }
 
-    fn forward(&self, x: &AttnInput) -> Vec<f32> {
+    fn forward_into(&self, x: &AttnInput, out: &mut [f32]) {
         x.validate();
-        parallel::dense_attention_mt(x.q, x.k, x.v, x.l, x.dk, x.dv, self.threads)
+        let tile = self.spec.tiles.lookup(x.l, x.dk);
+        parallel::dense_attention_into_exec(
+            x.q,
+            x.k,
+            x.v,
+            x.l,
+            x.dk,
+            x.dv,
+            self.spec.threads,
+            self.spec.exec.exec(),
+            tile,
+            out,
+        );
     }
 
-    fn forward_batch(&self, x: &AttnBatch) -> Vec<f32> {
+    fn forward_batch_into(&self, x: &AttnBatch, out: &mut [f32]) {
         x.validate();
-        parallel::dense_attention_batch_mt(
+        let tile = self.spec.tiles.lookup(x.l, x.dk);
+        parallel::dense_attention_batch_into_exec(
             x.q,
             x.k,
             x.v,
@@ -144,21 +358,45 @@ impl KernelDispatch for DenseKernel {
             x.l,
             x.dk,
             x.dv,
-            self.threads,
-        )
+            self.spec.threads,
+            self.spec.exec.exec(),
+            tile,
+            out,
+        );
     }
 }
 
 /// Dynamic-sparse attention at a target sparsity ratio in `(0, 1)` —
-/// fused per-row predict → top-k → SDDMM/online-softmax/SpMM pipeline.
+/// fused per-row predict → top-k → SDDMM/online-softmax/SpMM pipeline,
+/// executed per the [`KernelSpec`].
 #[derive(Debug, Clone)]
 pub struct SparseKernel {
     pub sparsity: f64,
-    pub threads: usize,
+    pub spec: KernelSpec,
 }
 
 impl SparseKernel {
-    /// Mask budget: kept entries per row at sequence length `l`.
+    pub fn new(sparsity: f64, spec: KernelSpec) -> SparseKernel {
+        SparseKernel { sparsity, spec }
+    }
+
+    /// Default spec at an explicit thread count (0 = one per core).
+    pub fn with_threads(sparsity: f64, threads: usize) -> SparseKernel {
+        SparseKernel::new(sparsity, KernelSpec::with_threads(threads))
+    }
+
+    /// Mask budget: kept entries per row at sequence length `l`, i.e.
+    /// `round((1 - sparsity) * l)` clamped into `[1, max(l, 1)]`.
+    ///
+    /// The clamp pins the degenerate edges on purpose:
+    ///
+    /// * `sparsity → 1.0` (or tiny `l`): the rounded budget hits 0, and
+    ///   the lower clamp keeps **one** entry per row — a mask that keeps
+    ///   nothing would serve all-zero contexts while claiming success.
+    /// * `l = 0`: the empty problem reports `keep = 1` (the clamp range
+    ///   collapses to `[1, 1]`), but no row exists to apply it to — the
+    ///   fused pipeline iterates zero rows and returns an empty context,
+    ///   without panicking (pinned by the `Variant`-layer tests).
     pub fn keep_for(&self, l: usize) -> usize {
         (((1.0 - self.sparsity) * l as f64).round() as usize).clamp(1, l.max(1))
     }
@@ -166,22 +404,36 @@ impl SparseKernel {
 
 impl KernelDispatch for SparseKernel {
     fn name(&self) -> String {
-        format!("dsa{:.0}(t{})", self.sparsity * 100.0, self.threads)
+        format!("dsa{:.0}(t{})", self.sparsity * 100.0, self.spec.threads)
     }
 
     fn keep(&self, l: usize) -> Option<usize> {
         Some(self.keep_for(l))
     }
 
-    fn forward(&self, x: &AttnInput) -> Vec<f32> {
+    fn forward_into(&self, x: &AttnInput, out: &mut [f32]) {
         x.validate();
         let keep = self.keep_for(x.l);
-        parallel::dsa_attention_mt(x.q, x.k, x.v, x.l, x.dk, x.dv, keep, self.threads)
+        let tile = self.spec.tiles.lookup(x.l, x.dk);
+        parallel::dsa_attention_into_exec(
+            x.q,
+            x.k,
+            x.v,
+            x.l,
+            x.dk,
+            x.dv,
+            keep,
+            self.spec.threads,
+            self.spec.exec.exec(),
+            tile,
+            out,
+        );
     }
 
-    fn forward_batch(&self, x: &AttnBatch) -> Vec<f32> {
+    fn forward_batch_into(&self, x: &AttnBatch, out: &mut [f32]) {
         x.validate();
-        parallel::dsa_attention_batch_mt(
+        let tile = self.spec.tiles.lookup(x.l, x.dk);
+        parallel::dsa_attention_batch_into_exec(
             x.q,
             x.k,
             x.v,
@@ -191,32 +443,153 @@ impl KernelDispatch for SparseKernel {
             x.dk,
             x.dv,
             self.keep_for(x.l),
-            self.threads,
-        )
+            self.spec.threads,
+            self.spec.exec.exec(),
+            tile,
+            out,
+        );
     }
 }
 
-/// Kernel for a serving variant name: `"dense"`, or `"dsa<pct>"` with
-/// integer percent sparsity in `[1, 99]` (e.g. `"dsa90"`). Unknown names
-/// return `None`.
+/// A variant-family builder: inspect the [`Variant`] and either claim it
+/// (returning a kernel built per the [`KernelSpec`]) or decline with
+/// `None` so the next family is consulted.
+pub type KernelBuilder =
+    Box<dyn Fn(&Variant, &KernelSpec) -> Option<Box<dyn KernelDispatch>> + Send + Sync>;
+
+/// The pluggable kernel construction point: an ordered list of variant
+/// families, each with a builder. [`KernelRegistry::build`] asks the
+/// families in registration order and the first `Some` wins — so a new
+/// kernel family (a future `Variant` arm, an alternate dense
+/// implementation, …) plugs in with one [`KernelRegistry::register`]
+/// call instead of edits to the engine, router, server and benches.
+///
+/// The process-wide [`KernelRegistry::global`] registry ships the native
+/// families ([`KernelRegistry::native`]); embedders hand a custom
+/// registry to the serving stack via
+/// `NativeModelConfig::registry` (an `Arc<KernelRegistry>` the backend
+/// consults instead of the global one), so extending serving does not
+/// require editing this crate.
+#[derive(Default)]
+pub struct KernelRegistry {
+    families: Vec<(String, KernelBuilder)>,
+}
+
+impl fmt::Debug for KernelRegistry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("KernelRegistry")
+            .field("families", &self.families().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl KernelRegistry {
+    /// A registry with no families (builds nothing).
+    pub fn empty() -> KernelRegistry {
+        KernelRegistry::default()
+    }
+
+    /// The native families: `"dense"` ([`DenseKernel`]) and `"dsa"`
+    /// ([`SparseKernel`]).
+    pub fn native() -> KernelRegistry {
+        let mut r = KernelRegistry::empty();
+        r.register("dense", |variant, spec| match variant {
+            Variant::Dense => Some(Box::new(DenseKernel::new(spec.clone()))),
+            _ => None,
+        });
+        r.register("dsa", |variant, spec| {
+            let sparsity = variant.sparsity()?;
+            Some(Box::new(SparseKernel::new(sparsity, spec.clone())))
+        });
+        r
+    }
+
+    /// Register a variant family (appended after existing families).
+    pub fn register<F>(&mut self, family: &str, build: F)
+    where
+        F: Fn(&Variant, &KernelSpec) -> Option<Box<dyn KernelDispatch>> + Send + Sync + 'static,
+    {
+        self.families.push((family.to_string(), Box::new(build)));
+    }
+
+    /// Build a kernel for `variant`: first claiming family wins; `None`
+    /// when no registered family recognizes the variant.
+    pub fn build(&self, variant: &Variant, spec: &KernelSpec) -> Option<Box<dyn KernelDispatch>> {
+        self.families.iter().find_map(|(_, b)| b(variant, spec))
+    }
+
+    /// Registered family names, in consultation order.
+    pub fn families(&self) -> impl Iterator<Item = &str> {
+        self.families.iter().map(|(n, _)| n.as_str())
+    }
+
+    /// The process-wide registry (native families preregistered).
+    pub fn global() -> &'static KernelRegistry {
+        static GLOBAL: OnceLock<KernelRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(KernelRegistry::native)
+    }
+}
+
+/// Thin compatibility shim: parse a variant name ([`Variant::from_str`] —
+/// the only string parse) and build it from the global registry at the
+/// default spec with an explicit thread count. Typed callers should parse
+/// once at their boundary and use [`Variant::build`] /
+/// [`KernelRegistry::build`] directly.
 pub fn for_variant(variant: &str, threads: usize) -> Option<Box<dyn KernelDispatch>> {
-    if variant == "dense" {
-        return Some(Box::new(DenseKernel { threads }));
-    }
-    let pct: u32 = variant.strip_prefix("dsa")?.parse().ok()?;
-    if !(1..=99).contains(&pct) {
-        return None;
-    }
-    Some(Box::new(SparseKernel {
-        sparsity: pct as f64 / 100.0,
-        threads,
-    }))
+    let v = variant.parse::<Variant>().ok()?;
+    KernelRegistry::global().build(&v, &KernelSpec::with_threads(threads))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::tiles::{Tile, TilePlan};
     use crate::util::rng::Rng;
+
+    #[test]
+    fn variant_parse_and_display_roundtrip() {
+        assert_eq!("dense".parse::<Variant>().unwrap(), Variant::Dense);
+        assert_eq!("dsa90".parse::<Variant>().unwrap(), Variant::Dsa { pct: 90 });
+        assert_eq!("dsa1".parse::<Variant>().unwrap(), Variant::Dsa { pct: 1 });
+        assert_eq!("dsa99".parse::<Variant>().unwrap(), Variant::Dsa { pct: 99 });
+        for v in [Variant::Dense, Variant::Dsa { pct: 90 }, Variant::Dsa { pct: 5 }] {
+            assert_eq!(v.to_string().parse::<Variant>().unwrap(), v);
+        }
+        for bad in [
+            "dsa0", "dsa100", "dsa255", "dsa256", "nope", "dsaXY", "dsa", "dsa-5", "dsa+90",
+            "dsa9.5", "DENSE", "", "dense ",
+        ] {
+            assert!(bad.parse::<Variant>().is_err(), "{bad:?} must not parse");
+        }
+        // leading zeros normalize rather than reject (digit-only parse)
+        assert_eq!("dsa090".parse::<Variant>().unwrap(), Variant::Dsa { pct: 90 });
+        assert_eq!(Variant::dsa(90), Some(Variant::Dsa { pct: 90 }));
+        assert_eq!(Variant::dsa(0), None);
+        assert_eq!(Variant::dsa(100), None);
+        assert_eq!(Variant::Dense.sparsity(), None);
+        assert_eq!(Variant::Dsa { pct: 95 }.sparsity(), Some(0.95));
+    }
+
+    /// An out-of-range `Dsa { pct }` literal (representable because the
+    /// field is public) fails closed: `sparsity()` declines it, no
+    /// registry family claims it, so it surfaces as a startup/preload
+    /// error — never as a served variant whose name cannot round-trip.
+    #[test]
+    fn out_of_range_dsa_literal_builds_no_kernel() {
+        let spec = KernelSpec::with_threads(1);
+        for pct in [0u8, 100, 150, 255] {
+            let v = Variant::Dsa { pct };
+            assert_eq!(v.sparsity(), None, "pct {pct} must be declined");
+            assert!(
+                KernelRegistry::global().build(&v, &spec).is_none(),
+                "pct {pct} must not build a kernel"
+            );
+        }
+        // In-range literals still build.
+        assert!(KernelRegistry::global()
+            .build(&Variant::Dsa { pct: 42 }, &spec)
+            .is_some());
+    }
 
     #[test]
     fn variant_resolution() {
@@ -229,13 +602,163 @@ mod tests {
     }
 
     #[test]
+    fn registry_is_pluggable_and_ordered() {
+        let spec = KernelSpec::with_threads(1);
+        // The global registry serves the native families.
+        let names: Vec<&str> = KernelRegistry::global().families().collect();
+        assert_eq!(names, vec!["dense", "dsa"]);
+        assert!(Variant::Dense.build(&spec).is_some());
+        assert!(Variant::Dsa { pct: 90 }.build(&spec).is_some());
+        // An empty registry builds nothing; registering a family plugs a
+        // new kernel in at exactly one point.
+        let mut r = KernelRegistry::empty();
+        assert!(r.build(&Variant::Dense, &spec).is_none());
+        r.register("shadow-dense", |variant, spec| match variant {
+            Variant::Dense => {
+                let mut spec = spec.clone();
+                spec.threads = 1;
+                Some(Box::new(DenseKernel::new(spec)))
+            }
+            _ => None,
+        });
+        let k = r.build(&Variant::Dense, &spec).expect("family claims dense");
+        assert_eq!(k.name(), "dense(t1)");
+        assert!(r.build(&Variant::Dsa { pct: 90 }, &spec).is_none());
+        // First claiming family wins: prepend-like shadowing is explicit
+        // registration order, not string matching.
+        r.register("dsa", |variant, spec| {
+            let sparsity = variant.sparsity()?;
+            Some(Box::new(SparseKernel::new(sparsity, spec.clone())))
+        });
+        assert!(r.build(&Variant::Dsa { pct: 95 }, &spec).is_some());
+    }
+
+    #[test]
     fn keep_budgets() {
-        let k = SparseKernel { sparsity: 0.90, threads: 1 };
+        let k = SparseKernel::with_threads(0.90, 1);
         assert_eq!(k.keep_for(256), 26);
         assert_eq!(k.keep_for(1), 1);
-        let k = SparseKernel { sparsity: 0.99, threads: 1 };
+        let k = SparseKernel::with_threads(0.99, 1);
         assert_eq!(k.keep_for(256), 3);
         assert_eq!(for_variant("dense", 1).unwrap().keep(256), None);
+    }
+
+    /// The documented `keep_for` clamp edges, pinned at the `Variant`
+    /// layer: `l = 0` and `sparsity → 1.0` both clamp to a 1-entry
+    /// budget, and the degenerate shapes still route through the fused
+    /// dispatch path without panicking.
+    #[test]
+    fn keep_clamp_edges_route_through_fused_path() {
+        // sparsity → 1.0: the rounded budget is 0; the clamp keeps 1.
+        let k = SparseKernel::with_threads(0.999_999, 1);
+        assert_eq!(k.keep_for(256), 1);
+        assert_eq!(k.keep_for(1), 1);
+        // l = 0: the clamp range collapses to [1, 1] — keep reports 1
+        // with no rows to apply it to.
+        assert_eq!(k.keep_for(0), 1);
+        assert_eq!(k.keep(0), Some(1));
+        let spec = KernelSpec::default();
+        for variant in [Variant::Dense, Variant::Dsa { pct: 90 }, Variant::Dsa { pct: 99 }] {
+            let kernel = variant.build(&spec).expect("native variant");
+            // empty problem: zero rows in, zero rows out, no panic
+            let empty = AttnInput { q: &[], k: &[], v: &[], l: 0, dk: 4, dv: 4 };
+            assert!(kernel.forward(&empty).is_empty(), "{variant}");
+            kernel.forward_into(&empty, &mut []);
+            // l = 1: one row, budget clamps to the single key
+            let one = AttnInput { q: &[0.5], k: &[0.5], v: &[2.0], l: 1, dk: 1, dv: 1 };
+            assert_eq!(kernel.forward(&one), vec![2.0], "{variant}");
+            // empty batch (b = 0) through the batched fused path
+            let batch = AttnBatch { q: &[], k: &[], v: &[], b: 0, h: 2, l: 0, dk: 4, dv: 4 };
+            assert!(kernel.forward_batch(&batch).is_empty(), "{variant}");
+        }
+    }
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Satellite property: `forward_into` (into a poisoned warm buffer)
+    /// is bitwise equal to `forward`, and `forward_batch_into` to
+    /// `forward_batch`, for every variant × thread count × exec policy.
+    /// The allocation-free serving path can never drift from the
+    /// allocating one.
+    #[test]
+    fn forward_into_matches_forward_bitwise_property() {
+        let mut rng = Rng::new(0x1D5A);
+        let (b, h, l, dk, dv) = (2, 2, 29, 6, 5);
+        let p = b * h;
+        let q = randv(&mut rng, p * l * dk);
+        let k = randv(&mut rng, p * l * dk);
+        let v = randv(&mut rng, p * l * dv);
+        let batch = AttnBatch { q: &q, k: &k, v: &v, b, h, l, dk, dv };
+        let single = batch.problem(1);
+        for variant in [Variant::Dense, Variant::Dsa { pct: 90 }, Variant::Dsa { pct: 99 }] {
+            for threads in [1, 2, 7, 0] {
+                for exec in [ExecPolicy::Pool, ExecPolicy::Spawn] {
+                    let spec = KernelSpec { threads, exec, ..KernelSpec::default() };
+                    let kernel = variant.build(&spec).expect("native variant");
+                    let want = kernel.forward(&single);
+                    let mut got = vec![f32::NAN; l * dv];
+                    kernel.forward_into(&single, &mut got);
+                    assert_eq!(want, got, "{variant} t{threads} {exec:?} forward_into");
+                    let want = kernel.forward_batch(&batch);
+                    let mut got = vec![f32::NAN; p * l * dv];
+                    kernel.forward_batch_into(&batch, &mut got);
+                    assert_eq!(want, got, "{variant} t{threads} {exec:?} forward_batch_into");
+                }
+            }
+        }
+    }
+
+    /// Satellite property: a `TilePlan` entry is resolved from the shape
+    /// alone, so dispatches at a **non-default** tile stay bit-identical
+    /// across thread counts and Spawn/Pool backends — and the fused
+    /// outputs still match the unfused oracle within tolerance (the
+    /// fused-vs-unfused guarantee survives tile tuning).
+    #[test]
+    fn tile_plan_dispatch_deterministic_across_threads_property() {
+        use crate::kernels::{dense, sparse};
+        let mut rng = Rng::new(0x71E5);
+        let (l, dk, dv) = (53, 7, 6);
+        let q = randv(&mut rng, l * dk);
+        let k = randv(&mut rng, l * dk);
+        let v = randv(&mut rng, l * dv);
+        let x = AttnInput { q: &q, k: &k, v: &v, l, dk, dv };
+        let tile = Tile { key_tile: 11, query_block: 3 }; // deliberately odd
+        let tiles = TilePlan::empty().with_entry(l, dk, tile);
+        // The plan resolves the same tile for the same shape, always.
+        for _ in 0..3 {
+            assert_eq!(tiles.lookup(l, dk), tile);
+        }
+        // Single-threaded fused references at the planned tile.
+        let dense_ref = dense::attention_fused_tiled(&q, &k, &v, l, dk, dv, tile);
+        let keep = SparseKernel::with_threads(0.90, 1).keep_for(l);
+        let dsa_ref = sparse::dsa_attention_fused_tile(&q, &k, &v, l, dk, dv, keep, tile.key_tile);
+        for variant in [Variant::Dense, Variant::Dsa { pct: 90 }] {
+            let want = if variant == Variant::Dense { &dense_ref } else { &dsa_ref };
+            // Unfused oracle for the tolerance check.
+            let oracle = match variant {
+                Variant::Dense => dense::attention(&q, &k, &v, l, dk, dv),
+                Variant::Dsa { .. } => sparse::dsa_attention(&q, &k, &v, l, dk, dv, keep),
+            };
+            for threads in [1, 2, 8, 0] {
+                for exec in [ExecPolicy::Pool, ExecPolicy::Spawn] {
+                    let spec = KernelSpec { threads, exec, tiles: tiles.clone() };
+                    let got = variant.build(&spec).unwrap().forward(&x);
+                    assert_eq!(
+                        want, &got,
+                        "{variant} t{threads} {exec:?} diverged at the planned tile"
+                    );
+                    for (a, b) in got.iter().zip(&oracle) {
+                        assert!(
+                            (a - b).abs() <= 1e-5 + 1e-5 * b.abs(),
+                            "{variant} t{threads}: fused at non-default tile left the \
+                             unfused oracle's tolerance"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     /// Batched multi-head output equals per-head single dispatch bit for
@@ -262,7 +785,7 @@ mod tests {
         }
     }
 
-    /// The trait's default (looped) `forward_batch` agrees with the
+    /// The trait's default (looped) `forward_batch_into` agrees with the
     /// overridden single-dispatch implementations bit for bit.
     #[test]
     fn default_forward_batch_agrees_with_override() {
@@ -274,8 +797,8 @@ mod tests {
             fn keep(&self, l: usize) -> Option<usize> {
                 self.0.keep(l)
             }
-            fn forward(&self, x: &AttnInput) -> Vec<f32> {
-                self.0.forward(x)
+            fn forward_into(&self, x: &AttnInput, out: &mut [f32]) {
+                self.0.forward_into(x, out)
             }
         }
         let mut rng = Rng::new(43);
@@ -285,7 +808,7 @@ mod tests {
         let k: Vec<f32> = (0..p * l * dk).map(|_| rng.normal() as f32).collect();
         let v: Vec<f32> = (0..p * l * dv).map(|_| rng.normal() as f32).collect();
         let batch = AttnBatch { q: &q, k: &k, v: &v, b, h, l, dk, dv };
-        let dense = DenseKernel { threads: 2 };
+        let dense = DenseKernel::with_threads(2);
         assert_eq!(
             Looped(dense.clone()).forward_batch(&batch),
             dense.forward_batch(&batch)
@@ -299,7 +822,7 @@ mod tests {
         assert!(kernel.forward_batch(&batch).is_empty());
     }
 
-    /// The dispatch surface now runs the fused kernels: every variant and
+    /// The dispatch surface runs the fused kernels: every variant and
     /// thread count must stay within the reassociation tolerance of the
     /// retained unfused oracle (`dense::attention` /
     /// `sparse::dsa_attention`) — the guarantee the engine's numerics
@@ -339,9 +862,9 @@ mod tests {
         let k: Vec<f32> = (0..l * dk).map(|_| rng.normal() as f32).collect();
         let v: Vec<f32> = (0..l * dv).map(|_| rng.normal() as f32).collect();
         let x = AttnInput { q: &q, k: &k, v: &v, l, dk, dv };
-        let dense_out = DenseKernel { threads: 1 }.forward(&x);
+        let dense_out = DenseKernel::with_threads(1).forward(&x);
         // sparsity small enough that keep rounds to l
-        let sparse_out = SparseKernel { sparsity: 1e-9, threads: 2 }.forward(&x);
+        let sparse_out = SparseKernel::with_threads(1e-9, 2).forward(&x);
         assert_eq!(dense_out, sparse_out);
     }
 }

@@ -27,14 +27,27 @@
 //!   benches and tests.
 //! * [`parallel`] — row-parallel multi-threaded drivers with bit-identical
 //!   results (rows are independent end to end), for single-head problems
-//!   and batched multi-head `[b, h, l, d]` dispatches alike; work items
-//!   are query-block-aligned row blocks, fused by default with
-//!   `*_unfused_mt_exec` comparators, on the pool or per-dispatch scoped
-//!   spawns ([`parallel::Exec`], the benchmarked comparison).
-//! * [`dispatch`] — the [`KernelDispatch`] trait mapping serving variant
-//!   names ("dense", "dsa90", …) to kernel implementations (fused paths
-//!   throughout), over one [`AttnInput`] problem or one [`AttnBatch`] per
-//!   engine batch.
+//!   and batched multi-head `[b, h, l, d]` dispatches alike; the
+//!   write-into `*_into_exec` forms (caller-owned output, explicit
+//!   [`Tile`]) are the primitives, Vec-returning `*_mt` forms are thin
+//!   wrappers; work items are query-block-aligned row blocks, fused by
+//!   default with `*_unfused_mt_exec` comparators, on the pool or
+//!   per-dispatch scoped spawns ([`parallel::Exec`], the benchmarked
+//!   comparison).
+//! * [`tiles`] — per-shape fused-kernel tile geometry: [`Tile`]
+//!   (`key_tile` × `query_block`), the immutable `(l, dk)`-keyed
+//!   [`TilePlan`] resolved once per dispatch (fallback = today's
+//!   `KEY_TILE = 256` / `QUERY_BLOCK = 8` constants), and the committed
+//!   offline-tuned table (`dsa-serve tile-plan` keeps the derived
+//!   artifact in sync; the `bench_kernels` tile sweep is the tuner).
+//! * [`dispatch`] — the typed dispatch surface: the [`Variant`] enum (the
+//!   single source of truth for variant names, `FromStr`/`Display`), the
+//!   [`KernelSpec`] execution parameters (`threads` + [`ExecPolicy`] +
+//!   [`TilePlan`]), the [`KernelDispatch`] trait whose allocation-free
+//!   `forward_into` / `forward_batch_into` primitives the serving hot
+//!   path runs (Vec forms are default wrappers), and the pluggable
+//!   [`KernelRegistry`] where variant families register builders
+//!   ([`for_variant`] survives as a parse-then-build shim).
 //! * [`model`] — a hand-constructed, training-free needle-counting
 //!   classifier over these kernels; the model behind
 //!   `coordinator::backend::NativeBackend`.
@@ -47,8 +60,13 @@ pub mod pool;
 pub mod scratch;
 pub mod simd;
 pub mod sparse;
+pub mod tiles;
 
-pub use dispatch::{for_variant, AttnBatch, AttnInput, DenseKernel, KernelDispatch, SparseKernel};
+pub use dispatch::{
+    for_variant, AttnBatch, AttnInput, DenseKernel, ExecPolicy, KernelDispatch, KernelRegistry,
+    KernelSpec, SparseKernel, Variant,
+};
 pub use model::NativeClassifier;
 pub use parallel::Exec;
 pub use pool::{PoolStats, WorkerPool};
+pub use tiles::{Tile, TilePlan};

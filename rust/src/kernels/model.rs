@@ -22,6 +22,56 @@
 use super::dispatch::{AttnBatch, KernelDispatch};
 use crate::util::rng::Rng;
 
+/// Reusable batch buffers for [`NativeClassifier::logits_batch_into`]:
+/// the embedded Q/K, the one-hot V and the attention context output of a
+/// whole engine bucket. Owned by the serving backend and grown
+/// monotonically to the largest bucket seen, so the steady-state batch
+/// loop performs **zero per-batch output allocations** (the warm-dispatch
+/// analogue of the kernels' [`Scratch`](super::scratch::Scratch) —
+/// observable through the same kind of grow counter, asserted by the
+/// backend tests).
+#[derive(Debug, Default)]
+pub struct ModelScratch {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Attention context output (`n * l * VOCAB`) the kernels'
+    /// `forward_batch_into` writes into.
+    ctx: Vec<f32>,
+    grows: u64,
+}
+
+impl ModelScratch {
+    pub fn new() -> ModelScratch {
+        ModelScratch::default()
+    }
+
+    /// Buffer-grow events observed by this instance (monotone; warm
+    /// buffers reused at the same or smaller bucket record none).
+    pub fn grow_events(&self) -> u64 {
+        self.grows
+    }
+
+    /// Ensure capacity for an `n`-sequence bucket (`qk` = `n * l * DK`,
+    /// `ctx` = `n * l * VOCAB`). Shrinks nothing.
+    fn reserve(&mut self, qk: usize, ctx: usize) {
+        let mut grows = 0u64;
+        for (buf, need) in [
+            (&mut self.q, qk),
+            (&mut self.k, qk),
+            (&mut self.v, ctx),
+            (&mut self.ctx, ctx),
+        ] {
+            if buf.capacity() < need {
+                grows += 1;
+                let additional = need - buf.len();
+                buf.reserve(additional);
+            }
+        }
+        self.grows += grows;
+    }
+}
+
 /// Token vocabulary (matches the workload generator's `1..=255` range and
 /// doubles as the one-hot value dimension).
 pub const VOCAB: usize = 256;
@@ -81,23 +131,49 @@ impl NativeClassifier {
 
     /// Run `n` concatenated sequences (`n * seq_len` tokens) through
     /// `kernel` as **one** batched dispatch, returning `n * 2` logits.
-    /// Each sequence is an independent single-head attention problem
-    /// (`b = n`, `h = 1`), so the result is bit-identical to calling
-    /// [`NativeClassifier::logits`] per sequence — the kernels' batched
-    /// drivers guarantee it — while the dispatch overhead (thread
-    /// spawn/join, scorer setup) is paid once per engine batch.
+    /// Allocating convenience over
+    /// [`NativeClassifier::logits_batch_into`] (fresh buffers per call) —
+    /// the serving backend uses the `_into` form with warm buffers.
     pub fn logits_batch(
         &self,
         tokens: &[i32],
         n: usize,
         kernel: &dyn KernelDispatch,
     ) -> Vec<f32> {
+        let mut scratch = ModelScratch::new();
+        let mut logits = Vec::new();
+        self.logits_batch_into(tokens, n, kernel, &mut scratch, &mut logits);
+        logits
+    }
+
+    /// The allocation-free batched primitive: run `n` concatenated
+    /// sequences through `kernel` as **one** batched dispatch
+    /// ([`KernelDispatch::forward_batch_into`] straight into
+    /// `scratch.ctx`), writing `n * 2` logits into `logits` (cleared
+    /// first). Each sequence is an independent single-head attention
+    /// problem (`b = n`, `h = 1`), so the result is bit-identical to
+    /// calling [`NativeClassifier::logits`] per sequence — the kernels'
+    /// batched drivers guarantee it — while the dispatch overhead is paid
+    /// once per engine batch and, with warm buffers, **no** per-batch
+    /// output allocation is paid at all (asserted by the backend's
+    /// warm-dispatch test).
+    pub fn logits_batch_into(
+        &self,
+        tokens: &[i32],
+        n: usize,
+        kernel: &dyn KernelDispatch,
+        scratch: &mut ModelScratch,
+        logits: &mut Vec<f32>,
+    ) {
         let l = self.seq_len;
         assert_eq!(tokens.len(), n * l, "token length");
         let beta = (MATCH_WEIGHT.ln() / (DK as f64).sqrt()) as f32;
-        let mut q = Vec::with_capacity(n * l * DK);
-        let mut k = Vec::with_capacity(n * l * DK);
-        let mut v = vec![0f32; n * l * VOCAB];
+        scratch.reserve(n * l * DK, n * l * VOCAB);
+        let (q, k, v) = (&mut scratch.q, &mut scratch.k, &mut scratch.v);
+        q.clear();
+        k.clear();
+        v.clear();
+        v.resize(n * l * VOCAB, 0.0); // within reserved capacity: no alloc
         for (s, seq) in tokens.chunks_exact(l).enumerate() {
             for (i, &t) in seq.iter().enumerate() {
                 let t = t.rem_euclid(VOCAB as i32) as usize;
@@ -107,30 +183,39 @@ impl NativeClassifier {
                 v[(s * l + i) * VOCAB + t] = 1.0;
             }
         }
-        let out = kernel.forward_batch(&AttnBatch {
-            q: &q,
-            k: &k,
-            v: &v,
+        // Size-only adjustment, NO zeroing: `forward_batch_into` is
+        // contractually required (and property-tested) to fully overwrite
+        // the output, so re-zeroing a warm same-bucket buffer would just
+        // re-add a memset to the hot path this buffer exists to thin out.
+        let need = n * l * VOCAB;
+        if scratch.ctx.len() != need {
+            scratch.ctx.resize(need, 0.0);
+        }
+        let batch = AttnBatch {
+            q: &q[..],
+            k: &k[..],
+            v: &v[..],
             b: n,
             h: 1,
             l,
             dk: DK,
             dv: VOCAB,
-        });
+        };
+        kernel.forward_batch_into(&batch, &mut scratch.ctx);
         let keep = kernel.keep(l).unwrap_or(l);
         let threshold = self.threshold(keep);
-        let mut logits = Vec::with_capacity(n * 2);
+        logits.clear();
+        logits.reserve(n * 2);
         for (s, seq) in tokens.chunks_exact(l).enumerate() {
             let needle = seq[0].rem_euclid(VOCAB as i32) as usize;
             // Row 0's context vector of each sequence is a distribution
             // over tokens; the mass on the needle coordinate is the
             // matched attention fraction.
-            let mass = out[s * l * VOCAB + needle] as f64;
+            let mass = scratch.ctx[s * l * VOCAB + needle] as f64;
             let score = (GAIN * (mass - threshold)) as f32;
             logits.push(-score);
             logits.push(score);
         }
-        logits
     }
 }
 
@@ -198,6 +283,46 @@ mod tests {
                 assert_eq!(batched, looped, "{variant} t{threads}");
             }
         }
+    }
+
+    /// Warm-dispatch allocation freedom at the model layer: once
+    /// `ModelScratch` (and the logits buffer) have seen a bucket size,
+    /// repeated batches of the same or smaller size record **zero**
+    /// buffer grows and reproduce the allocating path bit for bit.
+    #[test]
+    fn warm_model_scratch_batches_are_allocation_free() {
+        let model = NativeClassifier::new(256, 0xD5A);
+        let kernel = for_variant("dsa90", 2).unwrap();
+        let mut wl = Workload::new(WorkloadConfig {
+            seq_len: 256,
+            seed: 555,
+            ..Default::default()
+        });
+        let n = 4;
+        let mut tokens = Vec::with_capacity(n * 256);
+        for _ in 0..n {
+            tokens.extend(wl.next_request().tokens);
+        }
+        let mut scratch = ModelScratch::new();
+        let mut logits = Vec::new();
+        model.logits_batch_into(&tokens, n, kernel.as_ref(), &mut scratch, &mut logits);
+        let first = logits.clone();
+        let warm = scratch.grow_events();
+        let warm_cap = logits.capacity();
+        assert!(warm >= 1, "cold buffers must have grown");
+        for shrink in [n, n, 2, 1] {
+            model.logits_batch_into(
+                &tokens[..shrink * 256],
+                shrink,
+                kernel.as_ref(),
+                &mut scratch,
+                &mut logits,
+            );
+            assert_eq!(&logits[..], &first[..shrink * 2], "warm reuse changed logits");
+        }
+        assert_eq!(scratch.grow_events(), warm, "warm batch dispatch allocated");
+        assert_eq!(logits.capacity(), warm_cap, "logits buffer regrew");
+        assert_eq!(first, model.logits_batch(&tokens, n, kernel.as_ref()));
     }
 
     #[test]

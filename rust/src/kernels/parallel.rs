@@ -16,6 +16,15 @@
 //! forms stay available as `*_unfused_mt_exec` — the property-test oracle
 //! and the fused-vs-unfused bench comparator.
 //!
+//! The **write-into forms** (`*_into_exec`) are the primitives: they take
+//! a caller-owned output slice plus an explicit [`Tile`] geometry (the
+//! dispatch layer resolves one per `(l, dk)` shape from its `TilePlan`
+//! before dispatch, which is what keeps fused outputs bit-identical
+//! across thread counts and backends), so a warm caller buffer makes the
+//! steady-state dispatch path output-allocation-free. The Vec-returning
+//! `*_mt` / `*_mt_exec` forms are thin allocate-and-fill wrappers at
+//! [`Tile::DEFAULT`].
+//!
 //! Two execution backends share the chunking ([`Exec`]):
 //!
 //! * [`Exec::Pool`] — the default: chunks run as tasks on the persistent
@@ -38,6 +47,7 @@
 use super::pool::{self, ScopedTask, WorkerPool};
 use super::scratch::Scratch;
 use super::sparse::ApproxScorer;
+use super::tiles::Tile;
 use super::{dense, sparse};
 
 /// Resolve a requested worker count: 0 means one worker per available
@@ -74,9 +84,19 @@ impl Exec<'_> {
 /// scratch)` per chunk on `exec` (`threads <= 1` runs inline on the
 /// calling thread's scratch). `rows` counts logical output rows of width
 /// `dv` — a single problem's query rows, or the `b * h * l` global row
-/// space of a batch.
-fn par_row_chunks<F>(rows: usize, dv: usize, threads: usize, exec: Exec<'_>, out: &mut [f32], f: F)
-where
+/// space of a batch. `query_block` is the fused kernels' query blocking
+/// for this shape (the unfused drivers pass the default): chunk
+/// boundaries align to it so no query block's tile pass straddles two
+/// workers.
+fn par_row_chunks<F>(
+    rows: usize,
+    dv: usize,
+    threads: usize,
+    exec: Exec<'_>,
+    query_block: usize,
+    out: &mut [f32],
+    f: F,
+) where
     F: Fn(usize, usize, &mut [f32], &mut Scratch) + Sync,
 {
     debug_assert_eq!(out.len(), rows * dv);
@@ -86,13 +106,14 @@ where
         return;
     }
     // Work items are whole row-blocks: align the chunk size down to a
-    // QUERY_BLOCK multiple so a fused query block's K/V tile pass never
+    // query-block multiple so a fused query block's K/V tile pass never
     // splits across two workers (a few extra sub-`threads` items at the
     // tail just queue on the pool). Outputs are chunking-independent, so
     // this is purely a locality/balance choice.
+    let query_block = query_block.max(1);
     let mut chunk = rows.div_ceil(threads);
-    if chunk > dense::QUERY_BLOCK {
-        chunk -= chunk % dense::QUERY_BLOCK;
+    if chunk > query_block {
+        chunk -= chunk % query_block;
     }
     let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(threads);
     let mut rest = out;
@@ -156,15 +177,39 @@ pub fn dense_attention_mt_exec(
     threads: usize,
     exec: Exec<'_>,
 ) -> Vec<f32> {
+    let mut out = vec![0f32; l * dv];
+    dense_attention_into_exec(q, k, v, l, dk, dv, threads, exec, Tile::DEFAULT, &mut out);
+    out
+}
+
+/// The write-into **primitive** behind the fused dense drivers: runs the
+/// fused kernel at an explicit [`Tile`] (resolved per shape by the
+/// dispatch layer's `TilePlan`) and writes the `l x dv` context straight
+/// into `out` — no output allocation, so a warm caller-owned buffer makes
+/// the steady-state dispatch path allocation-free. `out` may hold
+/// arbitrary stale data; every row is overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_attention_into_exec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    threads: usize,
+    exec: Exec<'_>,
+    tile: Tile,
+    out: &mut [f32],
+) {
     assert_eq!(q.len(), l * dk, "q shape");
     assert_eq!(k.len(), l * dk, "k shape");
     assert_eq!(v.len(), l * dv, "v shape");
-    let mut out = vec![0f32; l * dv];
+    assert_eq!(out.len(), l * dv, "out shape");
     let threads = effective_threads(threads);
-    par_row_chunks(l, dv, threads, exec, &mut out, |r0, r1, slice, scratch| {
-        dense::attention_rows_fused_scratch(q, k, v, l, dk, dv, r0, r1, slice, scratch);
+    let qb = tile.query_block;
+    par_row_chunks(l, dv, threads, exec, qb, out, |r0, r1, slice, scratch| {
+        dense::attention_rows_fused_tiled_scratch(q, k, v, l, dk, dv, r0, r1, slice, scratch, tile);
     });
-    out
 }
 
 /// Multi-threaded **unfused** dense attention — the three-pass reference
@@ -187,7 +232,8 @@ pub fn dense_attention_unfused_mt_exec(
     assert_eq!(v.len(), l * dv, "v shape");
     let mut out = vec![0f32; l * dv];
     let threads = effective_threads(threads);
-    par_row_chunks(l, dv, threads, exec, &mut out, |r0, r1, slice, scratch| {
+    let qb = dense::QUERY_BLOCK;
+    par_row_chunks(l, dv, threads, exec, qb, &mut out, |r0, r1, slice, scratch| {
         dense::attention_rows_scratch(q, k, v, l, dk, dv, r0, r1, slice, scratch);
     });
     out
@@ -224,16 +270,52 @@ pub fn dsa_attention_mt_exec(
     threads: usize,
     exec: Exec<'_>,
 ) -> Vec<f32> {
-    assert_eq!(v.len(), l * dv, "v shape");
-    let scorer = ApproxScorer::new(q, k, l, dk);
     let mut out = vec![0f32; l * dv];
+    dsa_attention_into_exec(q, k, v, l, dk, dv, keep, threads, exec, Tile::DEFAULT, &mut out);
+    out
+}
+
+/// The write-into **primitive** behind the fused DSA drivers: quantizes
+/// Q/K once, runs the fused per-row pipeline over kept-column chunks of
+/// `tile.key_tile`, and writes straight into `out` (no output
+/// allocation). `tile.query_block` only shapes the work-item alignment —
+/// the DSA pipeline is per-row, so results depend on `key_tile` alone.
+#[allow(clippy::too_many_arguments)]
+pub fn dsa_attention_into_exec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+    threads: usize,
+    exec: Exec<'_>,
+    tile: Tile,
+    out: &mut [f32],
+) {
+    assert_eq!(v.len(), l * dv, "v shape");
+    assert_eq!(out.len(), l * dv, "out shape");
+    let scorer = ApproxScorer::new(q, k, l, dk);
     let threads = effective_threads(threads);
-    par_row_chunks(l, dv, threads, exec, &mut out, |r0, r1, slice, scratch| {
-        sparse::dsa_attention_rows_fused_scratch(
-            q, k, v, l, dk, dv, keep, &scorer, r0, r1, slice, scratch,
+    let qb = tile.query_block;
+    par_row_chunks(l, dv, threads, exec, qb, out, |r0, r1, slice, scratch| {
+        sparse::dsa_attention_rows_fused_tile_scratch(
+            q,
+            k,
+            v,
+            l,
+            dk,
+            dv,
+            keep,
+            &scorer,
+            r0,
+            r1,
+            slice,
+            scratch,
+            tile.key_tile,
         );
     });
-    out
 }
 
 /// Multi-threaded **unfused** dynamic-sparse attention — the oracle
@@ -256,7 +338,8 @@ pub fn dsa_attention_unfused_mt_exec(
     let scorer = ApproxScorer::new(q, k, l, dk);
     let mut out = vec![0f32; l * dv];
     let threads = effective_threads(threads);
-    par_row_chunks(l, dv, threads, exec, &mut out, |r0, r1, slice, scratch| {
+    let qb = dense::QUERY_BLOCK;
+    par_row_chunks(l, dv, threads, exec, qb, &mut out, |r0, r1, slice, scratch| {
         sparse::dsa_attention_rows_scratch(
             q, k, v, l, dk, dv, keep, &scorer, r0, r1, slice, scratch,
         );
@@ -314,16 +397,54 @@ pub fn dense_attention_batch_mt_exec(
     threads: usize,
     exec: Exec<'_>,
 ) -> Vec<f32> {
+    let mut out = vec![0f32; b * h * l * dv];
+    dense_attention_batch_into_exec(
+        q,
+        k,
+        v,
+        b,
+        h,
+        l,
+        dk,
+        dv,
+        threads,
+        exec,
+        Tile::DEFAULT,
+        &mut out,
+    );
+    out
+}
+
+/// The write-into **primitive** behind the fused batched dense driver:
+/// one dispatch over the `b * h * l` global row space at an explicit
+/// [`Tile`], written straight into `out` (no output allocation — the
+/// serving backend reuses a per-bucket buffer across batches).
+#[allow(clippy::too_many_arguments)]
+pub fn dense_attention_batch_into_exec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    h: usize,
+    l: usize,
+    dk: usize,
+    dv: usize,
+    threads: usize,
+    exec: Exec<'_>,
+    tile: Tile,
+    out: &mut [f32],
+) {
     let p = b * h;
     assert_eq!(q.len(), p * l * dk, "q shape");
     assert_eq!(k.len(), p * l * dk, "k shape");
     assert_eq!(v.len(), p * l * dv, "v shape");
     let rows = p * l;
-    let mut out = vec![0f32; rows * dv];
+    assert_eq!(out.len(), rows * dv, "out shape");
     let threads = effective_threads(threads);
-    par_row_chunks(rows, dv, threads, exec, &mut out, |g0, g1, slice, scratch| {
+    let qb = tile.query_block;
+    par_row_chunks(rows, dv, threads, exec, qb, out, |g0, g1, slice, scratch| {
         for_problem_ranges(l, g0, g1, |pi, r0, r1, off| {
-            dense::attention_rows_fused_scratch(
+            dense::attention_rows_fused_tiled_scratch(
                 &q[pi * l * dk..(pi + 1) * l * dk],
                 &k[pi * l * dk..(pi + 1) * l * dk],
                 &v[pi * l * dv..(pi + 1) * l * dv],
@@ -334,10 +455,10 @@ pub fn dense_attention_batch_mt_exec(
                 r1,
                 &mut slice[off * dv..(off + r1 - r0) * dv],
                 scratch,
+                tile,
             );
         });
     });
-    out
 }
 
 /// Batched multi-head **fused** dynamic-sparse attention over
@@ -377,6 +498,44 @@ pub fn dsa_attention_batch_mt_exec(
     threads: usize,
     exec: Exec<'_>,
 ) -> Vec<f32> {
+    let mut out = vec![0f32; b * h * l * dv];
+    dsa_attention_batch_into_exec(
+        q,
+        k,
+        v,
+        b,
+        h,
+        l,
+        dk,
+        dv,
+        keep,
+        threads,
+        exec,
+        Tile::DEFAULT,
+        &mut out,
+    );
+    out
+}
+
+/// The write-into **primitive** behind the fused batched DSA driver: one
+/// dispatch over the global row space, per-problem scorers exactly as a
+/// per-head dispatch would build them, written straight into `out`.
+#[allow(clippy::too_many_arguments)]
+pub fn dsa_attention_batch_into_exec(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    h: usize,
+    l: usize,
+    dk: usize,
+    dv: usize,
+    keep: usize,
+    threads: usize,
+    exec: Exec<'_>,
+    tile: Tile,
+    out: &mut [f32],
+) {
     let p = b * h;
     assert_eq!(q.len(), p * l * dk, "q shape");
     assert_eq!(k.len(), p * l * dk, "k shape");
@@ -392,11 +551,12 @@ pub fn dsa_attention_batch_mt_exec(
         })
         .collect();
     let rows = p * l;
-    let mut out = vec![0f32; rows * dv];
+    assert_eq!(out.len(), rows * dv, "out shape");
     let threads = effective_threads(threads);
-    par_row_chunks(rows, dv, threads, exec, &mut out, |g0, g1, slice, scratch| {
+    let qb = tile.query_block;
+    par_row_chunks(rows, dv, threads, exec, qb, out, |g0, g1, slice, scratch| {
         for_problem_ranges(l, g0, g1, |pi, r0, r1, off| {
-            sparse::dsa_attention_rows_fused_scratch(
+            sparse::dsa_attention_rows_fused_tile_scratch(
                 &q[pi * l * dk..(pi + 1) * l * dk],
                 &k[pi * l * dk..(pi + 1) * l * dk],
                 &v[pi * l * dv..(pi + 1) * l * dv],
@@ -409,10 +569,10 @@ pub fn dsa_attention_batch_mt_exec(
                 r1,
                 &mut slice[off * dv..(off + r1 - r0) * dv],
                 scratch,
+                tile.key_tile,
             );
         });
     });
-    out
 }
 
 #[cfg(test)]
@@ -513,6 +673,81 @@ mod tests {
                 true
             },
         );
+    }
+
+    /// The write-into primitives fully overwrite arbitrary stale output
+    /// and agree bit for bit with the Vec-returning wrappers — for
+    /// single-head and batched forms, at the default and a non-default
+    /// tile, across thread counts and both exec backends. This is the
+    /// invariant that lets the serving backend reuse one warm buffer
+    /// across batches.
+    #[test]
+    fn into_drivers_overwrite_dirty_buffers_bitwise() {
+        let mut rng = Rng::new(91);
+        let (b, h, l, dk, dv) = (2, 2, 27, 5, 4);
+        let p = b * h;
+        let q = randv(&mut rng, p * l * dk);
+        let k = randv(&mut rng, p * l * dk);
+        let v = randv(&mut rng, p * l * dv);
+        let keep = 6;
+        let pool = WorkerPool::new(2);
+        for tile in [Tile::DEFAULT, Tile { key_tile: 5, query_block: 3 }] {
+            for threads in [1, 2, 7] {
+                for exec in [Exec::Spawn, Exec::Pool(&pool)] {
+                    // single-head (problem 0) — reference at the same tile
+                    let q0 = &q[..l * dk];
+                    let k0 = &k[..l * dk];
+                    let v0 = &v[..l * dv];
+                    let want = dense::attention_fused_tiled(q0, k0, v0, l, dk, dv, tile);
+                    let mut out = vec![f32::NAN; l * dv]; // poisoned stale data
+                    dense_attention_into_exec(q0, k0, v0, l, dk, dv, threads, exec, tile, &mut out);
+                    assert_eq!(want, out, "dense into t{threads}");
+                    let kt = tile.key_tile;
+                    let want = sparse::dsa_attention_fused_tile(q0, k0, v0, l, dk, dv, keep, kt);
+                    let mut out = vec![f32::NAN; l * dv];
+                    dsa_attention_into_exec(
+                        q0, k0, v0, l, dk, dv, keep, threads, exec, tile, &mut out,
+                    );
+                    assert_eq!(want, out, "dsa into t{threads}");
+                    // batched forms against their per-problem loops
+                    let mut want = Vec::with_capacity(p * l * dv);
+                    for pi in 0..p {
+                        want.extend(dense::attention_fused_tiled(
+                            &q[pi * l * dk..(pi + 1) * l * dk],
+                            &k[pi * l * dk..(pi + 1) * l * dk],
+                            &v[pi * l * dv..(pi + 1) * l * dv],
+                            l,
+                            dk,
+                            dv,
+                            tile,
+                        ));
+                    }
+                    let mut out = vec![f32::NAN; p * l * dv];
+                    dense_attention_batch_into_exec(
+                        &q, &k, &v, b, h, l, dk, dv, threads, exec, tile, &mut out,
+                    );
+                    assert_eq!(want, out, "dense batch into t{threads}");
+                    let mut want = Vec::with_capacity(p * l * dv);
+                    for pi in 0..p {
+                        want.extend(sparse::dsa_attention_fused_tile(
+                            &q[pi * l * dk..(pi + 1) * l * dk],
+                            &k[pi * l * dk..(pi + 1) * l * dk],
+                            &v[pi * l * dv..(pi + 1) * l * dv],
+                            l,
+                            dk,
+                            dv,
+                            keep,
+                            tile.key_tile,
+                        ));
+                    }
+                    let mut out = vec![f32::NAN; p * l * dv];
+                    dsa_attention_batch_into_exec(
+                        &q, &k, &v, b, h, l, dk, dv, keep, threads, exec, tile, &mut out,
+                    );
+                    assert_eq!(want, out, "dsa batch into t{threads}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! Per-shape tile geometry for the fused attention kernels.
+//!
+//! The fused tiled online-softmax kernels (`kernels::dense`,
+//! `kernels::sparse`) are parameterized by a [`Tile`]: how many keys one
+//! K/V tile streams ([`Tile::key_tile`]) and how many query rows share
+//! each tile pass ([`Tile::query_block`]). Fused outputs depend on the
+//! key-tile size (it sets the accumulation order of the online softmax),
+//! so the serving invariant — **bit-identical results across thread
+//! counts, dispatch backends and batch shapes** — requires the tile to be
+//! fixed *per problem shape before dispatch*, never chosen from runtime
+//! conditions like the worker count or queue depth.
+//!
+//! [`TilePlan`] encodes exactly that contract: an immutable map from
+//! `(l, dk)` problem shapes to tiles, resolved once per dispatch
+//! ([`TilePlan::lookup`]) with [`Tile::DEFAULT`] (`KEY_TILE = 256`,
+//! `QUERY_BLOCK = 8` — today's constants) as the fallback for unlisted
+//! shapes. An empty plan therefore reproduces the pre-`TilePlan` fused
+//! outputs bit for bit.
+//!
+//! The **committed tile table** ([`TILE_TABLE`], surfaced as
+//! [`TilePlan::committed`]) is the offline-tuned source of truth the
+//! default [`KernelSpec`](super::dispatch::KernelSpec) ships with. It is
+//! produced by the `bench_kernels` tile sweep (`native/.../st-kt*-qb*`
+//! names): run the sweep on the serving hardware, copy the winning
+//! `(l, dk) -> (key_tile, query_block)` rows into [`TILE_TABLE`], then
+//! regenerate the derived artifact with `dsa-serve tile-plan` (CI checks
+//! the committed `results/TILE_PLAN.json` against this table in
+//! `--check` mode, so the two can never drift apart).
+
+use super::dense;
+
+/// Widest query block the fused kernels support: their per-row running
+/// max / denominator / nan-pending state are fixed-size stack arrays of
+/// this length, so a [`Tile`] may not exceed it (enforced by
+/// [`Tile::validate`] and clamped defensively in the kernels).
+pub const MAX_QUERY_BLOCK: usize = 32;
+
+/// One fused-kernel tile geometry: the unit entry of a [`TilePlan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tile {
+    /// Keys (and value rows) per K/V tile. Changes the accumulation order
+    /// of the fused online softmax, so outputs are only comparable
+    /// bit-for-bit at equal `key_tile`.
+    pub key_tile: usize,
+    /// Query rows sharing each K/V tile pass. Pure locality: each row owns
+    /// its running state, so per-row results never depend on this.
+    pub query_block: usize,
+}
+
+impl Tile {
+    /// Today's constants — the fallback geometry every unlisted shape
+    /// runs at, reproducing the pre-`TilePlan` fused outputs bit for bit.
+    pub const DEFAULT: Tile = Tile {
+        key_tile: dense::KEY_TILE,
+        query_block: dense::QUERY_BLOCK,
+    };
+
+    /// Is this a usable geometry (`key_tile >= 1`,
+    /// `1 <= query_block <= MAX_QUERY_BLOCK`)?
+    pub fn validate(&self) -> bool {
+        self.key_tile >= 1 && (1..=MAX_QUERY_BLOCK).contains(&self.query_block)
+    }
+}
+
+impl Default for Tile {
+    fn default() -> Tile {
+        Tile::DEFAULT
+    }
+}
+
+/// The committed per-shape tile table: `(l, dk, key_tile, query_block)`
+/// rows, offline-tuned via the `bench_kernels` tile sweep on the serving
+/// hardware and checked into source so every build resolves the same
+/// plan.
+///
+/// PROVENANCE: currently **empty** — every shape runs at
+/// [`Tile::DEFAULT`], which is exactly the pre-`TilePlan` behavior. The
+/// PR introducing this table was authored in a container without a Rust
+/// toolchain, so the tuning sweep could not be run; populate it by
+/// running `cargo bench --bench bench_kernels` on a cargo-equipped
+/// machine, copying the printed `suggested TILE_TABLE rows` here, and
+/// refreshing the derived artifact with `dsa-serve tile-plan`.
+pub const TILE_TABLE: &[(usize, usize, usize, usize)] = &[];
+
+/// An immutable `(l, dk) -> Tile` plan, fixed before dispatch. Lookups
+/// are deterministic functions of the shape alone — thread count, exec
+/// backend and batch size never enter — which is what keeps fused
+/// outputs bit-identical across all of them (property-tested in
+/// `kernels::dispatch`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TilePlan {
+    /// Sorted by `(l, dk)` for binary-search lookup.
+    entries: Vec<((usize, usize), Tile)>,
+}
+
+impl TilePlan {
+    /// The empty plan: every shape resolves to [`Tile::DEFAULT`].
+    pub fn empty() -> TilePlan {
+        TilePlan::default()
+    }
+
+    /// The plan encoded by the committed [`TILE_TABLE`] — what the
+    /// default `KernelSpec` ships with.
+    pub fn committed() -> TilePlan {
+        let mut plan = TilePlan::empty();
+        for &(l, dk, key_tile, query_block) in TILE_TABLE {
+            plan = plan.with_entry(l, dk, Tile { key_tile, query_block });
+        }
+        plan
+    }
+
+    /// Add (or replace) the tile for one `(l, dk)` shape. Panics on an
+    /// invalid geometry — a bad committed table must fail loudly at
+    /// construction, not silently misroute at dispatch.
+    pub fn with_entry(mut self, l: usize, dk: usize, tile: Tile) -> TilePlan {
+        assert!(
+            tile.validate(),
+            "invalid tile {tile:?} for (l={l}, dk={dk}): need key_tile >= 1 and \
+             1 <= query_block <= {MAX_QUERY_BLOCK}"
+        );
+        match self.entries.binary_search_by_key(&(l, dk), |e| e.0) {
+            Ok(i) => self.entries[i].1 = tile,
+            Err(i) => self.entries.insert(i, ((l, dk), tile)),
+        }
+        self
+    }
+
+    /// The tile to run an `(l, dk)` problem at: the planned entry, or
+    /// [`Tile::DEFAULT`] for unlisted shapes. Pure function of the shape.
+    pub fn lookup(&self, l: usize, dk: usize) -> Tile {
+        match self.entries.binary_search_by_key(&(l, dk), |e| e.0) {
+            Ok(i) => self.entries[i].1,
+            Err(_) => Tile::DEFAULT,
+        }
+    }
+
+    /// Planned entries, ascending by `(l, dk)`.
+    pub fn entries(&self) -> impl Iterator<Item = (usize, usize, Tile)> + '_ {
+        self.entries.iter().map(|&((l, dk), t)| (l, dk, t))
+    }
+
+    /// Number of planned (non-fallback) shapes.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_tile_matches_the_constants() {
+        assert_eq!(Tile::DEFAULT.key_tile, dense::KEY_TILE);
+        assert_eq!(Tile::DEFAULT.query_block, dense::QUERY_BLOCK);
+        assert!(Tile::DEFAULT.validate());
+    }
+
+    #[test]
+    fn empty_plan_always_falls_back() {
+        let p = TilePlan::empty();
+        for (l, dk) in [(0, 0), (1, 1), (256, 64), (2000, 64)] {
+            assert_eq!(p.lookup(l, dk), Tile::DEFAULT);
+        }
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn entries_resolve_and_replace() {
+        let t1 = Tile { key_tile: 128, query_block: 4 };
+        let t2 = Tile { key_tile: 512, query_block: 16 };
+        let p = TilePlan::empty()
+            .with_entry(1024, 64, t1)
+            .with_entry(256, 64, t2)
+            .with_entry(1024, 64, t2); // replaces t1
+        assert_eq!(p.lookup(1024, 64), t2);
+        assert_eq!(p.lookup(256, 64), t2);
+        // near-miss shapes fall back
+        assert_eq!(p.lookup(1024, 32), Tile::DEFAULT);
+        assert_eq!(p.lookup(1023, 64), Tile::DEFAULT);
+        assert_eq!(p.len(), 2);
+        let listed: Vec<_> = p.entries().collect();
+        assert_eq!(listed, vec![(256, 64, t2), (1024, 64, t2)]);
+    }
+
+    /// Lookups are pure functions of the shape: repeated queries agree,
+    /// and nothing about the environment (thread counts etc.) can enter
+    /// the signature. The dispatch-level property test extends this to
+    /// bit-identical kernel outputs across thread counts and backends.
+    #[test]
+    fn lookup_is_deterministic() {
+        let p = TilePlan::committed();
+        for (l, dk) in [(64, 8), (256, 64), (1024, 64)] {
+            let first = p.lookup(l, dk);
+            for _ in 0..3 {
+                assert_eq!(p.lookup(l, dk), first);
+            }
+            assert!(first.validate());
+        }
+    }
+
+    #[test]
+    fn committed_table_is_valid() {
+        // A malformed TILE_TABLE row must fail this test (with_entry
+        // panics), not surface as silent misrouting in serving.
+        let p = TilePlan::committed();
+        assert_eq!(p.len(), TILE_TABLE.len());
+        for (_, _, t) in p.entries() {
+            assert!(t.validate());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid tile")]
+    fn oversized_query_block_rejected() {
+        let _ = TilePlan::empty().with_entry(
+            64,
+            8,
+            Tile { key_tile: 64, query_block: MAX_QUERY_BLOCK + 1 },
+        );
+    }
+}

@@ -22,9 +22,9 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`kernels`] | native DSA pipeline, served through **fused, cache-tiled kernels with online softmax** (query blocks × K/V tiles, one pass over the data; unfused three-pass forms retained as property-test oracles and bench comparators): dense baseline, int8 score prediction, SDDMM, masked softmax, SpMM; SIMD lane primitives (`kernels::simd`: dot/axpy/max/rescale, AVX2- and AVX-512-specialized with a scalar oracle), allocation-free per-worker scratch (incl. the predictor's score buffers), a persistent worker pool (`kernels::pool`: parked channel-fed workers with warm scratch — one pool serves the whole process), row-parallel drivers over query-block-aligned row blocks for single-head and batched multi-head `[b, h, l, d]` problems (pool-backed by default, scoped-spawn kept as the benchmarked comparator), `KernelDispatch` |
+//! | [`kernels`] | native DSA pipeline, served through **fused, cache-tiled kernels with online softmax** (query blocks × K/V tiles, one pass over the data; unfused three-pass forms retained as property-test oracles and bench comparators): dense baseline, int8 score prediction, SDDMM, masked softmax, SpMM; SIMD lane primitives (`kernels::simd`: dot/axpy/max/rescale, AVX2- and AVX-512-specialized with a scalar oracle), allocation-free per-worker scratch (incl. the predictor's score buffers), a persistent worker pool (`kernels::pool`: parked channel-fed workers with warm scratch — one pool serves the whole process), row-parallel drivers over query-block-aligned row blocks for single-head and batched multi-head `[b, h, l, d]` problems (pool-backed by default, scoped-spawn kept as the benchmarked comparator; write-into `*_into_exec` forms are the primitives). Dispatch is **typed**: the `Variant` enum is the single source of truth for variant names, `KernelSpec` (threads + `ExecPolicy` + per-shape `TilePlan`, `kernels::tiles`) replaces bare thread counts, `KernelDispatch::forward_into`/`forward_batch_into` are the allocation-free primitives (Vec forms are default wrappers), and new kernel families plug into the `KernelRegistry` at one point |
 //! | [`runtime`] | artifact manifest (always) + PJRT client/registry (`xla` feature) |
-//! | [`coordinator`] | dynamic batcher, backends, engine worker, queue-depth adaptive variant router, metrics (incl. router decisions + pool counters) |
+//! | [`coordinator`] | dynamic batcher, backends (warm per-bucket batch buffers — zero per-batch output allocations at steady state), engine worker, queue-depth adaptive variant router (typed rungs, validated at construction via `AdaptiveRouter::from_pairs`), metrics (incl. router decisions + pool counters) |
 //! | [`server`] | line-JSON TCP front end + client |
 //! | [`sparse`] | mask / CSR / column-vector formats, top-k |
 //! | [`sim`] | PE-array dataflow + multi-precision simulators (Sec. 5.2) |

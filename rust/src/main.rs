@@ -17,6 +17,7 @@ use std::sync::Arc;
 use dsa_serve::coordinator::{
     AdaptiveRouter, BatchPolicy, Engine, EngineConfig, NativeModelConfig,
 };
+use dsa_serve::kernels::{Tile, TilePlan, Variant};
 use dsa_serve::util::error::{bail, err, Result};
 use dsa_serve::costmodel::{energy, gpu, macs};
 use dsa_serve::runtime::registry::Manifest;
@@ -43,6 +44,7 @@ fn main() {
         "infer" => cmd_infer(&rest),
         "bench-serve" => cmd_bench_serve(&rest),
         "bench-compare" => cmd_bench_compare(&rest),
+        "tile-plan" => cmd_tile_plan(&rest),
         "simulate" => cmd_simulate(&rest),
         "costmodel" => cmd_costmodel(&rest),
         "report" => cmd_report(&rest),
@@ -69,6 +71,7 @@ fn usage() -> String {
        infer          one-shot inference       (--artifacts, --variant, --label)\n\
        bench-serve    serving benchmark        (--requests, --rate|--rates, --out)\n\
        bench-compare  perf gate vs committed   (--baseline, --fresh, --max-regress)\n\
+       tile-plan      write/check the derived tile table (--check, --out)\n\
        simulate       PE dataflow simulation   (--artifacts, --pes)\n\
        costmodel      print cost-model tables  (--task)\n\
        report         summarize results/bench.jsonl\n\
@@ -99,8 +102,14 @@ fn start_engine(a: &Args) -> Result<Engine> {
         "on" => Some(AdaptiveRouter::default_ladder()),
         other => bail!("unknown --adaptive {other:?} (on|off)"),
     };
+    // Parse the CLI variant ONCE into the typed form; a typo fails here,
+    // at startup, with the parse error naming the flag.
+    let variant = a
+        .get("variant")
+        .parse::<Variant>()
+        .map_err(|e| e.context("--variant"))?;
     let cfg = EngineConfig {
-        default_variant: a.get("variant"),
+        default_variant: variant,
         policy: BatchPolicy {
             max_batch: a.get_usize("max-batch"),
             max_wait: std::time::Duration::from_millis(a.get_usize("max-wait-ms") as u64),
@@ -484,6 +493,105 @@ fn cmd_bench_compare(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Render the committed tile table (`kernels::tiles::TILE_TABLE`, the
+/// in-source source of truth the default `KernelSpec` resolves tiles
+/// from) as its derived JSON artifact.
+fn tile_plan_json() -> Json {
+    let plan = TilePlan::committed();
+    let fallback = Tile::DEFAULT;
+    let entries: Vec<Json> = plan
+        .entries()
+        .map(|(l, dk, t)| {
+            Json::obj(vec![
+                ("l", Json::num(l as f64)),
+                ("dk", Json::num(dk as f64)),
+                ("key_tile", Json::num(t.key_tile as f64)),
+                ("query_block", Json::num(t.query_block as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("suite", Json::str("tile_plan")),
+        (
+            "provenance",
+            Json::str(
+                "derived from kernels::tiles::TILE_TABLE — regenerate with \
+                 `dsa-serve tile-plan` after editing the table (CI checks drift \
+                 with `dsa-serve tile-plan --check`); populate the table from the \
+                 bench_kernels tile sweep (suggested TILE_TABLE rows)",
+            ),
+        ),
+        (
+            "fallback",
+            Json::obj(vec![
+                ("key_tile", Json::num(fallback.key_tile as f64)),
+                ("query_block", Json::num(fallback.query_block as f64)),
+            ]),
+        ),
+        ("entries", Json::Arr(entries)),
+    ])
+}
+
+/// Write — or, with `--check`, verify — the derived tile-table artifact
+/// (`results/TILE_PLAN.json`) against the committed in-source table, so
+/// the two can never drift apart (the CI `tile-table` step runs the
+/// check mode).
+fn cmd_tile_plan(rest: &[String]) -> Result<()> {
+    let a = Args::new("dsa-serve tile-plan", "committed per-shape tile table")
+        .opt(
+            "out",
+            "auto",
+            "derived JSON path; auto = repo-root results/TILE_PLAN.json",
+        )
+        .flag(
+            "check",
+            "verify the on-disk JSON matches the in-source table; exit nonzero on drift",
+        )
+        .parse(rest)
+        .map_err(|u| err!("{u}"))?;
+    let out = a.get("out");
+    let path = if out == "auto" {
+        bench::results_path("TILE_PLAN.json")
+    } else {
+        std::path::PathBuf::from(&out)
+    };
+    let plan = TilePlan::committed();
+    let text = tile_plan_json().to_string();
+    if a.get_flag("check") {
+        let on_disk = std::fs::read_to_string(&path)
+            .map_err(|e| err!("reading committed tile plan {}: {e}", path.display()))?;
+        if on_disk.trim() != text.trim() {
+            bail!(
+                "{} is out of date with kernels::tiles::TILE_TABLE — \
+                 run `dsa-serve tile-plan` and commit the result",
+                path.display()
+            );
+        }
+        println!(
+            "tile plan OK: {} matches TILE_TABLE ({} tuned entr{}, fallback {}x{})",
+            path.display(),
+            plan.len(),
+            if plan.len() == 1 { "y" } else { "ies" },
+            Tile::DEFAULT.key_tile,
+            Tile::DEFAULT.query_block,
+        );
+    } else {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, format!("{text}\n"))?;
+        println!(
+            "wrote {} ({} tuned entr{}; every other shape runs the {}x{} fallback)",
+            path.display(),
+            plan.len(),
+            if plan.len() == 1 { "y" } else { "ies" },
+            Tile::DEFAULT.key_tile,
+            Tile::DEFAULT.query_block,
+        );
+    }
+    Ok(())
+}
+
 fn cmd_simulate(rest: &[String]) -> Result<()> {
     let a = Args::new("dsa-serve simulate", "PE-array dataflow simulation")
         .opt("artifacts", "artifacts", "artifact directory")
@@ -632,6 +740,22 @@ fn cmd_report(rest: &[String]) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The committed derived artifact must match what `dsa-serve
+    /// tile-plan` would write from the in-source `TILE_TABLE` — the same
+    /// consistency CI's `tile-plan --check` step enforces, but hermetic
+    /// in `cargo test` so drift fails before a PR even reaches CI.
+    #[test]
+    fn committed_tile_plan_matches_source_table() {
+        let generated = tile_plan_json().to_string();
+        let committed = include_str!("../../results/TILE_PLAN.json");
+        assert_eq!(
+            generated.trim(),
+            committed.trim(),
+            "results/TILE_PLAN.json is out of date with kernels::tiles::TILE_TABLE — \
+             run `dsa-serve tile-plan` and commit the result"
+        );
+    }
 
     #[test]
     fn rates_accept_valid_sweeps() {

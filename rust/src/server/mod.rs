@@ -18,6 +18,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::Engine;
+use crate::kernels::Variant;
 use crate::util::error::{bail, Context, Result};
 use crate::util::json::{self, Json};
 
@@ -103,10 +104,20 @@ pub fn handle_line(line: &str, engine: &Engine, stop: &AtomicBool) -> Result<Jso
                 .iter()
                 .filter_map(|v| v.as_f64().map(|f| f as i32))
                 .collect();
-            let variant = req
-                .get("variant")
-                .and_then(|v| v.as_str())
-                .map(str::to_string);
+            // Parse the variant override ONCE, here at the protocol
+            // boundary (`Variant::from_str` is the only string parse in
+            // the stack): an unknown name — or a present-but-non-string
+            // field — becomes a structured error reply instead of a dead
+            // in-flight request or a silent fall-through to the default.
+            let variant = match req.get("variant") {
+                None | Some(Json::Null) => None,
+                Some(v) => {
+                    let name = v
+                        .as_str()
+                        .context("\"variant\" must be a string (e.g. \"dsa90\")")?;
+                    Some(name.parse::<Variant>()?)
+                }
+            };
             let resp = engine.infer(tokens, variant)?;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -119,7 +130,7 @@ pub fn handle_line(line: &str, engine: &Engine, stop: &AtomicBool) -> Result<Jso
                 ("latency_ms", Json::num(resp.latency.as_secs_f64() * 1e3)),
                 ("queue_ms", Json::num(resp.queue_time.as_secs_f64() * 1e3)),
                 ("batch", Json::num(resp.batch_size as f64)),
-                ("variant", Json::str(resp.variant)),
+                ("variant", Json::str(resp.variant.to_string())),
             ]))
         }
         other => bail!("unknown op {other:?}"),

@@ -13,6 +13,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
+use dsa_serve::kernels::Variant;
 use dsa_serve::runtime::registry::{Manifest, Registry};
 use dsa_serve::runtime::Arg;
 use dsa_serve::server;
@@ -111,7 +112,7 @@ fn engine_serves_and_model_beats_chance() {
     let engine = Engine::start(
         man.clone(),
         EngineConfig {
-            default_variant: "dense".into(),
+            default_variant: Variant::Dense,
             policy: BatchPolicy {
                 max_batch: 8,
                 max_wait: Duration::from_millis(2),
@@ -175,13 +176,13 @@ fn variant_override_routing() {
     });
     let r = wl.next_request();
     let resp_dense = engine
-        .infer(r.tokens.clone(), Some("dense".into()))
+        .infer(r.tokens.clone(), Some(Variant::Dense))
         .expect("dense");
     let resp_dsa = engine
-        .infer(r.tokens, Some("dsa90".into()))
+        .infer(r.tokens, Some(Variant::Dsa { pct: 90 }))
         .expect("dsa90");
-    assert_eq!(resp_dense.variant, "dense");
-    assert_eq!(resp_dsa.variant, "dsa90");
+    assert_eq!(resp_dense.variant, Variant::Dense);
+    assert_eq!(resp_dsa.variant, Variant::Dsa { pct: 90 });
 }
 
 /// Server protocol: infer / metrics / ping round-trip via handle_line.

@@ -7,15 +7,16 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::time::Duration;
 
-use dsa_serve::coordinator::{
-    AdaptiveRouter, BatchPolicy, Engine, EngineConfig, NativeModelConfig, Rung,
-};
+use dsa_serve::coordinator::{AdaptiveRouter, BatchPolicy, Engine, EngineConfig, NativeModelConfig};
+use dsa_serve::kernels::Variant;
 use dsa_serve::server;
 use dsa_serve::util::json::Json;
 use dsa_serve::workload::{Workload, WorkloadConfig};
 
 const SEQ_LEN: usize = 256;
 
+/// Build an engine for a variant *name*, parsing it exactly once at the
+/// test boundary — the same place the CLI/protocol would.
 fn engine(variant: &str) -> Engine {
     Engine::start_native(
         NativeModelConfig {
@@ -23,7 +24,7 @@ fn engine(variant: &str) -> Engine {
             ..Default::default()
         },
         EngineConfig {
-            default_variant: variant.to_string(),
+            default_variant: variant.parse::<Variant>().expect("test variant"),
             policy: BatchPolicy {
                 max_batch: 8,
                 max_wait: Duration::from_millis(2),
@@ -40,6 +41,7 @@ fn engine(variant: &str) -> Engine {
 /// the task through both the dense and the dynamic-sparse kernels, and the
 /// dynamic batcher must actually batch.
 fn serve_and_score(variant: &str, n: usize) -> (usize, f64) {
+    let typed = variant.parse::<Variant>().expect("test variant");
     let engine = engine(variant);
     let mut wl = Workload::new(WorkloadConfig {
         seq_len: SEQ_LEN,
@@ -58,7 +60,7 @@ fn serve_and_score(variant: &str, n: usize) -> (usize, f64) {
         let resp = rx.recv().expect("response");
         assert_eq!(resp.logits.len(), engine.classes());
         assert!(resp.latency > Duration::ZERO);
-        assert_eq!(resp.variant, variant);
+        assert_eq!(resp.variant, typed);
         if resp.pred as i32 == label {
             correct += 1;
         }
@@ -105,20 +107,66 @@ fn variant_override_routing() {
         ..Default::default()
     });
     let r = wl.next_request();
-    let resp_dense = e.infer(r.tokens.clone(), Some("dense".into())).expect("dense");
-    let resp_dsa = e.infer(r.tokens, Some("dsa95".into())).expect("dsa95");
-    assert_eq!(resp_dense.variant, "dense");
-    assert_eq!(resp_dsa.variant, "dsa95");
+    let resp_dense = e.infer(r.tokens.clone(), Some(Variant::Dense)).expect("dense");
+    let resp_dsa = e.infer(r.tokens, Some(Variant::Dsa { pct: 95 })).expect("dsa95");
+    assert_eq!(resp_dense.variant, Variant::Dense);
+    assert_eq!(resp_dsa.variant, Variant::Dsa { pct: 95 });
 }
 
+/// With the typed `Variant` API an unknown variant can no longer reach
+/// the engine at all: it fails at the parse boundary — the server
+/// protocol replies with a structured error, and the engine stays healthy
+/// for subsequent requests. (Before the redesign the bogus string rode
+/// the queue and only failed at batch execution.)
 #[test]
-fn unknown_variant_fails_closed() {
+fn unknown_variant_fails_at_parse_boundary() {
+    assert!("bogus".parse::<Variant>().is_err());
+    let engine = engine("dense");
+    let stop = AtomicBool::new(false);
+    let toks: Vec<String> = vec![1i32; SEQ_LEN].iter().map(|t| t.to_string()).collect();
+    let line = format!(
+        r#"{{"op":"infer","variant":"bogus","tokens":[{}]}}"#,
+        toks.join(",")
+    );
+    let err = server::handle_line(&line, &engine, &stop).expect_err("unknown variant");
+    assert!(
+        format!("{err:#}").contains("bogus"),
+        "error must name the rejected variant"
+    );
+    // A present-but-non-string variant field is rejected too — never
+    // silently served under the default variant.
+    let line = format!(
+        r#"{{"op":"infer","variant":90,"tokens":[{}]}}"#,
+        toks.join(",")
+    );
+    let err = server::handle_line(&line, &engine, &stop).expect_err("non-string variant");
+    assert!(
+        format!("{err:#}").contains("must be a string"),
+        "error must explain the malformed field"
+    );
+    // The engine never saw either request and keeps serving.
+    assert!(engine.infer(vec![1i32; SEQ_LEN], None).is_ok());
+}
+
+/// The execute_batch runtime-failure contract, end to end: an
+/// unbuildable (representable-but-invalid) variant override reaches
+/// batch execution, the batch fails, the waiter channel is dropped so
+/// `infer` returns an error instead of hanging — and the engine stays
+/// healthy for subsequent requests.
+#[test]
+fn failing_batch_drops_waiters_and_engine_survives() {
     let e = engine("dense");
     let tokens = vec![1i32; SEQ_LEN];
-    // The batch execution fails; the waiter channel is dropped and infer
-    // surfaces an error instead of hanging or panicking.
-    assert!(e.infer(tokens.clone(), Some("bogus".into())).is_err());
-    // The engine stays healthy for subsequent requests.
+    // Dsa { pct: 0 } parses nowhere but is constructible; the fail-closed
+    // registry builds no kernel for it, so the batch execution errors.
+    let err = e
+        .infer(tokens.clone(), Some(Variant::Dsa { pct: 0 }))
+        .expect_err("unbuildable variant batch must fail, not hang");
+    assert!(
+        format!("{err:#}").contains("dropped"),
+        "waiter must observe the dropped channel: {err:#}"
+    );
+    // The engine keeps serving.
     assert!(e.infer(tokens, None).is_ok());
 }
 
@@ -128,16 +176,51 @@ fn wrong_length_rejected_at_submit() {
     assert!(e.submit(vec![1i32; SEQ_LEN - 1], None).is_err());
 }
 
+/// The worker-thread preload-failure path still reports synchronously at
+/// startup: a representable-but-invalid variant (`Dsa { pct: 0 }` — the
+/// fail-closed registry builds no kernel for it) makes
+/// `Engine::start_native` return an error instead of hanging or serving.
 #[test]
-fn unknown_default_variant_fails_startup() {
+fn failing_preload_fails_engine_startup() {
     let r = Engine::start_native(
-        NativeModelConfig::default(),
+        NativeModelConfig {
+            seq_len: SEQ_LEN,
+            ..Default::default()
+        },
         EngineConfig {
-            default_variant: "dsaXL".into(),
+            default_variant: Variant::Dsa { pct: 0 },
             ..Default::default()
         },
     );
-    assert!(r.is_err(), "preload of unknown variant must fail startup");
+    let err = r.expect_err("preload of an unbuildable variant must fail startup");
+    assert!(
+        format!("{err:#}").contains("preload"),
+        "startup error must point at the preload stage"
+    );
+}
+
+/// A typo'd router rung fails engine startup: `AdaptiveRouter::from_pairs`
+/// validates every rung via `Variant::from_str` at construction, so the
+/// ladder is rejected before a worker thread ever exists.
+#[test]
+fn typoed_router_rung_fails_before_startup() {
+    let ladder = AdaptiveRouter::from_pairs(&[("dense", 0), ("dsaXL", 8)], 1);
+    assert!(ladder.is_err(), "typo'd rung must fail ladder construction");
+    // And a valid ladder built from the same API starts fine.
+    let router = AdaptiveRouter::from_pairs(&[("dense", 0), ("dsa90", 8)], 1).unwrap();
+    let e = Engine::start_native(
+        NativeModelConfig {
+            seq_len: SEQ_LEN,
+            ..Default::default()
+        },
+        EngineConfig {
+            default_variant: Variant::Dense,
+            router: Some(router),
+            ..Default::default()
+        },
+    )
+    .expect("valid ladder starts");
+    assert!(e.infer(vec![1i32; SEQ_LEN], None).is_ok());
 }
 
 /// The engine worker drives `AdaptiveRouter::select` from live queue
@@ -153,7 +236,7 @@ fn adaptive_router_routes_under_load_and_reports() {
             ..Default::default()
         },
         EngineConfig {
-            default_variant: "dense".to_string(),
+            default_variant: Variant::Dense,
             policy: BatchPolicy {
                 max_batch: 4,
                 // Generous deadline: the whole burst is enqueued long
@@ -163,13 +246,12 @@ fn adaptive_router_routes_under_load_and_reports() {
                 queue_cap: 128,
             },
             preload: true,
-            router: Some(AdaptiveRouter::new(
-                vec![
-                    Rung { variant: "dense".into(), min_queue: 0 },
-                    Rung { variant: "dsa90".into(), min_queue: 2 },
-                ],
-                0,
-            )),
+            // Built from config-style pairs: the from_pairs satellite's
+            // validated construction, exercised end to end.
+            router: Some(
+                AdaptiveRouter::from_pairs(&[("dense", 0), ("dsa90", 2)], 0)
+                    .expect("valid ladder"),
+            ),
         },
     )
     .expect("native engine with router");
@@ -184,20 +266,21 @@ fn adaptive_router_routes_under_load_and_reports() {
     for r in trace {
         rxs.push(engine.submit(r.tokens, None).expect("submit"));
     }
-    let mut variants: Vec<String> = Vec::new();
+    let mut variants: Vec<Variant> = Vec::new();
     for rx in rxs {
         variants.push(rx.recv().expect("response").variant);
     }
+    let (dense, dsa90) = (Variant::Dense, Variant::Dsa { pct: 90 });
     assert!(
-        variants.iter().all(|v| v == "dense" || v == "dsa90"),
+        variants.iter().all(|&v| v == dense || v == dsa90),
         "router must only serve ladder rungs, got {variants:?}"
     );
     assert!(
-        variants.iter().any(|v| v == "dsa90"),
+        variants.iter().any(|&v| v == dsa90),
         "burst backlog must escalate at least one batch to dsa90"
     );
     // The last batch leaves an empty queue, so the ladder ends de-escalated.
-    assert_eq!(variants.last().map(String::as_str), Some("dense"));
+    assert_eq!(variants.last(), Some(&dense));
 
     let m = engine.metrics.to_json();
     let router = m.get("router").expect("router section in metrics");
