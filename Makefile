@@ -38,7 +38,9 @@ help:
 	@echo "  bench-serve    native-backend serving rate sweep -> results/BENCH_serving_native.json"
 	@echo "                 (dsa-serve bench-serve: --rates validates entries — finite,"
 	@echo "                 >= 0, no duplicates; --adaptive on enables queue-depth"
-	@echo "                 variant routing, decisions visible in metrics)"
+	@echo "                 variant routing, decisions visible in metrics; --decode"
+	@echo "                 appends a streamed decode-session point with TTFT/ITL"
+	@echo "                 percentiles — tune it with --sessions/--prefill/--steps)"
 	@echo "  tile-plan      regenerate results/TILE_PLAN.json from the in-source"
 	@echo "                 kernels::tiles::TILE_TABLE (tune entries with the"
 	@echo "                 bench_kernels tile sweep; CI gates drift via --check)"
@@ -86,10 +88,11 @@ bench-compare:
 tile-plan:
 	cargo run --release --manifest-path $(CARGO_MANIFEST) --bin dsa-serve -- tile-plan
 
-## open-loop serving rate sweep against the hermetic native backend
+## open-loop serving rate sweep + streamed decode-session point (TTFT/ITL)
+## against the hermetic native backend
 bench-serve:
 	cargo run --release --manifest-path $(CARGO_MANIFEST) --bin dsa-serve -- bench-serve \
-		--backend native --requests 120 --rates 100,300,600
+		--backend native --requests 120 --rates 100,300,600 --decode --sessions 16
 
 fmt:
 	cargo fmt --manifest-path $(CARGO_MANIFEST) --all -- --check

@@ -14,7 +14,10 @@
 //! shape, st fused) acts as the offline tuner for the committed per-shape
 //! tile table (`kernels::tiles::TILE_TABLE`): winning rows print as
 //! ready-to-commit table entries and land under `"derived"` as
-//! `tile_plan/...` notes.
+//! `tile_plan/...` notes. A **decode microbench** times the single-query
+//! fused decode kernels against an l-row KV cache vs a full-forward
+//! recompute; the full/step ratios land under `"derived"` as
+//! `decode/...` notes.
 //! Runs hermetically — no artifacts required — and tracks the perf
 //! trajectory via `results/bench.jsonl`, a `results/BENCH_kernels.json`
 //! summary, and a printed diff against the previously committed summary
@@ -32,8 +35,8 @@ use std::time::Duration;
 use dsa_serve::kernels::parallel::Exec;
 use dsa_serve::kernels::simd::{self, Mode};
 use dsa_serve::kernels::{
-    dense, parallel, scratch, sparse, AttnBatch, KernelSpec, SparseKernel, Tile, Variant,
-    WorkerPool,
+    dense, parallel, scratch, sparse, AttnBatch, KernelSpec, KvCache, SparseKernel, Tile,
+    Variant, WorkerPool,
 };
 use dsa_serve::util::bench::{diff_baseline, results_path, Bench};
 use dsa_serve::util::json;
@@ -288,6 +291,34 @@ fn main() {
         }
     }
 
+    // Decode microbench: one streamed token — the single-query fused
+    // decode kernel against an l-row KV cache — vs recomputing the whole
+    // fused forward from scratch, which is what producing the next token
+    // costs WITHOUT a cache. Both sides single-threaded (the full-forward
+    // numbers reuse the h1/st benches above at the same shape), so the
+    // full/step ratio isolates the work the cache elides; it should track
+    // ~l for dense and ~keep-dominated for dsa90.
+    for &l in &lengths {
+        let mut cache = KvCache::new(dk, dv);
+        for _ in 0..l {
+            let (kr, vr) = (randv(dk, &mut rng), randv(dv, &mut rng));
+            cache.append(&kr, &vr);
+        }
+        let qrow = randv(dk, &mut rng);
+        let mut out = vec![0f32; dv];
+        let mut dscratch = scratch::Scratch::default();
+        for variant in [Variant::Dense, Variant::Dsa { pct: 90 }] {
+            let kernel = variant
+                .build(&KernelSpec::with_threads(1))
+                .expect("native variant");
+            let tag = if variant == Variant::Dense { "dense" } else { "dsa90" };
+            b.run(&format!("native/decode/l{l}/{tag}/step/simd"), || {
+                kernel.decode_into(&qrow, &cache, &mut dscratch, &mut out);
+                std::hint::black_box(&out);
+            });
+        }
+    }
+
     println!(
         "\nscratch grow events this run: {} (bounded per worker+dispatch, not per row)",
         scratch::grow_events() - grows_before
@@ -477,6 +508,23 @@ fn main() {
         for (l, dk, kt, qb) in &suggested {
             println!("    ({l}, {dk}, {kt}, {qb}),");
         }
+    }
+
+    println!("\n=== decode step vs full-forward recompute (full/step, = next-token cost the KV cache elides) ===");
+    for &l in &lengths {
+        let d = ratio(
+            &b,
+            format!("native/dense/l{l}/h1/st/simd"),
+            format!("native/decode/l{l}/dense/step/simd"),
+        );
+        let s = ratio(
+            &b,
+            format!("native/dsa/l{l}/s90/h1/st/simd"),
+            format!("native/decode/l{l}/dsa90/step/simd"),
+        );
+        println!("  l={l:<5} dense {d:.1}x   dsa90 {s:.1}x");
+        b.note(&format!("decode/dense/l{l}/full_vs_step"), d);
+        b.note(&format!("decode/dsa90/l{l}/full_vs_step"), s);
     }
 
     #[cfg(feature = "xla")]

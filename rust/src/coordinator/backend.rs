@@ -26,7 +26,9 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::kernels::dispatch::{KernelDispatch, KernelRegistry, KernelSpec, Variant};
-use crate::kernels::model::{ModelScratch, NativeClassifier};
+use crate::kernels::kvcache::{KvCachePool, KvPoolStats};
+use crate::kernels::model::{DecodeSession, ModelScratch, NativeClassifier};
+use crate::kernels::scratch::Scratch;
 use crate::util::error::{bail, Context, Result};
 
 /// What the engine worker needs from an execution backend.
@@ -63,6 +65,53 @@ pub trait InferBackend {
         self.run_into(variant, tokens, bucket, &mut logits)?;
         Ok(logits)
     }
+
+    // --- autoregressive decode sessions -------------------------------
+    //
+    // Default implementations return a structured "unsupported" error, so
+    // backends without a decode path (the AOT artifact backend compiles
+    // fixed-shape one-shot modules) reject session traffic cleanly
+    // instead of panicking or needing their own stubs.
+
+    /// Open decode session `id` on `variant`, prefilling the cache with
+    /// `prompt`. Returns the resident token count.
+    fn open_session(&mut self, id: u64, variant: Variant, prompt: &[i32]) -> Result<usize> {
+        let _ = (id, variant, prompt);
+        bail!("backend does not support decode sessions")
+    }
+
+    /// Append `token` to session `id` and run one decode step, writing
+    /// `classes()` logits into `logits` (cleared first; the engine worker
+    /// owns one warm buffer, so steady-state decode performs no per-step
+    /// output allocation). Returns the resident token count.
+    fn decode_into(&mut self, id: u64, token: i32, logits: &mut Vec<f32>) -> Result<usize> {
+        let _ = (id, token, logits);
+        bail!("backend does not support decode sessions")
+    }
+
+    /// Close session `id`, releasing its cache for reuse. Returns the
+    /// token count that was resident.
+    fn close_session(&mut self, id: u64) -> Result<usize> {
+        let _ = id;
+        bail!("backend does not support decode sessions")
+    }
+
+    /// Live decode sessions (metrics gauge).
+    fn session_count(&self) -> usize {
+        0
+    }
+
+    /// Tokens resident across all live session caches (metrics gauge).
+    fn resident_tokens(&self) -> usize {
+        0
+    }
+
+    /// Cache bucket-grow events across live sessions **and** the pooled
+    /// free list — flat once steady-state traffic runs entirely on
+    /// recycled capacity (metrics gauge; the e2e warm-cache test pins it).
+    fn cache_grows(&self) -> u64 {
+        0
+    }
 }
 
 /// Configuration of the hermetic native backend.
@@ -96,6 +145,15 @@ impl Default for NativeModelConfig {
     }
 }
 
+/// One live decode session as the native backend tracks it: the model
+/// session plus the variant it was opened on (decode steps always run the
+/// session's own kernel — the adaptive router steers *new* sessions, not
+/// live caches whose mask history would otherwise shift mid-stream).
+struct NativeSession {
+    sess: DecodeSession,
+    variant: Variant,
+}
+
 /// Native-kernel backend: no artifacts, no PJRT, no external crates.
 pub struct NativeBackend {
     model: NativeClassifier,
@@ -105,16 +163,34 @@ pub struct NativeBackend {
     /// Warm per-bucket batch buffers (Q/K/V + context output), reused
     /// across every batch this backend executes.
     scratch: ModelScratch,
+    /// Live decode sessions by engine-assigned id.
+    sessions: HashMap<u64, NativeSession>,
+    /// Recycler for closed sessions' caches — steady-state session churn
+    /// reuses grown buckets instead of allocating.
+    cache_pool: KvCachePool,
+    /// Warm kernel scratch for the single-query decode path (the batch
+    /// path has its own per-worker scratch inside the pool).
+    decode_scratch: Scratch,
+    /// Warm one-hot value row and context row for decode steps.
+    onehot: Vec<f32>,
+    ctx_row: Vec<f32>,
 }
 
 impl NativeBackend {
     pub fn new(cfg: NativeModelConfig) -> NativeBackend {
+        let model = NativeClassifier::new(cfg.seq_len, cfg.seed);
+        let (dk, dv) = model.cache_dims();
         NativeBackend {
-            model: NativeClassifier::new(cfg.seq_len, cfg.seed),
+            model,
             spec: cfg.spec,
             registry: cfg.registry,
             kernels: HashMap::new(),
             scratch: ModelScratch::new(),
+            sessions: HashMap::new(),
+            cache_pool: KvCachePool::new(dk, dv),
+            decode_scratch: Scratch::new(),
+            onehot: Vec::new(),
+            ctx_row: Vec::new(),
         }
     }
 
@@ -145,6 +221,11 @@ impl NativeBackend {
     /// see the warm-dispatch test).
     pub fn scratch_grows(&self) -> u64 {
         self.scratch.grow_events()
+    }
+
+    /// Session-cache recycler counters (created / recycled / parked).
+    pub fn cache_pool_stats(&self) -> KvPoolStats {
+        self.cache_pool.stats()
     }
 }
 
@@ -198,6 +279,72 @@ impl InferBackend for NativeBackend {
         self.model
             .logits_batch_into(tokens, bucket, kernel, &mut self.scratch, logits);
         Ok(())
+    }
+
+    fn open_session(&mut self, id: u64, variant: Variant, prompt: &[i32]) -> Result<usize> {
+        self.ensure_kernel(variant)?;
+        if self.sessions.contains_key(&id) {
+            bail!("session {id} already open");
+        }
+        let sl = self.model.seq_len();
+        if prompt.is_empty() || prompt.len() > sl {
+            bail!(
+                "prompt length {} out of range 1..={sl} for session {id}",
+                prompt.len()
+            );
+        }
+        let cache = self.cache_pool.take();
+        let sess = self.model.open_session(prompt, cache, &mut self.onehot);
+        let resident = sess.len();
+        self.sessions.insert(id, NativeSession { sess, variant });
+        Ok(resident)
+    }
+
+    fn decode_into(&mut self, id: u64, token: i32, logits: &mut Vec<f32>) -> Result<usize> {
+        let ns = match self.sessions.get_mut(&id) {
+            Some(ns) => ns,
+            None => bail!("unknown session {id} (closed or evicted)"),
+        };
+        let sl = self.model.seq_len();
+        if ns.sess.len() >= sl {
+            bail!("session {id} at the model's sequence capacity ({sl} tokens)");
+        }
+        let kernel = self.kernels.get(&ns.variant).expect("ensured at open").as_ref();
+        let out = self.model.decode_step(
+            &mut ns.sess,
+            token,
+            kernel,
+            &mut self.decode_scratch,
+            &mut self.onehot,
+            &mut self.ctx_row,
+        );
+        logits.clear();
+        logits.extend_from_slice(&out);
+        Ok(ns.sess.len())
+    }
+
+    fn close_session(&mut self, id: u64) -> Result<usize> {
+        match self.sessions.remove(&id) {
+            Some(ns) => {
+                let resident = ns.sess.len();
+                self.cache_pool.put(ns.sess.into_cache());
+                Ok(resident)
+            }
+            None => bail!("unknown session {id} (closed or evicted)"),
+        }
+    }
+
+    fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    fn resident_tokens(&self) -> usize {
+        self.sessions.values().map(|ns| ns.sess.len()).sum()
+    }
+
+    fn cache_grows(&self) -> u64 {
+        let live: u64 = self.sessions.values().map(|ns| ns.sess.cache_grow_events()).sum();
+        live + self.cache_pool.grow_events()
     }
 }
 
@@ -378,5 +525,94 @@ mod tests {
         }
         assert_eq!(b.scratch_grows(), warm, "warm dispatch allocated batch buffers");
         assert_eq!(logits.capacity(), warm_cap, "worker logits buffer regrew");
+    }
+
+    /// Session decode through the backend reproduces the one-shot batch
+    /// path **bitwise** once the cache reaches `seq_len`, for dense and
+    /// DSA variants alike.
+    #[test]
+    fn session_decode_matches_one_shot_run() {
+        use crate::workload::{Workload, WorkloadConfig};
+        let mut b = NativeBackend::new(NativeModelConfig::default());
+        let mut wl = Workload::new(WorkloadConfig {
+            seq_len: 256,
+            seed: 606,
+            ..Default::default()
+        });
+        for (id, variant) in [(1u64, Variant::Dense), (2u64, DSA90)] {
+            let tokens = wl.next_request().tokens;
+            let oneshot = b.run(variant, &tokens, 1).unwrap();
+            let split = 200;
+            let resident = b.open_session(id, variant, &tokens[..split]).unwrap();
+            assert_eq!(resident, split);
+            let mut logits = Vec::new();
+            for (i, &t) in tokens[split..].iter().enumerate() {
+                let resident = b.decode_into(id, t, &mut logits).unwrap();
+                assert_eq!(resident, split + i + 1);
+                assert_eq!(logits.len(), 2);
+            }
+            assert_eq!(
+                (logits[0].to_bits(), logits[1].to_bits()),
+                (oneshot[0].to_bits(), oneshot[1].to_bits()),
+                "{variant}: decode diverged from one-shot run"
+            );
+            assert_eq!(b.session_count(), 1);
+            assert_eq!(b.resident_tokens(), 256);
+            assert_eq!(b.close_session(id).unwrap(), 256);
+            assert_eq!(b.session_count(), 0);
+        }
+    }
+
+    /// Session misuse surfaces as structured errors, never panics:
+    /// unknown ids, duplicate opens, bad prompt lengths and decoding past
+    /// the model's sequence capacity.
+    #[test]
+    fn session_errors_are_structured() {
+        let mut b = NativeBackend::new(NativeModelConfig {
+            seq_len: 16,
+            ..Default::default()
+        });
+        let mut logits = Vec::new();
+        let err = b.decode_into(9, 1, &mut logits).expect_err("unknown id");
+        assert!(format!("{err:#}").contains("unknown session"));
+        let err = b.close_session(9).expect_err("unknown id");
+        assert!(format!("{err:#}").contains("unknown session"));
+        assert!(b.open_session(1, Variant::Dense, &[]).is_err(), "empty prompt");
+        assert!(
+            b.open_session(1, Variant::Dense, &[1i32; 17]).is_err(),
+            "prompt longer than seq_len"
+        );
+        b.open_session(1, Variant::Dense, &[5i32; 15]).unwrap();
+        let err = b.open_session(1, Variant::Dense, &[5i32; 2]).expect_err("dup");
+        assert!(format!("{err:#}").contains("already open"));
+        b.decode_into(1, 7, &mut logits).unwrap(); // 16th token: at capacity
+        let err = b.decode_into(1, 7, &mut logits).expect_err("capacity");
+        assert!(format!("{err:#}").contains("sequence capacity"));
+        assert_eq!(b.close_session(1).unwrap(), 16);
+    }
+
+    /// Closed sessions return their cache to the recycler: reopening runs
+    /// on the grown buckets with zero new cache grow events.
+    #[test]
+    fn session_churn_recycles_caches() {
+        let mut b = NativeBackend::new(NativeModelConfig::default());
+        let prompt = vec![3i32; 200];
+        b.open_session(1, DSA90, &prompt).unwrap();
+        let mut logits = Vec::new();
+        for _ in 0..56 {
+            b.decode_into(1, 8, &mut logits).unwrap();
+        }
+        let grown = b.cache_grows();
+        assert!(grown >= 1, "cold session must grow cache buckets");
+        b.close_session(1).unwrap();
+        assert_eq!(b.cache_grows(), grown, "pool must retain grown buckets");
+        b.open_session(2, DSA90, &prompt).unwrap();
+        for _ in 0..56 {
+            b.decode_into(2, 8, &mut logits).unwrap();
+        }
+        assert_eq!(b.cache_grows(), grown, "recycled session re-grew its cache");
+        b.close_session(2).unwrap();
+        let s = b.cache_pool_stats();
+        assert_eq!((s.created, s.recycled, s.free), (1, 1, 1));
     }
 }

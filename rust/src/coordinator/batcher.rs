@@ -3,13 +3,22 @@
 //! simplified to the encoder-classifier setting where every request is one
 //! fixed-length forward pass).
 //!
+//! Decode traffic is scheduled separately from one-shot inference: session
+//! jobs land in two FIFO lanes — **decode/close** (one cached token each,
+//! latency-sensitive: they set the stream's inter-token latency) and
+//! **open** (a full prompt prefill, throughput work like a one-shot
+//! batch). The engine drains the decode lane first, then opens, then cuts
+//! inference batches, so a long prefill backlog never stalls live streams.
+//!
 //! Pure data structure — no threads — so the policy is unit-testable; the
 //! engine drives it from its worker loop.
 
 use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
-use super::request::InferRequest;
+use super::request::{InferRequest, SessionOp, SessionReply};
+use crate::util::error::Result;
 
 /// Batching policy knobs.
 #[derive(Debug, Clone)]
@@ -32,11 +41,28 @@ impl Default for BatchPolicy {
     }
 }
 
-/// FIFO queue with deadline-or-full batch cutting, grouped by variant.
+/// One queued session operation: the typed op, its enqueue time (for
+/// TTFT / inter-token latency accounting) and the reply channel the
+/// engine answers on (errors travel as the structured `Result`, so the
+/// protocol boundary can render them without any in-band sentinel).
+#[derive(Debug)]
+pub struct SessionJob {
+    pub op: SessionOp,
+    pub enqueued: Instant,
+    pub reply: Sender<Result<SessionReply>>,
+}
+
+/// FIFO queue with deadline-or-full batch cutting, grouped by variant,
+/// plus the two session lanes (see the module docs for the priority
+/// order).
 #[derive(Debug)]
 pub struct Batcher {
     pub policy: BatchPolicy,
     queue: VecDeque<InferRequest>,
+    /// Decode / close jobs: one cached token each, drained first.
+    decode_q: VecDeque<SessionJob>,
+    /// Open jobs: full prompt prefills, drained after decodes.
+    open_q: VecDeque<SessionJob>,
     rejected: u64,
 }
 
@@ -45,6 +71,8 @@ impl Batcher {
         Batcher {
             policy,
             queue: VecDeque::new(),
+            decode_q: VecDeque::new(),
+            open_q: VecDeque::new(),
             rejected: 0,
         }
     }
@@ -69,6 +97,46 @@ impl Batcher {
 
     pub fn rejected(&self) -> u64 {
         self.rejected
+    }
+
+    /// Enqueue a session job into its lane; Err(job) when the combined
+    /// session backlog is at `queue_cap` (same backpressure contract as
+    /// [`Batcher::push`]).
+    pub fn push_session(&mut self, job: SessionJob) -> Result<(), SessionJob> {
+        if self.session_len() >= self.policy.queue_cap {
+            self.rejected += 1;
+            return Err(job);
+        }
+        match job.op {
+            SessionOp::Open { .. } => self.open_q.push_back(job),
+            SessionOp::Decode { .. } | SessionOp::Close { .. } => self.decode_q.push_back(job),
+        }
+        Ok(())
+    }
+
+    /// Queued session jobs across both lanes.
+    pub fn session_len(&self) -> usize {
+        self.decode_q.len() + self.open_q.len()
+    }
+
+    /// Queued decode / close jobs (the router's decode load signal).
+    pub fn decode_len(&self) -> usize {
+        self.decode_q.len()
+    }
+
+    /// Queued open (prefill) jobs.
+    pub fn open_len(&self) -> usize {
+        self.open_q.len()
+    }
+
+    /// Next decode / close job, FIFO (drain these before anything else).
+    pub fn next_decode(&mut self) -> Option<SessionJob> {
+        self.decode_q.pop_front()
+    }
+
+    /// Next open job, FIFO (drain after the decode lane).
+    pub fn next_open(&mut self) -> Option<SessionJob> {
+        self.open_q.pop_front()
     }
 
     /// Deadline by which a batch must be cut (enqueue time of the oldest
@@ -195,6 +263,65 @@ mod tests {
         b.push(req(1, None)).unwrap();
         b.push(req(2, None)).unwrap();
         assert!(b.push(req(3, None)).is_err());
+        assert_eq!(b.rejected(), 1);
+    }
+
+    fn job(op: SessionOp) -> (SessionJob, std::sync::mpsc::Receiver<Result<SessionReply>>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (
+            SessionJob {
+                op,
+                enqueued: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    /// Session jobs land in the right lane and drain decode-first, FIFO
+    /// within each lane.
+    #[test]
+    fn session_lanes_drain_decode_first() {
+        let mut b = Batcher::new(policy(8, 1000));
+        let (open1, _r1) = job(SessionOp::Open {
+            prompt: vec![1, 2],
+            variant: None,
+        });
+        let (dec1, _r2) = job(SessionOp::Decode { session: 1, token: 3 });
+        let (close1, _r3) = job(SessionOp::Close { session: 2 });
+        b.push_session(open1).unwrap();
+        b.push_session(dec1).unwrap();
+        b.push_session(close1).unwrap();
+        assert_eq!((b.session_len(), b.decode_len(), b.open_len()), (3, 2, 1));
+        assert!(matches!(
+            b.next_decode().unwrap().op,
+            SessionOp::Decode { session: 1, token: 3 }
+        ));
+        assert!(matches!(b.next_decode().unwrap().op, SessionOp::Close { session: 2 }));
+        assert!(b.next_decode().is_none());
+        assert!(matches!(b.next_open().unwrap().op, SessionOp::Open { .. }));
+        assert_eq!(b.session_len(), 0);
+    }
+
+    /// The session lanes share the queue-cap backpressure bound (and the
+    /// rejection counter) with the inference queue's policy.
+    #[test]
+    fn session_backpressure_rejects() {
+        let mut b = Batcher::new(BatchPolicy {
+            queue_cap: 2,
+            ..policy(8, 1000)
+        });
+        let mut rxs = Vec::new();
+        for s in 0..2u64 {
+            let (j, rx) = job(SessionOp::Decode { session: s, token: 0 });
+            b.push_session(j).unwrap();
+            rxs.push(rx);
+        }
+        let (j, _rx) = job(SessionOp::Open {
+            prompt: vec![1],
+            variant: None,
+        });
+        assert!(b.push_session(j).is_err());
         assert_eq!(b.rejected(), 1);
     }
 

@@ -27,12 +27,28 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::backend::{InferBackend, NativeBackend, NativeModelConfig};
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::{BatchPolicy, Batcher, SessionJob};
 use super::metrics::Metrics;
-use super::request::{InferRequest, InferResponse};
-use super::router::AdaptiveRouter;
+use super::request::{DecodeResponse, InferRequest, InferResponse, SessionOp, SessionReply};
+use super::router::{AdaptiveRouter, QueueLoad};
 use crate::kernels::Variant;
 use crate::util::error::{bail, Context, Result};
+
+/// Capacity bound on live decode sessions.
+#[derive(Debug, Clone)]
+pub struct SessionPolicy {
+    /// Hard cap on concurrently open sessions: opening one more evicts
+    /// the least-recently-used session (its cache returns to the pool and
+    /// the eviction is counted in [`Metrics`]; later ops on the evicted
+    /// id get a structured "unknown session" error).
+    pub max_sessions: usize,
+}
+
+impl Default for SessionPolicy {
+    fn default() -> Self {
+        SessionPolicy { max_sessions: 64 }
+    }
+}
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
@@ -50,6 +66,8 @@ pub struct EngineConfig {
     /// `default_variant`. Every rung is preloaded at startup and every
     /// decision is recorded in [`Metrics`]. `None` = fixed default.
     pub router: Option<AdaptiveRouter>,
+    /// Decode-session capacity (LRU eviction past the cap).
+    pub sessions: SessionPolicy,
 }
 
 impl Default for EngineConfig {
@@ -59,12 +77,14 @@ impl Default for EngineConfig {
             policy: BatchPolicy::default(),
             preload: true,
             router: None,
+            sessions: SessionPolicy::default(),
         }
     }
 }
 
 enum Msg {
     Request(InferRequest, Sender<InferResponse>),
+    Session(SessionJob),
     Shutdown,
 }
 
@@ -203,6 +223,71 @@ impl Engine {
         rx.recv().context("engine dropped request")
     }
 
+    /// Submit a session operation; returns the channel delivering the
+    /// reply (`Err` inside = structured engine-side failure — unknown
+    /// session, capacity, backend without decode support). Open prompts
+    /// are length-checked here, mirroring [`Engine::submit`], so a
+    /// malformed prompt never reaches the worker queue.
+    pub fn submit_session(&self, op: SessionOp) -> Result<Receiver<Result<SessionReply>>> {
+        if let SessionOp::Open { prompt, .. } = &op {
+            if prompt.is_empty() || prompt.len() > self.seq_len {
+                bail!(
+                    "session prompt length {} out of range 1..={}",
+                    prompt.len(),
+                    self.seq_len
+                );
+            }
+        }
+        let (rtx, rrx) = mpsc::channel();
+        let job = SessionJob {
+            op,
+            enqueued: Instant::now(),
+            reply: rtx,
+        };
+        self.tx
+            .send(Msg::Session(job))
+            .map_err(|_| crate::err!("engine stopped"))?;
+        Ok(rrx)
+    }
+
+    fn session_op(&self, op: SessionOp) -> Result<SessionReply> {
+        let rx = self.submit_session(op)?;
+        rx.recv().context("engine dropped session op")?
+    }
+
+    /// Open a decode session (blocking): prefill `prompt`, pin the
+    /// variant (explicit, or the adaptive router's pick under the current
+    /// load), and return `(session id, resident tokens, variant)`.
+    pub fn open_session(
+        &self,
+        prompt: Vec<i32>,
+        variant: Option<Variant>,
+    ) -> Result<(u64, usize, Variant)> {
+        match self.session_op(SessionOp::Open { prompt, variant })? {
+            SessionReply::Opened { session, resident, variant } => {
+                Ok((session, resident, variant))
+            }
+            other => bail!("engine returned mismatched session reply {other:?}"),
+        }
+    }
+
+    /// Run one decode step on an open session (blocking).
+    pub fn decode(&self, session: u64, token: i32) -> Result<DecodeResponse> {
+        match self.session_op(SessionOp::Decode { session, token })? {
+            SessionReply::Decoded(resp) => Ok(resp),
+            other => bail!("engine returned mismatched session reply {other:?}"),
+        }
+    }
+
+    /// Close a session (blocking), releasing its cache for pooled reuse;
+    /// returns the token count that was resident.
+    pub fn close_session(&self, session: u64) -> Result<usize> {
+        match self.session_op(SessionOp::Close { session })? {
+            SessionReply::Closed { released, .. } => Ok(released),
+            other => bail!("engine returned mismatched session reply {other:?}"),
+        }
+    }
+
     pub fn shutdown(&mut self) {
         if self.running.swap(false, Ordering::SeqCst) {
             let _ = self.tx.send(Msg::Shutdown);
@@ -219,6 +304,50 @@ impl Drop for Engine {
     }
 }
 
+/// Worker-local decode-session bookkeeping: the LRU clock and the pinned
+/// variant per live id (the backend owns the caches themselves).
+#[derive(Default)]
+struct SessionTable {
+    /// id → (last-use tick, pinned variant).
+    live: std::collections::HashMap<u64, (u64, Variant)>,
+    tick: u64,
+    next_id: u64,
+}
+
+/// Enqueue one inbound message; returns `false` on shutdown.
+fn enqueue_msg(
+    msg: Msg,
+    batcher: &mut Batcher,
+    waiters: &mut std::collections::HashMap<u64, Sender<InferResponse>>,
+    metrics: &Metrics,
+) -> bool {
+    match msg {
+        Msg::Request(req, rtx) => {
+            let id = req.id;
+            match batcher.push(req) {
+                Ok(()) => {
+                    waiters.insert(id, rtx);
+                }
+                Err(_rejected) => {
+                    metrics.record_rejected(1);
+                    drop(rtx); // receiver sees disconnect = rejection
+                }
+            }
+            true
+        }
+        Msg::Session(job) => {
+            if let Err(job) = batcher.push_session(job) {
+                metrics.record_rejected(1);
+                let _ = job
+                    .reply
+                    .send(Err(crate::err!("session queue full (backpressure)")));
+            }
+            true
+        }
+        Msg::Shutdown => false,
+    }
+}
+
 fn worker_loop(
     backend: &mut dyn InferBackend,
     cfg: EngineConfig,
@@ -228,6 +357,7 @@ fn worker_loop(
 ) {
     let mut batcher = Batcher::new(cfg.policy.clone());
     let mut router = cfg.router.clone();
+    let mut sessions = SessionTable::default();
     // Response channels parked by request id.
     let mut waiters: std::collections::HashMap<u64, Sender<InferResponse>> =
         std::collections::HashMap::new();
@@ -236,6 +366,8 @@ fn worker_loop(
     // (`ModelScratch`) and `forward_batch_into`, the steady-state loop
     // performs zero per-batch output allocations.
     let mut buffers = BatchBuffers::default();
+    // Warm decode-logits buffer, same discipline per decode step.
+    let mut dlogits: Vec<f32> = Vec::new();
 
     'outer: while running.load(Ordering::SeqCst) {
         // Sleep until the next deadline (or a message arrives).
@@ -244,37 +376,32 @@ fn worker_loop(
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok(Msg::Request(req, rtx)) => {
-                let id = req.id;
-                match batcher.push(req) {
-                    Ok(()) => {
-                        waiters.insert(id, rtx);
-                    }
-                    Err(_rejected) => {
-                        metrics.record_rejected(1);
-                        drop(rtx); // receiver sees disconnect = rejection
-                    }
+            Ok(msg) => {
+                if !enqueue_msg(msg, &mut batcher, &mut waiters, &metrics) {
+                    break;
                 }
                 // Drain whatever else is already queued without sleeping.
+                let mut shutdown = false;
                 while let Ok(msg) = rx.try_recv() {
-                    match msg {
-                        Msg::Request(req, rtx) => {
-                            let id = req.id;
-                            match batcher.push(req) {
-                                Ok(()) => {
-                                    waiters.insert(id, rtx);
-                                }
-                                Err(_) => metrics.record_rejected(1),
-                            }
-                        }
-                        Msg::Shutdown => break 'outer,
+                    if !enqueue_msg(msg, &mut batcher, &mut waiters, &metrics) {
+                        shutdown = true;
+                        break;
                     }
                 }
+                if shutdown {
+                    break 'outer;
+                }
             }
-            Ok(Msg::Shutdown) => break,
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
         }
+
+        // Session lanes first: decode/close steps (a waiting stream's
+        // inter-token latency) jump ahead of everything, then opens
+        // (prefill-sized work), then one-shot batches.
+        drain_sessions(
+            backend, &cfg, &mut router, &mut batcher, &mut sessions, &metrics, &mut dlogits,
+        );
 
         let now = Instant::now();
         while batcher.ready(now) {
@@ -283,22 +410,166 @@ fn worker_loop(
                 break;
             }
             // Live load signal for the router: the backlog this batch
-            // leaves behind in the queue.
-            let depth = batcher.len();
+            // leaves behind across all lanes.
+            let load = QueueLoad {
+                prefill: batcher.len() + batcher.open_len(),
+                decode: batcher.decode_len(),
+            };
             execute_batch(
-                backend, &cfg, &mut router, depth, batch, &mut waiters, &metrics, &mut buffers,
+                backend, &cfg, &mut router, load, batch, &mut waiters, &metrics, &mut buffers,
             );
         }
     }
 
-    // Flush any stragglers on shutdown.
+    // Flush any stragglers on shutdown (session lanes first, as above).
+    drain_sessions(
+        backend, &cfg, &mut router, &mut batcher, &mut sessions, &metrics, &mut dlogits,
+    );
     while !batcher.is_empty() {
         let batch = batcher.cut();
-        let depth = batcher.len();
+        let load = QueueLoad {
+            prefill: batcher.len(),
+            decode: 0,
+        };
         execute_batch(
-            backend, &cfg, &mut router, depth, batch, &mut waiters, &metrics, &mut buffers,
+            backend, &cfg, &mut router, load, batch, &mut waiters, &metrics, &mut buffers,
         );
     }
+}
+
+/// Drain both session lanes: every queued decode/close, then every queued
+/// open.
+#[allow(clippy::too_many_arguments)]
+fn drain_sessions(
+    backend: &mut dyn InferBackend,
+    cfg: &EngineConfig,
+    router: &mut Option<AdaptiveRouter>,
+    batcher: &mut Batcher,
+    sessions: &mut SessionTable,
+    metrics: &Metrics,
+    dlogits: &mut Vec<f32>,
+) {
+    while let Some(job) = batcher.next_decode() {
+        let load = QueueLoad {
+            prefill: batcher.len() + batcher.open_len(),
+            decode: batcher.decode_len(),
+        };
+        handle_session_job(backend, cfg, router, load, job, sessions, metrics, dlogits);
+    }
+    while let Some(job) = batcher.next_open() {
+        let load = QueueLoad {
+            prefill: batcher.len() + batcher.open_len(),
+            decode: batcher.decode_len(),
+        };
+        handle_session_job(backend, cfg, router, load, job, sessions, metrics, dlogits);
+    }
+}
+
+/// Execute one session op against the backend, maintaining the LRU table
+/// and the session metrics, and reply on the job's channel (errors travel
+/// as the structured `Result`).
+#[allow(clippy::too_many_arguments)]
+fn handle_session_job(
+    backend: &mut dyn InferBackend,
+    cfg: &EngineConfig,
+    router: &mut Option<AdaptiveRouter>,
+    load: QueueLoad,
+    job: SessionJob,
+    table: &mut SessionTable,
+    metrics: &Metrics,
+    dlogits: &mut Vec<f32>,
+) {
+    let SessionJob { op, enqueued, reply } = job;
+    let result = match op {
+        SessionOp::Open { prompt, variant } => {
+            // Explicit override wins; otherwise the adaptive router picks
+            // the rung for the current load (recorded like any routing
+            // decision) and the session is pinned to it for life — masks
+            // must not shift mid-stream under a live cache.
+            let variant = match variant {
+                Some(v) => v,
+                None => match router.as_mut() {
+                    Some(r) => {
+                        let v = r.select_load(load);
+                        metrics.record_routed(v);
+                        v
+                    }
+                    None => cfg.default_variant,
+                },
+            };
+            // LRU-evict down to capacity before admitting the new
+            // session: O(live) min-scan, fine at serving session counts.
+            let max = cfg.sessions.max_sessions.max(1);
+            while table.live.len() >= max {
+                let lru = table
+                    .live
+                    .iter()
+                    .min_by_key(|(_, (tick, _))| *tick)
+                    .map(|(&id, _)| id)
+                    .expect("capacity implies a non-empty table");
+                table.live.remove(&lru);
+                if let Err(e) = backend.close_session(lru) {
+                    crate::log_error!("evicting session {lru}: {e}");
+                }
+                metrics.record_session_evicted();
+            }
+            table.next_id += 1;
+            let id = table.next_id;
+            match backend.open_session(id, variant, &prompt) {
+                Ok(resident) => {
+                    table.tick += 1;
+                    table.live.insert(id, (table.tick, variant));
+                    metrics.record_session_opened();
+                    Ok(SessionReply::Opened { session: id, resident, variant })
+                }
+                Err(e) => Err(e),
+            }
+        }
+        SessionOp::Decode { session, token } => {
+            match backend.decode_into(session, token, dlogits) {
+                Ok(resident) => {
+                    table.tick += 1;
+                    let variant = match table.live.get_mut(&session) {
+                        Some(slot) => {
+                            slot.0 = table.tick;
+                            slot.1
+                        }
+                        // Backend accepted it, so the table must know it;
+                        // fall back rather than panic the worker.
+                        None => cfg.default_variant,
+                    };
+                    let latency = enqueued.elapsed();
+                    metrics.record_decode(variant, latency.as_secs_f64());
+                    let logits = dlogits.clone();
+                    Ok(SessionReply::Decoded(DecodeResponse {
+                        session,
+                        pred: InferResponse::argmax(&logits),
+                        logits,
+                        resident,
+                        latency,
+                        variant,
+                    }))
+                }
+                Err(e) => Err(e),
+            }
+        }
+        SessionOp::Close { session } => match backend.close_session(session) {
+            Ok(released) => {
+                table.live.remove(&session);
+                metrics.record_session_closed();
+                Ok(SessionReply::Closed { session, released })
+            }
+            Err(e) => Err(e),
+        },
+    };
+    // Refresh gauges before replying: a client that reads its reply and
+    // immediately queries metrics must see its own session reflected.
+    metrics.set_session_gauges(
+        backend.session_count(),
+        backend.resident_tokens(),
+        backend.cache_grows(),
+    );
+    let _ = reply.send(result);
 }
 
 /// Worker-owned buffers reused across batches (padded token input and
@@ -316,7 +587,7 @@ fn execute_batch(
     backend: &mut dyn InferBackend,
     cfg: &EngineConfig,
     router: &mut Option<AdaptiveRouter>,
-    queue_depth: usize,
+    load: QueueLoad,
     batch: Vec<InferRequest>,
     waiters: &mut std::collections::HashMap<u64, Sender<InferResponse>>,
     metrics: &Metrics,
@@ -324,12 +595,13 @@ fn execute_batch(
 ) {
     // Explicit per-request variant overrides always win; otherwise the
     // adaptive router (when configured) picks the rung for the current
-    // load, and the decision is recorded before the batch runs.
+    // two-lane load (prefill backlog + discounted decode backlog), and
+    // the decision is recorded before the batch runs.
     let variant = match batch[0].variant {
         Some(v) => v,
         None => match router.as_mut() {
             Some(r) => {
-                let v = r.select(queue_depth);
+                let v = r.select_load(load);
                 metrics.record_routed(v);
                 v
             }

@@ -30,6 +30,21 @@ struct Inner {
     router_rung: Option<Variant>,
     /// Latest worker-pool snapshot (None until a batch executed).
     pool: Option<PoolStats>,
+    // --- decode sessions (all zero until the first `open`) ---
+    sessions_opened: u64,
+    sessions_closed: u64,
+    /// Sessions force-closed by the engine's LRU capacity bound.
+    sessions_evicted: u64,
+    /// Live-session gauges, refreshed by the engine after session work.
+    active_sessions: u64,
+    /// Tokens resident across live session caches.
+    resident_tokens: u64,
+    /// KV-cache bucket grow events (live sessions + pooled free list) —
+    /// flat once steady-state churn runs on recycled capacity.
+    cache_grows: u64,
+    decode_steps: u64,
+    /// Per-variant decode step latency (the serving inter-token latency).
+    decode_latency: BTreeMap<Variant, Summary>,
 }
 
 /// Thread-safe metrics sink.
@@ -79,6 +94,45 @@ impl Metrics {
         self.inner.lock().unwrap().pool = Some(stats);
     }
 
+    pub fn record_session_opened(&self) {
+        self.inner.lock().unwrap().sessions_opened += 1;
+    }
+
+    pub fn record_session_closed(&self) {
+        self.inner.lock().unwrap().sessions_closed += 1;
+    }
+
+    /// Record an LRU eviction (the engine also records the implied close).
+    pub fn record_session_evicted(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.sessions_evicted += 1;
+        g.sessions_closed += 1;
+    }
+
+    /// Record one decode step under the session's variant; `latency_s` is
+    /// enqueue-to-reply (the serving inter-token latency).
+    pub fn record_decode(&self, variant: Variant, latency_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.decode_steps += 1;
+        g.decode_latency.entry(variant).or_default().add(latency_s);
+    }
+
+    /// Refresh the live-session gauges (engine worker, after session
+    /// work): active session count, cache-resident tokens and cumulative
+    /// KV-cache grow events.
+    pub fn set_session_gauges(&self, active: usize, resident_tokens: usize, cache_grows: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.active_sessions = active as u64;
+        g.resident_tokens = resident_tokens as u64;
+        g.cache_grows = cache_grows;
+    }
+
+    /// Cumulative KV-cache grow events as last gauged (e2e warm-cache
+    /// assertions read this back through the protocol).
+    pub fn cache_grows(&self) -> u64 {
+        self.inner.lock().unwrap().cache_grows
+    }
+
     pub fn completed(&self) -> u64 {
         self.inner.lock().unwrap().completed
     }
@@ -121,6 +175,30 @@ impl Metrics {
                 .report_ms(&format!("  {v} queue  "));
             s.push_str(&line);
             s.push('\n');
+        }
+        if g.sessions_opened > 0 {
+            s.push_str(&format!(
+                "  sessions active={} opened={} closed={} evicted={} resident_tokens={} cache_grows={}\n",
+                g.active_sessions,
+                g.sessions_opened,
+                g.sessions_closed,
+                g.sessions_evicted,
+                g.resident_tokens,
+                g.cache_grows
+            ));
+        }
+        if g.decode_steps > 0 {
+            s.push_str(&format!("  decode steps={}\n", g.decode_steps));
+            let variants: Vec<Variant> = g.decode_latency.keys().copied().collect();
+            for v in variants {
+                let line = g
+                    .decode_latency
+                    .get_mut(&v)
+                    .unwrap()
+                    .report_ms(&format!("  {v} decode "));
+                s.push_str(&line);
+                s.push('\n');
+            }
         }
         if let Some(rung) = &g.router_rung {
             s.push_str(&format!("  router rung={rung} routed:"));
@@ -167,6 +245,41 @@ impl Metrics {
             ]));
         }
         obj.push(("variants", Json::Arr(per_variant)));
+        if g.sessions_opened > 0 {
+            obj.push((
+                "sessions",
+                Json::obj(vec![
+                    ("active", Json::num(g.active_sessions as f64)),
+                    ("opened", Json::num(g.sessions_opened as f64)),
+                    ("closed", Json::num(g.sessions_closed as f64)),
+                    ("evicted", Json::num(g.sessions_evicted as f64)),
+                    ("resident_tokens", Json::num(g.resident_tokens as f64)),
+                    ("cache_grows", Json::num(g.cache_grows as f64)),
+                ]),
+            ));
+        }
+        if g.decode_steps > 0 {
+            let variants: Vec<Variant> = g.decode_latency.keys().copied().collect();
+            let mut per_variant = Vec::new();
+            for v in variants {
+                let lat = g.decode_latency.get_mut(&v).unwrap();
+                per_variant.push(Json::obj(vec![
+                    ("variant", Json::str(v.to_string())),
+                    ("n", Json::num(lat.len() as f64)),
+                    ("mean_ms", Json::num(lat.mean() * 1e3)),
+                    ("p50_ms", Json::num(lat.percentile(50.0) * 1e3)),
+                    ("p95_ms", Json::num(lat.percentile(95.0) * 1e3)),
+                    ("p99_ms", Json::num(lat.percentile(99.0) * 1e3)),
+                ]));
+            }
+            obj.push((
+                "decode",
+                Json::obj(vec![
+                    ("steps", Json::num(g.decode_steps as f64)),
+                    ("variants", Json::Arr(per_variant)),
+                ]),
+            ));
+        }
         if let Some(rung) = g.router_rung {
             let routed = Json::Obj(
                 g.routed
@@ -215,9 +328,41 @@ mod tests {
         assert_eq!(j.get("batches").unwrap().as_f64(), Some(2.0));
         let report = m.report();
         assert!(report.contains("dense latency"));
-        // router/pool sections are absent until recorded
+        // router/pool/session sections are absent until recorded
         assert!(j.get("router").is_none());
         assert!(j.get("pool").is_none());
+        assert!(j.get("sessions").is_none());
+        assert!(j.get("decode").is_none());
+    }
+
+    /// Session lifecycle counters, live gauges and per-variant decode
+    /// latency surface as their own typed sections once session traffic
+    /// exists.
+    #[test]
+    fn session_and_decode_sections_surface() {
+        let m = Metrics::new();
+        m.record_session_opened();
+        m.record_session_opened();
+        m.record_session_closed();
+        m.record_session_evicted();
+        m.set_session_gauges(1, 200, 4);
+        m.record_decode(Variant::Dsa { pct: 90 }, 0.002);
+        m.record_decode(Variant::Dsa { pct: 90 }, 0.003);
+        assert_eq!(m.cache_grows(), 4);
+        let j = m.to_json();
+        let s = j.get("sessions").expect("sessions section");
+        assert_eq!(s.get("active").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(s.get("opened").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(s.get("closed").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(s.get("evicted").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(s.get("resident_tokens").and_then(|v| v.as_f64()), Some(200.0));
+        assert_eq!(s.get("cache_grows").and_then(|v| v.as_f64()), Some(4.0));
+        let d = j.get("decode").expect("decode section");
+        assert_eq!(d.get("steps").and_then(|v| v.as_f64()), Some(2.0));
+        let report = m.report();
+        assert!(report.contains("sessions active=1"));
+        assert!(report.contains("decode steps=2"));
+        assert!(report.contains("dsa90 decode"));
     }
 
     #[test]

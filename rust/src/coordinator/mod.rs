@@ -1,23 +1,33 @@
 //! L3 coordinator: the serving-side contribution of the stack.
 //!
-//! * [`request`] — request/response types; variants are the typed
-//!   `kernels::Variant` end to end (strings parse once at the
+//! * [`request`] — request/response types for one-shot inference
+//!   ([`InferRequest`]/[`InferResponse`]) and decode sessions
+//!   ([`SessionOp`]/[`SessionReply`]/[`DecodeResponse`]); variants are
+//!   the typed `kernels::Variant` end to end (strings parse once at the
 //!   protocol/CLI boundary).
 //! * [`batcher`] — dynamic batching policy (max-batch / deadline / variant
-//!   grouping / backpressure).
+//!   grouping / backpressure) plus the two session lanes (decode/close
+//!   before open before one-shot batches, so prefill backlog never stalls
+//!   a live stream's inter-token latency).
 //! * [`backend`] — execution backends: hermetic native kernels (always;
 //!   kernels built from `Variant` via the global `KernelRegistry`, batches
 //!   run through warm buffers + `forward_batch_into`, so the steady-state
-//!   loop makes zero per-batch output allocations) and PJRT artifacts
-//!   (`xla` feature).
-//! * [`engine`] — worker loop: batch → route variant (optionally via the
+//!   loop makes zero per-batch output allocations; decode sessions over a
+//!   pooled ragged `KvCache`) and PJRT artifacts (`xla` feature; one-shot
+//!   only — session ops return a structured "unsupported" error).
+//! * [`engine`] — worker loop: drain session lanes (LRU-bounded lifecycle
+//!   per [`SessionPolicy`]) → batch → route variant (optionally via the
 //!   adaptive router) → pad to bucket (warm worker-owned buffers) →
 //!   backend `run_into` → fan out responses.
 //! * [`router`] — queue-depth-driven variant ladder (dense → dsa90 →
-//!   dsa95) the engine worker consults per batch; typed rungs,
-//!   `AdaptiveRouter::from_pairs` validates names at construction.
+//!   dsa95) the engine worker consults per dispatch; typed rungs,
+//!   `AdaptiveRouter::from_pairs` validates names at construction; the
+//!   [`QueueLoad`] two-lane signal discounts decode backlog against
+//!   prefill-sized work.
 //! * [`metrics`] — latency/throughput/occupancy accounting plus router
-//!   decisions and worker-pool counters.
+//!   decisions, worker-pool counters and the session/decode sections
+//!   (lifecycle counts, cache-resident tokens, cache grows, per-variant
+//!   inter-token latency).
 
 pub mod backend;
 pub mod batcher;
@@ -27,8 +37,8 @@ pub mod request;
 pub mod router;
 
 pub use backend::{InferBackend, NativeBackend, NativeModelConfig};
-pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{Engine, EngineConfig};
+pub use batcher::{BatchPolicy, Batcher, SessionJob};
+pub use engine::{Engine, EngineConfig, SessionPolicy};
 pub use metrics::Metrics;
-pub use request::{InferRequest, InferResponse};
-pub use router::{AdaptiveRouter, Rung};
+pub use request::{DecodeResponse, InferRequest, InferResponse, SessionOp, SessionReply};
+pub use router::{AdaptiveRouter, QueueLoad, Rung};

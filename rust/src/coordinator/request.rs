@@ -34,6 +34,58 @@ impl InferRequest {
     }
 }
 
+/// A session-lifecycle operation flowing to the engine worker. Like
+/// [`InferRequest`], the variant is already typed — the server parses
+/// `{"op": "open" | "decode" | "close"}` once at the protocol boundary
+/// and everything past it is enum-shaped.
+#[derive(Debug, Clone)]
+pub enum SessionOp {
+    /// Open a decode session prefilled with `prompt`; the engine assigns
+    /// the id. `variant: None` = engine default (or the adaptive
+    /// router's pick at open time; the session then stays on it).
+    Open {
+        prompt: Vec<i32>,
+        variant: Option<Variant>,
+    },
+    /// Append one token to session `session` and run a decode step.
+    Decode { session: u64, token: i32 },
+    /// Close session `session`, releasing its cache for reuse.
+    Close { session: u64 },
+}
+
+/// Successful reply to a [`SessionOp`] (errors travel as the engine's
+/// structured `Result` error, rendered at the protocol boundary).
+#[derive(Debug, Clone)]
+pub enum SessionReply {
+    Opened {
+        session: u64,
+        /// Prompt tokens resident in the cache after prefill.
+        resident: usize,
+        /// The variant the session was pinned to.
+        variant: Variant,
+    },
+    Decoded(DecodeResponse),
+    Closed {
+        session: u64,
+        /// Tokens that were resident when the cache was released.
+        released: usize,
+    },
+}
+
+/// Completed decode step.
+#[derive(Debug, Clone)]
+pub struct DecodeResponse {
+    pub session: u64,
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    /// Tokens resident in the session cache after this step.
+    pub resident: usize,
+    /// Total time from enqueue to completion (the serving ITL).
+    pub latency: Duration,
+    /// The variant the session runs on.
+    pub variant: Variant,
+}
+
 /// Completed inference result.
 #[derive(Debug, Clone)]
 pub struct InferResponse {

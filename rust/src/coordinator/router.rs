@@ -28,6 +28,35 @@ pub struct Rung {
     pub min_queue: usize,
 }
 
+/// Weight of one queued decode step relative to one queued prefill-sized
+/// request in the router's load signal: a decode step touches one cached
+/// query row where a prefill / one-shot request runs `seq_len` of them,
+/// so a deep decode lane is far cheaper backlog than the same depth of
+/// prompts. 16 ≈ the cost ratio at the serving default `seq_len = 256`
+/// with decode steps averaging a half-full cache.
+pub const DECODE_WEIGHT: usize = 16;
+
+/// The router's two-lane load signal: queued prefill-sized work (one-shot
+/// requests + session opens) and queued decode steps. Collapsed to one
+/// effective depth via [`QueueLoad::effective_depth`] so the ladder
+/// thresholds keep their meaning from the closed-loop benches.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueLoad {
+    /// Backlogged one-shot requests and session opens (full forwards).
+    pub prefill: usize,
+    /// Backlogged decode steps (single cached rows).
+    pub decode: usize,
+}
+
+impl QueueLoad {
+    /// Prefill-equivalent queue depth: decode steps are discounted by
+    /// [`DECODE_WEIGHT`] (rounding up, so a non-empty decode lane is
+    /// never mistaken for an idle queue).
+    pub fn effective_depth(&self) -> usize {
+        self.prefill + self.decode.div_ceil(DECODE_WEIGHT)
+    }
+}
+
 /// Queue-depth-driven variant selector with hysteresis.
 #[derive(Debug, Clone)]
 pub struct AdaptiveRouter {
@@ -118,6 +147,16 @@ impl AdaptiveRouter {
         self.rungs[self.current].variant
     }
 
+    /// Select the variant for the next dispatch from the two-lane load
+    /// signal (what the engine worker uses now that decode streams share
+    /// the queue with one-shot requests): decode backlog is discounted to
+    /// prefill-equivalents by [`QueueLoad::effective_depth`], then the
+    /// same ladder-with-hysteresis walk as [`AdaptiveRouter::select`]
+    /// applies.
+    pub fn select_load(&mut self, load: QueueLoad) -> Variant {
+        self.select(load.effective_depth())
+    }
+
     pub fn current_variant(&self) -> Variant {
         self.rungs[self.current].variant
     }
@@ -167,6 +206,34 @@ mod tests {
     fn skips_rungs_on_burst() {
         let mut r = ladder();
         assert_eq!(r.select(100), DSA95);
+    }
+
+    /// Decode backlog is discounted: a lane full of single-token decode
+    /// steps escalates far later than the same depth of prefill-sized
+    /// requests, but is never invisible (one queued decode rounds up to
+    /// one effective unit), and mixed load sums.
+    #[test]
+    fn decode_load_is_discounted_not_ignored() {
+        assert_eq!(QueueLoad { prefill: 3, decode: 0 }.effective_depth(), 3);
+        assert_eq!(QueueLoad { prefill: 0, decode: 1 }.effective_depth(), 1);
+        assert_eq!(
+            QueueLoad { prefill: 0, decode: DECODE_WEIGHT * 2 }.effective_depth(),
+            2
+        );
+        assert_eq!(
+            QueueLoad { prefill: 6, decode: DECODE_WEIGHT * 2 + 1 }.effective_depth(),
+            9
+        );
+
+        let mut r = ladder();
+        // 7 prefill + a big decode lane crosses the dsa90 threshold (8)...
+        assert_eq!(r.select_load(QueueLoad { prefill: 7, decode: DECODE_WEIGHT }), DSA90);
+        // ...while the same total count as pure decode steps stays dense.
+        let mut r = ladder();
+        assert_eq!(
+            r.select_load(QueueLoad { prefill: 0, decode: 7 + DECODE_WEIGHT }),
+            DENSE
+        );
     }
 
     #[test]

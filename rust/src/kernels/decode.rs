@@ -1,0 +1,391 @@
+//! Fused single-query decode kernels over a [`KvCache`]: one
+//! autoregressive step = attention of the session's query row against
+//! every cached key/value row, dense and DSA forms.
+//!
+//! Both forms run **inline** (a decode step touches one query row —
+//! there is nothing to split across workers), on the caller's
+//! [`Scratch`], with zero per-step allocations once scratch and cache
+//! are warm (grow-counter tested).
+//!
+//! Equivalence contracts, pinned by the property tests below:
+//!
+//! - **Dense** decode is literally [`dense::attention_rows_fused_tiled_scratch`]
+//!   at `(r0, r1) = (0, 1)` over the cache, so a step at cache length `l`
+//!   is **bitwise equal** to row `r` of the full fused forward on any
+//!   `l`-row problem whose row `r` carries the same query — across
+//!   thread counts, exec policies, and query blocking (the fused
+//!   kernel's row-split/query-block invariance).
+//! - **DSA** decode re-runs the paper's per-row pipeline against the
+//!   cache: the int8 predictor scores *only the new query row* against
+//!   the cached key mirror, top-k selects cached columns, and the kept
+//!   entries are recomputed exactly under the fused online softmax —
+//!   the same operation sequence as one row of
+//!   [`sparse::dsa_attention_rows_fused_tile_scratch`]. With the query
+//!   row quantized at the same scale the one-shot scorer would use
+//!   (e.g. every query row shares one max-|q|, as in the serving
+//!   classifier where |q| ≡ beta), the step is bitwise equal to the
+//!   full fused DSA forward's row; for arbitrary queries it matches the
+//!   unfused decode reference within online-softmax tolerance with a
+//!   bitwise-identical mask.
+
+use super::dense;
+use super::kvcache::KvCache;
+use super::scratch::Scratch;
+use super::simd;
+use super::sparse;
+use super::tiles::Tile;
+use crate::sparse::topk;
+
+/// Fused dense decode at an explicit [`Tile`]: attention of the single
+/// query row `q` (`dk` entries) over every cached row, written into
+/// `out` (`dv` entries, fully overwritten). An empty cache yields zeros
+/// (the fused kernel's empty-key-set semantics).
+pub fn decode_dense_tiled_scratch(
+    q: &[f32],
+    cache: &KvCache,
+    out: &mut [f32],
+    scratch: &mut Scratch,
+    tile: Tile,
+) {
+    let (l, dk, dv) = (cache.len(), cache.dk(), cache.dv());
+    assert_eq!(q.len(), dk, "q shape");
+    assert_eq!(out.len(), dv, "out shape");
+    dense::attention_rows_fused_tiled_scratch(q, cache.k(), cache.v(), l, dk, dv, 0, 1, out, scratch, tile);
+}
+
+/// [`decode_dense_tiled_scratch`] at [`Tile::DEFAULT`].
+pub fn decode_dense_scratch(q: &[f32], cache: &KvCache, out: &mut [f32], scratch: &mut Scratch) {
+    decode_dense_tiled_scratch(q, cache, out, scratch, Tile::DEFAULT);
+}
+
+/// Fused DSA decode at an explicit key tile: int8-predict the new row's
+/// scores against the cached key mirror, top-k select cached columns,
+/// then fused exact SDDMM + online softmax + SpMM over the kept columns
+/// in `tile`-sized chunks. `out` (`dv` entries) is fully overwritten.
+pub fn decode_dsa_tiled_scratch(
+    q: &[f32],
+    cache: &KvCache,
+    keep: usize,
+    out: &mut [f32],
+    scratch: &mut Scratch,
+    tile: usize,
+) {
+    let (l, dk, dv) = (cache.len(), cache.dk(), cache.dv());
+    assert_eq!(q.len(), dk, "q shape");
+    assert_eq!(out.len(), dv, "out shape");
+    if l == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let tile = tile.clamp(1, l.max(1));
+    scratch.reserve(l, keep.min(l.max(1)));
+    scratch.reserve_qi8(dk);
+
+    // Quantize the new query row with exactly `quantize_i8`'s fold and
+    // per-entry expression (but into warm scratch): bitwise-equal scores
+    // to a full `ApproxScorer` whose joint Q max equals this row's max.
+    let qmax = q.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    let qs = if qmax == 0.0 {
+        scratch.qi8[..dk].fill(0);
+        0.0
+    } else {
+        let inv = 127.0 / qmax;
+        for (o, &x) in scratch.qi8[..dk].iter_mut().zip(q.iter()) {
+            *o = (x * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+        qmax / 127.0
+    };
+    let pscale = qs * cache.k_scale() / (dk as f32).sqrt();
+
+    // Predict: score the new row against every cached key (int8, exact
+    // i32 accumulation — bitwise identical across SIMD tiers, so the
+    // selected mask never varies by ISA).
+    {
+        let (row, qi8, ki8) = (&mut scratch.row, &scratch.qi8, cache.ki8());
+        for (c, o) in row[..l].iter_mut().enumerate() {
+            *o = simd::dot_i8(&qi8[..dk], &ki8[c * dk..(c + 1) * dk]) as f32 * pscale;
+        }
+    }
+    topk::topk_row_indices_into(&scratch.row[..l], keep, &mut scratch.kept);
+
+    // Execute exactly: the fused per-row DSA body from
+    // `sparse::dsa_attention_rows_fused_tile_scratch`, against the cache.
+    let scale = 1.0 / (dk as f32).sqrt();
+    let (k, v) = (cache.k(), cache.v());
+    out.fill(0.0);
+    let (mut m, mut den, mut nanp) = (f32::NEG_INFINITY, 0.0f32, false);
+    for chunk in scratch.kept.chunks(tile) {
+        scratch.vals.clear();
+        for &c in chunk {
+            scratch.vals.push(simd::dot_f32(q, &k[c * dk..(c + 1) * dk]) * scale);
+        }
+        if dense::online_rescale(simd::max_f32(&scratch.vals), &mut m, &mut den, out) {
+            for (&c, &s) in chunk.iter().zip(scratch.vals.iter()) {
+                let w = (s - m).exp();
+                den += w;
+                if w != 0.0 {
+                    simd::axpy_f32(out, w, &v[c * dv..(c + 1) * dv]);
+                }
+            }
+        } else if m == f32::NEG_INFINITY {
+            nanp = nanp || scratch.vals.iter().any(|s| s.is_nan());
+        }
+    }
+    dense::online_finish(m, den, nanp, out);
+}
+
+/// [`decode_dsa_tiled_scratch`] at the default [`dense::KEY_TILE`].
+pub fn decode_dsa_scratch(
+    q: &[f32],
+    cache: &KvCache,
+    keep: usize,
+    out: &mut [f32],
+    scratch: &mut Scratch,
+) {
+    decode_dsa_tiled_scratch(q, cache, keep, out, scratch, dense::KEY_TILE);
+}
+
+/// Unfused DSA decode reference (predict → top-k → exact scores →
+/// two-pass softmax → SpMM), the oracle the fused form is tested
+/// against: bitwise-identical mask, online-softmax-tolerance outputs.
+/// Allocates freely — tests only.
+pub fn decode_dsa_reference(q: &[f32], cache: &KvCache, keep: usize) -> Vec<f32> {
+    let (l, dk, dv) = (cache.len(), cache.dk(), cache.dv());
+    assert_eq!(q.len(), dk, "q shape");
+    let mut out = vec![0f32; dv];
+    if l == 0 {
+        return out;
+    }
+    let (qq, qs) = sparse::quantize_i8(q);
+    let pscale = qs * cache.k_scale() / (dk as f32).sqrt();
+    let mut srow = vec![0f32; l];
+    for (c, o) in srow.iter_mut().enumerate() {
+        *o = simd::dot_i8(&qq, &cache.ki8()[c * dk..(c + 1) * dk]) as f32 * pscale;
+    }
+    let mut kept = Vec::new();
+    topk::topk_row_indices_into(&srow, keep, &mut kept);
+    let scale = 1.0 / (dk as f32).sqrt();
+    let mut vals: Vec<f32> = kept
+        .iter()
+        .map(|&c| simd::dot_f32(q, &cache.k()[c * dk..(c + 1) * dk]) * scale)
+        .collect();
+    dense::softmax_in_place(&mut vals);
+    for (&c, &w) in kept.iter().zip(vals.iter()) {
+        if w != 0.0 {
+            simd::axpy_f32(&mut out, w, &cache.v()[c * dv..(c + 1) * dv]);
+        }
+    }
+    out
+}
+
+/// The fused DSA decode's selected mask (kept cached-column indices),
+/// exposed for the mask-identity tests.
+pub fn decode_dsa_mask(q: &[f32], cache: &KvCache, keep: usize) -> Vec<usize> {
+    let (l, dk) = (cache.len(), cache.dk());
+    assert_eq!(q.len(), dk, "q shape");
+    if l == 0 {
+        return Vec::new();
+    }
+    let (qq, qs) = sparse::quantize_i8(q);
+    let pscale = qs * cache.k_scale() / (dk as f32).sqrt();
+    let mut srow = vec![0f32; l];
+    for (c, o) in srow.iter_mut().enumerate() {
+        *o = simd::dot_i8(&qq, &cache.ki8()[c * dk..(c + 1) * dk]) as f32 * pscale;
+    }
+    let mut kept = Vec::new();
+    topk::topk_row_indices_into(&srow, keep, &mut kept);
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dispatch::{AttnInput, ExecPolicy, KernelDispatch, KernelSpec, Variant};
+    use crate::kernels::kvcache::BUCKET_ROWS;
+    use crate::kernels::tiles::TilePlan;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn specs() -> Vec<KernelSpec> {
+        let mut out = Vec::new();
+        for &threads in &[1usize, 2, 7, 0] {
+            for exec in [ExecPolicy::Pool, ExecPolicy::Spawn] {
+                out.push(KernelSpec {
+                    threads,
+                    exec,
+                    tiles: TilePlan::committed(),
+                });
+            }
+        }
+        out
+    }
+
+    /// Dense: every decode step is bitwise equal to its row of the full
+    /// fused forward over the same prefix, through the dispatch surface,
+    /// across thread counts {1,2,7,ncpu} x {Pool,Spawn}.
+    #[test]
+    fn dense_decode_steps_match_full_fused_forward_bitwise() {
+        let (dk, dv, l) = (16usize, 8usize, 37usize);
+        let mut rng = Rng::new(41);
+        let qs = randv(l * dk, &mut rng);
+        let k = randv(l * dk, &mut rng);
+        let v = randv(l * dv, &mut rng);
+        let mut cache = KvCache::new(dk, dv);
+        let mut scratch = Scratch::new();
+        let mut out = vec![0f32; dv];
+        let mut full = Vec::new();
+        for t in 0..l {
+            cache.append(&k[t * dk..(t + 1) * dk], &v[t * dv..(t + 1) * dv]);
+            let lcur = t + 1;
+            for spec in specs() {
+                let kernel = Variant::Dense.build(&spec).expect("dense kernel");
+                kernel.decode_into(&qs[t * dk..(t + 1) * dk], &cache, &mut scratch, &mut out);
+                full.resize(lcur * dv, 0.0);
+                kernel.forward_into(
+                    &AttnInput {
+                        q: &qs[..lcur * dk],
+                        k: &k[..lcur * dk],
+                        v: &v[..lcur * dv],
+                        l: lcur,
+                        dk,
+                        dv,
+                    },
+                    &mut full,
+                );
+                for (a, b) in out.iter().zip(full[t * dv..(t + 1) * dv].iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "dense decode diverged at step {t}");
+                }
+            }
+        }
+    }
+
+    /// DSA: with row-max-normalized queries (every row's max-|q| is
+    /// exactly 1.0, so single-row quantization equals the one-shot
+    /// scorer's joint quantization bitwise), every decode step is
+    /// bitwise equal to its row of the full fused DSA forward, across
+    /// thread counts x exec policies.
+    #[test]
+    fn dsa_decode_steps_match_full_fused_forward_bitwise() {
+        let (dk, dv, l) = (16usize, 8usize, 33usize);
+        let mut rng = Rng::new(42);
+        let mut qs = randv(l * dk, &mut rng);
+        for row in qs.chunks_exact_mut(dk) {
+            let m = row.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            if m > 0.0 {
+                for x in row.iter_mut() {
+                    *x /= m; // the max element becomes exactly +-1.0
+                }
+            }
+        }
+        let k = randv(l * dk, &mut rng);
+        let v = randv(l * dv, &mut rng);
+        let mut cache = KvCache::new(dk, dv);
+        let mut scratch = Scratch::new();
+        let mut out = vec![0f32; dv];
+        let mut full = Vec::new();
+        for t in 0..l {
+            cache.append(&k[t * dk..(t + 1) * dk], &v[t * dv..(t + 1) * dv]);
+            let lcur = t + 1;
+            for spec in specs() {
+                let kernel = Variant::Dsa { pct: 90 }.build(&spec).expect("dsa kernel");
+                kernel.decode_into(&qs[t * dk..(t + 1) * dk], &cache, &mut scratch, &mut out);
+                full.resize(lcur * dv, 0.0);
+                kernel.forward_into(
+                    &AttnInput {
+                        q: &qs[..lcur * dk],
+                        k: &k[..lcur * dk],
+                        v: &v[..lcur * dv],
+                        l: lcur,
+                        dk,
+                        dv,
+                    },
+                    &mut full,
+                );
+                for (a, b) in out.iter().zip(full[t * dv..(t + 1) * dv].iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "dsa decode diverged at step {t}");
+                }
+            }
+        }
+    }
+
+    /// Arbitrary (un-normalized) queries: the fused DSA decode selects a
+    /// bitwise-identical mask to the unfused decode reference and matches
+    /// its output within online-softmax tolerance, across key tiles.
+    #[test]
+    fn dsa_decode_matches_unfused_reference() {
+        let (dk, dv, l, keep) = (8usize, 6usize, 29usize, 7usize);
+        let mut rng = Rng::new(43);
+        let k = randv(l * dk, &mut rng);
+        let v = randv(l * dv, &mut rng);
+        let mut cache = KvCache::new(dk, dv);
+        for t in 0..l {
+            cache.append(&k[t * dk..(t + 1) * dk], &v[t * dv..(t + 1) * dv]);
+        }
+        let mut scratch = Scratch::new();
+        let mut out = vec![0f32; dv];
+        for trial in 0..10 {
+            let q = randv(dk, &mut rng);
+            let oracle = decode_dsa_reference(&q, &cache, keep);
+            let mask = decode_dsa_mask(&q, &cache, keep);
+            assert_eq!(mask.len(), keep);
+            for &tile in &[1usize, 3, 256] {
+                decode_dsa_tiled_scratch(&q, &cache, keep, &mut out, &mut scratch, tile);
+                for (i, (a, b)) in out.iter().zip(oracle.iter()).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-5,
+                        "trial {trial} tile {tile} out[{i}]: fused {a} vs oracle {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Steady-state decode performs zero per-step allocations: with a
+    /// warm scratch and a cache whose buckets were grown by a previous
+    /// session (pool-recycle path), append + dense decode + DSA decode
+    /// record no further grow events on either instance counter.
+    #[test]
+    fn warm_decode_steps_are_allocation_free() {
+        let (dk, dv, keep) = (8usize, 4usize, 7usize);
+        let l = BUCKET_ROWS + 9;
+        let mut rng = Rng::new(44);
+        let k = randv(l * dk, &mut rng);
+        let v = randv(l * dv, &mut rng);
+        let q = randv(dk, &mut rng);
+        let mut cache = KvCache::new(dk, dv);
+        for t in 0..l {
+            cache.append(&k[t * dk..(t + 1) * dk], &v[t * dv..(t + 1) * dv]);
+        }
+        let mut scratch = Scratch::new();
+        let mut out = vec![0f32; dv];
+        decode_dense_scratch(&q, &cache, &mut out, &mut scratch);
+        decode_dsa_scratch(&q, &cache, keep, &mut out, &mut scratch);
+        let (cg, sg) = (cache.grow_events(), scratch.grow_events());
+        assert!(cg >= 2 && sg >= 1);
+
+        cache.reset(); // recycled-session shape: empty, warm buckets
+        for t in 0..l {
+            cache.append(&k[t * dk..(t + 1) * dk], &v[t * dv..(t + 1) * dv]);
+            decode_dense_scratch(&q, &cache, &mut out, &mut scratch);
+            decode_dsa_scratch(&q, &cache, keep, &mut out, &mut scratch);
+        }
+        assert_eq!(cache.grow_events(), cg, "cache re-grew during warm decode");
+        assert_eq!(scratch.grow_events(), sg, "scratch re-grew during warm decode");
+    }
+
+    #[test]
+    fn empty_cache_decodes_to_zeros() {
+        let cache = KvCache::new(4, 3);
+        let q = [1.0f32, -2.0, 3.0, 0.5];
+        let mut scratch = Scratch::new();
+        let mut out = vec![9.0f32; 3];
+        decode_dense_scratch(&q, &cache, &mut out, &mut scratch);
+        assert_eq!(out, vec![0.0; 3]);
+        let mut out = vec![9.0f32; 3];
+        decode_dsa_scratch(&q, &cache, 1, &mut out, &mut scratch);
+        assert_eq!(out, vec![0.0; 3]);
+    }
+}

@@ -41,8 +41,11 @@ use std::fmt;
 use std::str::FromStr;
 use std::sync::OnceLock;
 
+use super::decode;
+use super::kvcache::KvCache;
 use super::parallel::{self, Exec};
-use super::tiles::TilePlan;
+use super::scratch::Scratch;
+use super::tiles::{Tile, TilePlan};
 use crate::util::error::Error;
 
 /// One single-head attention problem, row-major f32.
@@ -300,6 +303,31 @@ pub trait KernelDispatch: Send + Sync {
         self.forward_batch_into(x, &mut out);
         out
     }
+
+    /// One autoregressive decode step: attention of the single query row
+    /// `q` (`cache.dk()` entries) over every cached key/value row,
+    /// written into `out` (`cache.dv()` entries, fully overwritten).
+    ///
+    /// Runs inline on the caller's [`Scratch`] — a decode step touches
+    /// one query row, so there is nothing to parallelize and outputs are
+    /// identical across [`KernelSpec`] thread counts and exec policies by
+    /// construction (property-tested in `kernels::decode`). The default
+    /// dispatches on [`KernelDispatch::keep`]: `None` runs the fused
+    /// dense decode, `Some(keep)` the fused DSA decode (the int8
+    /// predictor scores only the new row against the cached key mirror,
+    /// top-k selects cached columns) at the default tile. The native
+    /// kernels override it to use their committed per-shape [`TilePlan`]
+    /// tile, which must match what their full forward would resolve at
+    /// the same `(l, dk)` — that shared lookup is what keeps N decode
+    /// steps bitwise-equal to the full fused dense forward.
+    fn decode_into(&self, q: &[f32], cache: &KvCache, scratch: &mut Scratch, out: &mut [f32]) {
+        match self.keep(cache.len()) {
+            None => decode::decode_dense_tiled_scratch(q, cache, out, scratch, Tile::DEFAULT),
+            Some(keep) => {
+                decode::decode_dsa_tiled_scratch(q, cache, keep, out, scratch, Tile::DEFAULT.key_tile)
+            }
+        }
+    }
 }
 
 /// Dense attention baseline — fused tiled kernel with online softmax,
@@ -363,6 +391,14 @@ impl KernelDispatch for DenseKernel {
             tile,
             out,
         );
+    }
+
+    fn decode_into(&self, q: &[f32], cache: &KvCache, scratch: &mut Scratch, out: &mut [f32]) {
+        // Same per-shape tile the full forward resolves at this (l, dk),
+        // so a decode step stays bitwise-equal to its forward row even
+        // once tuned TilePlan rows land.
+        let tile = self.spec.tiles.lookup(cache.len(), cache.dk());
+        decode::decode_dense_tiled_scratch(q, cache, out, scratch, tile);
     }
 }
 
@@ -448,6 +484,12 @@ impl KernelDispatch for SparseKernel {
             tile,
             out,
         );
+    }
+
+    fn decode_into(&self, q: &[f32], cache: &KvCache, scratch: &mut Scratch, out: &mut [f32]) {
+        let l = cache.len();
+        let tile = self.spec.tiles.lookup(l, cache.dk());
+        decode::decode_dsa_tiled_scratch(q, cache, self.keep_for(l), out, scratch, tile.key_tile);
     }
 }
 
@@ -820,6 +862,62 @@ mod tests {
         let kernel = for_variant("dense", 2).unwrap();
         let batch = AttnBatch { q: &[], k: &[], v: &[], b: 0, h: 4, l: 8, dk: 2, dv: 2 };
         assert!(kernel.forward_batch(&batch).is_empty());
+    }
+
+    /// The trait's default `decode_into` (keep-dispatched, default tile)
+    /// agrees with the overridden native implementations bit for bit
+    /// while the committed tile table is empty — a minimal external
+    /// implementation (only `forward_into`) decodes for free.
+    #[test]
+    fn default_decode_agrees_with_override() {
+        use crate::kernels::kvcache::KvCache;
+        use crate::kernels::scratch::Scratch;
+
+        struct Minimal(SparseKernel);
+        impl KernelDispatch for Minimal {
+            fn name(&self) -> String {
+                "minimal".into()
+            }
+            fn keep(&self, l: usize) -> Option<usize> {
+                self.0.keep(l)
+            }
+            fn forward_into(&self, x: &AttnInput, out: &mut [f32]) {
+                self.0.forward_into(x, out)
+            }
+        }
+        let mut rng = Rng::new(53);
+        let (l, dk, dv) = (21, 4, 3);
+        let mut cache = KvCache::new(dk, dv);
+        for _ in 0..l {
+            let kr: Vec<f32> = (0..dk).map(|_| rng.normal() as f32).collect();
+            let vr: Vec<f32> = (0..dv).map(|_| rng.normal() as f32).collect();
+            cache.append(&kr, &vr);
+        }
+        let q: Vec<f32> = (0..dk).map(|_| rng.normal() as f32).collect();
+        let mut scratch = Scratch::new();
+        let (mut a, mut b) = (vec![0f32; dv], vec![9f32; dv]);
+
+        let sparse = SparseKernel::with_threads(0.90, 2);
+        sparse.decode_into(&q, &cache, &mut scratch, &mut a);
+        Minimal(sparse).decode_into(&q, &cache, &mut scratch, &mut b);
+        assert_eq!(a, b);
+
+        struct MinimalDense(DenseKernel);
+        impl KernelDispatch for MinimalDense {
+            fn name(&self) -> String {
+                "minimal-dense".into()
+            }
+            fn keep(&self, l: usize) -> Option<usize> {
+                self.0.keep(l)
+            }
+            fn forward_into(&self, x: &AttnInput, out: &mut [f32]) {
+                self.0.forward_into(x, out)
+            }
+        }
+        let dense = DenseKernel::with_threads(2);
+        dense.decode_into(&q, &cache, &mut scratch, &mut a);
+        MinimalDense(dense).decode_into(&q, &cache, &mut scratch, &mut b);
+        assert_eq!(a, b);
     }
 
     /// The dispatch surface runs the fused kernels: every variant and

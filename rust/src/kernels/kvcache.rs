@@ -1,0 +1,322 @@
+//! Ragged, bucket-pooled per-session K/V cache for autoregressive decode.
+//!
+//! A [`KvCache`] holds one session's cached key/value rows plus an int8
+//! mirror of the keys for the DSA score predictor. Capacity grows in
+//! [`BUCKET_ROWS`]-row buckets (observable via [`KvCache::grow_events`],
+//! in the `Scratch` grow-counter style) and is retained across
+//! [`KvCache::reset`], so a cache recycled through [`KvCachePool`] serves
+//! its next session — and every steady-state decode step — with **zero**
+//! allocations until the session outgrows the previously seen capacity
+//! (asserted by the tests here and end-to-end in `tests/native_engine.rs`).
+//!
+//! The int8 key mirror is maintained **incrementally but bitwise-equal to
+//! a whole-prefix [`quantize_i8`](crate::kernels::sparse::quantize_i8)**:
+//! the cache tracks the running max-|K| (the same NaN-skipping
+//! `fold(0f32, max)` the one-shot quantizer uses — max is order-free, so
+//! the running value equals the whole-prefix fold exactly). A new row
+//! within the current max quantizes only itself; a row that raises the
+//! max re-quantizes every cached row at the new scale. Either way
+//! `ki8`/`k_scale` are bit-identical to quantizing the full prefix at
+//! once, which is what pins DSA decode to the one-shot fused forward
+//! (see `kernels::decode`).
+
+use super::sparse;
+
+/// Cache capacity grows in buckets of this many rows (matching the
+/// engine's batch-bucket spirit: a handful of grows per session, then
+/// allocation-free steady state).
+pub const BUCKET_ROWS: usize = 64;
+
+#[inline]
+fn quant(x: f32, inv: f32) -> i8 {
+    // Exactly `quantize_i8`'s per-entry expression (NaN casts to 0, as
+    // there).
+    (x * inv).round().clamp(-127.0, 127.0) as i8
+}
+
+/// One session's cached K/V rows (`len x dk` keys, `len x dv` values)
+/// plus the int8 key mirror the DSA predictor scores against.
+#[derive(Debug)]
+pub struct KvCache {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ki8: Vec<i8>,
+    /// Running max-|K| over every cached key entry — equals the
+    /// whole-prefix `quantize_i8` fold bitwise.
+    kmax: f32,
+    len: usize,
+    cap_rows: usize,
+    dk: usize,
+    dv: usize,
+    grows: u64,
+}
+
+impl KvCache {
+    pub fn new(dk: usize, dv: usize) -> KvCache {
+        assert!(dk > 0 && dv > 0, "KvCache dims must be positive");
+        KvCache {
+            k: Vec::new(),
+            v: Vec::new(),
+            ki8: Vec::new(),
+            kmax: 0.0,
+            len: 0,
+            cap_rows: 0,
+            dk,
+            dv,
+            grows: 0,
+        }
+    }
+
+    /// Cached rows (tokens resident).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn dk(&self) -> usize {
+        self.dk
+    }
+
+    pub fn dv(&self) -> usize {
+        self.dv
+    }
+
+    /// Cached keys, row-major `len x dk`.
+    pub fn k(&self) -> &[f32] {
+        &self.k
+    }
+
+    /// Cached values, row-major `len x dv`.
+    pub fn v(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Int8 key mirror, bitwise-equal to `quantize_i8(self.k()).0`.
+    pub fn ki8(&self) -> &[i8] {
+        &self.ki8
+    }
+
+    /// Dequantization scale of [`KvCache::ki8`], bitwise-equal to
+    /// `quantize_i8(self.k()).1`.
+    pub fn k_scale(&self) -> f32 {
+        if self.kmax == 0.0 {
+            0.0
+        } else {
+            self.kmax / 127.0
+        }
+    }
+
+    /// Bucket-capacity grow events on this cache (monotone; survives
+    /// [`KvCache::reset`] so pooled reuse is observable as *zero* new
+    /// events).
+    pub fn grow_events(&self) -> u64 {
+        self.grows
+    }
+
+    /// Row capacity currently reserved (a multiple of [`BUCKET_ROWS`]).
+    pub fn capacity_rows(&self) -> usize {
+        self.cap_rows
+    }
+
+    /// Empty the cache for a new session, keeping every reserved bucket
+    /// (and the grow counter) so the next session reuses the capacity.
+    pub fn reset(&mut self) {
+        self.len = 0;
+        self.kmax = 0.0;
+        self.k.clear();
+        self.v.clear();
+        self.ki8.clear();
+    }
+
+    /// Append one token's key/value row, maintaining the int8 mirror.
+    pub fn append(&mut self, krow: &[f32], vrow: &[f32]) {
+        assert_eq!(krow.len(), self.dk, "k row shape");
+        assert_eq!(vrow.len(), self.dv, "v row shape");
+        if self.len == self.cap_rows {
+            self.cap_rows += BUCKET_ROWS;
+            self.k.reserve_exact(self.cap_rows * self.dk - self.k.len());
+            self.v.reserve_exact(self.cap_rows * self.dv - self.v.len());
+            self.ki8.reserve_exact(self.cap_rows * self.dk - self.ki8.len());
+            self.grows += 1;
+        }
+        self.k.extend_from_slice(krow);
+        self.v.extend_from_slice(vrow);
+        // Same NaN-skipping fold as `quantize_i8` (f32::max ignores NaN).
+        let rmax = krow.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        if rmax > self.kmax {
+            // The new row raises the global max: every cached row was
+            // quantized at a stale scale — redo the whole prefix at the
+            // new one (rare; amortized over the rows that did not move
+            // the max). `clear` keeps capacity, so no allocation.
+            self.kmax = rmax;
+            let inv = 127.0 / self.kmax;
+            self.ki8.clear();
+            self.ki8.extend(self.k.iter().map(|&x| quant(x, inv)));
+        } else if self.kmax == 0.0 {
+            // All-zero (or all-NaN) prefix: quantize_i8 maps it to zeros.
+            self.ki8.extend(std::iter::repeat(0i8).take(self.dk));
+        } else {
+            let inv = 127.0 / self.kmax;
+            self.ki8.extend(krow.iter().map(|&x| quant(x, inv)));
+        }
+        self.len += 1;
+    }
+}
+
+/// Free-list recycler for [`KvCache`]s of one model shape, so closing a
+/// session returns its buckets to the next `open` instead of the
+/// allocator (the `ModelScratch` discipline applied to session state).
+#[derive(Debug)]
+pub struct KvCachePool {
+    free: Vec<KvCache>,
+    dk: usize,
+    dv: usize,
+    created: u64,
+    recycled: u64,
+}
+
+/// Counters for [`KvCachePool`] (serving metrics surface these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPoolStats {
+    /// Caches newly allocated because the free list was empty.
+    pub created: u64,
+    /// Takes served from the free list (capacity reused).
+    pub recycled: u64,
+    /// Caches currently parked on the free list.
+    pub free: usize,
+}
+
+impl KvCachePool {
+    pub fn new(dk: usize, dv: usize) -> KvCachePool {
+        KvCachePool {
+            free: Vec::new(),
+            dk,
+            dv,
+            created: 0,
+            recycled: 0,
+        }
+    }
+
+    /// A reset cache: recycled (warm buckets) when one is free, fresh
+    /// otherwise.
+    pub fn take(&mut self) -> KvCache {
+        match self.free.pop() {
+            Some(mut c) => {
+                c.reset();
+                self.recycled += 1;
+                c
+            }
+            None => {
+                self.created += 1;
+                KvCache::new(self.dk, self.dv)
+            }
+        }
+    }
+
+    /// Park a cache for reuse. Panics on a shape mismatch — one pool
+    /// serves one model shape.
+    pub fn put(&mut self, cache: KvCache) {
+        assert_eq!((cache.dk, cache.dv), (self.dk, self.dv), "pool shape");
+        self.free.push(cache);
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        KvPoolStats {
+            created: self.created,
+            recycled: self.recycled,
+            free: self.free.len(),
+        }
+    }
+
+    /// Total grow events across the parked caches (live sessions carry
+    /// their own counters; the serving metrics sum both).
+    pub fn grow_events(&self) -> u64 {
+        self.free.iter().map(|c| c.grow_events()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn grows_in_buckets_and_counts() {
+        let mut c = KvCache::new(4, 3);
+        assert_eq!(c.grow_events(), 0);
+        let (k, v) = ([1.0f32; 4], [2.0f32; 3]);
+        c.append(&k, &v);
+        assert_eq!((c.len(), c.grow_events()), (1, 1));
+        for _ in 1..BUCKET_ROWS {
+            c.append(&k, &v);
+        }
+        assert_eq!((c.len(), c.grow_events()), (BUCKET_ROWS, 1));
+        c.append(&k, &v);
+        assert_eq!(c.grow_events(), 2, "bucket boundary must grow once");
+        assert_eq!(c.capacity_rows(), 2 * BUCKET_ROWS);
+        assert_eq!(c.k().len(), (BUCKET_ROWS + 1) * 4);
+        assert_eq!(c.v().len(), (BUCKET_ROWS + 1) * 3);
+    }
+
+    /// The incrementally maintained int8 mirror is bitwise-equal to
+    /// quantizing the whole key prefix at once, at every length —
+    /// including a leading all-zero row (zero scale) and magnitudes that
+    /// keep raising the running max (forcing re-quantization).
+    #[test]
+    fn incremental_quantization_matches_whole_prefix() {
+        let (dk, dv) = (8usize, 2usize);
+        let mut rng = Rng::new(3);
+        let mut c = KvCache::new(dk, dv);
+        let mut all: Vec<f32> = Vec::new();
+        let vrow = [0.5f32; 2];
+        for i in 0..100 {
+            let krow: Vec<f32> = if i == 0 {
+                vec![0.0; dk]
+            } else {
+                // Drift the magnitude up so later rows raise the max.
+                (0..dk)
+                    .map(|_| (rng.normal() * (1.0 + i as f64 / 8.0)) as f32)
+                    .collect()
+            };
+            all.extend_from_slice(&krow);
+            c.append(&krow, &vrow);
+            let (qref, sref) = sparse::quantize_i8(&all);
+            assert_eq!(c.ki8(), &qref[..], "mirror diverged at len {}", i + 1);
+            assert_eq!(
+                c.k_scale().to_bits(),
+                sref.to_bits(),
+                "scale diverged at len {}",
+                i + 1
+            );
+        }
+    }
+
+    #[test]
+    fn pool_recycles_capacity_without_regrowth() {
+        let mut pool = KvCachePool::new(4, 3);
+        let (k, v) = ([1.5f32; 4], [0.0f32; 3]);
+        let mut c = pool.take();
+        for _ in 0..(BUCKET_ROWS + 1) {
+            c.append(&k, &v);
+        }
+        let grown = c.grow_events();
+        assert_eq!(grown, 2);
+        pool.put(c);
+        assert_eq!(pool.grow_events(), 2);
+
+        let mut c = pool.take();
+        assert_eq!(c.len(), 0, "recycled cache must come back empty");
+        assert_eq!(c.k_scale(), 0.0);
+        for _ in 0..(BUCKET_ROWS + 1) {
+            c.append(&k, &v);
+        }
+        assert_eq!(c.grow_events(), grown, "recycled cache re-grew");
+        pool.put(c);
+
+        let s = pool.stats();
+        assert_eq!((s.created, s.recycled, s.free), (1, 1, 1));
+    }
+}

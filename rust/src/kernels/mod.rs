@@ -48,12 +48,28 @@
 //!   path runs (Vec forms are default wrappers), and the pluggable
 //!   [`KernelRegistry`] where variant families register builders
 //!   ([`for_variant`] survives as a parse-then-build shim).
+//! * [`kvcache`] — the ragged, bucket-pooled per-session K/V cache for
+//!   autoregressive decode: [`KvCache`] (f32 K/V rows + an int8 key
+//!   mirror maintained bitwise-equal to a whole-prefix quantization,
+//!   grown in [`kvcache::BUCKET_ROWS`] buckets under a grow counter) and
+//!   [`KvCachePool`] (free-list recycling in the `ModelScratch` style,
+//!   so steady-state decode is allocation-free).
+//! * [`decode`] — fused single-query decode kernels over a [`KvCache`]:
+//!   dense (the fused tiled kernel at one query row — bitwise equal to
+//!   its row of the full fused forward) and DSA (the int8 predictor
+//!   scores only the new row against the cached key mirror, top-k
+//!   selects cached columns, fused online-softmax execution), plus the
+//!   unfused decode oracle; dispatched via
+//!   [`KernelDispatch::decode_into`].
 //! * [`model`] — a hand-constructed, training-free needle-counting
 //!   classifier over these kernels; the model behind
-//!   `coordinator::backend::NativeBackend`.
+//!   `coordinator::backend::NativeBackend`. Hosts the session-oriented
+//!   decode surface (`open_session` / `decode_step` over a [`KvCache`]).
 
+pub mod decode;
 pub mod dense;
 pub mod dispatch;
+pub mod kvcache;
 pub mod model;
 pub mod parallel;
 pub mod pool;
@@ -66,7 +82,8 @@ pub use dispatch::{
     for_variant, AttnBatch, AttnInput, DenseKernel, ExecPolicy, KernelDispatch, KernelRegistry,
     KernelSpec, SparseKernel, Variant,
 };
-pub use model::NativeClassifier;
+pub use kvcache::{KvCache, KvCachePool, KvPoolStats};
+pub use model::{DecodeSession, NativeClassifier};
 pub use parallel::Exec;
 pub use pool::{PoolStats, WorkerPool};
 pub use tiles::{Tile, TilePlan};

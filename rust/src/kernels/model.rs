@@ -20,6 +20,8 @@
 //! observable natively).
 
 use super::dispatch::{AttnBatch, KernelDispatch};
+use super::kvcache::KvCache;
+use super::scratch::Scratch;
 use crate::util::rng::Rng;
 
 /// Reusable batch buffers for [`NativeClassifier::logits_batch_into`]:
@@ -217,6 +219,123 @@ impl NativeClassifier {
             logits.push(score);
         }
     }
+
+    /// K/V cache row shape this model decodes over (`dk`, `dv`) — what a
+    /// [`KvCachePool`](super::kvcache::KvCachePool) serving this model
+    /// must be constructed with.
+    pub fn cache_dims(&self) -> (usize, usize) {
+        (DK, VOCAB)
+    }
+
+    /// Embed one token and append its K row (sign embedding) and V row
+    /// (one-hot) to `cache`. `onehot` is a caller-owned `VOCAB`-length
+    /// zero buffer (grown once, then reused allocation-free): the hot
+    /// entry is set, copied into the cache, and cleared again.
+    fn append_token(&self, cache: &mut KvCache, token: i32, onehot: &mut Vec<f32>) {
+        let t = token.rem_euclid(VOCAB as i32) as usize;
+        let e = &self.emb[t * DK..(t + 1) * DK];
+        if onehot.len() != VOCAB {
+            onehot.resize(VOCAB, 0.0);
+        }
+        onehot[t] = 1.0;
+        cache.append(e, &onehot[..]);
+        onehot[t] = 0.0;
+    }
+
+    /// Open a decode session: pin `prompt[0]` as the needle (its scaled
+    /// embedding is the session's one query row, exactly the query row 0
+    /// of the one-shot path) and prefill the cache with every prompt
+    /// token's K/V. The caller supplies the cache (typically recycled
+    /// from a [`KvCachePool`](super::kvcache::KvCachePool)) and gets it
+    /// back via [`DecodeSession::into_cache`] on close.
+    pub fn open_session(
+        &self,
+        prompt: &[i32],
+        mut cache: KvCache,
+        onehot: &mut Vec<f32>,
+    ) -> DecodeSession {
+        assert!(!prompt.is_empty(), "decode session needs a non-empty prompt");
+        assert_eq!((cache.dk(), cache.dv()), (DK, VOCAB), "cache shape");
+        assert!(cache.is_empty(), "session cache must start empty");
+        let beta = (MATCH_WEIGHT.ln() / (DK as f64).sqrt()) as f32;
+        let needle = prompt[0].rem_euclid(VOCAB as i32) as usize;
+        let qrow: Vec<f32> = self.emb[needle * DK..(needle + 1) * DK]
+            .iter()
+            .map(|&x| x * beta)
+            .collect();
+        for &t in prompt {
+            self.append_token(&mut cache, t, onehot);
+        }
+        DecodeSession { cache, needle, qrow }
+    }
+
+    /// Append `token` to the session's cache and re-run the needle query
+    /// against the whole cache through `kernel`'s decode path, returning
+    /// `[logit_0, logit_1]`. At `len == seq_len` this is **bitwise equal**
+    /// to the one-shot [`NativeClassifier::logits`] on the concatenated
+    /// sequence (the decode kernels reproduce row 0 of the fused forward
+    /// exactly; see `kernels::decode`). `ctx` is the caller-owned
+    /// `VOCAB`-length context row — like `onehot`, grown once and then
+    /// reused so warm steps allocate nothing.
+    pub fn decode_step(
+        &self,
+        sess: &mut DecodeSession,
+        token: i32,
+        kernel: &dyn KernelDispatch,
+        scratch: &mut Scratch,
+        onehot: &mut Vec<f32>,
+        ctx: &mut Vec<f32>,
+    ) -> [f32; 2] {
+        self.append_token(&mut sess.cache, token, onehot);
+        let l = sess.cache.len();
+        if ctx.len() != VOCAB {
+            ctx.resize(VOCAB, 0.0);
+        }
+        kernel.decode_into(&sess.qrow, &sess.cache, scratch, &mut ctx[..]);
+        let keep = kernel.keep(l).unwrap_or(l);
+        let threshold = self.threshold(keep);
+        let mass = ctx[sess.needle] as f64;
+        let score = (GAIN * (mass - threshold)) as f32;
+        [-score, score]
+    }
+}
+
+/// One live decode session: the pinned needle query row plus the growing
+/// K/V cache. Created by [`NativeClassifier::open_session`]; stepped by
+/// [`NativeClassifier::decode_step`]; the cache is recovered for pooled
+/// reuse with [`DecodeSession::into_cache`].
+#[derive(Debug)]
+pub struct DecodeSession {
+    cache: KvCache,
+    needle: usize,
+    qrow: Vec<f32>,
+}
+
+impl DecodeSession {
+    /// Tokens resident in the session's cache (prompt + decoded steps).
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+
+    pub fn cache(&self) -> &KvCache {
+        &self.cache
+    }
+
+    /// Bucket grow events on the session's cache (the serving metrics
+    /// aggregate these with the pool's to expose cache allocation).
+    pub fn cache_grow_events(&self) -> u64 {
+        self.cache.grow_events()
+    }
+
+    /// Surrender the cache (for return to a
+    /// [`KvCachePool`](super::kvcache::KvCachePool)).
+    pub fn into_cache(self) -> KvCache {
+        self.cache
+    }
 }
 
 #[cfg(test)]
@@ -323,6 +442,103 @@ mod tests {
         assert_eq!(scratch.grow_events(), warm, "warm batch dispatch allocated");
         assert_eq!(logits.capacity(), warm_cap, "logits buffer regrew");
         assert_eq!(first, model.logits_batch(&tokens, n, kernel.as_ref()));
+    }
+
+    /// Stepwise decode reproduces the one-shot classifier **bitwise** at
+    /// full length, for dense and DSA alike: open on a prompt prefix,
+    /// decode the remaining tokens one at a time, and the final step's
+    /// logits equal `logits()` on the concatenated sequence to the bit
+    /// (the decode kernels compute exactly row 0 of the fused forward;
+    /// the incremental int8 key mirror is bitwise-equal to the one-shot
+    /// quantization).
+    #[test]
+    fn decode_matches_one_shot_bitwise() {
+        let model = NativeClassifier::new(256, 0xD5A);
+        let mut wl = Workload::new(WorkloadConfig {
+            seq_len: 256,
+            seed: 9090,
+            ..Default::default()
+        });
+        let (dk, dv) = model.cache_dims();
+        for variant in ["dense", "dsa90"] {
+            let kernel = for_variant(variant, 0).unwrap();
+            for _ in 0..3 {
+                let tokens = wl.next_request().tokens;
+                let oneshot = model.logits(&tokens, kernel.as_ref());
+                let split = 192;
+                let (mut onehot, mut ctx) = (Vec::new(), Vec::new());
+                let mut scratch = Scratch::new();
+                let mut sess =
+                    model.open_session(&tokens[..split], KvCache::new(dk, dv), &mut onehot);
+                assert_eq!(sess.len(), split);
+                let mut last = [0.0f32; 2];
+                for &t in &tokens[split..] {
+                    last = model.decode_step(
+                        &mut sess,
+                        t,
+                        kernel.as_ref(),
+                        &mut scratch,
+                        &mut onehot,
+                        &mut ctx,
+                    );
+                    assert!(last.iter().all(|x| x.is_finite()), "{variant}");
+                    assert!((last[0] + last[1]).abs() < 1e-6, "{variant}");
+                }
+                assert_eq!(sess.len(), 256);
+                assert_eq!(
+                    [last[0].to_bits(), last[1].to_bits()],
+                    [oneshot[0].to_bits(), oneshot[1].to_bits()],
+                    "{variant}: decode diverged from one-shot"
+                );
+            }
+        }
+    }
+
+    /// A session run over a recycled cache and warm scratch allocates
+    /// nothing: after one full cold session has sized the cache buckets,
+    /// the kernel scratch and the one-hot/context rows, replaying the
+    /// whole session (open + every decode step) records **zero** further
+    /// grow events and reproduces the logits bit for bit.
+    #[test]
+    fn warm_model_decode_sessions_are_allocation_free() {
+        let model = NativeClassifier::new(256, 0xD5A);
+        let kernel = for_variant("dsa90", 0).unwrap();
+        let mut wl = Workload::new(WorkloadConfig {
+            seq_len: 256,
+            seed: 4242,
+            ..Default::default()
+        });
+        let tokens = wl.next_request().tokens;
+        let (dk, dv) = model.cache_dims();
+        let (mut onehot, mut ctx) = (Vec::new(), Vec::new());
+        let mut scratch = Scratch::new();
+        let run = |cache: KvCache,
+                   scratch: &mut Scratch,
+                   onehot: &mut Vec<f32>,
+                   ctx: &mut Vec<f32>| {
+            let mut sess = model.open_session(&tokens[..128], cache, onehot);
+            let mut last = [0.0f32; 2];
+            for &t in &tokens[128..] {
+                last = model.decode_step(&mut sess, t, kernel.as_ref(), scratch, onehot, ctx);
+            }
+            (sess.into_cache(), last)
+        };
+        let (mut cache, cold) =
+            run(KvCache::new(dk, dv), &mut scratch, &mut onehot, &mut ctx);
+        let (warm_cache, warm_scratch) = (cache.grow_events(), scratch.grow_events());
+        let (oh_cap, ctx_cap) = (onehot.capacity(), ctx.capacity());
+        assert!(warm_cache >= 1 && warm_scratch >= 1, "cold run must grow");
+        cache.reset();
+        let (cache, warm) = run(cache, &mut scratch, &mut onehot, &mut ctx);
+        assert_eq!(cache.grow_events(), warm_cache, "recycled cache re-grew");
+        assert_eq!(scratch.grow_events(), warm_scratch, "warm scratch re-grew");
+        assert_eq!(onehot.capacity(), oh_cap);
+        assert_eq!(ctx.capacity(), ctx_cap);
+        assert_eq!(
+            [cold[0].to_bits(), cold[1].to_bits()],
+            [warm[0].to_bits(), warm[1].to_bits()],
+            "recycled session changed the logits"
+        );
     }
 
     #[test]

@@ -50,6 +50,11 @@ pub struct Scratch {
     /// the per-row fused paths never touch it, so warming `(l, keep)`
     /// never pays for it.
     pub scores: Vec<f32>,
+    /// Quantized query row for the decode path (`dk` entries; the DSA
+    /// decode kernel quantizes the new query into it each step), grown
+    /// only by [`Scratch::reserve_qi8`] — forward dispatches and pool
+    /// warm-up never touch it.
+    pub qi8: Vec<i8>,
     grows: u64,
 }
 
@@ -104,6 +109,17 @@ impl Scratch {
             self.scores.resize(n, 0.0);
         }
     }
+
+    /// Ensure `qi8` holds at least `dk` initialized entries (the DSA
+    /// decode path quantizes one query row into it per step). Kept
+    /// separate from [`Scratch::reserve`] so forward dispatches never
+    /// pay for a buffer only decode uses.
+    pub fn reserve_qi8(&mut self, dk: usize) {
+        if self.qi8.len() < dk {
+            self.note_grow();
+            self.qi8.resize(dk, 0);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -131,12 +147,28 @@ mod tests {
     }
 
     /// `reserve` (the pool-warm path) never grows the quadratic `scores`
-    /// buffer — only the whole-matrix predictor reference pays for it.
+    /// buffer — only the whole-matrix predictor reference pays for it —
+    /// nor the decode-only `qi8` row.
     #[test]
     fn reserve_never_touches_scores() {
         let mut s = Scratch::new();
         s.reserve(256, 256);
         assert_eq!(s.scores.capacity(), 0, "warm-up must not allocate l*l");
+        assert_eq!(s.qi8.capacity(), 0, "warm-up must not allocate qi8");
+    }
+
+    /// A warm `qi8` row never re-grows (the per-step decode reserve).
+    #[test]
+    fn warm_qi8_never_regrows() {
+        let mut s = Scratch::new();
+        s.reserve_qi8(64);
+        let warm = s.grow_events();
+        for _ in 0..100 {
+            s.reserve_qi8(64);
+            s.reserve_qi8(8);
+        }
+        assert_eq!(s.grow_events(), warm, "warm qi8 reallocated");
+        assert!(s.qi8.len() >= 64);
     }
 
     #[test]

@@ -69,7 +69,7 @@ fn usage() -> String {
      Commands:\n\
        serve          start the TCP server     (--addr, --artifacts, --variant)\n\
        infer          one-shot inference       (--artifacts, --variant, --label)\n\
-       bench-serve    serving benchmark        (--requests, --rate|--rates, --out)\n\
+       bench-serve    serving benchmark        (--requests, --rate|--rates, --decode, --out)\n\
        bench-compare  perf gate vs committed   (--baseline, --fresh, --max-regress)\n\
        tile-plan      write/check the derived tile table (--check, --out)\n\
        simulate       PE dataflow simulation   (--artifacts, --pes)\n\
@@ -207,6 +207,27 @@ fn cmd_bench_serve(rest: &[String]) -> Result<()> {
              empty = don't write",
         )
         .opt("seed", "0", "workload seed")
+        .flag(
+            "decode",
+            "also bench streamed decode sessions (TTFT/ITL percentiles) after the rate sweep",
+        )
+        .opt(
+            "sessions",
+            "32",
+            "decode point: concurrently resident sessions (keep <= the engine's \
+             session cap, default 64, or the LRU evicts mid-stream)",
+        )
+        .opt(
+            "prefill",
+            "0",
+            "decode point: prompt tokens prefilled at open; 0 = 3/4 of seq-len",
+        )
+        .opt(
+            "steps",
+            "0",
+            "decode point: decode steps per session; 0 = stream to seq-len \
+             (final-step accuracy then matches one-shot)",
+        )
         .parse(rest)
         .map_err(|u| err!("{u}"))?;
     let engine = Arc::new(start_engine(&a)?);
@@ -244,6 +265,44 @@ fn cmd_bench_serve(rest: &[String]) -> Result<()> {
             ("mean_s", Json::num(lat.mean())),
             ("p50_s", Json::num(lat.percentile(50.0))),
             ("p95_s", Json::num(lat.percentile(95.0))),
+        ]));
+    }
+    if a.get_flag("decode") {
+        let sessions = a.get_usize("sessions").max(1);
+        let prefill = match a.get_usize("prefill") {
+            0 => (engine.seq_len() * 3 / 4).max(1),
+            p => p,
+        };
+        let steps = a.get_usize("steps");
+        let (mut ttft, mut itl, correct, scored, decoded, wall) =
+            run_decode_point(&engine, sessions, prefill, steps, a.get_usize("seed"))?;
+        let name = format!("serve/native/decode/s{sessions}/p{prefill}");
+        println!("== {name} ==");
+        println!("{}", ttft.report_ms("ttft"));
+        println!("{}", itl.report_ms("itl "));
+        println!(
+            "decode throughput={:.1} tok/s accuracy={:.3} ({scored} sessions scored) wall={:.2}s",
+            decoded as f64 / wall,
+            if scored > 0 { correct as f64 / scored as f64 } else { f64::NAN },
+            wall
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("sessions", Json::num(sessions as f64)),
+            ("prefill", Json::num(prefill as f64)),
+            ("decoded_tokens", Json::num(decoded as f64)),
+            ("decode_tok_per_s", Json::num(decoded as f64 / wall)),
+            (
+                "accuracy",
+                Json::num(if scored > 0 { correct as f64 / scored as f64 } else { f64::NAN }),
+            ),
+            ("ttft_mean_s", Json::num(ttft.mean())),
+            ("ttft_p50_s", Json::num(ttft.percentile(50.0))),
+            ("ttft_p95_s", Json::num(ttft.percentile(95.0))),
+            ("itl_mean_s", Json::num(itl.mean())),
+            ("itl_p50_s", Json::num(itl.percentile(50.0))),
+            ("itl_p95_s", Json::num(itl.percentile(95.0))),
+            ("itl_p99_s", Json::num(itl.percentile(99.0))),
         ]));
     }
     println!("{}", engine.metrics.report());
@@ -330,6 +389,72 @@ fn run_rate_point(
         }
     }
     Ok((lat, correct, t0.elapsed().as_secs_f64()))
+}
+
+/// One streamed-decode point against a running engine: open `n` sessions
+/// (TTFT = blocking open latency, i.e. prefill + queueing), round-robin
+/// one token at a time through all of them (ITL = the engine's per-step
+/// decode latency), then close and score each session's *final* step
+/// prediction against the generated label. With `steps == 0` every
+/// session streams its full tail, so `prompt ∥ steps` is exactly a
+/// one-shot request and the final-step accuracy is the one-shot accuracy.
+/// Returns (ttft, itl, correct, scored sessions, decoded tokens, wall s).
+fn run_decode_point(
+    engine: &Engine,
+    n: usize,
+    prefill: usize,
+    steps: usize,
+    seed: usize,
+) -> Result<(Summary, Summary, usize, usize, usize, f64)> {
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len: engine.seq_len(),
+        arrival: Arrival::Closed,
+        seed: seed as u64,
+        ..Default::default()
+    });
+    let mut trace = wl.session_trace(n, prefill);
+    if steps > 0 {
+        for s in &mut trace {
+            s.steps.truncate(steps);
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let mut ttft = Summary::new();
+    let mut itl = Summary::new();
+    let mut ids = Vec::with_capacity(n);
+    for s in &trace {
+        let t = std::time::Instant::now();
+        let (id, _resident, _variant) = engine.open_session(s.prompt.clone(), None)?;
+        ttft.add(t.elapsed().as_secs_f64());
+        ids.push(id);
+    }
+    // Round-robin across all resident sessions — one token each per pass —
+    // so the cache working set and the decode lane see `n` interleaved
+    // streams, not `n` sequential ones.
+    let mut decoded = 0usize;
+    let mut last_pred: Vec<Option<usize>> = vec![None; n];
+    let max_steps = trace.iter().map(|s| s.steps.len()).max().unwrap_or(0);
+    for step in 0..max_steps {
+        for (i, s) in trace.iter().enumerate() {
+            if let Some(&tok) = s.steps.get(step) {
+                let resp = engine.decode(ids[i], tok)?;
+                itl.add(resp.latency.as_secs_f64());
+                last_pred[i] = Some(resp.pred);
+                decoded += 1;
+            }
+        }
+    }
+    let (mut correct, mut scored) = (0usize, 0usize);
+    for (i, s) in trace.iter().enumerate() {
+        if let Some(p) = last_pred[i] {
+            scored += 1;
+            if p as i32 == s.label {
+                correct += 1;
+            }
+        }
+        engine.close_session(ids[i])?;
+    }
+    Ok((ttft, itl, correct, scored, decoded, t0.elapsed().as_secs_f64()))
 }
 
 /// Perf gate: diff a fresh `results/BENCH_kernels.json` against the

@@ -7,17 +7,35 @@
 //! ```text
 //! -> {"op":"infer","tokens":[...],"variant":"dsa90"}
 //! <- {"ok":true,"pred":1,"logits":[...],"latency_ms":3.2,"batch":4}
+//! -> {"op":"open","tokens":[...prompt...],"variant":"dsa90"}
+//! <- {"ok":true,"session":3,"resident":192,"variant":"dsa90"}
+//! -> {"op":"decode","session":3,"token":17}
+//! <- {"ok":true,"session":3,"pred":1,"logits":[...],"resident":193,
+//!     "latency_ms":0.4,"variant":"dsa90"}
+//! -> {"op":"close","session":3}
+//! <- {"ok":true,"session":3,"released":193}
 //! -> {"op":"metrics"}
 //! <- {"ok":true, ...metrics json...}
 //! -> {"op":"ping"} / {"op":"shutdown"}
 //! ```
+//!
+//! Session ops stream one token per `decode` against a server-held KV
+//! cache: `open` prefills the prompt and pins the serving variant
+//! (explicit, or the adaptive router's pick at open time), `decode`
+//! returns the classifier logits over the tokens so far, `close` releases
+//! the cache for pooled reuse. Failures — unknown/evicted session ids,
+//! prompts past `seq_len`, a backend without decode support — are
+//! structured `{"ok":false,"error":...}` replies, never dropped
+//! connections. All fields parse **once**, here at the boundary, into the
+//! typed [`SessionOp`](crate::coordinator::SessionOp); `{"op":"infer"}`
+//! is unchanged.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use crate::coordinator::Engine;
+use crate::coordinator::{DecodeResponse, Engine};
 use crate::kernels::Variant;
 use crate::util::error::{bail, Context, Result};
 use crate::util::json::{self, Json};
@@ -78,6 +96,57 @@ fn handle_conn(stream: TcpStream, engine: &Engine, stop: &AtomicBool) -> Result<
     Ok(())
 }
 
+/// Token array of a request (`infer` payload / `open` prompt).
+fn parse_tokens(req: &Json) -> Result<Vec<i32>> {
+    Ok(req
+        .get("tokens")
+        .and_then(|t| t.as_arr())
+        .context("missing tokens")?
+        .iter()
+        .filter_map(|v| v.as_f64().map(|f| f as i32))
+        .collect())
+}
+
+/// Parse the variant override ONCE, here at the protocol boundary
+/// (`Variant::from_str` is the only string parse in the stack): an
+/// unknown name — or a present-but-non-string field — becomes a
+/// structured error reply instead of a dead in-flight request or a silent
+/// fall-through to the default.
+fn parse_variant(req: &Json) -> Result<Option<Variant>> {
+    match req.get("variant") {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => {
+            let name = v
+                .as_str()
+                .context("\"variant\" must be a string (e.g. \"dsa90\")")?;
+            Ok(Some(name.parse::<Variant>()?))
+        }
+    }
+}
+
+/// Session id of a `decode` / `close` request.
+fn parse_session(req: &Json) -> Result<u64> {
+    Ok(req
+        .get("session")
+        .and_then(|v| v.as_f64())
+        .context("missing session id")? as u64)
+}
+
+fn decode_reply(resp: &DecodeResponse) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("session", Json::num(resp.session as f64)),
+        ("pred", Json::num(resp.pred as f64)),
+        (
+            "logits",
+            Json::arr(resp.logits.iter().map(|&x| Json::num(x as f64))),
+        ),
+        ("resident", Json::num(resp.resident as f64)),
+        ("latency_ms", Json::num(resp.latency.as_secs_f64() * 1e3)),
+        ("variant", Json::str(resp.variant.to_string())),
+    ])
+}
+
 /// Dispatch one request line. Public so tests can drive the protocol
 /// without sockets.
 pub fn handle_line(line: &str, engine: &Engine, stop: &AtomicBool) -> Result<Json> {
@@ -97,27 +166,8 @@ pub fn handle_line(line: &str, engine: &Engine, stop: &AtomicBool) -> Result<Jso
             Ok(Json::obj(vec![("ok", Json::Bool(true)), ("stopping", Json::Bool(true))]))
         }
         "infer" => {
-            let tokens: Vec<i32> = req
-                .get("tokens")
-                .and_then(|t| t.as_arr())
-                .context("missing tokens")?
-                .iter()
-                .filter_map(|v| v.as_f64().map(|f| f as i32))
-                .collect();
-            // Parse the variant override ONCE, here at the protocol
-            // boundary (`Variant::from_str` is the only string parse in
-            // the stack): an unknown name — or a present-but-non-string
-            // field — becomes a structured error reply instead of a dead
-            // in-flight request or a silent fall-through to the default.
-            let variant = match req.get("variant") {
-                None | Some(Json::Null) => None,
-                Some(v) => {
-                    let name = v
-                        .as_str()
-                        .context("\"variant\" must be a string (e.g. \"dsa90\")")?;
-                    Some(name.parse::<Variant>()?)
-                }
-            };
+            let tokens = parse_tokens(&req)?;
+            let variant = parse_variant(&req)?;
             let resp = engine.infer(tokens, variant)?;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -131,6 +181,38 @@ pub fn handle_line(line: &str, engine: &Engine, stop: &AtomicBool) -> Result<Jso
                 ("queue_ms", Json::num(resp.queue_time.as_secs_f64() * 1e3)),
                 ("batch", Json::num(resp.batch_size as f64)),
                 ("variant", Json::str(resp.variant.to_string())),
+            ]))
+        }
+        // Session ops: everything parses here into the typed `SessionOp`
+        // (ids, tokens, variant) so malformed requests die at the
+        // boundary as structured errors, exactly like `infer`.
+        "open" => {
+            let prompt = parse_tokens(&req)?;
+            let variant = parse_variant(&req)?;
+            let (session, resident, variant) = engine.open_session(prompt, variant)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("session", Json::num(session as f64)),
+                ("resident", Json::num(resident as f64)),
+                ("variant", Json::str(variant.to_string())),
+            ]))
+        }
+        "decode" => {
+            let session = parse_session(&req)?;
+            let token = req
+                .get("token")
+                .and_then(|v| v.as_f64())
+                .context("missing token")? as i32;
+            let resp = engine.decode(session, token)?;
+            Ok(decode_reply(&resp))
+        }
+        "close" => {
+            let session = parse_session(&req)?;
+            let released = engine.close_session(session)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("session", Json::num(session as f64)),
+                ("released", Json::num(released as f64)),
             ]))
         }
         other => bail!("unknown op {other:?}"),
@@ -172,5 +254,38 @@ impl Client {
             fields.push(("variant", Json::str(v)));
         }
         self.call(&Json::obj(fields))
+    }
+
+    /// Open a decode session over `prompt`; the reply carries the
+    /// server-assigned `"session"` id.
+    pub fn open(&mut self, prompt: &[i32], variant: Option<&str>) -> Result<Json> {
+        let mut fields = vec![
+            ("op", Json::str("open")),
+            (
+                "tokens",
+                Json::arr(prompt.iter().map(|&t| Json::num(t as f64))),
+            ),
+        ];
+        if let Some(v) = variant {
+            fields.push(("variant", Json::str(v)));
+        }
+        self.call(&Json::obj(fields))
+    }
+
+    /// Stream one token into an open session.
+    pub fn decode(&mut self, session: u64, token: i32) -> Result<Json> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("decode")),
+            ("session", Json::num(session as f64)),
+            ("token", Json::num(token as f64)),
+        ]))
+    }
+
+    /// Close a session, releasing its server-side cache.
+    pub fn close(&mut self, session: u64) -> Result<Json> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("close")),
+            ("session", Json::num(session as f64)),
+        ]))
     }
 }

@@ -1,6 +1,9 @@
 //! Synthetic serving workloads: request generators with Poisson or bursty
 //! arrivals, mirroring the text task's token distribution so predictions
-//! run against in-distribution inputs.
+//! run against in-distribution inputs. Long-lived session traffic
+//! ([`Workload::next_session`]) splits the same sequences into a prompt
+//! prefix (prefill at `open`) and a streamed decode tail, so session
+//! benches exercise exactly the distribution the one-shot path serves.
 
 use std::time::Duration;
 
@@ -130,6 +133,45 @@ impl Workload {
     pub fn trace(&mut self, n: usize) -> Vec<GenRequest> {
         (0..n).map(|_| self.next_request()).collect()
     }
+
+    /// Generate one decode session: the same `seq_len`-token sequence a
+    /// [`Workload::next_request`] at this point in the stream would
+    /// produce, split at `prefill` into the open-time prompt and the
+    /// streamed decode tail (so a session decoded to completion sees
+    /// exactly the one-shot request's tokens — the decode-equals-infer
+    /// property tests rely on it). `prefill` is clamped to
+    /// `1..=seq_len`.
+    pub fn next_session(&mut self, prefill: usize) -> GenSession {
+        let delay = self.next_delay();
+        let (mut tokens, label) = self.gen_tokens();
+        self.issued += 1;
+        let prefill = prefill.clamp(1, tokens.len());
+        let steps = tokens.split_off(prefill);
+        GenSession {
+            prompt: tokens,
+            steps,
+            delay,
+            label,
+        }
+    }
+
+    /// Generate a fixed-size session trace (deterministic given the seed).
+    pub fn session_trace(&mut self, n: usize, prefill: usize) -> Vec<GenSession> {
+        (0..n).map(|_| self.next_session(prefill)).collect()
+    }
+}
+
+/// One generated decode session: the prompt to `open` with, the tokens to
+/// stream through `decode`, and the arrival delay *before* opening.
+/// `prompt ∥ steps` is exactly one [`GenRequest::tokens`] sequence.
+#[derive(Debug, Clone)]
+pub struct GenSession {
+    pub prompt: Vec<i32>,
+    pub steps: Vec<i32>,
+    pub delay: Duration,
+    /// Ground-truth label of the full sequence (the final decode step's
+    /// prediction is checked against this).
+    pub label: i32,
 }
 
 #[cfg(test)]
@@ -183,6 +225,44 @@ mod tests {
         let total: f64 = trace.iter().map(|r| r.delay.as_secs_f64()).sum();
         let rate = 2000.0 / total;
         assert!((rate - 200.0).abs() < 20.0, "rate {rate}");
+    }
+
+    /// A session is a one-shot request split in two: same seed, same
+    /// position in the stream → `prompt ∥ steps == next_request().tokens`
+    /// with the same label, and the split lands at `prefill`.
+    #[test]
+    fn session_is_a_split_request() {
+        let cfg = WorkloadConfig {
+            seq_len: 64,
+            seed: 99,
+            ..Default::default()
+        };
+        let reqs = Workload::new(cfg.clone()).trace(4);
+        let sessions = Workload::new(cfg).session_trace(4, 48);
+        for (r, s) in reqs.iter().zip(sessions.iter()) {
+            assert_eq!(s.prompt.len(), 48);
+            assert_eq!(s.steps.len(), 64 - 48);
+            let mut joined = s.prompt.clone();
+            joined.extend_from_slice(&s.steps);
+            assert_eq!(joined, r.tokens);
+            assert_eq!(s.label, r.label);
+            assert_eq!(s.delay, r.delay);
+        }
+    }
+
+    /// The prefill split is clamped into `1..=seq_len` so every session
+    /// has a non-empty prompt and the tail never underflows.
+    #[test]
+    fn session_prefill_is_clamped() {
+        let mut w = Workload::new(WorkloadConfig {
+            seq_len: 32,
+            seed: 5,
+            ..Default::default()
+        });
+        let s = w.next_session(0);
+        assert_eq!((s.prompt.len(), s.steps.len()), (1, 31));
+        let s = w.next_session(1000);
+        assert_eq!((s.prompt.len(), s.steps.len()), (32, 0));
     }
 
     #[test]

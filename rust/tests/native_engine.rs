@@ -7,11 +7,13 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::time::Duration;
 
-use dsa_serve::coordinator::{AdaptiveRouter, BatchPolicy, Engine, EngineConfig, NativeModelConfig};
+use dsa_serve::coordinator::{
+    AdaptiveRouter, BatchPolicy, Engine, EngineConfig, NativeModelConfig, SessionPolicy,
+};
 use dsa_serve::kernels::Variant;
 use dsa_serve::server;
 use dsa_serve::util::json::Json;
-use dsa_serve::workload::{Workload, WorkloadConfig};
+use dsa_serve::workload::{GenSession, Workload, WorkloadConfig};
 
 const SEQ_LEN: usize = 256;
 
@@ -32,6 +34,7 @@ fn engine(variant: &str) -> Engine {
             },
             preload: true,
             router: None,
+            sessions: SessionPolicy::default(),
         },
     )
     .expect("native engine")
@@ -252,6 +255,7 @@ fn adaptive_router_routes_under_load_and_reports() {
                 AdaptiveRouter::from_pairs(&[("dense", 0), ("dsa90", 2)], 0)
                     .expect("valid ladder"),
             ),
+            sessions: SessionPolicy::default(),
         },
     )
     .expect("native engine with router");
@@ -344,4 +348,235 @@ fn server_protocol_roundtrip() {
     let bye = server::handle_line(r#"{"op":"shutdown"}"#, &engine, &stop).unwrap();
     assert_eq!(bye.get("stopping"), Some(&Json::Bool(true)));
     assert!(stop.load(std::sync::atomic::Ordering::SeqCst));
+}
+
+fn join_tokens(v: &[i32]) -> String {
+    v.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// Streamed decode over the wire equals one-shot inference: `open` a
+/// session at a prompt prefix, stream the tail one `{"op":"decode"}` at a
+/// time, and the final step's logits/pred — JSON-serialized both ways —
+/// must match the one-shot `{"op":"infer"}` reply for the full sequence
+/// exactly (same engine, same kernels, dense = bitwise).
+#[test]
+fn session_protocol_decode_matches_one_shot() {
+    let engine = Arc::new(engine("dense"));
+    let stop = AtomicBool::new(false);
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len: SEQ_LEN,
+        seed: 21,
+        ..Default::default()
+    });
+    let s = wl.next_session(192);
+    let opened = server::handle_line(
+        &format!(r#"{{"op":"open","tokens":[{}]}}"#, join_tokens(&s.prompt)),
+        &engine,
+        &stop,
+    )
+    .expect("open");
+    assert_eq!(opened.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(opened.get("resident").and_then(|v| v.as_f64()), Some(192.0));
+    assert_eq!(opened.get("variant").and_then(|v| v.as_str()), Some("dense"));
+    let sid = opened.get("session").and_then(|v| v.as_f64()).expect("session id") as u64;
+
+    let mut last = None;
+    for (i, &t) in s.steps.iter().enumerate() {
+        let reply = server::handle_line(
+            &format!(r#"{{"op":"decode","session":{sid},"token":{t}}}"#),
+            &engine,
+            &stop,
+        )
+        .expect("decode");
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(
+            reply.get("resident").and_then(|v| v.as_f64()),
+            Some((192 + i + 1) as f64),
+            "each decode step appends exactly one cached token"
+        );
+        last = Some(reply);
+    }
+    let last = last.expect("session has decode steps");
+
+    let mut full = s.prompt.clone();
+    full.extend_from_slice(&s.steps);
+    let one_shot = server::handle_line(
+        &format!(r#"{{"op":"infer","tokens":[{}]}}"#, join_tokens(&full)),
+        &engine,
+        &stop,
+    )
+    .expect("infer");
+    let logits = |j: &Json| -> Vec<f64> {
+        j.get("logits")
+            .and_then(|l| l.as_arr())
+            .expect("logits array")
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .collect()
+    };
+    assert_eq!(
+        logits(&last),
+        logits(&one_shot),
+        "streamed decode must equal one-shot inference"
+    );
+    assert_eq!(
+        last.get("pred").and_then(|v| v.as_f64()),
+        one_shot.get("pred").and_then(|v| v.as_f64())
+    );
+
+    let closed = server::handle_line(
+        &format!(r#"{{"op":"close","session":{sid}}}"#),
+        &engine,
+        &stop,
+    )
+    .expect("close");
+    assert_eq!(closed.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(
+        closed.get("released").and_then(|v| v.as_f64()),
+        Some(SEQ_LEN as f64)
+    );
+}
+
+/// The DSA rungs stream through the same session path: the final decode
+/// step's logits equal the one-shot logits bitwise (both paths run the
+/// same kernels through the same per-shape tile plan), so sparse serving
+/// loses nothing to the incremental cache.
+#[test]
+fn dsa90_session_decode_matches_one_shot() {
+    let e = engine("dsa90");
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len: SEQ_LEN,
+        seed: 22,
+        ..Default::default()
+    });
+    let s = wl.next_session(128);
+    let (sid, resident, variant) = e.open_session(s.prompt.clone(), None).expect("open");
+    assert_eq!((resident, variant), (128, Variant::Dsa { pct: 90 }));
+    let mut last = None;
+    for &t in &s.steps {
+        last = Some(e.decode(sid, t).expect("decode"));
+    }
+    let resp = last.expect("session has decode steps");
+    let mut full = s.prompt.clone();
+    full.extend_from_slice(&s.steps);
+    let one_shot = e.infer(full, None).expect("infer");
+    assert_eq!(
+        resp.logits, one_shot.logits,
+        "dsa90 streamed decode must equal one-shot inference bitwise"
+    );
+    assert_eq!(resp.pred, one_shot.pred);
+    assert_eq!(e.close_session(sid).expect("close"), SEQ_LEN);
+}
+
+/// The session table is LRU-bounded by [`SessionPolicy`]: opening past
+/// `max_sessions` evicts the least-recently-used stream, whose next
+/// `decode` gets a structured error (not a hang or a wrong answer), the
+/// survivors keep decoding, and the eviction is visible in metrics.
+#[test]
+fn session_cap_evicts_lru_with_structured_error() {
+    let e = Engine::start_native(
+        NativeModelConfig {
+            seq_len: SEQ_LEN,
+            ..Default::default()
+        },
+        EngineConfig {
+            default_variant: Variant::Dense,
+            sessions: SessionPolicy { max_sessions: 2 },
+            ..Default::default()
+        },
+    )
+    .expect("native engine");
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len: SEQ_LEN,
+        seed: 31,
+        ..Default::default()
+    });
+    let mut ids = Vec::new();
+    for _ in 0..3 {
+        let s = wl.next_session(64);
+        ids.push(e.open_session(s.prompt, None).expect("open").0);
+    }
+    // The third open evicted the least-recently-used first session.
+    let err = e.decode(ids[0], 7).expect_err("evicted session must error");
+    assert!(
+        format!("{err:#}").contains("unknown session"),
+        "eviction must surface as a structured unknown-session error: {err:#}"
+    );
+    assert!(e.decode(ids[1], 7).is_ok(), "survivor must keep decoding");
+    assert!(e.decode(ids[2], 7).is_ok(), "survivor must keep decoding");
+    let m = e.metrics.to_json();
+    let sess = m.get("sessions").expect("sessions section in metrics");
+    assert_eq!(sess.get("evicted").and_then(|v| v.as_f64()), Some(1.0));
+    assert_eq!(sess.get("active").and_then(|v| v.as_f64()), Some(2.0));
+}
+
+/// Close returns a session's cache to the backend pool; a reopened
+/// same-shape session reuses it without growing — observable end to end
+/// through the `sessions.cache_grows` metrics gauge staying flat across
+/// churn.
+#[test]
+fn closed_session_caches_are_recycled_without_regrowth() {
+    let e = engine("dsa90");
+    let mut wl = Workload::new(WorkloadConfig {
+        seq_len: SEQ_LEN,
+        seed: 41,
+        ..Default::default()
+    });
+    let run = |s: &GenSession| {
+        let (sid, ..) = e.open_session(s.prompt.clone(), None).expect("open");
+        for &t in &s.steps {
+            e.decode(sid, t).expect("decode");
+        }
+        e.close_session(sid).expect("close");
+    };
+    let grows = |e: &Engine| {
+        e.metrics
+            .to_json()
+            .get("sessions")
+            .and_then(|s| s.get("cache_grows"))
+            .and_then(|v| v.as_f64())
+            .expect("cache_grows gauge")
+    };
+    run(&wl.next_session(192));
+    let cold = grows(&e);
+    assert!(cold >= 1.0, "first session must grow its cache, got {cold}");
+    run(&wl.next_session(192));
+    assert_eq!(grows(&e), cold, "recycled cache must not regrow");
+}
+
+/// Malformed or stale session requests die at the protocol boundary as
+/// structured errors — never dropped connections or panics — and the
+/// engine keeps serving afterwards.
+#[test]
+fn session_protocol_errors_are_structured() {
+    let engine = Arc::new(engine("dense"));
+    let stop = AtomicBool::new(false);
+    let err = server::handle_line(
+        r#"{"op":"decode","session":999,"token":1}"#,
+        &engine,
+        &stop,
+    )
+    .expect_err("never-opened session");
+    assert!(
+        format!("{err:#}").contains("unknown session"),
+        "error must name the stale session: {err:#}"
+    );
+    let err = server::handle_line(r#"{"op":"decode","session":1}"#, &engine, &stop)
+        .expect_err("decode without token");
+    assert!(format!("{err:#}").contains("missing token"), "{err:#}");
+    let err = server::handle_line(r#"{"op":"close"}"#, &engine, &stop)
+        .expect_err("close without session id");
+    assert!(format!("{err:#}").contains("missing session"), "{err:#}");
+    // An over-length prompt dies at the submit boundary, before the
+    // worker or the backend ever see it.
+    let toks = join_tokens(&[1i32; SEQ_LEN + 1]);
+    let err = server::handle_line(
+        &format!(r#"{{"op":"open","tokens":[{toks}]}}"#),
+        &engine,
+        &stop,
+    )
+    .expect_err("over-length prompt");
+    assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    // The engine never saw a broken session op and keeps serving.
+    assert!(engine.infer(vec![1i32; SEQ_LEN], None).is_ok());
 }
