@@ -40,7 +40,19 @@ help:
 	@echo "                 >= 0, no duplicates; --adaptive on enables queue-depth"
 	@echo "                 variant routing, decisions visible in metrics; --decode"
 	@echo "                 appends a streamed decode-session point with TTFT/ITL"
-	@echo "                 percentiles — tune it with --sessions/--prefill/--steps)"
+	@echo "                 percentiles — tune it with --sessions/--prefill/--steps;"
+	@echo "                 every rate point prints a typed outcomes line:"
+	@echo "                 served/overloaded/expired/errored always sum to requests)"
+	@echo "  (serving)      dsa-serve serve is overload-safe: --deadline-ms N sets a"
+	@echo "                 server-side default deadline (0 = none), --queue-cap N"
+	@echo "                 bounds admissions (past it -> structured 'overloaded'"
+	@echo "                 replies with retry_after_ms), --shed on routes default"
+	@echo "                 traffic to the sparsest rung under sustained backlog"
+	@echo "                 (requires --adaptive on), --max-sessions N caps the LRU"
+	@echo "                 session table, and --quota-rps/--quota-burst/"
+	@echo "                 --quota-sessions set per-connection quotas (structured"
+	@echo "                 'quota_exceeded' replies); {\"op\":\"shutdown\"} drains"
+	@echo "                 all lanes then exits with zero in-flight work lost"
 	@echo "  tile-plan      regenerate results/TILE_PLAN.json from the in-source"
 	@echo "                 kernels::tiles::TILE_TABLE (tune entries with the"
 	@echo "                 bench_kernels tile sweep; CI gates drift via --check)"

@@ -7,7 +7,7 @@
 //! ```
 
 use dsa_serve::util::error::Result;
-use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
+use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig, SessionPolicy};
 use dsa_serve::kernels::Variant;
 use dsa_serve::runtime::registry::Manifest;
 use dsa_serve::workload::{Workload, WorkloadConfig};
@@ -29,6 +29,7 @@ fn main() -> Result<()> {
                 policy: BatchPolicy::default(),
                 preload: true,
                 router: None,
+                sessions: SessionPolicy::default(),
             },
         )?;
         let mut wl = Workload::new(WorkloadConfig {

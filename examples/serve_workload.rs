@@ -13,7 +13,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use dsa_serve::util::error::Result;
-use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
+use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig, SessionPolicy};
 use dsa_serve::kernels::Variant;
 use dsa_serve::runtime::registry::Manifest;
 use dsa_serve::server;
@@ -50,35 +50,9 @@ fn main() -> Result<()> {
                 policy: BatchPolicy::default(),
                 preload: true,
                 router: None,
+                sessions: SessionPolicy::default(),
             },
         )?);
-
-        // Full-stack phase: run a real TCP round trip first to prove the
-        // wire protocol composes (a handful of requests).
-        let addr = "127.0.0.1:7793";
-        {
-            let srv_engine = engine.clone();
-            let addr2 = addr.to_string();
-            let _srv = std::thread::spawn(move || {
-                let _ = server::serve(srv_engine, &addr2);
-            });
-            std::thread::sleep(std::time::Duration::from_millis(100));
-            let mut client = server::Client::connect(addr)?;
-            let mut wl = Workload::new(WorkloadConfig {
-                seq_len: manifest.task_seq_len,
-                seed: 7,
-                ..Default::default()
-            });
-            for _ in 0..3 {
-                let r = wl.next_request();
-                let resp = client.infer(&r.tokens, Some(variant))?;
-                assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "tcp infer failed");
-            }
-            // Ask the server to stop so the next variant can rebind.
-            let _ = client.call(&Json::obj(vec![("op", Json::str("shutdown"))]));
-            // Unblock the accept loop.
-            let _ = std::net::TcpStream::connect(addr);
-        }
 
         // Measurement phase: open-loop Poisson arrivals into the engine.
         let mut wl = Workload::new(WorkloadConfig {
@@ -94,12 +68,12 @@ fn main() -> Result<()> {
         for r in trace {
             std::thread::sleep(r.delay);
             labels.push(r.label);
-            rxs.push(engine.submit(r.tokens, None)?);
+            rxs.push(engine.submit(r.tokens, None, None)?);
         }
         let mut lat = Summary::new();
         let mut correct = 0usize;
         for (rx, label) in rxs.into_iter().zip(labels) {
-            let resp = rx.recv()?;
+            let resp = rx.recv()??;
             lat.add(resp.latency.as_secs_f64());
             if resp.pred as i32 == label {
                 correct += 1;
@@ -133,6 +107,36 @@ fn main() -> Result<()> {
             ("requests", Json::num(n as f64)),
             ("rate_rps", Json::num(rate)),
         ]));
+
+        // Full-stack phase: run a real TCP round trip to prove the wire
+        // protocol composes (a handful of requests). This goes last for
+        // each variant because asking the server to stop drains and shuts
+        // down the engine behind it.
+        let addr = "127.0.0.1:7793";
+        {
+            let srv_engine = engine.clone();
+            let addr2 = addr.to_string();
+            let srv = std::thread::spawn(move || {
+                let _ = server::serve(srv_engine, &addr2, server::QuotaConfig::default());
+            });
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            let mut client = server::Client::connect(addr)?;
+            let mut wl = Workload::new(WorkloadConfig {
+                seq_len: manifest.task_seq_len,
+                seed: 7,
+                ..Default::default()
+            });
+            for _ in 0..3 {
+                let r = wl.next_request();
+                let resp = client.infer(&r.tokens, Some(variant))?;
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "tcp infer failed");
+            }
+            // Drain-then-shutdown: the op stops admissions, wakes the
+            // accept loop itself, and the server joins its connections
+            // before the thread exits — so the next variant can rebind.
+            let _ = client.call(&Json::obj(vec![("op", Json::str("shutdown"))]));
+            let _ = srv.join();
+        }
     }
 
     std::fs::create_dir_all("results")?;

@@ -8,7 +8,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
+use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig, SessionPolicy};
 use dsa_serve::kernels::Variant;
 use dsa_serve::runtime::registry::{Manifest, Registry};
 use dsa_serve::runtime::Arg;
@@ -91,9 +91,11 @@ fn main() {
                         max_batch: *manifest.batch_buckets.iter().max().unwrap_or(&8),
                         max_wait: Duration::from_millis(2),
                         queue_cap: 4096,
+                        default_deadline: None,
                     },
                     preload: true,
                     router: None,
+                    sessions: SessionPolicy::default(),
                 },
             )
             .expect("engine"),
@@ -109,11 +111,11 @@ fn main() {
         let t0 = Instant::now();
         let rxs: Vec<_> = trace
             .into_iter()
-            .map(|r| engine.submit(r.tokens, None).expect("submit"))
+            .map(|r| engine.submit(r.tokens, None, None).expect("submit"))
             .collect();
         let mut lat = Summary::new();
         for rx in rxs {
-            let resp = rx.recv().expect("resp");
+            let resp = rx.recv().expect("channel").expect("served");
             lat.add(resp.latency.as_secs_f64());
         }
         let wall = t0.elapsed().as_secs_f64();

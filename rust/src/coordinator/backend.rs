@@ -30,6 +30,7 @@ use crate::kernels::kvcache::{KvCachePool, KvPoolStats};
 use crate::kernels::model::{DecodeSession, ModelScratch, NativeClassifier};
 use crate::kernels::scratch::Scratch;
 use crate::util::error::{bail, Context, Result};
+use crate::util::faults::FaultInjector;
 
 /// What the engine worker needs from an execution backend.
 pub trait InferBackend {
@@ -129,6 +130,12 @@ pub struct NativeModelConfig {
     /// plug-in point: register a custom variant family here and the
     /// serving stack picks it up without any in-crate edits.
     pub registry: Option<Arc<KernelRegistry>>,
+    /// Seeded fault injector polled before every batch / prefill / decode
+    /// (`backend.run` / `backend.open` / `backend.decode` sites); `None`
+    /// (the default) compiles the hooks down to a branch on a missing
+    /// option. Chaos tests arm this to prove the engine survives backend
+    /// panics, errors and stalls.
+    pub faults: Option<Arc<FaultInjector>>,
 }
 
 impl Default for NativeModelConfig {
@@ -141,6 +148,7 @@ impl Default for NativeModelConfig {
             seed: 0xD5A,
             spec: KernelSpec::default(),
             registry: None,
+            faults: None,
         }
     }
 }
@@ -159,6 +167,8 @@ pub struct NativeBackend {
     model: NativeClassifier,
     spec: KernelSpec,
     registry: Option<Arc<KernelRegistry>>,
+    /// Chaos hook, polled first in `run_into`/`open_session`/`decode_into`.
+    faults: Option<Arc<FaultInjector>>,
     kernels: HashMap<Variant, Box<dyn KernelDispatch>>,
     /// Warm per-bucket batch buffers (Q/K/V + context output), reused
     /// across every batch this backend executes.
@@ -184,6 +194,7 @@ impl NativeBackend {
             model,
             spec: cfg.spec,
             registry: cfg.registry,
+            faults: cfg.faults,
             kernels: HashMap::new(),
             scratch: ModelScratch::new(),
             sessions: HashMap::new(),
@@ -227,6 +238,14 @@ impl NativeBackend {
     pub fn cache_pool_stats(&self) -> KvPoolStats {
         self.cache_pool.stats()
     }
+
+    /// Poll the chaos hook at `site` (no-op without an injector).
+    fn fire(&self, site: &'static str) -> Result<()> {
+        match &self.faults {
+            Some(f) => f.fire(site),
+            None => Ok(()),
+        }
+    }
 }
 
 impl InferBackend for NativeBackend {
@@ -262,6 +281,7 @@ impl InferBackend for NativeBackend {
         bucket: usize,
         logits: &mut Vec<f32>,
     ) -> Result<()> {
+        self.fire("backend.run")?;
         self.ensure_kernel(variant)?;
         let kernel = self.kernels.get(&variant).expect("just inserted").as_ref();
         let sl = self.model.seq_len();
@@ -282,6 +302,7 @@ impl InferBackend for NativeBackend {
     }
 
     fn open_session(&mut self, id: u64, variant: Variant, prompt: &[i32]) -> Result<usize> {
+        self.fire("backend.open")?;
         self.ensure_kernel(variant)?;
         if self.sessions.contains_key(&id) {
             bail!("session {id} already open");
@@ -301,6 +322,7 @@ impl InferBackend for NativeBackend {
     }
 
     fn decode_into(&mut self, id: u64, token: i32, logits: &mut Vec<f32>) -> Result<usize> {
+        self.fire("backend.decode")?;
         let ns = match self.sessions.get_mut(&id) {
             Some(ns) => ns,
             None => bail!("unknown session {id} (closed or evicted)"),
@@ -589,6 +611,35 @@ mod tests {
         let err = b.decode_into(1, 7, &mut logits).expect_err("capacity");
         assert!(format!("{err:#}").contains("sequence capacity"));
         assert_eq!(b.close_session(1).unwrap(), 16);
+    }
+
+    /// The chaos hooks gate every backend entry point: an error-only
+    /// injector turns batch / prefill / decode calls into structured
+    /// injected errors, and disarming restores normal service in place.
+    #[test]
+    fn fault_hooks_gate_every_entry_point() {
+        use crate::util::faults::{FaultConfig, FaultInjector};
+        let faults = Arc::new(FaultInjector::new(FaultConfig {
+            error_rate: 1.0,
+            ..FaultConfig::quiet(5)
+        }));
+        let mut b = NativeBackend::new(NativeModelConfig {
+            seq_len: 16,
+            faults: Some(Arc::clone(&faults)),
+            ..Default::default()
+        });
+        let tokens = vec![1i32; 16];
+        let mut logits = Vec::new();
+        let err = b
+            .run_into(Variant::Dense, &tokens, 1, &mut logits)
+            .expect_err("injected");
+        assert!(format!("{err:#}").contains("injected backend error at backend.run"));
+        assert!(b.open_session(1, Variant::Dense, &tokens[..4]).is_err());
+        assert!(b.decode_into(1, 2, &mut logits).is_err());
+        assert_eq!(faults.injected_total(), 3);
+        faults.set_armed(false);
+        b.run_into(Variant::Dense, &tokens, 1, &mut logits).unwrap();
+        assert_eq!(b.open_session(1, Variant::Dense, &tokens[..4]).unwrap(), 4);
     }
 
     /// Closed sessions return their cache to the recycler: reopening runs

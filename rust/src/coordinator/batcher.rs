@@ -17,6 +17,7 @@ use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
+use super::error::ServeResult;
 use super::request::{InferRequest, SessionOp, SessionReply};
 use crate::util::error::Result;
 
@@ -29,6 +30,10 @@ pub struct BatchPolicy {
     pub max_wait: Duration,
     /// Queue capacity; submissions beyond this are rejected (backpressure).
     pub queue_cap: usize,
+    /// Deadline budget stamped onto requests that did not bring their own
+    /// (`None` = admitted work waits indefinitely). The engine applies it
+    /// at admission; the batcher sheds whoever missed theirs at cut time.
+    pub default_deadline: Option<Duration>,
 }
 
 impl Default for BatchPolicy {
@@ -37,19 +42,23 @@ impl Default for BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             queue_cap: 1024,
+            default_deadline: None,
         }
     }
 }
 
 /// One queued session operation: the typed op, its enqueue time (for
-/// TTFT / inter-token latency accounting) and the reply channel the
-/// engine answers on (errors travel as the structured `Result`, so the
-/// protocol boundary can render them without any in-band sentinel).
+/// TTFT / inter-token latency accounting), its deadline (checked when
+/// the engine dequeues it; `Close` ops are exempt so a drain never leaks
+/// a session) and the reply channel the engine answers on (errors travel
+/// as the typed [`ServeResult`], so the protocol boundary renders codes
+/// without any in-band sentinel).
 #[derive(Debug)]
 pub struct SessionJob {
     pub op: SessionOp,
     pub enqueued: Instant,
-    pub reply: Sender<Result<SessionReply>>,
+    pub deadline: Option<Instant>,
+    pub reply: Sender<ServeResult<SessionReply>>,
 }
 
 /// FIFO queue with deadline-or-full batch cutting, grouped by variant,
@@ -64,6 +73,7 @@ pub struct Batcher {
     /// Open jobs: full prompt prefills, drained after decodes.
     open_q: VecDeque<SessionJob>,
     rejected: u64,
+    expired: u64,
 }
 
 impl Batcher {
@@ -74,6 +84,7 @@ impl Batcher {
             decode_q: VecDeque::new(),
             open_q: VecDeque::new(),
             rejected: 0,
+            expired: 0,
         }
     }
 
@@ -97,6 +108,41 @@ impl Batcher {
 
     pub fn rejected(&self) -> u64 {
         self.rejected
+    }
+
+    /// Requests shed by [`Batcher::shed_expired`] so far.
+    pub fn expired(&self) -> u64 {
+        self.expired
+    }
+
+    /// Remove every queued request whose deadline is at or before `now`
+    /// and return them (the engine answers each with a structured
+    /// `expired` reply). Relative order of survivors is preserved.
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<InferRequest> {
+        if self.queue.iter().all(|r| r.deadline.is_none_or(|d| d > now)) {
+            return Vec::new(); // common case: nothing expired, no churn
+        }
+        let mut dead = Vec::new();
+        let mut live = VecDeque::with_capacity(self.queue.len());
+        for r in self.queue.drain(..) {
+            if r.deadline.is_some_and(|d| d <= now) {
+                dead.push(r);
+            } else {
+                live.push_back(r);
+            }
+        }
+        self.queue = live;
+        self.expired += dead.len() as u64;
+        dead
+    }
+
+    /// Backlog-proportional retry hint for `overloaded` replies: how long
+    /// until a full queue has plausibly drained, assuming one max_batch
+    /// cut per max_wait window. Capped at 10s so the hint stays sane when
+    /// max_wait is configured large.
+    pub fn retry_after(&self) -> Duration {
+        let batches = (self.queue.len() / self.policy.max_batch.max(1)) as u32 + 1;
+        (self.policy.max_wait * batches).min(Duration::from_secs(10))
     }
 
     /// Enqueue a session job into its lane; Err(job) when the combined
@@ -139,10 +185,13 @@ impl Batcher {
         self.open_q.pop_front()
     }
 
-    /// Deadline by which a batch must be cut (enqueue time of the oldest
-    /// request + max_wait), if any request is queued.
+    /// Next instant the engine must wake the batcher: the cut deadline of
+    /// the oldest request (enqueue + max_wait), or sooner if any queued
+    /// request expires before that.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.queue.front().map(|r| r.enqueued + self.policy.max_wait)
+        let cut = self.queue.front().map(|r| r.enqueued + self.policy.max_wait)?;
+        let expiry = self.queue.iter().filter_map(|r| r.deadline).min();
+        Some(expiry.map_or(cut, |e| e.min(cut)))
     }
 
     /// Should a batch be cut now? True when the head-of-line request has
@@ -206,6 +255,7 @@ mod tests {
             max_batch,
             max_wait: Duration::from_millis(wait_ms),
             queue_cap: 16,
+            default_deadline: None,
         }
     }
 
@@ -266,12 +316,13 @@ mod tests {
         assert_eq!(b.rejected(), 1);
     }
 
-    fn job(op: SessionOp) -> (SessionJob, std::sync::mpsc::Receiver<Result<SessionReply>>) {
+    fn job(op: SessionOp) -> (SessionJob, std::sync::mpsc::Receiver<ServeResult<SessionReply>>) {
         let (tx, rx) = std::sync::mpsc::channel();
         (
             SessionJob {
                 op,
                 enqueued: Instant::now(),
+                deadline: None,
                 reply: tx,
             },
             rx,
@@ -323,6 +374,47 @@ mod tests {
         });
         assert!(b.push_session(j).is_err());
         assert_eq!(b.rejected(), 1);
+    }
+
+    /// Expired requests are shed exactly once, survivors keep their order,
+    /// and no-deadline requests never expire.
+    #[test]
+    fn sheds_expired_preserving_order() {
+        let mut b = Batcher::new(policy(8, 1000));
+        b.push(req(1, None).with_deadline(Duration::from_secs(0))).unwrap();
+        b.push(req(2, None)).unwrap();
+        b.push(req(3, None).with_deadline(Duration::from_secs(0))).unwrap();
+        b.push(req(4, None).with_deadline(Duration::from_secs(3600))).unwrap();
+        let dead = b.shed_expired(Instant::now());
+        assert_eq!(dead.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(b.expired(), 2);
+        let rest = b.cut();
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 4]);
+        assert!(b.shed_expired(Instant::now()).is_empty());
+        assert_eq!(b.expired(), 2);
+    }
+
+    /// The wake-up deadline accounts for request expiry, not just the cut
+    /// window, so a short-deadline request is shed promptly.
+    #[test]
+    fn next_deadline_covers_expiry() {
+        let mut b = Batcher::new(policy(8, 60_000));
+        b.push(req(1, None).with_deadline(Duration::from_millis(1))).unwrap();
+        let wake = b.next_deadline().unwrap();
+        assert!(wake <= Instant::now() + Duration::from_secs(1));
+    }
+
+    /// retry_after grows with backlog and is capped.
+    #[test]
+    fn retry_after_scales_with_backlog() {
+        let mut b = Batcher::new(policy(2, 10));
+        let empty = b.retry_after();
+        for i in 0..8 {
+            b.push(req(i, None)).unwrap();
+        }
+        let full = b.retry_after();
+        assert!(full > empty, "{full:?} vs {empty:?}");
+        assert!(full <= Duration::from_secs(10));
     }
 
     #[test]

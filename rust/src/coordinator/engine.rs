@@ -19,20 +19,35 @@
 //! never cross threads, and the native backend simply doesn't care.
 //! Startup errors (bad artifacts, compile failures, unknown variants
 //! during preload) are reported synchronously through a channel.
+//!
+//! **Overload safety.** Every admission outcome is a typed
+//! [`ServeError`](super::error::ServeError) delivered on the request's
+//! own reply channel, so a submitted request always gets exactly one
+//! structured answer: `Overloaded` past `queue_cap` (with a
+//! backlog-proportional retry hint), `Expired` when its deadline lapses
+//! in queue, `ShuttingDown` once admissions stop, and `Failed` when the
+//! backend errors *or panics* — batch and session execution run behind a
+//! `catch_unwind` blast shield, so an injected (or real) backend panic
+//! answers its waiters and the worker lives on. [`Engine::shutdown`]
+//! drains: admissions stop, racing submissions are adopted, both session
+//! lanes and the one-shot queue flush, then the worker exits — zero
+//! in-flight work is dropped.
 
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::backend::{InferBackend, NativeBackend, NativeModelConfig};
 use super::batcher::{BatchPolicy, Batcher, SessionJob};
+use super::error::{ServeError, ServeResult};
 use super::metrics::Metrics;
 use super::request::{DecodeResponse, InferRequest, InferResponse, SessionOp, SessionReply};
 use super::router::{AdaptiveRouter, QueueLoad};
 use crate::kernels::Variant;
-use crate::util::error::{bail, Context, Result};
+use crate::util::error::{err, Context, Result};
 
 /// Capacity bound on live decode sessions.
 #[derive(Debug, Clone)]
@@ -83,7 +98,7 @@ impl Default for EngineConfig {
 }
 
 enum Msg {
-    Request(InferRequest, Sender<InferResponse>),
+    Request(InferRequest, Sender<ServeResult<InferResponse>>),
     Session(SessionJob),
     Shutdown,
 }
@@ -91,10 +106,16 @@ enum Msg {
 /// Handle to a running engine.
 pub struct Engine {
     tx: Sender<Msg>,
-    worker: Option<JoinHandle<()>>,
+    /// Behind a mutex so [`Engine::shutdown`] takes `&self` (the server
+    /// shares the engine as `Arc<Engine>` across connection threads).
+    worker: Mutex<Option<JoinHandle<()>>>,
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
+    /// Admission gate: once false, `submit`/`submit_session` answer
+    /// `ShuttingDown` instead of enqueueing (the drain phase of
+    /// shutdown).
+    accepting: AtomicBool,
     seq_len: usize,
     classes: usize,
 }
@@ -158,10 +179,11 @@ impl Engine {
 
         Ok(Engine {
             tx,
-            worker: Some(worker),
+            worker: Mutex::new(Some(worker)),
             next_id: AtomicU64::new(1),
             metrics,
             running,
+            accepting: AtomicBool::new(true),
             seq_len,
             classes,
         })
@@ -191,68 +213,98 @@ impl Engine {
         self.classes
     }
 
-    /// Submit a request; returns the channel delivering its response.
-    /// The variant override is typed — protocol/CLI strings are parsed
-    /// once at their boundary (`Variant::from_str`), so a bad name is
-    /// rejected before it ever reaches the queue.
+    /// Submit a request; returns the channel delivering its typed
+    /// outcome — `Ok(response)`, or a structured [`ServeError`]
+    /// (`Overloaded` / `Expired` / `Failed` / `ShuttingDown`), so every
+    /// admitted submission gets exactly one reply. The variant override
+    /// is typed — protocol/CLI strings are parsed once at their boundary
+    /// (`Variant::from_str`), so a bad name is rejected before it ever
+    /// reaches the queue. `deadline` is the client's budget; `None`
+    /// falls back to the policy's `default_deadline` at enqueue.
     pub fn submit(
         &self,
         tokens: Vec<i32>,
         variant: Option<Variant>,
-    ) -> Result<Receiver<InferResponse>> {
+        deadline: Option<Duration>,
+    ) -> ServeResult<Receiver<ServeResult<InferResponse>>> {
+        if !self.accepting.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
+        }
         if tokens.len() != self.seq_len {
-            bail!(
+            return Err(ServeError::Invalid(format!(
                 "request length {} != model sequence length {}",
                 tokens.len(),
                 self.seq_len
-            );
+            )));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut req = InferRequest::new(id, tokens);
         req.variant = variant;
+        if let Some(budget) = deadline {
+            req = req.with_deadline(budget);
+        }
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Msg::Request(req, rtx))
-            .map_err(|_| crate::err!("engine stopped"))?;
+            .map_err(|_| ServeError::ShuttingDown)?;
         Ok(rrx)
     }
 
-    /// Convenience: submit and block for the response.
-    pub fn infer(&self, tokens: Vec<i32>, variant: Option<Variant>) -> Result<InferResponse> {
-        let rx = self.submit(tokens, variant)?;
-        rx.recv().context("engine dropped request")
+    /// Convenience: submit (no explicit deadline) and block for the
+    /// typed outcome.
+    pub fn infer(&self, tokens: Vec<i32>, variant: Option<Variant>) -> ServeResult<InferResponse> {
+        let rx = self.submit(tokens, variant, None)?;
+        match rx.recv() {
+            Ok(outcome) => outcome,
+            // The worker drained away while we waited — admitted work is
+            // always answered, so this only means shutdown raced us.
+            Err(_) => Err(ServeError::ShuttingDown),
+        }
     }
 
     /// Submit a session operation; returns the channel delivering the
-    /// reply (`Err` inside = structured engine-side failure — unknown
-    /// session, capacity, backend without decode support). Open prompts
-    /// are length-checked here, mirroring [`Engine::submit`], so a
-    /// malformed prompt never reaches the worker queue.
-    pub fn submit_session(&self, op: SessionOp) -> Result<Receiver<Result<SessionReply>>> {
+    /// typed reply (`Err` inside = structured [`ServeError`] — overload,
+    /// expiry, or an engine-side failure such as unknown session /
+    /// capacity / backend without decode support). Open prompts are
+    /// length-checked here, mirroring [`Engine::submit`], so a malformed
+    /// prompt never reaches the worker queue.
+    pub fn submit_session(
+        &self,
+        op: SessionOp,
+        deadline: Option<Duration>,
+    ) -> ServeResult<Receiver<ServeResult<SessionReply>>> {
+        if !self.accepting.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
+        }
         if let SessionOp::Open { prompt, .. } = &op {
             if prompt.is_empty() || prompt.len() > self.seq_len {
-                bail!(
+                return Err(ServeError::Invalid(format!(
                     "session prompt length {} out of range 1..={}",
                     prompt.len(),
                     self.seq_len
-                );
+                )));
             }
         }
         let (rtx, rrx) = mpsc::channel();
+        let enqueued = Instant::now();
         let job = SessionJob {
             op,
-            enqueued: Instant::now(),
+            enqueued,
+            deadline: deadline.map(|budget| enqueued + budget),
             reply: rtx,
         };
         self.tx
             .send(Msg::Session(job))
-            .map_err(|_| crate::err!("engine stopped"))?;
+            .map_err(|_| ServeError::ShuttingDown)?;
         Ok(rrx)
     }
 
-    fn session_op(&self, op: SessionOp) -> Result<SessionReply> {
-        let rx = self.submit_session(op)?;
-        rx.recv().context("engine dropped session op")?
+    fn session_op(&self, op: SessionOp) -> ServeResult<SessionReply> {
+        let rx = self.submit_session(op, None)?;
+        match rx.recv() {
+            Ok(outcome) => outcome,
+            Err(_) => Err(ServeError::ShuttingDown),
+        }
     }
 
     /// Open a decode session (blocking): prefill `prompt`, pin the
@@ -262,38 +314,64 @@ impl Engine {
         &self,
         prompt: Vec<i32>,
         variant: Option<Variant>,
-    ) -> Result<(u64, usize, Variant)> {
+    ) -> ServeResult<(u64, usize, Variant)> {
         match self.session_op(SessionOp::Open { prompt, variant })? {
             SessionReply::Opened { session, resident, variant } => {
                 Ok((session, resident, variant))
             }
-            other => bail!("engine returned mismatched session reply {other:?}"),
+            other => Err(ServeError::Failed(err!(
+                "engine returned mismatched session reply {other:?}"
+            ))),
         }
     }
 
     /// Run one decode step on an open session (blocking).
-    pub fn decode(&self, session: u64, token: i32) -> Result<DecodeResponse> {
+    pub fn decode(&self, session: u64, token: i32) -> ServeResult<DecodeResponse> {
         match self.session_op(SessionOp::Decode { session, token })? {
             SessionReply::Decoded(resp) => Ok(resp),
-            other => bail!("engine returned mismatched session reply {other:?}"),
+            other => Err(ServeError::Failed(err!(
+                "engine returned mismatched session reply {other:?}"
+            ))),
         }
     }
 
     /// Close a session (blocking), releasing its cache for pooled reuse;
     /// returns the token count that was resident.
-    pub fn close_session(&self, session: u64) -> Result<usize> {
+    pub fn close_session(&self, session: u64) -> ServeResult<usize> {
         match self.session_op(SessionOp::Close { session })? {
             SessionReply::Closed { released, .. } => Ok(released),
-            other => bail!("engine returned mismatched session reply {other:?}"),
+            other => Err(ServeError::Failed(err!(
+                "engine returned mismatched session reply {other:?}"
+            ))),
         }
     }
 
-    pub fn shutdown(&mut self) {
+    /// Stop admitting new work without stopping the worker: subsequent
+    /// `submit`/`submit_session` calls answer `ShuttingDown` while
+    /// already-admitted work keeps executing. First phase of drain.
+    pub fn stop_admissions(&self) {
+        self.accepting.store(false, Ordering::SeqCst);
+    }
+
+    /// Whether the engine still admits new work.
+    pub fn accepting(&self) -> bool {
+        self.accepting.load(Ordering::SeqCst)
+    }
+
+    /// Drain-then-stop: stop admissions, tell the worker to finish, and
+    /// join it. The worker adopts any submission that raced the shutdown
+    /// message, flushes both session lanes and every queued batch (each
+    /// waiter gets its reply), then exits. Idempotent and `&self`, so
+    /// any thread holding the shared `Arc<Engine>` may initiate it.
+    pub fn shutdown(&self) {
+        self.stop_admissions();
         if self.running.swap(false, Ordering::SeqCst) {
             let _ = self.tx.send(Msg::Shutdown);
-            if let Some(h) = self.worker.take() {
-                let _ = h.join();
-            }
+        }
+        // Outside the `running` guard: if two threads race, the loser
+        // still waits for the worker to finish draining.
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
         }
     }
 }
@@ -314,37 +392,86 @@ struct SessionTable {
     next_id: u64,
 }
 
-/// Enqueue one inbound message; returns `false` on shutdown.
+/// Enqueue one inbound message; returns `false` on shutdown. Requests
+/// without a deadline inherit the policy default here (enqueue time is
+/// when the budget starts). A submission past `queue_cap` is answered
+/// with a typed `Overloaded` carrying the batcher's backlog-proportional
+/// retry hint — never a silently dropped channel.
 fn enqueue_msg(
     msg: Msg,
     batcher: &mut Batcher,
-    waiters: &mut std::collections::HashMap<u64, Sender<InferResponse>>,
+    waiters: &mut std::collections::HashMap<u64, Sender<ServeResult<InferResponse>>>,
     metrics: &Metrics,
 ) -> bool {
+    let retry_after_ms = |b: &Batcher| b.retry_after().as_millis() as u64;
     match msg {
-        Msg::Request(req, rtx) => {
+        Msg::Request(mut req, rtx) => {
             let id = req.id;
+            if req.deadline.is_none() {
+                if let Some(budget) = batcher.policy.default_deadline {
+                    req.deadline = Some(req.enqueued + budget);
+                }
+            }
             match batcher.push(req) {
                 Ok(()) => {
                     waiters.insert(id, rtx);
                 }
                 Err(_rejected) => {
                     metrics.record_rejected(1);
-                    drop(rtx); // receiver sees disconnect = rejection
+                    let _ = rtx.send(Err(ServeError::Overloaded {
+                        retry_after_ms: retry_after_ms(batcher),
+                    }));
                 }
             }
             true
         }
-        Msg::Session(job) => {
+        Msg::Session(mut job) => {
+            if job.deadline.is_none() {
+                if let Some(budget) = batcher.policy.default_deadline {
+                    job.deadline = Some(job.enqueued + budget);
+                }
+            }
             if let Err(job) = batcher.push_session(job) {
                 metrics.record_rejected(1);
-                let _ = job
-                    .reply
-                    .send(Err(crate::err!("session queue full (backpressure)")));
+                let _ = job.reply.send(Err(ServeError::Overloaded {
+                    retry_after_ms: retry_after_ms(batcher),
+                }));
             }
             true
         }
         Msg::Shutdown => false,
+    }
+}
+
+/// Shed every expired queued request, answering each with a structured
+/// `Expired` reply and counting it under the variant it would have run
+/// as.
+fn shed_expired(
+    batcher: &mut Batcher,
+    waiters: &mut std::collections::HashMap<u64, Sender<ServeResult<InferResponse>>>,
+    metrics: &Metrics,
+    default_variant: Variant,
+    now: Instant,
+) {
+    for req in batcher.shed_expired(now) {
+        let variant = req.variant.unwrap_or(default_variant);
+        metrics.record_expired(variant, 1);
+        if let Some(tx) = waiters.remove(&req.id) {
+            let waited_ms = now.duration_since(req.enqueued).as_millis() as u64;
+            let _ = tx.send(Err(ServeError::Expired { waited_ms }));
+        }
+    }
+}
+
+/// Render a caught panic payload as a message (panics carry `&str` or
+/// `String` in practice; anything else gets a generic label).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
     }
 }
 
@@ -359,7 +486,7 @@ fn worker_loop(
     let mut router = cfg.router.clone();
     let mut sessions = SessionTable::default();
     // Response channels parked by request id.
-    let mut waiters: std::collections::HashMap<u64, Sender<InferResponse>> =
+    let mut waiters: std::collections::HashMap<u64, Sender<ServeResult<InferResponse>>> =
         std::collections::HashMap::new();
     // Warm per-batch buffers, reused across every batch this worker
     // executes: together with the backend's own batch buffers
@@ -403,7 +530,9 @@ fn worker_loop(
             backend, &cfg, &mut router, &mut batcher, &mut sessions, &metrics, &mut dlogits,
         );
 
+        // Shed whoever missed their deadline before cutting work.
         let now = Instant::now();
+        shed_expired(&mut batcher, &mut waiters, &metrics, cfg.default_variant, now);
         while batcher.ready(now) {
             let batch = batcher.cut();
             if batch.is_empty() {
@@ -421,9 +550,26 @@ fn worker_loop(
         }
     }
 
+    // Drain phase: a submission can race the Shutdown message onto the
+    // channel; adopt everything still in flight so each such request
+    // gets a real reply (served / overloaded / expired) rather than a
+    // dropped channel. Admissions are already gated off engine-side.
+    while let Ok(msg) = rx.try_recv() {
+        let _ = enqueue_msg(msg, &mut batcher, &mut waiters, &metrics);
+    }
+
     // Flush any stragglers on shutdown (session lanes first, as above).
+    // Deadlines are still honored — an expired request gets its
+    // structured reply here too, never silence.
     drain_sessions(
         backend, &cfg, &mut router, &mut batcher, &mut sessions, &metrics, &mut dlogits,
+    );
+    shed_expired(
+        &mut batcher,
+        &mut waiters,
+        &metrics,
+        cfg.default_variant,
+        Instant::now(),
     );
     while !batcher.is_empty() {
         let batch = batcher.cut();
@@ -467,7 +613,11 @@ fn drain_sessions(
 
 /// Execute one session op against the backend, maintaining the LRU table
 /// and the session metrics, and reply on the job's channel (errors travel
-/// as the structured `Result`).
+/// as the typed [`ServeError`]). Expired jobs are answered `Expired`
+/// without touching the backend — except `Close`, which always runs: a
+/// deadline must never leak a session. Backend calls run inside the
+/// worker's `catch_unwind` blast shield, so a backend panic answers this
+/// job and the worker lives on.
 #[allow(clippy::too_many_arguments)]
 fn handle_session_job(
     backend: &mut dyn InferBackend,
@@ -479,20 +629,96 @@ fn handle_session_job(
     metrics: &Metrics,
     dlogits: &mut Vec<f32>,
 ) {
-    let SessionJob { op, enqueued, reply } = job;
-    let result = match op {
+    let SessionJob { op, enqueued, deadline, reply } = job;
+    if let Some(d) = deadline {
+        let now = Instant::now();
+        if now >= d && !matches!(op, SessionOp::Close { .. }) {
+            let variant = match &op {
+                SessionOp::Open { variant, .. } => (*variant).unwrap_or(cfg.default_variant),
+                SessionOp::Decode { session, .. } => table
+                    .live
+                    .get(session)
+                    .map(|(_, v)| *v)
+                    .unwrap_or(cfg.default_variant),
+                SessionOp::Close { .. } => unreachable!("close ops are exempt from expiry"),
+            };
+            metrics.record_expired(variant, 1);
+            let waited_ms = now.duration_since(enqueued).as_millis() as u64;
+            let _ = reply.send(Err(ServeError::Expired { waited_ms }));
+            return;
+        }
+    }
+    let result = run_session_op(backend, cfg, router, load, op, table, metrics, enqueued, dlogits);
+    if result.is_err() {
+        metrics.record_errored(1);
+    }
+    // Refresh gauges before replying: a client that reads its reply and
+    // immediately queries metrics must see its own session reflected.
+    metrics.set_session_gauges(
+        backend.session_count(),
+        backend.resident_tokens(),
+        backend.cache_grows(),
+    );
+    let _ = reply.send(result);
+}
+
+/// The backend-touching body of [`handle_session_job`], behind the panic
+/// blast shield: a panicking backend call becomes a structured `Failed`
+/// reply instead of killing the engine worker.
+#[allow(clippy::too_many_arguments)]
+fn run_session_op(
+    backend: &mut dyn InferBackend,
+    cfg: &EngineConfig,
+    router: &mut Option<AdaptiveRouter>,
+    load: QueueLoad,
+    op: SessionOp,
+    table: &mut SessionTable,
+    metrics: &Metrics,
+    enqueued: Instant,
+    dlogits: &mut Vec<f32>,
+) -> ServeResult<SessionReply> {
+    let caught = panic::catch_unwind(AssertUnwindSafe(|| -> Result<SessionReply> {
+        session_op_body(backend, cfg, router, load, op, table, metrics, enqueued, dlogits)
+    }));
+    match caught {
+        Ok(Ok(reply)) => Ok(reply),
+        Ok(Err(e)) => Err(ServeError::Failed(e)),
+        Err(payload) => Err(ServeError::Failed(err!(
+            "session op panicked: {}",
+            panic_message(payload.as_ref())
+        ))),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn session_op_body(
+    backend: &mut dyn InferBackend,
+    cfg: &EngineConfig,
+    router: &mut Option<AdaptiveRouter>,
+    load: QueueLoad,
+    op: SessionOp,
+    table: &mut SessionTable,
+    metrics: &Metrics,
+    enqueued: Instant,
+    dlogits: &mut Vec<f32>,
+) -> Result<SessionReply> {
+    match op {
         SessionOp::Open { prompt, variant } => {
             // Explicit override wins; otherwise the adaptive router picks
-            // the rung for the current load (recorded like any routing
-            // decision) and the session is pinned to it for life — masks
+            // the rung for the current load — including the shed ladder's
+            // degradation pin under pressure (recorded like any routing
+            // decision) — and the session stays on it for life: masks
             // must not shift mid-stream under a live cache.
             let variant = match variant {
                 Some(v) => v,
                 None => match router.as_mut() {
                     Some(r) => {
-                        let v = r.select_load(load);
-                        metrics.record_routed(v);
-                        v
+                        let routed = r.route(load);
+                        metrics.record_routed(routed.variant);
+                        if routed.degraded {
+                            metrics.record_degraded(routed.variant);
+                        }
+                        routed.variant
                     }
                     None => cfg.default_variant,
                 },
@@ -561,15 +787,7 @@ fn handle_session_job(
             }
             Err(e) => Err(e),
         },
-    };
-    // Refresh gauges before replying: a client that reads its reply and
-    // immediately queries metrics must see its own session reflected.
-    metrics.set_session_gauges(
-        backend.session_count(),
-        backend.resident_tokens(),
-        backend.cache_grows(),
-    );
-    let _ = reply.send(result);
+    }
 }
 
 /// Worker-owned buffers reused across batches (padded token input and
@@ -589,21 +807,26 @@ fn execute_batch(
     router: &mut Option<AdaptiveRouter>,
     load: QueueLoad,
     batch: Vec<InferRequest>,
-    waiters: &mut std::collections::HashMap<u64, Sender<InferResponse>>,
+    waiters: &mut std::collections::HashMap<u64, Sender<ServeResult<InferResponse>>>,
     metrics: &Metrics,
     buffers: &mut BatchBuffers,
 ) {
     // Explicit per-request variant overrides always win; otherwise the
     // adaptive router (when configured) picks the rung for the current
-    // two-lane load (prefill backlog + discounted decode backlog), and
-    // the decision is recorded before the batch runs.
+    // two-lane load (prefill backlog + discounted decode backlog) —
+    // jumping straight to the sparsest rung when the shed ladder trips
+    // (counted as a degradation) — and the decision is recorded before
+    // the batch runs.
     let variant = match batch[0].variant {
         Some(v) => v,
         None => match router.as_mut() {
             Some(r) => {
-                let v = r.select_load(load);
-                metrics.record_routed(v);
-                v
+                let routed = r.route(load);
+                metrics.record_routed(routed.variant);
+                if routed.degraded {
+                    metrics.record_degraded(routed.variant);
+                }
+                routed.variant
             }
             None => cfg.default_variant,
         },
@@ -625,10 +848,28 @@ fn execute_batch(
 
     let exec_start = Instant::now();
     let logits = &mut buffers.logits;
-    if let Err(e) = backend.run_into(variant, tokens, bucket, logits) {
-        crate::log_error!("executing variant={variant} bucket={bucket}: {e}");
+    // Blast shield: a backend panic (e.g. injected via the fault
+    // harness, or a real kernel bug) must answer this batch's waiters
+    // and leave the worker alive — the warm buffers are rewritten from
+    // scratch every batch, so a mid-run abort cannot poison later ones.
+    let run = panic::catch_unwind(AssertUnwindSafe(|| {
+        backend.run_into(variant, tokens, bucket, logits)
+    }));
+    let failure = match run {
+        Ok(Ok(())) => None,
+        Ok(Err(e)) => Some(format!("executing variant={variant} bucket={bucket}: {e}")),
+        Err(payload) => Some(format!(
+            "executing variant={variant} bucket={bucket}: backend panicked: {}",
+            panic_message(payload.as_ref())
+        )),
+    };
+    if let Some(msg) = failure {
+        crate::log_error!("{msg}");
+        metrics.record_errored(n as u64);
         for r in &batch {
-            waiters.remove(&r.id);
+            if let Some(tx) = waiters.remove(&r.id) {
+                let _ = tx.send(Err(ServeError::Failed(err!("{msg}"))));
+            }
         }
         return;
     }
@@ -667,7 +908,7 @@ fn execute_batch(
     }
     for resp in responses {
         if let Some(tx) = waiters.remove(&resp.id) {
-            let _ = tx.send(resp);
+            let _ = tx.send(Ok(resp));
         }
     }
 }

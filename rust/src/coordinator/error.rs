@@ -1,0 +1,148 @@
+//! Typed overload-safety outcomes for the serving path.
+//!
+//! Every admission decision the engine can take — accept, shed, expire,
+//! quota-reject, refuse during drain, fail — is one [`ServeError`] arm
+//! with a stable wire code, so the server renders a structured
+//! `{"ok": false, "error": <code>, ...}` reply instead of a dropped line
+//! and tests/clients can match on codes instead of message prose.
+//!
+//! [`ServeError`] implements `std::error::Error`, so the crate-wide
+//! blanket `From<E: std::error::Error> for util::Error` gives `?`
+//! conversion into plain [`Error`] for callers (benches, CLI) that do
+//! not care about the code.
+
+use std::fmt;
+
+use crate::util::error::Error;
+use crate::util::json::Json;
+
+/// Result type for the engine's admission-controlled serving surface.
+pub type ServeResult<T> = std::result::Result<T, ServeError>;
+
+/// Why a request did not get a normal reply. See module docs.
+#[derive(Debug)]
+pub enum ServeError {
+    /// Queue past `queue_cap`: shed at admission. `retry_after_ms` is the
+    /// batcher's estimate of when the backlog will have drained.
+    Overloaded { retry_after_ms: u64 },
+    /// Deadline budget elapsed before the work started executing.
+    Expired { waited_ms: u64 },
+    /// A per-client quota (request rate or open sessions) tripped.
+    QuotaExceeded { what: &'static str, limit: u64 },
+    /// Admissions are stopped; the engine is draining toward exit.
+    ShuttingDown,
+    /// The request itself is malformed (bad length, bad field value).
+    Invalid(String),
+    /// Backend or batch execution failed — including panics caught by the
+    /// engine worker's blast shield.
+    Failed(Error),
+}
+
+impl ServeError {
+    /// Stable wire code rendered in the `"error"` field of structured
+    /// replies (and matched by the chaos tests).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Overloaded { .. } => "overloaded",
+            ServeError::Expired { .. } => "expired",
+            ServeError::QuotaExceeded { .. } => "quota_exceeded",
+            ServeError::ShuttingDown => "shutting_down",
+            ServeError::Invalid(_) => "invalid",
+            ServeError::Failed(_) => "error",
+        }
+    }
+
+    /// Structured reply body: `{"ok": false, "error": <code>, "message":
+    /// <prose>}` plus per-arm hint fields (`retry_after_ms`, `limit`).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::str(self.code())),
+            ("message", Json::str(self.to_string())),
+        ];
+        match self {
+            ServeError::Overloaded { retry_after_ms } => {
+                fields.push(("retry_after_ms", Json::num(*retry_after_ms as f64)));
+            }
+            ServeError::QuotaExceeded { limit, .. } => {
+                fields.push(("limit", Json::num(*limit as f64)));
+            }
+            _ => {}
+        }
+        Json::obj(fields)
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Overloaded { retry_after_ms } => {
+                write!(f, "queue full, retry after {retry_after_ms}ms")
+            }
+            ServeError::Expired { waited_ms } => {
+                write!(f, "deadline expired after {waited_ms}ms in queue")
+            }
+            ServeError::QuotaExceeded { what, limit } => {
+                write!(f, "client quota exceeded: {what} (limit {limit})")
+            }
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::Invalid(msg) => f.write_str(msg),
+            // util::Error's Display already prints the full context chain.
+            ServeError::Failed(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<Error> for ServeError {
+    fn from(e: Error) -> ServeError {
+        ServeError::Failed(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::error::err;
+
+    #[test]
+    fn codes_are_stable() {
+        assert_eq!(ServeError::Overloaded { retry_after_ms: 5 }.code(), "overloaded");
+        assert_eq!(ServeError::Expired { waited_ms: 9 }.code(), "expired");
+        assert_eq!(
+            ServeError::QuotaExceeded { what: "in-flight requests", limit: 4 }.code(),
+            "quota_exceeded"
+        );
+        assert_eq!(ServeError::ShuttingDown.code(), "shutting_down");
+        assert_eq!(ServeError::Invalid("x".into()).code(), "invalid");
+        assert_eq!(ServeError::Failed(err!("boom")).code(), "error");
+    }
+
+    #[test]
+    fn json_reply_is_structured() {
+        let j = ServeError::Overloaded { retry_after_ms: 25 }.to_json();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("overloaded"));
+        assert_eq!(j.get("retry_after_ms").and_then(Json::as_f64), Some(25.0));
+        assert!(j.get("message").is_some());
+
+        let j = ServeError::QuotaExceeded { what: "open sessions", limit: 2 }.to_json();
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("quota_exceeded"));
+        assert_eq!(j.get("limit").and_then(Json::as_f64), Some(2.0));
+    }
+
+    #[test]
+    fn failed_preserves_context_chain() {
+        let e = ServeError::Failed(err!("inner").context("outer"));
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn converts_into_util_error_via_question_mark() {
+        fn f() -> crate::util::error::Result<()> {
+            Err(ServeError::ShuttingDown)?
+        }
+        assert_eq!(f().unwrap_err().to_string(), "server is shutting down");
+    }
+}

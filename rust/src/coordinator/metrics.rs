@@ -24,6 +24,18 @@ struct Inner {
     rejected: u64,
     batches: u64,
     started: Option<Instant>,
+    // --- overload accounting (admission control / shed ladder) ---
+    /// Requests shed because their deadline expired in queue, keyed by
+    /// the variant they would have run as.
+    expired: BTreeMap<Variant, u64>,
+    /// Batches the shed ladder forced onto the sparsest rung (a subset of
+    /// `routed` — degradation is a routing decision under pressure).
+    degraded: BTreeMap<Variant, u64>,
+    /// Requests answered with a structured execution error (injected or
+    /// real backend failure, including caught panics).
+    errored: u64,
+    /// Submissions refused by a per-client quota at the server boundary.
+    quota_rejected: u64,
     /// Adaptive-router decisions: variant -> batches routed there.
     routed: BTreeMap<Variant, u64>,
     /// Most recent router rung (None until the router decides once).
@@ -82,6 +94,28 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += n;
     }
 
+    /// Record `n` requests shed because their deadline expired while
+    /// queued, under the variant they would have run as.
+    pub fn record_expired(&self, variant: Variant, n: u64) {
+        *self.inner.lock().unwrap().expired.entry(variant).or_insert(0) += n;
+    }
+
+    /// Record one batch degraded to the sparsest rung by the shed ladder
+    /// (also counted in `routed` by the caller's `record_routed`).
+    pub fn record_degraded(&self, variant: Variant) {
+        *self.inner.lock().unwrap().degraded.entry(variant).or_insert(0) += 1;
+    }
+
+    /// Record `n` requests answered with a structured execution error.
+    pub fn record_errored(&self, n: u64) {
+        self.inner.lock().unwrap().errored += n;
+    }
+
+    /// Record one submission refused by a per-client quota.
+    pub fn record_quota_rejected(&self) {
+        self.inner.lock().unwrap().quota_rejected += 1;
+    }
+
     /// Record an adaptive-router decision: one batch routed to `variant`.
     pub fn record_routed(&self, variant: Variant) {
         let mut g = self.inner.lock().unwrap();
@@ -135,6 +169,22 @@ impl Metrics {
 
     pub fn completed(&self) -> u64 {
         self.inner.lock().unwrap().completed
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.inner.lock().unwrap().rejected
+    }
+
+    pub fn errored(&self) -> u64 {
+        self.inner.lock().unwrap().errored
+    }
+
+    pub fn expired_total(&self) -> u64 {
+        self.inner.lock().unwrap().expired.values().sum()
+    }
+
+    pub fn quota_rejected(&self) -> u64 {
+        self.inner.lock().unwrap().quota_rejected
     }
 
     /// Requests/second since start.
@@ -207,6 +257,14 @@ impl Metrics {
             }
             s.push('\n');
         }
+        {
+            let expired: u64 = g.expired.values().sum();
+            let degraded: u64 = g.degraded.values().sum();
+            s.push_str(&format!(
+                "  overload shed={} expired={} degraded_batches={} quota_rejected={} errored={}\n",
+                g.rejected, expired, degraded, g.quota_rejected, g.errored
+            ));
+        }
         if let Some(p) = &g.pool {
             s.push_str(&format!(
                 "  pool workers={} dispatches={} tasks={} queue_hw={} scratch_grows={}\n",
@@ -245,6 +303,27 @@ impl Metrics {
             ]));
         }
         obj.push(("variants", Json::Arr(per_variant)));
+        // The overload section is always present (zeros included): the
+        // chaos tests and operators need its absence to never be
+        // ambiguous with "no overload happened".
+        let per_variant_counts = |m: &BTreeMap<Variant, u64>| {
+            Json::Obj(
+                m.iter()
+                    .map(|(v, &n)| (v.to_string(), Json::num(n as f64)))
+                    .collect(),
+            )
+        };
+        obj.push((
+            "overload",
+            Json::obj(vec![
+                ("shed", Json::num(g.rejected as f64)),
+                ("expired_total", Json::num(g.expired.values().sum::<u64>() as f64)),
+                ("expired", per_variant_counts(&g.expired)),
+                ("degraded_batches", per_variant_counts(&g.degraded)),
+                ("quota_rejected", Json::num(g.quota_rejected as f64)),
+                ("errored", Json::num(g.errored as f64)),
+            ]),
+        ));
         if g.sessions_opened > 0 {
             obj.push((
                 "sessions",
@@ -363,6 +442,42 @@ mod tests {
         assert!(report.contains("sessions active=1"));
         assert!(report.contains("decode steps=2"));
         assert!(report.contains("dsa90 decode"));
+    }
+
+    /// Overload counters surface always (zeros included) and partition by
+    /// decision: shed vs expired vs degraded vs quota vs errored.
+    #[test]
+    fn overload_section_always_present() {
+        let m = Metrics::new();
+        let j = m.to_json();
+        let o = j.get("overload").expect("overload section at zero");
+        assert_eq!(o.get("shed").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(o.get("expired_total").and_then(|v| v.as_f64()), Some(0.0));
+
+        m.record_rejected(3);
+        m.record_expired(Variant::Dense, 2);
+        m.record_expired(Variant::Dsa { pct: 95 }, 1);
+        m.record_degraded(Variant::Dsa { pct: 95 });
+        m.record_quota_rejected();
+        m.record_errored(4);
+        assert_eq!(m.rejected(), 3);
+        assert_eq!(m.expired_total(), 3);
+        assert_eq!(m.errored(), 4);
+        assert_eq!(m.quota_rejected(), 1);
+        let j = m.to_json();
+        let o = j.get("overload").expect("overload section");
+        assert_eq!(o.get("shed").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(o.get("expired_total").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(o.path(&["expired", "dense"]).and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(o.path(&["expired", "dsa95"]).and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(
+            o.path(&["degraded_batches", "dsa95"]).and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+        assert_eq!(o.get("quota_rejected").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(o.get("errored").and_then(|v| v.as_f64()), Some(4.0));
+        let report = m.report();
+        assert!(report.contains("overload shed=3 expired=3 degraded_batches=1"));
     }
 
     #[test]

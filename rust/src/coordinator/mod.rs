@@ -16,22 +16,35 @@
 //!   pooled ragged `KvCache`) and PJRT artifacts (`xla` feature; one-shot
 //!   only — session ops return a structured "unsupported" error).
 //! * [`engine`] — worker loop: drain session lanes (LRU-bounded lifecycle
-//!   per [`SessionPolicy`]) → batch → route variant (optionally via the
-//!   adaptive router) → pad to bucket (warm worker-owned buffers) →
-//!   backend `run_into` → fan out responses.
+//!   per [`SessionPolicy`]) → shed expired deadlines → batch → route
+//!   variant (optionally via the adaptive router) → pad to bucket (warm
+//!   worker-owned buffers) → backend `run_into` behind a `catch_unwind`
+//!   blast shield → fan out typed outcomes. `shutdown` drains: admissions
+//!   stop, racing submissions are adopted, every lane flushes, then the
+//!   worker exits with zero in-flight work dropped.
+//! * [`error`] — the typed overload-safety outcome [`ServeError`]
+//!   (`overloaded` / `expired` / `quota_exceeded` / `shutting_down` /
+//!   `invalid` / `error`), each with a stable wire code the server
+//!   renders as a structured `{"ok":false,...}` reply.
 //! * [`router`] — queue-depth-driven variant ladder (dense → dsa90 →
 //!   dsa95) the engine worker consults per dispatch; typed rungs,
 //!   `AdaptiveRouter::from_pairs` validates names at construction; the
 //!   [`QueueLoad`] two-lane signal discounts decode backlog against
-//!   prefill-sized work.
+//!   prefill-sized work; `with_degrade_depth` adds the shed ladder —
+//!   under sustained overload, default-variant traffic pins to the
+//!   sparsest rung (the paper's accuracy/cost knob spent as serving
+//!   headroom) before anything is shed.
 //! * [`metrics`] — latency/throughput/occupancy accounting plus router
-//!   decisions, worker-pool counters and the session/decode sections
+//!   decisions, worker-pool counters, the session/decode sections
 //!   (lifecycle counts, cache-resident tokens, cache grows, per-variant
-//!   inter-token latency).
+//!   inter-token latency) and the always-present `overload` section
+//!   (shed / per-variant expired / degraded batches / quota rejections /
+//!   errored).
 
 pub mod backend;
 pub mod batcher;
 pub mod engine;
+pub mod error;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -39,6 +52,7 @@ pub mod router;
 pub use backend::{InferBackend, NativeBackend, NativeModelConfig};
 pub use batcher::{BatchPolicy, Batcher, SessionJob};
 pub use engine::{Engine, EngineConfig, SessionPolicy};
+pub use error::{ServeError, ServeResult};
 pub use metrics::Metrics;
 pub use request::{DecodeResponse, InferRequest, InferResponse, SessionOp, SessionReply};
-pub use router::{AdaptiveRouter, QueueLoad, Rung};
+pub use router::{AdaptiveRouter, QueueLoad, Routed, Rung};

@@ -16,6 +16,10 @@ pub struct InferRequest {
     /// router's pick).
     pub variant: Option<Variant>,
     pub enqueued: Instant,
+    /// Absolute deadline: if the request has not *started executing* by
+    /// this instant the batcher sheds it with a structured `expired`
+    /// reply. `None` = no deadline.
+    pub deadline: Option<Instant>,
 }
 
 impl InferRequest {
@@ -25,11 +29,18 @@ impl InferRequest {
             tokens,
             variant: None,
             enqueued: Instant::now(),
+            deadline: None,
         }
     }
 
     pub fn with_variant(mut self, v: Variant) -> Self {
         self.variant = Some(v);
+        self
+    }
+
+    /// Set the deadline as a budget relative to the enqueue time.
+    pub fn with_deadline(mut self, budget: Duration) -> Self {
+        self.deadline = Some(self.enqueued + budget);
         self
     }
 }

@@ -57,6 +57,16 @@ impl QueueLoad {
     }
 }
 
+/// One routing decision from [`AdaptiveRouter::route`]: the variant to
+/// run, and whether it was a *degradation* — default-variant traffic
+/// forced onto the sparsest rung by overload pressure rather than chosen
+/// by the normal ladder walk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Routed {
+    pub variant: Variant,
+    pub degraded: bool,
+}
+
 /// Queue-depth-driven variant selector with hysteresis.
 #[derive(Debug, Clone)]
 pub struct AdaptiveRouter {
@@ -66,6 +76,10 @@ pub struct AdaptiveRouter {
     /// the rung's threshold minus this margin.
     hysteresis: usize,
     current: usize,
+    /// Shed-ladder threshold: at effective depth >= this, `route` pins
+    /// traffic to the sparsest rung (graceful degradation — spend the
+    /// paper's accuracy/cost knob before shedding work). `None` = off.
+    degrade_depth: Option<usize>,
 }
 
 impl AdaptiveRouter {
@@ -99,7 +113,23 @@ impl AdaptiveRouter {
                 w[1].min_queue
             );
         }
-        Ok(AdaptiveRouter { rungs, hysteresis, current: 0 })
+        Ok(AdaptiveRouter { rungs, hysteresis, current: 0, degrade_depth: None })
+    }
+
+    /// Enable the shed ladder: at effective depth >= `depth`, [`route`]
+    /// pins default-variant traffic to the sparsest rung and flags the
+    /// decision as degraded (counted separately in `Metrics`). Shedding
+    /// proper stays the batcher's `queue_cap` — the ladder buys headroom
+    /// *before* that bound bites, so set `depth` below the queue cap.
+    ///
+    /// [`route`]: AdaptiveRouter::route
+    pub fn with_degrade_depth(mut self, depth: usize) -> Self {
+        self.degrade_depth = Some(depth);
+        self
+    }
+
+    pub fn degrade_depth(&self) -> Option<usize> {
+        self.degrade_depth
     }
 
     /// Build a ladder from `(variant name, min_queue)` pairs, validating
@@ -155,6 +185,26 @@ impl AdaptiveRouter {
     /// applies.
     pub fn select_load(&mut self, load: QueueLoad) -> Variant {
         self.select(load.effective_depth())
+    }
+
+    /// The engine's routing entry point: like [`select_load`], but when
+    /// the shed ladder is enabled and the effective depth has reached
+    /// `degrade_depth`, the decision jumps straight to the sparsest rung
+    /// and is flagged `degraded` — overload spends sparsity (the paper's
+    /// tunable accuracy/cost knob) before the queue cap sheds work.
+    /// Pinning also moves the hysteresis state to the top rung, so the
+    /// ladder de-escalates gradually once pressure lifts.
+    ///
+    /// [`select_load`]: AdaptiveRouter::select_load
+    pub fn route(&mut self, load: QueueLoad) -> Routed {
+        let depth = load.effective_depth();
+        if let Some(d) = self.degrade_depth {
+            if depth >= d {
+                self.current = self.rungs.len() - 1;
+                return Routed { variant: self.rungs[self.current].variant, degraded: true };
+            }
+        }
+        Routed { variant: self.select(depth), degraded: false }
     }
 
     pub fn current_variant(&self) -> Variant {
@@ -279,6 +329,54 @@ mod tests {
             AdaptiveRouter::from_pairs(&[("dense", 0), ("dsa90", 5), ("dsa95", 5)], 1).is_err(),
             "non-ascending thresholds"
         );
+    }
+
+    /// The shed ladder: below the degrade depth `route` matches the
+    /// normal ladder walk; at or past it, traffic pins to the sparsest
+    /// rung flagged `degraded`, and de-escalation is gradual (hysteresis
+    /// from the top rung) once pressure lifts.
+    #[test]
+    fn route_degrades_to_sparsest_under_pressure() {
+        let mut r = ladder().with_degrade_depth(16);
+        assert_eq!(
+            r.route(QueueLoad { prefill: 3, decode: 0 }),
+            Routed { variant: DENSE, degraded: false }
+        );
+        assert_eq!(
+            r.route(QueueLoad { prefill: 9, decode: 0 }),
+            Routed { variant: DSA90, degraded: false }
+        );
+        // depth 16 < the dsa95 rung's own threshold (32), but the shed
+        // ladder pins it there anyway.
+        assert_eq!(
+            r.route(QueueLoad { prefill: 16, decode: 0 }),
+            Routed { variant: DSA95, degraded: true }
+        );
+        // pressure lifts a little: still sparse (hysteresis from the top
+        // rung), no longer counted as degraded.
+        assert_eq!(
+            r.route(QueueLoad { prefill: 31, decode: 0 }),
+            Routed { variant: DSA95, degraded: false }
+        );
+        // fully idle: all the way back to dense.
+        assert_eq!(
+            r.route(QueueLoad { prefill: 0, decode: 0 }),
+            Routed { variant: DENSE, degraded: false }
+        );
+    }
+
+    /// Without `with_degrade_depth`, `route` never degrades — it is
+    /// exactly the select_load walk.
+    #[test]
+    fn route_without_shed_ladder_never_degrades() {
+        let mut a = ladder();
+        let mut b = ladder();
+        for depth in [0usize, 9, 100, 40, 7, 0, 33] {
+            let load = QueueLoad { prefill: depth, decode: 0 };
+            let routed = a.route(load);
+            assert!(!routed.degraded);
+            assert_eq!(routed.variant, b.select_load(load));
+        }
     }
 
     #[test]

@@ -48,6 +48,7 @@ use std::sync::{Arc, Barrier, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 use super::scratch::Scratch;
+use crate::util::faults::FaultInjector;
 
 /// A unit of work handed to one worker: runs once with that worker's
 /// persistent scratch. The `'env` lifetime lets tasks borrow the caller's
@@ -124,6 +125,9 @@ struct Shared {
     tasks_executed: AtomicU64,
     queue_highwater: AtomicUsize,
     scratch_grows: AtomicU64,
+    /// Chaos hook rolled at `pool.task` before each task executes (inside
+    /// the worker's panic shield); `None` on every production pool.
+    faults: Option<Arc<FaultInjector>>,
 }
 
 /// Point-in-time snapshot of pool counters (all monotone except
@@ -155,6 +159,16 @@ impl WorkerPool {
     /// available core, via the same resolution the drivers use for their
     /// chunk counts).
     pub fn new(workers: usize) -> WorkerPool {
+        WorkerPool::with_faults(workers, None)
+    }
+
+    /// [`WorkerPool::new`] with a seeded chaos injector: each worker rolls
+    /// the `pool.task` site before running a task, **inside** its panic
+    /// shield — injected panics travel the same latch path real task
+    /// panics do (re-raised at the dispatcher, worker survives), and
+    /// injected errors surface as panics too, since pool tasks have no
+    /// `Result` channel.
+    pub fn with_faults(workers: usize, faults: Option<Arc<FaultInjector>>) -> WorkerPool {
         let workers = super::parallel::effective_threads(workers);
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
@@ -164,6 +178,7 @@ impl WorkerPool {
             tasks_executed: AtomicU64::new(0),
             queue_highwater: AtomicUsize::new(0),
             scratch_grows: AtomicU64::new(0),
+            faults,
         });
         let handles = (0..workers)
             .map(|i| {
@@ -301,7 +316,15 @@ fn worker_loop(shared: &Shared) {
             }
         };
         let Some((task, latch)) = job else { return };
-        let panicked = panic::catch_unwind(AssertUnwindSafe(|| task(&mut scratch))).err();
+        let panicked = panic::catch_unwind(AssertUnwindSafe(|| {
+            if let Some(f) = &shared.faults {
+                if let Err(e) = f.fire("pool.task") {
+                    panic!("{e:#}");
+                }
+            }
+            task(&mut scratch)
+        }))
+        .err();
         shared.tasks_executed.fetch_add(1, Ordering::Relaxed);
         let grows = scratch.grow_events();
         shared.scratch_grows.fetch_add(grows - grows_seen, Ordering::Relaxed);
@@ -422,6 +445,30 @@ mod tests {
         let b = WorkerPool::global();
         assert!(std::ptr::eq(a, b));
         assert!(a.workers() >= 1);
+    }
+
+    /// A fault-armed pool injects at `pool.task` through the same latch
+    /// path real panics take: the dispatch re-raises on the caller, the
+    /// workers survive, and disarming restores clean service.
+    #[test]
+    fn fault_injection_panics_dispatch_but_not_workers() {
+        use crate::util::faults::{FaultConfig, FaultInjector};
+        let faults = Arc::new(FaultInjector::new(FaultConfig {
+            panic_rate: 1.0,
+            ..FaultConfig::quiet(17)
+        }));
+        let pool = WorkerPool::with_faults(2, Some(Arc::clone(&faults)));
+        let r = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_scoped(vec![task(|_| {})]);
+        }));
+        assert!(r.is_err(), "injected pool panic must reach the dispatcher");
+        assert_eq!(faults.site("pool.task").panics, 1);
+        faults.set_armed(false);
+        let ok = Counter::new(0);
+        pool.run_scoped(vec![task(|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        })]);
+        assert_eq!(ok.load(Ordering::Relaxed), 1, "workers must survive injection");
     }
 
     #[test]

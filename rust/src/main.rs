@@ -15,7 +15,8 @@
 use std::sync::Arc;
 
 use dsa_serve::coordinator::{
-    AdaptiveRouter, BatchPolicy, Engine, EngineConfig, NativeModelConfig,
+    AdaptiveRouter, BatchPolicy, Engine, EngineConfig, NativeModelConfig, ServeError,
+    SessionPolicy,
 };
 use dsa_serve::kernels::{Tile, TilePlan, Variant};
 use dsa_serve::util::error::{bail, err, Result};
@@ -94,13 +95,51 @@ fn engine_args(program: &str) -> Args {
             "on = route default-variant traffic by live queue depth \
              (dense -> dsa90 -> dsa95); decisions surface in metrics",
         )
+        .opt(
+            "deadline-ms",
+            "0",
+            "server-side deadline budget for requests without their own \
+             deadline_ms; expired work is shed with a structured reply \
+             (0 = no default deadline)",
+        )
+        .opt(
+            "queue-cap",
+            "4096",
+            "admission control: queued requests past this cap get a \
+             structured \"overloaded\" reply with a retry hint",
+        )
+        .opt(
+            "shed",
+            "off",
+            "on = graceful-degradation ladder (needs --adaptive on): under \
+             sustained overload, default-variant traffic pins to the \
+             sparsest rung before anything is shed",
+        )
+        .opt(
+            "max-sessions",
+            "64",
+            "decode-session capacity; opening past the cap LRU-evicts",
+        )
 }
 
 fn start_engine(a: &Args) -> Result<Engine> {
+    let queue_cap = a.get_usize("queue-cap").max(1);
     let router = match a.get("adaptive").as_str() {
         "off" => None,
         "on" => Some(AdaptiveRouter::default_ladder()),
         other => bail!("unknown --adaptive {other:?} (on|off)"),
+    };
+    // The shed ladder rides on the adaptive router: once the effective
+    // backlog reaches half the admission cap, default-variant traffic
+    // pins to the sparsest rung — spend the paper's accuracy/cost knob
+    // before shedding anything.
+    let router = match a.get("shed").as_str() {
+        "off" => router,
+        "on" => match router {
+            Some(r) => Some(r.with_degrade_depth((queue_cap / 2).max(1))),
+            None => bail!("--shed on requires --adaptive on (the shed ladder routes variants)"),
+        },
+        other => bail!("unknown --shed {other:?} (on|off)"),
     };
     // Parse the CLI variant ONCE into the typed form; a typo fails here,
     // at startup, with the parse error naming the flag.
@@ -108,15 +147,23 @@ fn start_engine(a: &Args) -> Result<Engine> {
         .get("variant")
         .parse::<Variant>()
         .map_err(|e| e.context("--variant"))?;
+    let default_deadline = match a.get_usize("deadline-ms") {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms as u64)),
+    };
     let cfg = EngineConfig {
         default_variant: variant,
         policy: BatchPolicy {
             max_batch: a.get_usize("max-batch"),
             max_wait: std::time::Duration::from_millis(a.get_usize("max-wait-ms") as u64),
-            queue_cap: 4096,
+            queue_cap,
+            default_deadline,
         },
         preload: true,
         router,
+        sessions: SessionPolicy {
+            max_sessions: a.get_usize("max-sessions").max(1),
+        },
     };
     let artifacts = a.get("artifacts");
     let use_artifacts = match a.get("backend").as_str() {
@@ -150,15 +197,35 @@ fn start_engine(a: &Args) -> Result<Engine> {
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let a = engine_args("dsa-serve serve")
         .opt("addr", "127.0.0.1:7788", "listen address")
+        .opt(
+            "quota-rps",
+            "0",
+            "per-connection sustained request rate (token bucket); \
+             0 = unlimited",
+        )
+        .opt("quota-burst", "8", "per-connection token-bucket burst size")
+        .opt(
+            "quota-sessions",
+            "0",
+            "open decode sessions each connection may hold; 0 = unlimited",
+        )
         .parse(rest)
         .map_err(|u| err!("{u}"))?;
+    let quota = server::QuotaConfig {
+        rps: a.get_f64("quota-rps"),
+        burst: a.get_f64("quota-burst").max(1.0),
+        max_sessions: a.get_usize("quota-sessions"),
+    };
+    if !quota.rps.is_finite() || quota.rps < 0.0 {
+        bail!("--quota-rps must be a finite rate >= 0");
+    }
     let engine = Arc::new(start_engine(&a)?);
     println!(
         "engine up: variant={} seq_len={}",
         a.get("variant"),
         engine.seq_len()
     );
-    server::serve(engine, &a.get("addr"))
+    server::serve(engine, &a.get("addr"), quota)
 }
 
 fn cmd_infer(rest: &[String]) -> Result<()> {
@@ -242,26 +309,33 @@ fn cmd_bench_serve(rest: &[String]) -> Result<()> {
     };
     let mut rows: Vec<Json> = Vec::with_capacity(rates.len());
     for &rate in &rates {
-        let (mut lat, correct, wall) = run_rate_point(&engine, n, rate, a.get_usize("seed"))?;
+        let (mut lat, correct, outcomes, wall) =
+            run_rate_point(&engine, n, rate, a.get_usize("seed"))?;
         let name = if rate > 0.0 {
             format!("serve/native/rate{rate:.0}")
         } else {
             "serve/native/closed".to_string()
         };
+        let served = outcomes.served.max(1);
         println!("== {name} ==");
         println!("{}", lat.report_ms("latency"));
         println!(
             "throughput={:.1} req/s accuracy={:.3} wall={:.2}s",
-            n as f64 / wall,
-            correct as f64 / n as f64,
+            outcomes.served as f64 / wall,
+            correct as f64 / served as f64,
             wall
         );
+        println!("{}", outcomes.line());
         rows.push(Json::obj(vec![
             ("name", Json::str(name)),
             ("rate_rps", Json::num(rate)),
             ("requests", Json::num(n as f64)),
-            ("throughput_rps", Json::num(n as f64 / wall)),
-            ("accuracy", Json::num(correct as f64 / n as f64)),
+            ("served", Json::num(outcomes.served as f64)),
+            ("overloaded", Json::num(outcomes.overloaded as f64)),
+            ("expired", Json::num(outcomes.expired as f64)),
+            ("errored", Json::num(outcomes.errored as f64)),
+            ("throughput_rps", Json::num(outcomes.served as f64 / wall)),
+            ("accuracy", Json::num(correct as f64 / served as f64)),
             ("mean_s", Json::num(lat.mean())),
             ("p50_s", Json::num(lat.percentile(50.0))),
             ("p95_s", Json::num(lat.percentile(95.0))),
@@ -354,14 +428,48 @@ fn parse_rates(sweep: &str) -> Result<Vec<f64>> {
     Ok(out)
 }
 
+/// Typed serving outcomes of one bench point: every submission lands in
+/// exactly one bucket, so `served + overloaded + expired + errored`
+/// always equals the submissions made — the bench reports overload
+/// behavior instead of aborting on the first structured rejection.
+#[derive(Default)]
+struct ServeOutcomes {
+    served: usize,
+    overloaded: usize,
+    expired: usize,
+    errored: usize,
+}
+
+impl ServeOutcomes {
+    fn count(&mut self, e: &ServeError) {
+        match e {
+            ServeError::Overloaded { .. } => self.overloaded += 1,
+            ServeError::Expired { .. } => self.expired += 1,
+            _ => self.errored += 1,
+        }
+    }
+
+    fn total(&self) -> usize {
+        self.served + self.overloaded + self.expired + self.errored
+    }
+
+    fn line(&self) -> String {
+        format!(
+            "outcomes: served={} overloaded={} expired={} errored={}",
+            self.served, self.overloaded, self.expired, self.errored
+        )
+    }
+}
+
 /// One open/closed-loop rate point against a running engine: returns the
-/// latency summary, correct predictions, and wall seconds.
+/// latency summary (served requests only), correct predictions, the
+/// typed outcome counts, and wall seconds.
 fn run_rate_point(
     engine: &Engine,
     n: usize,
     rate: f64,
     seed: usize,
-) -> Result<(Summary, usize, f64)> {
+) -> Result<(Summary, usize, ServeOutcomes, f64)> {
     let mut wl = Workload::new(WorkloadConfig {
         seq_len: engine.seq_len(),
         rate_rps: if rate > 0.0 { rate } else { 1.0 },
@@ -373,22 +481,35 @@ fn run_rate_point(
     let mut rxs = Vec::with_capacity(n);
     let mut correct = 0usize;
     let mut labels = Vec::with_capacity(n);
+    let mut outcomes = ServeOutcomes::default();
     for r in trace {
         if rate > 0.0 {
             std::thread::sleep(r.delay);
         }
-        labels.push(r.label);
-        rxs.push(engine.submit(r.tokens, None)?);
+        match engine.submit(r.tokens, None, None) {
+            Ok(rx) => {
+                labels.push(r.label);
+                rxs.push(rx);
+            }
+            Err(e) => outcomes.count(&e),
+        }
     }
     let mut lat = Summary::new();
     for (rx, label) in rxs.into_iter().zip(labels) {
-        let resp = rx.recv()?;
-        lat.add(resp.latency.as_secs_f64());
-        if resp.pred as i32 == label {
-            correct += 1;
+        match rx.recv() {
+            Ok(Ok(resp)) => {
+                outcomes.served += 1;
+                lat.add(resp.latency.as_secs_f64());
+                if resp.pred as i32 == label {
+                    correct += 1;
+                }
+            }
+            Ok(Err(e)) => outcomes.count(&e),
+            Err(_) => outcomes.count(&ServeError::ShuttingDown),
         }
     }
-    Ok((lat, correct, t0.elapsed().as_secs_f64()))
+    debug_assert_eq!(outcomes.total(), n, "every submission must land in one bucket");
+    Ok((lat, correct, outcomes, t0.elapsed().as_secs_f64()))
 }
 
 /// One streamed-decode point against a running engine: open `n` sessions

@@ -5,7 +5,7 @@
 //! Protocol (one JSON document per line):
 //!
 //! ```text
-//! -> {"op":"infer","tokens":[...],"variant":"dsa90"}
+//! -> {"op":"infer","tokens":[...],"variant":"dsa90","deadline_ms":250}
 //! <- {"ok":true,"pred":1,"logits":[...],"latency_ms":3.2,"batch":4}
 //! -> {"op":"open","tokens":[...prompt...],"variant":"dsa90"}
 //! <- {"ok":true,"session":3,"resident":192,"variant":"dsa90"}
@@ -15,7 +15,7 @@
 //! -> {"op":"close","session":3}
 //! <- {"ok":true,"session":3,"released":193}
 //! -> {"op":"metrics"}
-//! <- {"ok":true, ...metrics json...}
+//! <- {"ok":true, ...metrics json... including the "overload" section}
 //! -> {"op":"ping"} / {"op":"shutdown"}
 //! ```
 //!
@@ -23,73 +23,406 @@
 //! cache: `open` prefills the prompt and pins the serving variant
 //! (explicit, or the adaptive router's pick at open time), `decode`
 //! returns the classifier logits over the tokens so far, `close` releases
-//! the cache for pooled reuse. Failures — unknown/evicted session ids,
-//! prompts past `seq_len`, a backend without decode support — are
-//! structured `{"ok":false,"error":...}` replies, never dropped
-//! connections. All fields parse **once**, here at the boundary, into the
-//! typed [`SessionOp`](crate::coordinator::SessionOp); `{"op":"infer"}`
-//! is unchanged.
+//! the cache for pooled reuse. All fields parse **once**, here at the
+//! boundary, into the typed [`SessionOp`](crate::coordinator::SessionOp).
+//!
+//! **Overload safety.** Every failure is a structured
+//! `{"ok":false,"error":<code>,"message":...}` reply — never a dropped
+//! connection or a silently vanished request. The stable codes are the
+//! [`ServeError`](crate::coordinator::ServeError) wire codes:
+//!
+//! * `"overloaded"` — queue past `queue_cap`; carries `retry_after_ms`.
+//! * `"expired"` — the request's deadline lapsed in queue (client
+//!   `deadline_ms`, or the server's `--deadline-ms` default).
+//! * `"quota_exceeded"` — this connection exceeded its request-rate
+//!   token bucket or its open-session cap; carries `limit`.
+//! * `"shutting_down"` — admissions are stopped (drain in progress).
+//! * `"invalid"` — malformed request (bad JSON, non-numeric
+//!   `deadline_ms`, unknown variant, wrong token count, unknown op).
+//! * `"error"` — engine-side failure (unknown/evicted session ids,
+//!   prompts past `seq_len`, a backend without decode support, a backend
+//!   error or panic).
+//!
+//! `deadline_ms` is accepted on `infer`/`open`/`decode` (a positive
+//! number of milliseconds, clamped to 10 minutes); `close` never expires —
+//! expiring a close would leak the session's cache.
+//!
+//! `{"op":"shutdown"}` initiates drain-then-shutdown: admissions stop,
+//! the accept loop is woken by a self-connection (no waiting for the next
+//! organic client), connection threads finish their in-flight lines and
+//! exit on their read timeout, and the engine drains every queued lane
+//! before the server returns — zero admitted work is dropped.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use crate::coordinator::{DecodeResponse, Engine};
+use crate::coordinator::{DecodeResponse, Engine, ServeError, ServeResult, SessionOp, SessionReply};
 use crate::kernels::Variant;
-use crate::util::error::{bail, Context, Result};
+use crate::util::error::{bail, err, Context, Result};
 use crate::util::json::{self, Json};
 
-/// Serve `engine` on `addr` until a client sends `{"op":"shutdown"}`.
-pub fn serve(engine: Arc<Engine>, addr: &str) -> Result<()> {
+/// How long a connection thread blocks in `read` before re-checking the
+/// server's stop flag — the upper bound on how stale a drain can find an
+/// idle connection.
+const READ_TICK: Duration = Duration::from_millis(200);
+
+/// Per-connection admission limits (a small, local stand-in for a real
+/// per-principal quota service — the protocol has no authentication, so
+/// the connection is the principal).
+#[derive(Debug, Clone)]
+pub struct QuotaConfig {
+    /// Sustained requests/second each connection may issue (token
+    /// bucket); `0` disables rate limiting.
+    pub rps: f64,
+    /// Token-bucket burst: how many requests may arrive back-to-back
+    /// before the rate limit bites.
+    pub burst: f64,
+    /// Open decode sessions each connection may hold; `0` = unlimited.
+    pub max_sessions: usize,
+}
+
+impl Default for QuotaConfig {
+    fn default() -> Self {
+        QuotaConfig { rps: 0.0, burst: 8.0, max_sessions: 0 }
+    }
+}
+
+/// Token-bucket + session-set state of one connection.
+struct ClientQuota {
+    cfg: QuotaConfig,
+    tokens: f64,
+    last: Instant,
+    /// Session ids opened (and not yet closed) by this connection.
+    sessions: HashSet<u64>,
+}
+
+impl ClientQuota {
+    fn new(cfg: QuotaConfig) -> ClientQuota {
+        ClientQuota {
+            tokens: cfg.burst.max(1.0),
+            cfg,
+            last: Instant::now(),
+            sessions: HashSet::new(),
+        }
+    }
+
+    /// Charge one request against the rate bucket.
+    fn admit(&mut self) -> ServeResult<()> {
+        if self.cfg.rps <= 0.0 {
+            return Ok(());
+        }
+        let now = Instant::now();
+        let refill = now.duration_since(self.last).as_secs_f64() * self.cfg.rps;
+        self.tokens = (self.tokens + refill).min(self.cfg.burst.max(1.0));
+        self.last = now;
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err(ServeError::QuotaExceeded {
+                what: "request rate",
+                limit: self.cfg.rps.round() as u64,
+            })
+        }
+    }
+
+    /// Check the open-session cap (charged only on `open`).
+    fn admit_open(&self) -> ServeResult<()> {
+        if self.cfg.max_sessions > 0 && self.sessions.len() >= self.cfg.max_sessions {
+            return Err(ServeError::QuotaExceeded {
+                what: "open sessions",
+                limit: self.cfg.max_sessions as u64,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Shared stop signal of one server: connection threads and the accept
+/// loop poll it; [`ServerState::begin_shutdown`] also nudges the accept
+/// loop awake with a self-connection so drain starts immediately instead
+/// of on the next organic client.
+pub struct ServerState {
+    stop: AtomicBool,
+    addr: Mutex<Option<SocketAddr>>,
+}
+
+impl Default for ServerState {
+    fn default() -> Self {
+        ServerState::new()
+    }
+}
+
+impl ServerState {
+    pub fn new() -> ServerState {
+        ServerState { stop: AtomicBool::new(false), addr: Mutex::new(None) }
+    }
+
+    pub fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Flip the stop flag and wake the accept loop. Idempotent.
+    pub fn begin_shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(addr) = *self.addr.lock().unwrap() {
+            // The listener blocks in accept(); connecting to ourselves is
+            // the portable way to make it return so it can observe the
+            // flag (std has no non-blocking accept + poll offline).
+            let _ = TcpStream::connect(addr);
+        }
+    }
+
+    fn set_addr(&self, addr: SocketAddr) {
+        *self.addr.lock().unwrap() = Some(addr);
+    }
+}
+
+/// Serve `engine` on `addr` until a client sends `{"op":"shutdown"}`,
+/// then drain: stop admissions, finish in-flight lines, flush every
+/// engine lane, and return with zero admitted work dropped.
+pub fn serve(engine: Arc<Engine>, addr: &str, quota: QuotaConfig) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     println!("dsa-serve listening on {addr}");
-    let stop = Arc::new(AtomicBool::new(false));
-    listener.set_nonblocking(false)?;
+    serve_listener(engine, listener, quota)
+}
+
+/// [`serve`] over an already-bound listener (tests bind `127.0.0.1:0` and
+/// pass the listener in, so the port is known without a race).
+pub fn serve_listener(
+    engine: Arc<Engine>,
+    listener: TcpListener,
+    quota: QuotaConfig,
+) -> Result<()> {
+    let state = Arc::new(ServerState::new());
+    state.set_addr(listener.local_addr()?);
     let mut handles = Vec::new();
     for stream in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
+        if state.stopping() {
             break;
         }
-        let stream = stream?;
-        let engine = engine.clone();
-        let stop2 = stop.clone();
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                crate::log_debug!("accept failed: {e}");
+                continue;
+            }
+        };
+        let mut conn = Conn::new(engine.clone(), state.clone(), quota.clone());
         handles.push(std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, &engine, &stop2) {
+            if let Err(e) = handle_conn(stream, &mut conn) {
                 crate::log_debug!("connection ended: {e}");
             }
         }));
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
     }
+    // Drain: connection threads notice the stop flag within one read
+    // tick and exit; the engine then flushes every queued lane (each
+    // waiter gets its structured reply) before we return.
     for h in handles {
         let _ = h.join();
     }
+    engine.shutdown();
+    println!("{}", engine.metrics.report());
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, engine: &Engine, stop: &AtomicBool) -> Result<()> {
+/// One client connection: the engine handle, the server's stop signal,
+/// and this connection's quota state. Public so tests can drive the full
+/// protocol (including quotas and structured overload replies) without
+/// sockets.
+pub struct Conn {
+    engine: Arc<Engine>,
+    state: Arc<ServerState>,
+    quota: ClientQuota,
+}
+
+impl Conn {
+    pub fn new(engine: Arc<Engine>, state: Arc<ServerState>, quota: QuotaConfig) -> Conn {
+        Conn { engine, state, quota: ClientQuota::new(quota) }
+    }
+
+    /// Dispatch one request line into a reply document. `Err` means the
+    /// line itself was malformed (rendered as an `"invalid"` reply by the
+    /// connection loop); every engine-side outcome — success or typed
+    /// [`ServeError`] — comes back as `Ok(reply)`.
+    pub fn handle_line(&mut self, line: &str) -> Result<Json> {
+        let req = json::parse(line).context("bad request json")?;
+        let op = req.get("op").and_then(|o| o.as_str()).unwrap_or("infer");
+        match op {
+            "ping" => Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("pong", Json::Bool(true)),
+            ])),
+            "metrics" => {
+                let mut m = self.engine.metrics.to_json();
+                if let Json::Obj(map) = &mut m {
+                    map.insert("ok".into(), Json::Bool(true));
+                }
+                Ok(m)
+            }
+            "shutdown" => {
+                self.engine.stop_admissions();
+                self.state.begin_shutdown();
+                Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("stopping", Json::Bool(true)),
+                ]))
+            }
+            "infer" => {
+                if let Err(e) = self.quota.admit() {
+                    self.engine.metrics.record_quota_rejected();
+                    return Ok(e.to_json());
+                }
+                let tokens = parse_tokens(&req)?;
+                let variant = parse_variant(&req)?;
+                let deadline = parse_deadline(&req)?;
+                let outcome = match self.engine.submit(tokens, variant, deadline) {
+                    Ok(rx) => match rx.recv() {
+                        Ok(outcome) => outcome,
+                        Err(_) => Err(ServeError::ShuttingDown),
+                    },
+                    Err(e) => Err(e),
+                };
+                match outcome {
+                    Ok(resp) => Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("id", Json::num(resp.id as f64)),
+                        ("pred", Json::num(resp.pred as f64)),
+                        (
+                            "logits",
+                            Json::arr(resp.logits.iter().map(|&x| Json::num(x as f64))),
+                        ),
+                        ("latency_ms", Json::num(resp.latency.as_secs_f64() * 1e3)),
+                        ("queue_ms", Json::num(resp.queue_time.as_secs_f64() * 1e3)),
+                        ("batch", Json::num(resp.batch_size as f64)),
+                        ("variant", Json::str(resp.variant.to_string())),
+                    ])),
+                    Err(e) => Ok(e.to_json()),
+                }
+            }
+            // Session ops: everything parses here into the typed
+            // `SessionOp` (ids, tokens, variant, deadline) so malformed
+            // requests die at the boundary as structured errors.
+            "open" => {
+                if let Err(e) = self.quota.admit().and_then(|()| self.quota.admit_open()) {
+                    self.engine.metrics.record_quota_rejected();
+                    return Ok(e.to_json());
+                }
+                let prompt = parse_tokens(&req)?;
+                let variant = parse_variant(&req)?;
+                let deadline = parse_deadline(&req)?;
+                match self.session_call(SessionOp::Open { prompt, variant }, deadline) {
+                    Ok(SessionReply::Opened { session, resident, variant }) => {
+                        self.quota.sessions.insert(session);
+                        Ok(Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("session", Json::num(session as f64)),
+                            ("resident", Json::num(resident as f64)),
+                            ("variant", Json::str(variant.to_string())),
+                        ]))
+                    }
+                    Ok(other) => Ok(mismatch_reply(&other)),
+                    Err(e) => Ok(e.to_json()),
+                }
+            }
+            "decode" => {
+                if let Err(e) = self.quota.admit() {
+                    self.engine.metrics.record_quota_rejected();
+                    return Ok(e.to_json());
+                }
+                let session = parse_session(&req)?;
+                let token = req
+                    .get("token")
+                    .and_then(|v| v.as_f64())
+                    .context("missing token")? as i32;
+                let deadline = parse_deadline(&req)?;
+                match self.session_call(SessionOp::Decode { session, token }, deadline) {
+                    Ok(SessionReply::Decoded(resp)) => Ok(decode_reply(&resp)),
+                    Ok(other) => Ok(mismatch_reply(&other)),
+                    Err(e) => Ok(e.to_json()),
+                }
+            }
+            "close" => {
+                if let Err(e) = self.quota.admit() {
+                    self.engine.metrics.record_quota_rejected();
+                    return Ok(e.to_json());
+                }
+                let session = parse_session(&req)?;
+                // Release the quota slot unconditionally — even if the
+                // engine reports the session already gone (evicted), the
+                // client has relinquished it.
+                self.quota.sessions.remove(&session);
+                match self.session_call(SessionOp::Close { session }, None) {
+                    Ok(SessionReply::Closed { released, .. }) => Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("session", Json::num(session as f64)),
+                        ("released", Json::num(released as f64)),
+                    ])),
+                    Ok(other) => Ok(mismatch_reply(&other)),
+                    Err(e) => Ok(e.to_json()),
+                }
+            }
+            other => bail!("unknown op {other:?}"),
+        }
+    }
+
+    /// Blocking session op with a deadline budget; a worker that drained
+    /// away mid-wait reads as `ShuttingDown` (admitted work is always
+    /// answered, so a closed channel can only mean shutdown raced us).
+    fn session_call(&self, op: SessionOp, deadline: Option<Duration>) -> ServeResult<SessionReply> {
+        let rx = self.engine.submit_session(op, deadline)?;
+        match rx.recv() {
+            Ok(outcome) => outcome,
+            Err(_) => Err(ServeError::ShuttingDown),
+        }
+    }
+}
+
+/// Connection loop: a manual line splitter over a read-timeout socket, so
+/// an idle connection still notices drain within one [`READ_TICK`].
+/// Partial lines survive timeouts — bytes buffer until their newline
+/// arrives.
+fn handle_conn(stream: TcpStream, conn: &mut Conn) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = match handle_line(&line, engine, stop) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::str(format!("{e:#}"))),
-            ]),
-        };
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        if stop.load(Ordering::SeqCst) {
-            // Nudge the accept loop by connecting to ourselves.
-            break;
+    stream.set_read_timeout(Some(READ_TICK))?;
+    let mut reader = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    'conn: loop {
+        match reader.read(&mut chunk) {
+            Ok(0) => break, // EOF
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+                    let line: Vec<u8> = buf.drain(..=pos).collect();
+                    let line = String::from_utf8_lossy(&line);
+                    let line = line.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    let reply = match conn.handle_line(line) {
+                        Ok(j) => j,
+                        Err(e) => ServeError::Invalid(format!("{e:#}")).to_json(),
+                    };
+                    writer.write_all(reply.to_string().as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    if conn.state.stopping() {
+                        break 'conn;
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if conn.state.stopping() {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
         }
     }
     crate::log_debug!("peer {peer} disconnected");
@@ -124,6 +457,26 @@ fn parse_variant(req: &Json) -> Result<Option<Variant>> {
     }
 }
 
+/// Parse the optional `deadline_ms` budget: absent/null means the
+/// server-side default applies; present, it must be a positive finite
+/// number (non-numeric junk is rejected here, at the boundary) and is
+/// clamped to `[1ms, 10min]` so an absurd value can't pin a request in
+/// queue forever.
+fn parse_deadline(req: &Json) -> Result<Option<Duration>> {
+    match req.get("deadline_ms") {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => {
+            let ms = v
+                .as_f64()
+                .context("\"deadline_ms\" must be a number of milliseconds")?;
+            if !ms.is_finite() || ms <= 0.0 {
+                bail!("\"deadline_ms\" must be a positive number of milliseconds");
+            }
+            Ok(Some(Duration::from_millis((ms as u64).clamp(1, 600_000))))
+        }
+    }
+}
+
 /// Session id of a `decode` / `close` request.
 fn parse_session(req: &Json) -> Result<u64> {
     Ok(req
@@ -147,76 +500,10 @@ fn decode_reply(resp: &DecodeResponse) -> Json {
     ])
 }
 
-/// Dispatch one request line. Public so tests can drive the protocol
-/// without sockets.
-pub fn handle_line(line: &str, engine: &Engine, stop: &AtomicBool) -> Result<Json> {
-    let req = json::parse(line).context("bad request json")?;
-    let op = req.get("op").and_then(|o| o.as_str()).unwrap_or("infer");
-    match op {
-        "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
-        "metrics" => {
-            let mut m = engine.metrics.to_json();
-            if let Json::Obj(map) = &mut m {
-                map.insert("ok".into(), Json::Bool(true));
-            }
-            Ok(m)
-        }
-        "shutdown" => {
-            stop.store(true, Ordering::SeqCst);
-            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("stopping", Json::Bool(true))]))
-        }
-        "infer" => {
-            let tokens = parse_tokens(&req)?;
-            let variant = parse_variant(&req)?;
-            let resp = engine.infer(tokens, variant)?;
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("id", Json::num(resp.id as f64)),
-                ("pred", Json::num(resp.pred as f64)),
-                (
-                    "logits",
-                    Json::arr(resp.logits.iter().map(|&x| Json::num(x as f64))),
-                ),
-                ("latency_ms", Json::num(resp.latency.as_secs_f64() * 1e3)),
-                ("queue_ms", Json::num(resp.queue_time.as_secs_f64() * 1e3)),
-                ("batch", Json::num(resp.batch_size as f64)),
-                ("variant", Json::str(resp.variant.to_string())),
-            ]))
-        }
-        // Session ops: everything parses here into the typed `SessionOp`
-        // (ids, tokens, variant) so malformed requests die at the
-        // boundary as structured errors, exactly like `infer`.
-        "open" => {
-            let prompt = parse_tokens(&req)?;
-            let variant = parse_variant(&req)?;
-            let (session, resident, variant) = engine.open_session(prompt, variant)?;
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("session", Json::num(session as f64)),
-                ("resident", Json::num(resident as f64)),
-                ("variant", Json::str(variant.to_string())),
-            ]))
-        }
-        "decode" => {
-            let session = parse_session(&req)?;
-            let token = req
-                .get("token")
-                .and_then(|v| v.as_f64())
-                .context("missing token")? as i32;
-            let resp = engine.decode(session, token)?;
-            Ok(decode_reply(&resp))
-        }
-        "close" => {
-            let session = parse_session(&req)?;
-            let released = engine.close_session(session)?;
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("session", Json::num(session as f64)),
-                ("released", Json::num(released as f64)),
-            ]))
-        }
-        other => bail!("unknown op {other:?}"),
-    }
+/// The engine answered a session op with the wrong reply kind — a bug,
+/// but one that must still surface as a structured reply.
+fn mismatch_reply(reply: &SessionReply) -> Json {
+    ServeError::Failed(err!("engine returned mismatched session reply {reply:?}")).to_json()
 }
 
 /// Minimal blocking client for examples and tests.

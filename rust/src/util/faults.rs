@@ -1,0 +1,252 @@
+//! Seeded fault injection for chaos testing the serving stack.
+//!
+//! A [`FaultInjector`] is an *instance* (no process-global registry — test
+//! binaries run in one process, and a global would leak faults into
+//! unrelated tests) that hook sites poll before doing real work:
+//!
+//! * `NativeBackend` polls at `backend.run` / `backend.open` /
+//!   `backend.decode` before executing a batch, prefill or decode step.
+//! * `WorkerPool::with_faults` polls at `pool.task` inside each worker's
+//!   panic shield, so pool-level panics are exercised too.
+//!
+//! Rolls are seed-keyed and per-site counted: the k-th roll at a given
+//! site always yields the same [`Fault`] for a given seed, regardless of
+//! thread interleaving — so a chaos failure reproduces from its seed.
+//! Injectors start **armed**; `set_armed(false)` disarms every hook at
+//! once so a test can prove post-chaos liveness on a clean engine.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::error::{bail, Result};
+use crate::util::rng::Rng;
+
+/// Per-site fault rates (each in [0, 1]; they are tried in the order
+/// panic → error → delay against one uniform draw, so their sum should
+/// stay ≤ 1).
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Seed keying every roll; same seed → same fault schedule per site.
+    pub seed: u64,
+    /// Probability a roll panics (exercises the engine's blast shield).
+    pub panic_rate: f64,
+    /// Probability a roll returns an injected backend error.
+    pub error_rate: f64,
+    /// Probability a roll sleeps for `delay` (exercises deadlines).
+    pub delay_rate: f64,
+    /// Sleep length for injected delays.
+    pub delay: Duration,
+}
+
+impl FaultConfig {
+    /// A config that injects nothing (rates all zero) — handy as a base
+    /// for struct-update syntax in tests.
+    pub fn quiet(seed: u64) -> Self {
+        FaultConfig {
+            seed,
+            panic_rate: 0.0,
+            error_rate: 0.0,
+            delay_rate: 0.0,
+            delay: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Outcome of one roll at a hook site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    None,
+    Delay(Duration),
+    Error,
+    Panic,
+}
+
+/// Counts kept per hook site, readable after a chaos run to assert the
+/// harness actually injected something.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SiteStats {
+    pub rolls: u64,
+    pub panics: u64,
+    pub errors: u64,
+    pub delays: u64,
+}
+
+impl SiteStats {
+    pub fn injected(&self) -> u64 {
+        self.panics + self.errors + self.delays
+    }
+}
+
+/// Deterministic, seed-keyed fault source. See module docs.
+#[derive(Debug)]
+pub struct FaultInjector {
+    cfg: FaultConfig,
+    armed: AtomicBool,
+    sites: Mutex<BTreeMap<&'static str, SiteStats>>,
+}
+
+/// FNV-1a, used to give each site an independent seed stream.
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl FaultInjector {
+    pub fn new(cfg: FaultConfig) -> Self {
+        FaultInjector {
+            cfg,
+            armed: AtomicBool::new(true),
+            sites: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Arm or disarm every hook at once (disarm before post-chaos
+    /// liveness checks).
+    pub fn set_armed(&self, armed: bool) {
+        self.armed.store(armed, Ordering::SeqCst);
+    }
+
+    pub fn armed(&self) -> bool {
+        self.armed.load(Ordering::SeqCst)
+    }
+
+    /// Roll for a fault at `site`. The k-th roll at a site is a pure
+    /// function of (seed, site, k).
+    pub fn roll(&self, site: &'static str) -> Fault {
+        if !self.armed() {
+            return Fault::None;
+        }
+        let mut sites = self.sites.lock().unwrap();
+        let stats = sites.entry(site).or_default();
+        stats.rolls += 1;
+        let k = stats.rolls;
+        let mut rng = Rng::new(
+            self.cfg
+                .seed
+                .wrapping_add(fnv1a(site))
+                .wrapping_add(k.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+        );
+        let x = rng.f64();
+        let mut acc = self.cfg.panic_rate;
+        if x < acc {
+            stats.panics += 1;
+            return Fault::Panic;
+        }
+        acc += self.cfg.error_rate;
+        if x < acc {
+            stats.errors += 1;
+            return Fault::Error;
+        }
+        acc += self.cfg.delay_rate;
+        if x < acc {
+            stats.delays += 1;
+            return Fault::Delay(self.cfg.delay);
+        }
+        Fault::None
+    }
+
+    /// Roll and *act*: sleep on Delay, bail on Error, panic on Panic.
+    /// Hook sites call this as their first statement.
+    pub fn fire(&self, site: &'static str) -> Result<()> {
+        match self.roll(site) {
+            Fault::None => Ok(()),
+            Fault::Delay(d) => {
+                std::thread::sleep(d);
+                Ok(())
+            }
+            Fault::Error => bail!("injected backend error at {site}"),
+            Fault::Panic => panic!("injected panic at {site}"),
+        }
+    }
+
+    /// Stats for one site (zeroes if the site never rolled).
+    pub fn site(&self, site: &str) -> SiteStats {
+        self.sites
+            .lock()
+            .unwrap()
+            .get(site)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Total faults injected across all sites.
+    pub fn injected_total(&self) -> u64 {
+        self.sites
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| s.injected())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chaotic(seed: u64) -> FaultInjector {
+        FaultInjector::new(FaultConfig {
+            panic_rate: 0.2,
+            error_rate: 0.2,
+            delay_rate: 0.2,
+            ..FaultConfig::quiet(seed)
+        })
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let a = chaotic(7);
+        let b = chaotic(7);
+        let sa: Vec<Fault> = (0..200).map(|_| a.roll("backend.run")).collect();
+        let sb: Vec<Fault> = (0..200).map(|_| b.roll("backend.run")).collect();
+        assert_eq!(sa, sb);
+        assert!(a.injected_total() > 0, "rates 0.6 over 200 rolls must inject");
+    }
+
+    #[test]
+    fn different_sites_different_streams() {
+        let f = chaotic(7);
+        let sa: Vec<Fault> = (0..200).map(|_| f.roll("backend.run")).collect();
+        let sb: Vec<Fault> = (0..200).map(|_| f.roll("backend.decode")).collect();
+        assert_ne!(sa, sb);
+    }
+
+    #[test]
+    fn disarmed_injects_nothing() {
+        let f = chaotic(7);
+        f.set_armed(false);
+        for _ in 0..100 {
+            assert_eq!(f.roll("backend.run"), Fault::None);
+        }
+        assert_eq!(f.injected_total(), 0);
+        assert_eq!(f.site("backend.run").rolls, 0, "disarmed rolls don't count");
+    }
+
+    #[test]
+    fn quiet_config_never_fires() {
+        let f = FaultInjector::new(FaultConfig::quiet(3));
+        for _ in 0..500 {
+            assert!(f.fire("backend.run").is_ok());
+        }
+        assert_eq!(f.injected_total(), 0);
+        assert_eq!(f.site("backend.run").rolls, 500);
+    }
+
+    #[test]
+    fn stats_partition_rolls() {
+        let f = chaotic(11);
+        for _ in 0..300 {
+            let _ = f.roll("pool.task");
+        }
+        let s = f.site("pool.task");
+        assert_eq!(s.rolls, 300);
+        assert!(s.panics > 0 && s.errors > 0 && s.delays > 0);
+        assert!(s.injected() < s.rolls, "rates sum to 0.6 < 1");
+    }
+}

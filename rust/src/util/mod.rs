@@ -1,6 +1,6 @@
 //! Dependency-free substrates: JSON, CLI parsing, PRNG, statistics, a
-//! micro-bench harness, a property-test helper, error/logging plumbing and
-//! the `.tns` tensor reader.
+//! micro-bench harness, a property-test helper, seeded fault injection
+//! for chaos tests, error/logging plumbing and the `.tns` tensor reader.
 //!
 //! The default build is fully hermetic (zero external crates), so the
 //! conventional crates (serde, clap, rand, criterion, proptest, anyhow,
@@ -9,6 +9,7 @@
 pub mod bench;
 pub mod cli;
 pub mod error;
+pub mod faults;
 pub mod json;
 pub mod logging;
 pub mod prop;

@@ -1,0 +1,279 @@
+//! Chaos tests: seeded fault injection through the full serving stack.
+//!
+//! A [`FaultInjector`] wired into the native backend injects panics,
+//! errors and delays at the `backend.run` / `backend.open` /
+//! `backend.decode` hook sites while multiple threads hammer the engine
+//! with one-shot requests (some with tiny deadlines) and decode sessions.
+//! The invariant under test is *accounting*: every submitted operation
+//! gets exactly one structured reply —
+//!
+//! ```text
+//! submitted == served + overloaded + expired + errored
+//! ```
+//!
+//! — the worker never dies (the engine still serves after the injector is
+//! disarmed), and drain-then-shutdown exits cleanly. Failures reproduce
+//! from their seed; `DSA_CHAOS_SEED` overrides the default so CI can run
+//! a seed matrix.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dsa_serve::coordinator::{
+    BatchPolicy, Engine, EngineConfig, NativeModelConfig, ServeError, SessionPolicy,
+};
+use dsa_serve::kernels::Variant;
+use dsa_serve::util::faults::{FaultConfig, FaultInjector};
+use dsa_serve::util::prop::{forall, Config as PropConfig};
+use dsa_serve::workload::{Workload, WorkloadConfig};
+
+const SEQ_LEN: usize = 64;
+
+/// One structured outcome per submitted operation, keyed by the typed
+/// error code. `total()` must equal the number of submissions — a
+/// mismatch means a request was silently dropped or double-answered.
+#[derive(Debug, Default, Clone, Copy)]
+struct Tally {
+    served: usize,
+    overloaded: usize,
+    expired: usize,
+    errored: usize,
+}
+
+impl Tally {
+    fn count_err(&mut self, e: &ServeError) {
+        match e.code() {
+            "overloaded" => self.overloaded += 1,
+            "expired" => self.expired += 1,
+            _ => self.errored += 1,
+        }
+    }
+
+    fn total(&self) -> usize {
+        self.served + self.overloaded + self.expired + self.errored
+    }
+
+    fn absorb(&mut self, o: Tally) {
+        self.served += o.served;
+        self.overloaded += o.overloaded;
+        self.expired += o.expired;
+        self.errored += o.errored;
+    }
+}
+
+/// Start a native engine with a fault injector at the given rates. The
+/// injector is disarmed during startup (preload must succeed — chaos
+/// targets serving, not boot) and re-armed before this returns.
+fn chaos_engine(
+    seed: u64,
+    rates: (f64, f64, f64),
+    queue_cap: usize,
+) -> (Arc<Engine>, Arc<FaultInjector>) {
+    let faults = Arc::new(FaultInjector::new(FaultConfig {
+        panic_rate: rates.0,
+        error_rate: rates.1,
+        delay_rate: rates.2,
+        delay: Duration::from_millis(1),
+        ..FaultConfig::quiet(seed)
+    }));
+    faults.set_armed(false);
+    let engine = Engine::start_native(
+        NativeModelConfig {
+            seq_len: SEQ_LEN,
+            faults: Some(faults.clone()),
+            ..Default::default()
+        },
+        EngineConfig {
+            default_variant: Variant::Dense,
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_cap,
+                default_deadline: None,
+            },
+            preload: true,
+            router: None,
+            sessions: SessionPolicy { max_sessions: 8 },
+        },
+    )
+    .expect("chaos engine boots with the injector disarmed");
+    faults.set_armed(true);
+    (Arc::new(engine), faults)
+}
+
+/// Hammer the engine from `threads` submitter threads, each mixing a
+/// burst of one-shot requests (every third with a tiny deadline) with a
+/// short decode session. Returns (submitted, tally); panics if any
+/// request's reply channel disconnects without an answer — the silent
+/// drop this harness exists to catch.
+fn hammer(engine: &Arc<Engine>, seed: u64, threads: usize, per_thread: usize) -> (usize, Tally) {
+    let mut handles = Vec::new();
+    for t in 0..threads as u64 {
+        let engine = engine.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut tally = Tally::default();
+            let mut submitted = 0usize;
+            let mut wl = Workload::new(WorkloadConfig {
+                seq_len: SEQ_LEN,
+                seed: seed ^ (t.wrapping_mul(0x9E37_79B9)),
+                ..Default::default()
+            });
+
+            // One-shot burst: submit everything first so the queue
+            // actually backs up, then drain the replies.
+            let mut rxs = Vec::new();
+            for i in 0..per_thread {
+                let deadline = if i % 3 == 0 {
+                    // Tight enough to expire in a backed-up queue, long
+                    // enough to sometimes serve: exercises both paths.
+                    Some(Duration::from_micros(500))
+                } else {
+                    None
+                };
+                submitted += 1;
+                match engine.submit(wl.next_request().tokens, None, deadline) {
+                    Ok(rx) => rxs.push(rx),
+                    Err(e) => tally.count_err(&e),
+                }
+            }
+            for rx in rxs {
+                match rx.recv() {
+                    Ok(Ok(_)) => tally.served += 1,
+                    Ok(Err(e)) => tally.count_err(&e),
+                    Err(_) => panic!(
+                        "request reply channel disconnected without an answer \
+                         (silent drop, seed {seed})"
+                    ),
+                }
+            }
+
+            // Session traffic through the same faulted backend: open,
+            // a few decodes, close. Each blocking call is one submitted
+            // operation with exactly one structured outcome.
+            let s = wl.next_session(SEQ_LEN / 2);
+            submitted += 1;
+            match engine.open_session(s.prompt, None) {
+                Err(e) => tally.count_err(&e),
+                Ok((sid, _resident, _variant)) => {
+                    tally.served += 1;
+                    for &tok in s.steps.iter().take(4) {
+                        submitted += 1;
+                        match engine.decode(sid, tok) {
+                            Ok(_) => tally.served += 1,
+                            Err(e) => tally.count_err(&e),
+                        }
+                    }
+                    // Close ops never expire and must free the slot even
+                    // under chaos.
+                    submitted += 1;
+                    match engine.close_session(sid) {
+                        Ok(_) => tally.served += 1,
+                        Err(e) => tally.count_err(&e),
+                    }
+                }
+            }
+            (submitted, tally)
+        }));
+    }
+    let mut submitted = 0usize;
+    let mut tally = Tally::default();
+    for h in handles {
+        let (s, t) = h.join().expect("submitter thread must not die");
+        submitted += s;
+        tally.absorb(t);
+    }
+    (submitted, tally)
+}
+
+fn chaos_seed() -> u64 {
+    std::env::var("DSA_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(101)
+}
+
+/// The tentpole chaos run: panics, errors and delays at every backend
+/// hook site under a tight queue cap, multi-threaded mixed traffic, and
+/// the full accounting identity — then disarm, prove liveness, and
+/// drain-then-shutdown.
+#[test]
+fn chaos_every_request_gets_exactly_one_reply() {
+    let seed = chaos_seed();
+    let (engine, faults) = chaos_engine(seed, (0.05, 0.10, 0.10), 8);
+
+    let (submitted, tally) = hammer(&engine, seed, 4, 32);
+    assert_eq!(
+        submitted,
+        tally.total(),
+        "accounting identity violated (seed {seed}): {tally:?}"
+    );
+    assert!(
+        faults.injected_total() > 0,
+        "harness must actually inject faults (seed {seed})"
+    );
+    assert!(
+        tally.served > 0,
+        "some requests must survive moderate chaos (seed {seed}): {tally:?}"
+    );
+
+    // The engine's overload accounting saw the same story the clients did.
+    let m = engine.metrics.to_json();
+    let overload = m.get("overload").expect("overload section");
+    let expired = overload
+        .get("expired_total")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0) as usize;
+    assert!(
+        expired <= tally.expired,
+        "metrics cannot expire more than clients observed \
+         (metrics {expired} vs clients {:?}, seed {seed})",
+        tally.expired
+    );
+
+    // Worker never died: disarm the injector and the same engine serves.
+    faults.set_armed(false);
+    engine
+        .infer(vec![1i32; SEQ_LEN], None)
+        .expect("engine must serve cleanly once faults are disarmed");
+
+    // Drain-then-shutdown: admissions stop with a structured refusal,
+    // then shutdown joins the worker without losing in-flight work.
+    engine.stop_admissions();
+    let refused = engine
+        .submit(vec![1i32; SEQ_LEN], None, None)
+        .map(|_| ())
+        .expect_err("post-drain submit must be refused");
+    assert_eq!(refused.code(), "shutting_down");
+    engine.shutdown();
+}
+
+/// Property: the accounting identity holds and the worker survives for
+/// *random* chaos seeds, fault-rate mixes and thread counts — not just
+/// the hand-picked seed above.
+#[test]
+fn chaos_accounting_identity_holds_for_random_seeds() {
+    forall(
+        &PropConfig {
+            cases: 6,
+            seed: 0xC4A05,
+        },
+        |rng, _size| {
+            (
+                rng.below(1 << 32),            // chaos seed
+                rng.f64() * 0.08,              // panic rate
+                rng.f64() * 0.15,              // error rate
+                rng.f64() * 0.15,              // delay rate
+                1 + rng.below(3) as usize,     // submitter threads
+            )
+        },
+        |&(seed, panic_rate, error_rate, delay_rate, threads)| {
+            let (engine, faults) = chaos_engine(seed, (panic_rate, error_rate, delay_rate), 6);
+            let (submitted, tally) = hammer(&engine, seed, threads, 16);
+            faults.set_armed(false);
+            let alive = engine.infer(vec![1i32; SEQ_LEN], None).is_ok();
+            engine.stop_admissions();
+            engine.shutdown();
+            submitted == tally.total() && alive
+        },
+    );
+}

@@ -8,15 +8,14 @@
 
 #![cfg(feature = "xla")]
 
-use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::time::Duration;
 
-use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig};
+use dsa_serve::coordinator::{BatchPolicy, Engine, EngineConfig, SessionPolicy};
 use dsa_serve::kernels::Variant;
 use dsa_serve::runtime::registry::{Manifest, Registry};
 use dsa_serve::runtime::Arg;
-use dsa_serve::server;
+use dsa_serve::server::{Conn, QuotaConfig, ServerState};
 use dsa_serve::util::json::Json;
 use dsa_serve::util::prop::assert_allclose;
 use dsa_serve::workload::{Workload, WorkloadConfig};
@@ -117,9 +116,11 @@ fn engine_serves_and_model_beats_chance() {
                 max_batch: 8,
                 max_wait: Duration::from_millis(2),
                 queue_cap: 128,
+                default_deadline: None,
             },
             preload: true,
             router: None,
+            sessions: SessionPolicy::default(),
         },
     )
     .expect("engine");
@@ -135,11 +136,11 @@ fn engine_serves_and_model_beats_chance() {
     let mut labels = Vec::new();
     for r in trace {
         labels.push(r.label);
-        rxs.push(engine.submit(r.tokens, None).expect("submit"));
+        rxs.push(engine.submit(r.tokens, None, None).expect("submit"));
     }
     let mut correct = 0;
     for (rx, label) in rxs.into_iter().zip(labels) {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("channel").expect("served");
         assert_eq!(resp.logits.len(), man.task_classes);
         assert!(resp.latency > Duration::ZERO);
         if resp.pred as i32 == label {
@@ -185,14 +186,15 @@ fn variant_override_routing() {
     assert_eq!(resp_dsa.variant, Variant::Dsa { pct: 90 });
 }
 
-/// Server protocol: infer / metrics / ping round-trip via handle_line.
+/// Server protocol: infer / metrics / ping round-trip via a `Conn`.
 #[test]
 fn server_protocol_roundtrip() {
     let Some(man) = manifest() else { return };
     let engine = Arc::new(Engine::start(man.clone(), EngineConfig::default()).expect("engine"));
-    let stop = AtomicBool::new(false);
+    let state = Arc::new(ServerState::new());
+    let mut c = Conn::new(engine.clone(), state, QuotaConfig::default());
 
-    let pong = server::handle_line(r#"{"op":"ping"}"#, &engine, &stop).unwrap();
+    let pong = c.handle_line(r#"{"op":"ping"}"#).unwrap();
     assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
 
     let mut wl = Workload::new(WorkloadConfig {
@@ -203,15 +205,15 @@ fn server_protocol_roundtrip() {
     let r = wl.next_request();
     let toks: Vec<String> = r.tokens.iter().map(|t| t.to_string()).collect();
     let line = format!(r#"{{"op":"infer","tokens":[{}]}}"#, toks.join(","));
-    let resp = server::handle_line(&line, &engine, &stop).unwrap();
+    let resp = c.handle_line(&line).unwrap();
     assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
     assert!(resp.get("pred").is_some());
 
-    let metrics = server::handle_line(r#"{"op":"metrics"}"#, &engine, &stop).unwrap();
+    let metrics = c.handle_line(r#"{"op":"metrics"}"#).unwrap();
     assert!(metrics.get("completed").and_then(|v| v.as_f64()).unwrap_or(0.0) >= 1.0);
 
     // malformed input → structured error, no panic
-    let err = server::handle_line("{nope", &engine, &stop);
+    let err = c.handle_line("{nope");
     assert!(err.is_err());
 }
 

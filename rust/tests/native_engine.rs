@@ -3,7 +3,6 @@
 //! protocol — with no artifacts, no PJRT and no external crates. This is
 //! the coverage `cargo test -q` provides on a fresh checkout.
 
-use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -11,7 +10,7 @@ use dsa_serve::coordinator::{
     AdaptiveRouter, BatchPolicy, Engine, EngineConfig, NativeModelConfig, SessionPolicy,
 };
 use dsa_serve::kernels::Variant;
-use dsa_serve::server;
+use dsa_serve::server::{Conn, QuotaConfig, ServerState};
 use dsa_serve::util::json::Json;
 use dsa_serve::workload::{GenSession, Workload, WorkloadConfig};
 
@@ -31,6 +30,7 @@ fn engine(variant: &str) -> Engine {
                 max_batch: 8,
                 max_wait: Duration::from_millis(2),
                 queue_cap: 128,
+                default_deadline: None,
             },
             preload: true,
             router: None,
@@ -38,6 +38,16 @@ fn engine(variant: &str) -> Engine {
         },
     )
     .expect("native engine")
+}
+
+/// A protocol connection over a fresh server state (no sockets), with
+/// unlimited quotas unless the test configures them.
+fn conn(engine: &Arc<Engine>) -> (Conn, Arc<ServerState>) {
+    let state = Arc::new(ServerState::new());
+    (
+        Conn::new(engine.clone(), state.clone(), QuotaConfig::default()),
+        state,
+    )
 }
 
 /// Serve a burst of requests; the hand-constructed classifier must solve
@@ -56,11 +66,11 @@ fn serve_and_score(variant: &str, n: usize) -> (usize, f64) {
     let mut labels = Vec::new();
     for r in trace {
         labels.push(r.label);
-        rxs.push(engine.submit(r.tokens, None).expect("submit"));
+        rxs.push(engine.submit(r.tokens, None, None).expect("submit"));
     }
     let mut correct = 0;
     for (rx, label) in rxs.into_iter().zip(labels) {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("channel").expect("served");
         assert_eq!(resp.logits.len(), engine.classes());
         assert!(resp.latency > Duration::ZERO);
         assert_eq!(resp.variant, typed);
@@ -124,14 +134,14 @@ fn variant_override_routing() {
 #[test]
 fn unknown_variant_fails_at_parse_boundary() {
     assert!("bogus".parse::<Variant>().is_err());
-    let engine = engine("dense");
-    let stop = AtomicBool::new(false);
+    let engine = Arc::new(engine("dense"));
+    let (mut c, _state) = conn(&engine);
     let toks: Vec<String> = vec![1i32; SEQ_LEN].iter().map(|t| t.to_string()).collect();
     let line = format!(
         r#"{{"op":"infer","variant":"bogus","tokens":[{}]}}"#,
         toks.join(",")
     );
-    let err = server::handle_line(&line, &engine, &stop).expect_err("unknown variant");
+    let err = c.handle_line(&line).expect_err("unknown variant");
     assert!(
         format!("{err:#}").contains("bogus"),
         "error must name the rejected variant"
@@ -142,7 +152,7 @@ fn unknown_variant_fails_at_parse_boundary() {
         r#"{{"op":"infer","variant":90,"tokens":[{}]}}"#,
         toks.join(",")
     );
-    let err = server::handle_line(&line, &engine, &stop).expect_err("non-string variant");
+    let err = c.handle_line(&line).expect_err("non-string variant");
     assert!(
         format!("{err:#}").contains("must be a string"),
         "error must explain the malformed field"
@@ -153,11 +163,11 @@ fn unknown_variant_fails_at_parse_boundary() {
 
 /// The execute_batch runtime-failure contract, end to end: an
 /// unbuildable (representable-but-invalid) variant override reaches
-/// batch execution, the batch fails, the waiter channel is dropped so
-/// `infer` returns an error instead of hanging — and the engine stays
-/// healthy for subsequent requests.
+/// batch execution, the batch fails, and every waiter receives a typed
+/// `Failed` reply naming the failure — no hang, no dropped channel — and
+/// the engine stays healthy for subsequent requests.
 #[test]
-fn failing_batch_drops_waiters_and_engine_survives() {
+fn failing_batch_answers_waiters_and_engine_survives() {
     let e = engine("dense");
     let tokens = vec![1i32; SEQ_LEN];
     // Dsa { pct: 0 } parses nowhere but is constructible; the fail-closed
@@ -165,9 +175,10 @@ fn failing_batch_drops_waiters_and_engine_survives() {
     let err = e
         .infer(tokens.clone(), Some(Variant::Dsa { pct: 0 }))
         .expect_err("unbuildable variant batch must fail, not hang");
+    assert_eq!(err.code(), "error", "execution failure must carry the error code");
     assert!(
-        format!("{err:#}").contains("dropped"),
-        "waiter must observe the dropped channel: {err:#}"
+        format!("{err}").contains("no registered kernel family"),
+        "waiter must see the structured failure: {err}"
     );
     // The engine keeps serving.
     assert!(e.infer(tokens, None).is_ok());
@@ -176,7 +187,11 @@ fn failing_batch_drops_waiters_and_engine_survives() {
 #[test]
 fn wrong_length_rejected_at_submit() {
     let e = engine("dense");
-    assert!(e.submit(vec![1i32; SEQ_LEN - 1], None).is_err());
+    let err = e
+        .submit(vec![1i32; SEQ_LEN - 1], None, None)
+        .map(|_| ())
+        .expect_err("short request");
+    assert_eq!(err.code(), "invalid");
 }
 
 /// The worker-thread preload-failure path still reports synchronously at
@@ -247,6 +262,7 @@ fn adaptive_router_routes_under_load_and_reports() {
                 // later batches deterministically observe a backlog.
                 max_wait: Duration::from_millis(50),
                 queue_cap: 128,
+                default_deadline: None,
             },
             preload: true,
             // Built from config-style pairs: the from_pairs satellite's
@@ -268,11 +284,11 @@ fn adaptive_router_routes_under_load_and_reports() {
     let trace = wl.trace(33);
     let mut rxs = Vec::new();
     for r in trace {
-        rxs.push(engine.submit(r.tokens, None).expect("submit"));
+        rxs.push(engine.submit(r.tokens, None, None).expect("submit"));
     }
     let mut variants: Vec<Variant> = Vec::new();
     for rx in rxs {
-        variants.push(rx.recv().expect("response").variant);
+        variants.push(rx.recv().expect("channel").expect("served").variant);
     }
     let (dense, dsa90) = (Variant::Dense, Variant::Dsa { pct: 90 });
     assert!(
@@ -305,9 +321,9 @@ fn adaptive_router_routes_under_load_and_reports() {
 #[test]
 fn server_protocol_roundtrip() {
     let engine = Arc::new(engine("dsa90"));
-    let stop = AtomicBool::new(false);
+    let (mut c, state) = conn(&engine);
 
-    let pong = server::handle_line(r#"{"op":"ping"}"#, &engine, &stop).unwrap();
+    let pong = c.handle_line(r#"{"op":"ping"}"#).unwrap();
     assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
 
     let mut wl = Workload::new(WorkloadConfig {
@@ -318,7 +334,7 @@ fn server_protocol_roundtrip() {
     let r = wl.next_request();
     let toks: Vec<String> = r.tokens.iter().map(|t| t.to_string()).collect();
     let line = format!(r#"{{"op":"infer","tokens":[{}]}}"#, toks.join(","));
-    let resp = server::handle_line(&line, &engine, &stop).unwrap();
+    let resp = c.handle_line(&line).unwrap();
     assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
     assert!(resp.get("pred").is_some());
     assert_eq!(
@@ -326,7 +342,7 @@ fn server_protocol_roundtrip() {
         Some("dsa90")
     );
 
-    let metrics = server::handle_line(r#"{"op":"metrics"}"#, &engine, &stop).unwrap();
+    let metrics = c.handle_line(r#"{"op":"metrics"}"#).unwrap();
     assert!(
         metrics
             .get("completed")
@@ -335,19 +351,31 @@ fn server_protocol_roundtrip() {
             >= 1.0
     );
     // Worker-pool counters ride along in the stats response once a batch
-    // has executed; no router section without a configured router.
+    // has executed; no router section without a configured router. The
+    // overload section is always present (all zeroes on a healthy run).
     assert!(metrics.get("pool").is_some(), "pool stats in server metrics");
     assert!(metrics.get("router").is_none());
+    let overload = metrics.get("overload").expect("overload section in metrics");
+    assert_eq!(overload.get("shed").and_then(|v| v.as_f64()), Some(0.0));
+    assert_eq!(overload.get("quota_rejected").and_then(|v| v.as_f64()), Some(0.0));
 
     // malformed input → structured error, no panic
-    assert!(server::handle_line("{nope", &engine, &stop).is_err());
+    assert!(c.handle_line("{nope").is_err());
 
     // unknown op → error, engine still up
-    assert!(server::handle_line(r#"{"op":"frobnicate"}"#, &engine, &stop).is_err());
+    assert!(c.handle_line(r#"{"op":"frobnicate"}"#).is_err());
 
-    let bye = server::handle_line(r#"{"op":"shutdown"}"#, &engine, &stop).unwrap();
+    let bye = c.handle_line(r#"{"op":"shutdown"}"#).unwrap();
     assert_eq!(bye.get("stopping"), Some(&Json::Bool(true)));
-    assert!(stop.load(std::sync::atomic::Ordering::SeqCst));
+    assert!(state.stopping(), "shutdown op must flip the server stop flag");
+    assert!(!engine.accepting(), "shutdown op must stop engine admissions");
+    // Requests after shutdown get the structured shutting_down reply.
+    let refused = c.handle_line(&line).unwrap();
+    assert_eq!(refused.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(
+        refused.get("error").and_then(|v| v.as_str()),
+        Some("shutting_down")
+    );
 }
 
 fn join_tokens(v: &[i32]) -> String {
@@ -362,19 +390,19 @@ fn join_tokens(v: &[i32]) -> String {
 #[test]
 fn session_protocol_decode_matches_one_shot() {
     let engine = Arc::new(engine("dense"));
-    let stop = AtomicBool::new(false);
+    let (mut c, _state) = conn(&engine);
     let mut wl = Workload::new(WorkloadConfig {
         seq_len: SEQ_LEN,
         seed: 21,
         ..Default::default()
     });
     let s = wl.next_session(192);
-    let opened = server::handle_line(
-        &format!(r#"{{"op":"open","tokens":[{}]}}"#, join_tokens(&s.prompt)),
-        &engine,
-        &stop,
-    )
-    .expect("open");
+    let opened = c
+        .handle_line(&format!(
+            r#"{{"op":"open","tokens":[{}]}}"#,
+            join_tokens(&s.prompt)
+        ))
+        .expect("open");
     assert_eq!(opened.get("ok"), Some(&Json::Bool(true)));
     assert_eq!(opened.get("resident").and_then(|v| v.as_f64()), Some(192.0));
     assert_eq!(opened.get("variant").and_then(|v| v.as_str()), Some("dense"));
@@ -382,12 +410,11 @@ fn session_protocol_decode_matches_one_shot() {
 
     let mut last = None;
     for (i, &t) in s.steps.iter().enumerate() {
-        let reply = server::handle_line(
-            &format!(r#"{{"op":"decode","session":{sid},"token":{t}}}"#),
-            &engine,
-            &stop,
-        )
-        .expect("decode");
+        let reply = c
+            .handle_line(&format!(
+                r#"{{"op":"decode","session":{sid},"token":{t}}}"#
+            ))
+            .expect("decode");
         assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
         assert_eq!(
             reply.get("resident").and_then(|v| v.as_f64()),
@@ -400,12 +427,12 @@ fn session_protocol_decode_matches_one_shot() {
 
     let mut full = s.prompt.clone();
     full.extend_from_slice(&s.steps);
-    let one_shot = server::handle_line(
-        &format!(r#"{{"op":"infer","tokens":[{}]}}"#, join_tokens(&full)),
-        &engine,
-        &stop,
-    )
-    .expect("infer");
+    let one_shot = c
+        .handle_line(&format!(
+            r#"{{"op":"infer","tokens":[{}]}}"#,
+            join_tokens(&full)
+        ))
+        .expect("infer");
     let logits = |j: &Json| -> Vec<f64> {
         j.get("logits")
             .and_then(|l| l.as_arr())
@@ -424,12 +451,9 @@ fn session_protocol_decode_matches_one_shot() {
         one_shot.get("pred").and_then(|v| v.as_f64())
     );
 
-    let closed = server::handle_line(
-        &format!(r#"{{"op":"close","session":{sid}}}"#),
-        &engine,
-        &stop,
-    )
-    .expect("close");
+    let closed = c
+        .handle_line(&format!(r#"{{"op":"close","session":{sid}}}"#))
+        .expect("close");
     assert_eq!(closed.get("ok"), Some(&Json::Bool(true)));
     assert_eq!(
         closed.get("released").and_then(|v| v.as_f64()),
@@ -550,33 +574,150 @@ fn closed_session_caches_are_recycled_without_regrowth() {
 #[test]
 fn session_protocol_errors_are_structured() {
     let engine = Arc::new(engine("dense"));
-    let stop = AtomicBool::new(false);
-    let err = server::handle_line(
-        r#"{"op":"decode","session":999,"token":1}"#,
-        &engine,
-        &stop,
-    )
-    .expect_err("never-opened session");
+    let (mut c, _state) = conn(&engine);
+    // Engine-side rejections come back as structured replies with a
+    // machine-readable code, not dropped connections or panics.
+    let reply = c
+        .handle_line(r#"{"op":"decode","session":999,"token":1}"#)
+        .expect("never-opened session gets a structured reply");
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(reply.get("error").and_then(|v| v.as_str()), Some("error"));
     assert!(
-        format!("{err:#}").contains("unknown session"),
-        "error must name the stale session: {err:#}"
+        reply
+            .get("message")
+            .and_then(|v| v.as_str())
+            .is_some_and(|m| m.contains("unknown session")),
+        "reply must name the stale session: {reply:?}"
     );
-    let err = server::handle_line(r#"{"op":"decode","session":1}"#, &engine, &stop)
+    // Requests malformed at the protocol boundary fail before reaching
+    // the engine; the connection loop renders these as `invalid`.
+    let err = c
+        .handle_line(r#"{"op":"decode","session":1}"#)
         .expect_err("decode without token");
     assert!(format!("{err:#}").contains("missing token"), "{err:#}");
-    let err = server::handle_line(r#"{"op":"close"}"#, &engine, &stop)
+    let err = c
+        .handle_line(r#"{"op":"close"}"#)
         .expect_err("close without session id");
     assert!(format!("{err:#}").contains("missing session"), "{err:#}");
     // An over-length prompt dies at the submit boundary, before the
-    // worker or the backend ever see it.
+    // worker or the backend ever see it — structured `invalid` reply.
     let toks = join_tokens(&[1i32; SEQ_LEN + 1]);
-    let err = server::handle_line(
-        &format!(r#"{{"op":"open","tokens":[{toks}]}}"#),
-        &engine,
-        &stop,
-    )
-    .expect_err("over-length prompt");
-    assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    let reply = c
+        .handle_line(&format!(r#"{{"op":"open","tokens":[{toks}]}}"#))
+        .expect("over-length prompt gets a structured reply");
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(reply.get("error").and_then(|v| v.as_str()), Some("invalid"));
+    assert!(
+        reply
+            .get("message")
+            .and_then(|v| v.as_str())
+            .is_some_and(|m| m.contains("out of range")),
+        "{reply:?}"
+    );
     // The engine never saw a broken session op and keeps serving.
     assert!(engine.infer(vec![1i32; SEQ_LEN], None).is_ok());
+}
+
+/// `deadline_ms` is validated at the protocol boundary: non-numeric or
+/// non-positive values are rejected with a parse error before the engine
+/// sees the request, while a sane numeric budget flows through to a
+/// successful reply.
+#[test]
+fn deadline_ms_validated_at_protocol_boundary() {
+    let engine = Arc::new(engine("dense"));
+    let (mut c, _state) = conn(&engine);
+    let toks = join_tokens(&[1i32; SEQ_LEN]);
+    let err = c
+        .handle_line(&format!(
+            r#"{{"op":"infer","tokens":[{toks}],"deadline_ms":"soon"}}"#
+        ))
+        .expect_err("non-numeric deadline");
+    assert!(format!("{err:#}").contains("deadline_ms"), "{err:#}");
+    let err = c
+        .handle_line(&format!(
+            r#"{{"op":"infer","tokens":[{toks}],"deadline_ms":-5}}"#
+        ))
+        .expect_err("negative deadline");
+    assert!(format!("{err:#}").contains("positive"), "{err:#}");
+    // A generous budget is clamped and honored: the request serves fine.
+    let reply = c
+        .handle_line(&format!(
+            r#"{{"op":"infer","tokens":[{toks}],"deadline_ms":60000}}"#
+        ))
+        .expect("valid deadline");
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
+    // `null` means "no deadline", same as omitting the field.
+    let reply = c
+        .handle_line(&format!(
+            r#"{{"op":"infer","tokens":[{toks}],"deadline_ms":null}}"#
+        ))
+        .expect("null deadline");
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
+}
+
+/// Per-connection quotas reject over-limit work with structured
+/// `quota_exceeded` replies — a token bucket for request rate and a hard
+/// cap on concurrently open sessions — and every rejection is counted.
+#[test]
+fn per_connection_quotas_reject_with_structured_replies() {
+    let engine = Arc::new(engine("dense"));
+    let toks = join_tokens(&[1i32; SEQ_LEN]);
+
+    // Request-rate bucket: burst of 2 with a refill rate slow enough that
+    // the bucket cannot recover mid-test, so the third request bounces.
+    let state = Arc::new(ServerState::new());
+    let mut c = Conn::new(
+        engine.clone(),
+        state,
+        QuotaConfig {
+            rps: 0.001,
+            burst: 2.0,
+            max_sessions: 0,
+        },
+    );
+    let line = format!(r#"{{"op":"infer","tokens":[{toks}]}}"#);
+    for _ in 0..2 {
+        let reply = c.handle_line(&line).expect("within burst");
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
+    }
+    let reply = c.handle_line(&line).expect("structured quota rejection");
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(
+        reply.get("error").and_then(|v| v.as_str()),
+        Some("quota_exceeded")
+    );
+    assert!(reply.get("limit").is_some(), "rejection carries the limit");
+    assert_eq!(engine.metrics.quota_rejected(), 1);
+
+    // Open-session cap: a second concurrent open on the same connection
+    // is rejected, and closing the first frees the slot.
+    let state = Arc::new(ServerState::new());
+    let mut c = Conn::new(
+        engine.clone(),
+        state,
+        QuotaConfig {
+            rps: 0.0,
+            burst: 8.0,
+            max_sessions: 1,
+        },
+    );
+    let open = format!(r#"{{"op":"open","tokens":[{toks}]}}"#);
+    let first = c.handle_line(&open).expect("first open");
+    assert_eq!(first.get("ok"), Some(&Json::Bool(true)));
+    let sid = first.get("session").and_then(|v| v.as_f64()).expect("session id") as u64;
+    let reply = c.handle_line(&open).expect("structured session-cap rejection");
+    assert_eq!(
+        reply.get("error").and_then(|v| v.as_str()),
+        Some("quota_exceeded")
+    );
+    let closed = c
+        .handle_line(&format!(r#"{{"op":"close","session":{sid}}}"#))
+        .expect("close");
+    assert_eq!(closed.get("ok"), Some(&Json::Bool(true)));
+    let reopened = c.handle_line(&open).expect("reopen after close");
+    assert_eq!(
+        reopened.get("ok"),
+        Some(&Json::Bool(true)),
+        "closing a session must free its quota slot: {reopened:?}"
+    );
 }
