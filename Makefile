@@ -42,7 +42,10 @@ help:
 	@echo "                 appends a streamed decode-session point with TTFT/ITL"
 	@echo "                 percentiles — tune it with --sessions/--prefill/--steps;"
 	@echo "                 every rate point prints a typed outcomes line:"
-	@echo "                 served/overloaded/expired/errored always sum to requests)"
+	@echo "                 served/overloaded/expired/errored/session_lost always"
+	@echo "                 sum to requests; --kill-after N crashes replica 0 after"
+	@echo "                 the N-th submission to demo failover, retried shows in"
+	@echo "                 the outcomes line)"
 	@echo "  (serving)      dsa-serve serve is overload-safe: --deadline-ms N sets a"
 	@echo "                 server-side default deadline (0 = none), --queue-cap N"
 	@echo "                 bounds admissions (past it -> structured 'overloaded'"
@@ -53,6 +56,13 @@ help:
 	@echo "                 --quota-sessions set per-connection quotas (structured"
 	@echo "                 'quota_exceeded' replies); {\"op\":\"shutdown\"} drains"
 	@echo "                 all lanes then exits with zero in-flight work lost"
+	@echo "  (replication)  --replicas N serves through N supervised engine replicas"
+	@echo "                 (crash/wedge detection via heartbeat watchdog, tuned with"
+	@echo "                 --watchdog-ms; killed replicas respawn, accepted one-shots"
+	@echo "                 fail over to siblings, sessions on a dead replica answer"
+	@echo "                 structured 'session_lost'); --idle-timeout-ms N closes"
+	@echo "                 connections idle past N ms with a structured 'timeout'"
+	@echo "                 reply and releases their abandoned sessions"
 	@echo "  tile-plan      regenerate results/TILE_PLAN.json from the in-source"
 	@echo "                 kernels::tiles::TILE_TABLE (tune entries with the"
 	@echo "                 bench_kernels tile sweep; CI gates drift via --check)"

@@ -32,6 +32,15 @@
 //! drains: admissions stop, racing submissions are adopted, both session
 //! lanes and the one-shot queue flush, then the worker exits — zero
 //! in-flight work is dropped.
+//!
+//! **Replication hooks.** The worker publishes a monotone heartbeat tick
+//! ([`Engine::tick`]) every loop iteration and [`Engine::alive`] reports
+//! whether it still runs, so a [`ReplicaSet`](super::replica::ReplicaSet)
+//! supervisor can distinguish healthy / crashed / wedged replicas; the
+//! chaos entry points [`Engine::inject_crash`] (exit without draining —
+//! reply channels drop like a panic escaping the shield) and
+//! [`Engine::inject_wedge`] (stop heartbeating until torn down) simulate
+//! exactly the failures the supervisor exists to catch.
 
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -101,6 +110,24 @@ enum Msg {
     Request(InferRequest, Sender<ServeResult<InferResponse>>),
     Session(SessionJob),
     Shutdown,
+    /// Chaos: die on receipt *without* draining — parked waiters' reply
+    /// channels drop, exactly like a panic escaping the blast shield.
+    Die,
+    /// Chaos: stop heartbeating (and serving) but stay joinable — the
+    /// wedged worker idles until `running` flips, so a supervisor can
+    /// still tear it down with [`Engine::shutdown`].
+    Wedge,
+}
+
+/// What the worker loop should do after absorbing one inbound message.
+enum Step {
+    Continue,
+    /// Drain both lanes, answer every waiter, then exit (clean shutdown).
+    Drain,
+    /// Exit immediately without draining (simulated crash).
+    Crash,
+    /// Stop heartbeating and idle until torn down (simulated wedge).
+    Wedge,
 }
 
 /// Handle to a running engine.
@@ -116,6 +143,9 @@ pub struct Engine {
     /// `ShuttingDown` instead of enqueueing (the drain phase of
     /// shutdown).
     accepting: AtomicBool,
+    /// Monotone tick the worker bumps every loop iteration; a supervisor
+    /// watchdog reads it to distinguish "busy" from "wedged".
+    heartbeat: Arc<AtomicU64>,
     seq_len: usize,
     classes: usize,
 }
@@ -129,12 +159,14 @@ impl Engine {
     {
         let metrics = Arc::new(Metrics::new());
         let running = Arc::new(AtomicBool::new(true));
+        let heartbeat = Arc::new(AtomicU64::new(0));
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
 
         let worker = {
             let metrics = metrics.clone();
             let running = running.clone();
+            let heartbeat = heartbeat.clone();
             std::thread::Builder::new()
                 .name("dsa-engine".to_string())
                 .spawn(move || {
@@ -169,7 +201,7 @@ impl Engine {
                         crate::kernels::simd::active_isa()
                     );
                     let _ = ready_tx.send(Ok((backend.seq_len(), backend.classes())));
-                    worker_loop(backend.as_mut(), cfg, rx, metrics, running)
+                    worker_loop(backend.as_mut(), cfg, rx, metrics, running, heartbeat)
                 })
                 .context("spawning engine worker")?
         };
@@ -184,6 +216,7 @@ impl Engine {
             metrics,
             running,
             accepting: AtomicBool::new(true),
+            heartbeat,
             seq_len,
             classes,
         })
@@ -346,6 +379,42 @@ impl Engine {
         }
     }
 
+    /// Monotone heartbeat tick: the worker bumps it every loop iteration
+    /// (at least every ~50ms when healthy, even idle). A watchdog that
+    /// sees the tick frozen past its interval may conclude the worker is
+    /// wedged — size the interval above the worst-case batch latency.
+    pub fn tick(&self) -> u64 {
+        self.heartbeat.load(Ordering::SeqCst)
+    }
+
+    /// Whether the worker thread is still running. `false` after a clean
+    /// shutdown — or after a crash: a worker that died without draining
+    /// reads as dead here while its clients' reply channels read as
+    /// disconnected.
+    pub fn alive(&self) -> bool {
+        self.worker
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|h| !h.is_finished())
+            .unwrap_or(false)
+    }
+
+    /// Chaos: make the worker exit on receipt *without* draining, as if a
+    /// panic escaped the blast shield — every parked waiter's reply
+    /// channel drops. The supervisor (or a test) observes [`Engine::alive`]
+    /// flip false and respawns.
+    pub fn inject_crash(&self) {
+        let _ = self.tx.send(Msg::Die);
+    }
+
+    /// Chaos: make the worker stop heartbeating (and serving) while
+    /// staying joinable — the watchdog path. [`Engine::shutdown`] still
+    /// tears a wedged worker down promptly.
+    pub fn inject_wedge(&self) {
+        let _ = self.tx.send(Msg::Wedge);
+    }
+
     /// Stop admitting new work without stopping the worker: subsequent
     /// `submit`/`submit_session` calls answer `ShuttingDown` while
     /// already-admitted work keeps executing. First phase of drain.
@@ -392,17 +461,18 @@ struct SessionTable {
     next_id: u64,
 }
 
-/// Enqueue one inbound message; returns `false` on shutdown. Requests
-/// without a deadline inherit the policy default here (enqueue time is
-/// when the budget starts). A submission past `queue_cap` is answered
-/// with a typed `Overloaded` carrying the batcher's backlog-proportional
-/// retry hint — never a silently dropped channel.
+/// Enqueue one inbound message; the returned [`Step`] tells the worker
+/// loop whether to keep going, drain, crash, or wedge. Requests without a
+/// deadline inherit the policy default here (enqueue time is when the
+/// budget starts). A submission past `queue_cap` is answered with a typed
+/// `Overloaded` carrying the batcher's backlog-proportional retry hint —
+/// never a silently dropped channel.
 fn enqueue_msg(
     msg: Msg,
     batcher: &mut Batcher,
     waiters: &mut std::collections::HashMap<u64, Sender<ServeResult<InferResponse>>>,
     metrics: &Metrics,
-) -> bool {
+) -> Step {
     let retry_after_ms = |b: &Batcher| b.retry_after().as_millis() as u64;
     match msg {
         Msg::Request(mut req, rtx) => {
@@ -423,7 +493,7 @@ fn enqueue_msg(
                     }));
                 }
             }
-            true
+            Step::Continue
         }
         Msg::Session(mut job) => {
             if job.deadline.is_none() {
@@ -437,9 +507,11 @@ fn enqueue_msg(
                     retry_after_ms: retry_after_ms(batcher),
                 }));
             }
-            true
+            Step::Continue
         }
-        Msg::Shutdown => false,
+        Msg::Shutdown => Step::Drain,
+        Msg::Die => Step::Crash,
+        Msg::Wedge => Step::Wedge,
     }
 }
 
@@ -475,12 +547,24 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
     }
 }
 
+/// Idle without heartbeating until `running` flips false: the simulated
+/// wedge. Parked waiters stay parked (their senders live in this worker's
+/// stack), exactly like a worker stuck in a hung syscall — until the
+/// supervisor's teardown flips `running`, joins us, and the stack unwinds
+/// dropping every reply channel.
+fn wedge_idle(running: &AtomicBool) {
+    while running.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
 fn worker_loop(
     backend: &mut dyn InferBackend,
     cfg: EngineConfig,
     rx: Receiver<Msg>,
     metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
+    heartbeat: Arc<AtomicU64>,
 ) {
     let mut batcher = Batcher::new(cfg.policy.clone());
     let mut router = cfg.router.clone();
@@ -497,6 +581,10 @@ fn worker_loop(
     let mut dlogits: Vec<f32> = Vec::new();
 
     'outer: while running.load(Ordering::SeqCst) {
+        // Liveness signal for the supervisor watchdog: bump once per
+        // iteration (the idle recv below times out within 50ms, so a
+        // healthy worker's tick is never stale for long).
+        heartbeat.fetch_add(1, Ordering::SeqCst);
         // Sleep until the next deadline (or a message arrives).
         let timeout = batcher
             .next_deadline()
@@ -504,19 +592,20 @@ fn worker_loop(
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(msg) => {
-                if !enqueue_msg(msg, &mut batcher, &mut waiters, &metrics) {
-                    break;
+                match enqueue_msg(msg, &mut batcher, &mut waiters, &metrics) {
+                    Step::Continue => {}
+                    Step::Drain => break 'outer,
+                    Step::Crash => return,
+                    Step::Wedge => return wedge_idle(&running),
                 }
                 // Drain whatever else is already queued without sleeping.
-                let mut shutdown = false;
                 while let Ok(msg) = rx.try_recv() {
-                    if !enqueue_msg(msg, &mut batcher, &mut waiters, &metrics) {
-                        shutdown = true;
-                        break;
+                    match enqueue_msg(msg, &mut batcher, &mut waiters, &metrics) {
+                        Step::Continue => {}
+                        Step::Drain => break 'outer,
+                        Step::Crash => return,
+                        Step::Wedge => return wedge_idle(&running),
                     }
-                }
-                if shutdown {
-                    break 'outer;
                 }
             }
             Err(RecvTimeoutError::Timeout) => {}
@@ -554,6 +643,8 @@ fn worker_loop(
     // channel; adopt everything still in flight so each such request
     // gets a real reply (served / overloaded / expired) rather than a
     // dropped channel. Admissions are already gated off engine-side.
+    // A chaos Die/Wedge racing a clean shutdown is ignored here — the
+    // drain already in progress wins.
     while let Ok(msg) = rx.try_recv() {
         let _ = enqueue_msg(msg, &mut batcher, &mut waiters, &metrics);
     }

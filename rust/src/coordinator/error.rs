@@ -1,7 +1,8 @@
 //! Typed overload-safety outcomes for the serving path.
 //!
 //! Every admission decision the engine can take — accept, shed, expire,
-//! quota-reject, refuse during drain, fail — is one [`ServeError`] arm
+//! quota-reject, refuse during drain, lose a session to a replica crash,
+//! fail — is one [`ServeError`] arm
 //! with a stable wire code, so the server renders a structured
 //! `{"ok": false, "error": <code>, ...}` reply instead of a dropped line
 //! and tests/clients can match on codes instead of message prose.
@@ -31,6 +32,10 @@ pub enum ServeError {
     QuotaExceeded { what: &'static str, limit: u64 },
     /// Admissions are stopped; the engine is draining toward exit.
     ShuttingDown,
+    /// The replica holding this decode session crashed (or was torn down
+    /// as wedged) before the op could run: the session's KV cache is gone
+    /// and the id will never serve again — reopen to continue.
+    SessionLost { session: u64 },
     /// The request itself is malformed (bad length, bad field value).
     Invalid(String),
     /// Backend or batch execution failed — including panics caught by the
@@ -47,6 +52,7 @@ impl ServeError {
             ServeError::Expired { .. } => "expired",
             ServeError::QuotaExceeded { .. } => "quota_exceeded",
             ServeError::ShuttingDown => "shutting_down",
+            ServeError::SessionLost { .. } => "session_lost",
             ServeError::Invalid(_) => "invalid",
             ServeError::Failed(_) => "error",
         }
@@ -67,6 +73,9 @@ impl ServeError {
             ServeError::QuotaExceeded { limit, .. } => {
                 fields.push(("limit", Json::num(*limit as f64)));
             }
+            ServeError::SessionLost { session } => {
+                fields.push(("session", Json::num(*session as f64)));
+            }
             _ => {}
         }
         Json::obj(fields)
@@ -86,6 +95,9 @@ impl fmt::Display for ServeError {
                 write!(f, "client quota exceeded: {what} (limit {limit})")
             }
             ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::SessionLost { session } => {
+                write!(f, "session {session} lost: its replica crashed; reopen to continue")
+            }
             ServeError::Invalid(msg) => f.write_str(msg),
             // util::Error's Display already prints the full context chain.
             ServeError::Failed(e) => write!(f, "{e}"),
@@ -115,6 +127,7 @@ mod tests {
             "quota_exceeded"
         );
         assert_eq!(ServeError::ShuttingDown.code(), "shutting_down");
+        assert_eq!(ServeError::SessionLost { session: 7 }.code(), "session_lost");
         assert_eq!(ServeError::Invalid("x".into()).code(), "invalid");
         assert_eq!(ServeError::Failed(err!("boom")).code(), "error");
     }
@@ -130,6 +143,10 @@ mod tests {
         let j = ServeError::QuotaExceeded { what: "open sessions", limit: 2 }.to_json();
         assert_eq!(j.get("error").and_then(Json::as_str), Some("quota_exceeded"));
         assert_eq!(j.get("limit").and_then(Json::as_f64), Some(2.0));
+
+        let j = ServeError::SessionLost { session: 11 }.to_json();
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("session_lost"));
+        assert_eq!(j.get("session").and_then(Json::as_f64), Some(11.0));
     }
 
     #[test]

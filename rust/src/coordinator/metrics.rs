@@ -57,6 +57,21 @@ struct Inner {
     decode_steps: u64,
     /// Per-variant decode step latency (the serving inter-token latency).
     decode_latency: BTreeMap<Variant, Summary>,
+    // --- replica supervision (all zero until a ReplicaSet records) ---
+    /// Configured replica count (the gauge's denominator); the section
+    /// surfaces once this is nonzero.
+    replicas_configured: u64,
+    /// Replicas currently healthy (worker alive + heartbeat fresh).
+    replicas_alive: u64,
+    /// Crashed or wedged replicas the supervisor tore down.
+    replica_crashes: u64,
+    /// Fresh replicas the supervisor spawned to replace torn-down ones.
+    replica_respawns: u64,
+    /// One-shot requests transparently re-dispatched onto a sibling after
+    /// their replica died mid-flight (each still counts once as served).
+    retried: u64,
+    /// Session ops answered `session_lost` because their replica died.
+    session_lost: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -141,6 +156,58 @@ impl Metrics {
         let mut g = self.inner.lock().unwrap();
         g.sessions_evicted += 1;
         g.sessions_closed += 1;
+    }
+
+    /// Refresh the replica-health gauges (supervisor sweep / startup).
+    pub fn set_replica_gauges(&self, alive: usize, configured: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.replicas_alive = alive as u64;
+        g.replicas_configured = configured as u64;
+    }
+
+    /// Record one replica torn down as crashed or wedged.
+    pub fn record_replica_crash(&self) {
+        self.inner.lock().unwrap().replica_crashes += 1;
+    }
+
+    /// Record one fresh replica spawned to replace a torn-down one.
+    pub fn record_replica_respawn(&self) {
+        self.inner.lock().unwrap().replica_respawns += 1;
+    }
+
+    /// Record one one-shot request re-dispatched onto a sibling replica.
+    pub fn record_retried(&self) {
+        self.inner.lock().unwrap().retried += 1;
+    }
+
+    /// Record one session op answered `session_lost`.
+    pub fn record_session_lost(&self) {
+        self.inner.lock().unwrap().session_lost += 1;
+    }
+
+    /// Replicas currently healthy, as last gauged by the supervisor.
+    pub fn replicas_alive(&self) -> u64 {
+        self.inner.lock().unwrap().replicas_alive
+    }
+
+    /// Crashed/wedged replicas torn down so far.
+    pub fn replica_crashes(&self) -> u64 {
+        self.inner.lock().unwrap().replica_crashes
+    }
+
+    /// Replicas respawned so far.
+    pub fn replica_respawns(&self) -> u64 {
+        self.inner.lock().unwrap().replica_respawns
+    }
+
+    /// One-shot requests retried onto a sibling so far.
+    pub fn retried(&self) -> u64 {
+        self.inner.lock().unwrap().retried
+    }
+
+    /// Session ops answered `session_lost` so far.
+    pub fn session_lost(&self) -> u64 {
+        self.inner.lock().unwrap().session_lost
     }
 
     /// Record one decode step under the session's variant; `latency_s` is
@@ -271,6 +338,17 @@ impl Metrics {
                 p.workers, p.dispatches, p.tasks_executed, p.queue_highwater, p.scratch_grows
             ));
         }
+        if g.replicas_configured > 0 {
+            s.push_str(&format!(
+                "  replicas alive={}/{} crashes={} respawns={} retried={} session_lost={}\n",
+                g.replicas_alive,
+                g.replicas_configured,
+                g.replica_crashes,
+                g.replica_respawns,
+                g.retried,
+                g.session_lost
+            ));
+        }
         s
     }
 
@@ -371,6 +449,19 @@ impl Metrics {
                 Json::obj(vec![
                     ("rung", Json::str(rung.to_string())),
                     ("routed_batches", routed),
+                ]),
+            ));
+        }
+        if g.replicas_configured > 0 {
+            obj.push((
+                "replicas",
+                Json::obj(vec![
+                    ("alive", Json::num(g.replicas_alive as f64)),
+                    ("configured", Json::num(g.replicas_configured as f64)),
+                    ("crashes", Json::num(g.replica_crashes as f64)),
+                    ("respawns", Json::num(g.replica_respawns as f64)),
+                    ("retried", Json::num(g.retried as f64)),
+                    ("session_lost", Json::num(g.session_lost as f64)),
                 ]),
             ));
         }
@@ -478,6 +569,34 @@ mod tests {
         assert_eq!(o.get("errored").and_then(|v| v.as_f64()), Some(4.0));
         let report = m.report();
         assert!(report.contains("overload shed=3 expired=3 degraded_batches=1"));
+    }
+
+    /// The replicas section is absent until a ReplicaSet gauges it, then
+    /// surfaces the supervisor's health/failover counters.
+    #[test]
+    fn replicas_section_surfaces_once_gauged() {
+        let m = Metrics::new();
+        assert!(m.to_json().get("replicas").is_none());
+        m.set_replica_gauges(2, 3);
+        m.record_replica_crash();
+        m.record_replica_respawn();
+        m.record_retried();
+        m.record_retried();
+        m.record_session_lost();
+        assert_eq!(m.replicas_alive(), 2);
+        assert_eq!(m.replica_crashes(), 1);
+        assert_eq!(m.replica_respawns(), 1);
+        assert_eq!(m.retried(), 2);
+        assert_eq!(m.session_lost(), 1);
+        let j = m.to_json();
+        let r = j.get("replicas").expect("replicas section");
+        assert_eq!(r.get("alive").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(r.get("configured").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(r.get("crashes").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(r.get("respawns").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(r.get("retried").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(r.get("session_lost").and_then(|v| v.as_f64()), Some(1.0));
+        assert!(m.report().contains("replicas alive=2/3 crashes=1 respawns=1"));
     }
 
     #[test]

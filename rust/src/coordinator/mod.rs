@@ -24,8 +24,16 @@
 //!   worker exits with zero in-flight work dropped.
 //! * [`error`] — the typed overload-safety outcome [`ServeError`]
 //!   (`overloaded` / `expired` / `quota_exceeded` / `shutting_down` /
-//!   `invalid` / `error`), each with a stable wire code the server
-//!   renders as a structured `{"ok":false,...}` reply.
+//!   `session_lost` / `invalid` / `error`), each with a stable wire code
+//!   the server renders as a structured `{"ok":false,...}` reply.
+//! * [`replica`] — replicated serving: a [`ReplicaSet`] runs N engines
+//!   from one backend factory behind a heartbeat-watchdog supervisor
+//!   (crashed/wedged replicas torn down and respawned with the same
+//!   kernel registry preload), a failover dispatcher (accepted one-shots
+//!   whose replica dies mid-flight retry on a sibling within a bounded
+//!   budget), per-replica circuit breakers, and sticky sessions whose
+//!   replica death answers structured `session_lost`. The [`Serving`]
+//!   trait abstracts the TCP front end over `Engine` vs `ReplicaSet`.
 //! * [`router`] — queue-depth-driven variant ladder (dense → dsa90 →
 //!   dsa95) the engine worker consults per dispatch; typed rungs,
 //!   `AdaptiveRouter::from_pairs` validates names at construction; the
@@ -46,6 +54,7 @@ pub mod batcher;
 pub mod engine;
 pub mod error;
 pub mod metrics;
+pub mod replica;
 pub mod request;
 pub mod router;
 
@@ -54,5 +63,6 @@ pub use batcher::{BatchPolicy, Batcher, SessionJob};
 pub use engine::{Engine, EngineConfig, SessionPolicy};
 pub use error::{ServeError, ServeResult};
 pub use metrics::Metrics;
+pub use replica::{PendingInfer, ReplicaConfig, ReplicaSet, Serving};
 pub use request::{DecodeResponse, InferRequest, InferResponse, SessionOp, SessionReply};
 pub use router::{AdaptiveRouter, QueueLoad, Routed, Rung};

@@ -1,0 +1,1057 @@
+//! Replicated serving: N independent engine replicas behind a supervisor
+//! and a failover dispatcher.
+//!
+//! A [`ReplicaSet`] owns `N` [`Engine`]s — each with its own worker
+//! thread, batcher lanes, session table and metrics shard, all built from
+//! the **same** backend factory (same `KernelRegistry`, same
+//! `KernelSpec`), so every replica — including a respawned one — serves
+//! bit-identical logits. On top of them:
+//!
+//! * **Supervisor.** A thread polls each replica's heartbeat tick
+//!   ([`Engine::tick`]) and liveness ([`Engine::alive`]) every quarter
+//!   watchdog interval. A replica whose worker exited without draining
+//!   (a panic escaped the pool shield — simulated by
+//!   [`Engine::inject_crash`]) or whose heartbeat froze past the watchdog
+//!   interval (wedged — [`Engine::inject_wedge`]) is torn down
+//!   ([`Engine::shutdown`] joins it; a wedged worker exits on the running
+//!   flip) and replaced by a fresh replica from the same factory. The
+//!   `replicas` metrics section tracks `alive`/`configured` gauges plus
+//!   `crashes`/`respawns` counters.
+//! * **Dispatcher.** One-shot requests round-robin over healthy replicas.
+//!   A request accepted by a replica that dies before replying is
+//!   transparently retried on a sibling — bounded by
+//!   [`ReplicaConfig::retry_budget`], counted once under `retried`, and
+//!   still counted exactly once as served. The original deadline budget
+//!   spans all attempts.
+//! * **Circuit breaker.** Each replica carries a consecutive-failure
+//!   breaker: past [`ReplicaConfig::breaker_threshold`] failures it opens
+//!   (the dispatcher routes around it), after
+//!   [`ReplicaConfig::breaker_cooldown`] it admits one half-open probe,
+//!   and the probe's outcome closes or re-opens it — a flapping replica
+//!   is never fed sustained traffic.
+//! * **Sticky sessions.** Decode sessions pin to the replica that opened
+//!   them (a KV cache cannot migrate); the set hands out *global* session
+//!   ids and routes ops to the owning replica's inner id. When a replica
+//!   dies, ops on its sessions answer a structured
+//!   [`ServeError::SessionLost`] — never a hang — and the extended
+//!   accounting identity
+//!   `submitted == served + overloaded + expired + errored + session_lost`
+//!   holds under replica kills.
+//! * **Chaos sites.** With [`ReplicaConfig::faults`] set, every dispatch
+//!   rolls the seeded `replica.crash` / `replica.wedge` sites: any
+//!   injected fault kills (resp. wedges) the replica the round-robin
+//!   cursor points at, so chaos tests kill replicas deterministically by
+//!   seed.
+//!
+//! The [`Serving`] trait abstracts "something the TCP front end can serve
+//! from" — implemented by both a bare [`Engine`] and a [`ReplicaSet`], so
+//! the server (and its tests) work over either.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::backend::{InferBackend, NativeBackend, NativeModelConfig};
+use super::engine::{Engine, EngineConfig};
+use super::error::{ServeError, ServeResult};
+use super::metrics::Metrics;
+use super::request::{DecodeResponse, InferResponse, SessionOp, SessionReply};
+use crate::kernels::Variant;
+use crate::util::error::{err, Result};
+use crate::util::faults::{Fault, FaultInjector};
+use crate::util::json::Json;
+
+/// Anything the serving front end can drive: blocking one-shot inference,
+/// blocking session ops, metrics snapshots, and drain-then-shutdown.
+/// Implemented by [`Engine`] (single replica, zero overhead) and
+/// [`ReplicaSet`] (supervised replicas with failover).
+pub trait Serving: Send + Sync {
+    /// Expected token-sequence length for requests.
+    fn seq_len(&self) -> usize;
+    /// Logits per response.
+    fn classes(&self) -> usize;
+    /// Blocking one-shot inference with the typed outcome.
+    fn infer_with(
+        &self,
+        tokens: Vec<i32>,
+        variant: Option<Variant>,
+        deadline: Option<Duration>,
+    ) -> ServeResult<InferResponse>;
+    /// Blocking session op (`Open`/`Decode`/`Close`) with the typed reply.
+    fn session(&self, op: SessionOp, deadline: Option<Duration>) -> ServeResult<SessionReply>;
+    /// Machine-readable metrics snapshot (the `{"op":"metrics"}` body).
+    fn metrics_json(&self) -> Json;
+    /// Human-readable metrics report (printed at server exit).
+    fn metrics_report(&self) -> String;
+    /// Count one submission refused by a per-client quota.
+    fn note_quota_rejected(&self);
+    /// Stop admitting new work (first phase of drain).
+    fn stop_admissions(&self);
+    /// Drain-then-shutdown; idempotent.
+    fn drain(&self);
+}
+
+impl Serving for Engine {
+    fn seq_len(&self) -> usize {
+        Engine::seq_len(self)
+    }
+
+    fn classes(&self) -> usize {
+        Engine::classes(self)
+    }
+
+    fn infer_with(
+        &self,
+        tokens: Vec<i32>,
+        variant: Option<Variant>,
+        deadline: Option<Duration>,
+    ) -> ServeResult<InferResponse> {
+        let rx = self.submit(tokens, variant, deadline)?;
+        match rx.recv() {
+            Ok(outcome) => outcome,
+            // Admitted work is always answered; a closed channel can only
+            // mean shutdown raced us.
+            Err(_) => Err(ServeError::ShuttingDown),
+        }
+    }
+
+    fn session(&self, op: SessionOp, deadline: Option<Duration>) -> ServeResult<SessionReply> {
+        let rx = self.submit_session(op, deadline)?;
+        match rx.recv() {
+            Ok(outcome) => outcome,
+            Err(_) => Err(ServeError::ShuttingDown),
+        }
+    }
+
+    fn metrics_json(&self) -> Json {
+        self.metrics.to_json()
+    }
+
+    fn metrics_report(&self) -> String {
+        self.metrics.report()
+    }
+
+    fn note_quota_rejected(&self) {
+        self.metrics.record_quota_rejected();
+    }
+
+    fn stop_admissions(&self) {
+        Engine::stop_admissions(self);
+    }
+
+    fn drain(&self) {
+        self.shutdown();
+    }
+}
+
+/// Replication policy of a [`ReplicaSet`].
+#[derive(Debug, Clone)]
+pub struct ReplicaConfig {
+    /// Engine replicas to run (>= 1; each gets its own worker thread,
+    /// batcher, session table and metrics shard).
+    pub replicas: usize,
+    /// Heartbeat staleness past which a live-but-silent replica counts as
+    /// wedged (clamped to >= 100ms: a healthy idle worker ticks every
+    /// ~50ms, and the interval must also exceed the worst-case batch
+    /// latency). Also the supervisor's detection bound: no client waits
+    /// on a wedged replica longer than roughly this plus one poll tick.
+    pub watchdog: Duration,
+    /// How many times one accepted one-shot request may be re-dispatched
+    /// onto a sibling after its replica died mid-flight (0 = never; the
+    /// death then surfaces as a structured `error` reply).
+    pub retry_budget: usize,
+    /// Consecutive dispatch failures that open a replica's circuit
+    /// breaker.
+    pub breaker_threshold: u32,
+    /// How long an open breaker blocks dispatch before admitting one
+    /// half-open probe.
+    pub breaker_cooldown: Duration,
+    /// Chaos hook: when set, every dispatch rolls the `replica.crash` /
+    /// `replica.wedge` sites and any injected fault kills (resp. wedges)
+    /// the replica under the round-robin cursor.
+    pub faults: Option<Arc<FaultInjector>>,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        ReplicaConfig {
+            replicas: 1,
+            watchdog: Duration::from_millis(500),
+            retry_budget: 2,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
+            faults: None,
+        }
+    }
+}
+
+/// Consecutive-failure circuit breaker: Closed → (threshold failures) →
+/// Open → (cooldown) → HalfOpen probe → Closed on success / Open on
+/// failure. A half-open probe whose outcome never arrives (the client
+/// abandoned its wait) unblocks after another full cooldown.
+#[derive(Debug, Clone, Copy)]
+enum BreakerState {
+    Closed,
+    Open { since: Instant },
+    HalfOpen { since: Instant },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Breaker {
+    consecutive: u32,
+    state: BreakerState,
+}
+
+impl Breaker {
+    fn new() -> Breaker {
+        Breaker { consecutive: 0, state: BreakerState::Closed }
+    }
+
+    /// May this replica receive a dispatch right now? Transitions an
+    /// expired Open into the half-open probe as a side effect.
+    fn admit(&mut self, cooldown: Duration) -> bool {
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::Open { since } | BreakerState::HalfOpen { since } => {
+                if since.elapsed() >= cooldown {
+                    self.state = BreakerState::HalfOpen { since: Instant::now() };
+                    true
+                } else {
+                    // Open and still cooling, or a probe is already out.
+                    false
+                }
+            }
+        }
+    }
+
+    fn success(&mut self) {
+        self.consecutive = 0;
+        self.state = BreakerState::Closed;
+    }
+
+    fn failure(&mut self, threshold: u32) {
+        self.consecutive = self.consecutive.saturating_add(1);
+        if matches!(self.state, BreakerState::HalfOpen { .. })
+            || self.consecutive >= threshold.max(1)
+        {
+            self.state = BreakerState::Open { since: Instant::now() };
+        }
+    }
+}
+
+/// One replica slot: the live engine, its incarnation (bumped per
+/// respawn, so stale session routes and breaker notes can't touch a
+/// fresh replica), and its breaker.
+struct Slot {
+    engine: Arc<Engine>,
+    incarnation: u64,
+    breaker: Breaker,
+}
+
+/// Where a global session id lives: which slot, which incarnation of it,
+/// and the engine-local session id.
+struct SessionRoute {
+    slot: usize,
+    incarnation: u64,
+    inner: u64,
+}
+
+/// State shared between the handle, the dispatcher and the supervisor.
+struct Inner {
+    slots: Mutex<Vec<Slot>>,
+    sessions: Mutex<HashMap<u64, SessionRoute>>,
+    factory: Arc<dyn Fn() -> Result<Box<dyn InferBackend>> + Send + Sync>,
+    engine_cfg: EngineConfig,
+    cfg: ReplicaConfig,
+    metrics: Arc<Metrics>,
+    /// Round-robin dispatch cursor (also the chaos sites' victim pointer).
+    rr: AtomicUsize,
+    next_session: AtomicU64,
+    /// Supervisor liveness; flipped by shutdown *before* engines drain so
+    /// the supervisor never respawns a draining replica.
+    running: AtomicBool,
+    accepting: AtomicBool,
+    seq_len: usize,
+    classes: usize,
+}
+
+/// Handle to a supervised set of engine replicas. See module docs.
+pub struct ReplicaSet {
+    inner: Arc<Inner>,
+    supervisor: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// Spawn one replica from the shared factory (same registry/spec preload
+/// as every sibling — a respawn serves bit-identical logits).
+fn spawn_replica(
+    factory: &Arc<dyn Fn() -> Result<Box<dyn InferBackend>> + Send + Sync>,
+    engine_cfg: &EngineConfig,
+) -> Result<Arc<Engine>> {
+    let factory = factory.clone();
+    Engine::start_with(move || factory(), engine_cfg.clone()).map(Arc::new)
+}
+
+/// Pick a dispatch target: round-robin over slots that are alive,
+/// accepting, and admitted by their breaker. `exclude` skips the replica
+/// a retry just died on (ignored when it is the only slot).
+fn pick(inner: &Inner, exclude: Option<usize>) -> ServeResult<(usize, u64, Arc<Engine>)> {
+    let mut slots = inner.slots.lock().unwrap();
+    let n = slots.len();
+    let start = inner.rr.fetch_add(1, Ordering::Relaxed);
+    for k in 0..n {
+        let i = (start + k) % n;
+        if exclude == Some(i) && n > 1 {
+            continue;
+        }
+        let slot = &mut slots[i];
+        if !slot.engine.alive() || !slot.engine.accepting() {
+            continue;
+        }
+        if !slot.breaker.admit(inner.cfg.breaker_cooldown) {
+            continue;
+        }
+        return Ok((i, slot.incarnation, slot.engine.clone()));
+    }
+    // Every replica is dead, draining or breaker-blocked: a structured
+    // refusal with the watchdog as the retry hint (by then the supervisor
+    // will have respawned something).
+    inner.metrics.record_rejected(1);
+    Err(ServeError::Overloaded {
+        retry_after_ms: inner.cfg.watchdog.as_millis() as u64,
+    })
+}
+
+/// Note a dispatch outcome on a slot's breaker — only if the slot still
+/// holds the incarnation the dispatch went to (a respawned replica must
+/// not inherit its predecessor's failures).
+fn note(inner: &Inner, slot: usize, incarnation: u64, ok: bool) {
+    let mut slots = inner.slots.lock().unwrap();
+    if let Some(s) = slots.get_mut(slot) {
+        if s.incarnation == incarnation {
+            if ok {
+                s.breaker.success();
+            } else {
+                s.breaker.failure(inner.cfg.breaker_threshold);
+            }
+        }
+    }
+}
+
+/// Roll the seeded chaos sites once per dispatch: any injected fault at
+/// `replica.crash` kills — and at `replica.wedge` wedges — the replica
+/// the round-robin cursor currently points at.
+fn chaos_roll(inner: &Inner) {
+    let Some(faults) = &inner.cfg.faults else {
+        return;
+    };
+    let victim = |inner: &Inner| -> Option<Arc<Engine>> {
+        let slots = inner.slots.lock().unwrap();
+        if slots.is_empty() {
+            return None;
+        }
+        let i = inner.rr.load(Ordering::Relaxed) % slots.len();
+        Some(slots[i].engine.clone())
+    };
+    if faults.roll("replica.crash") != Fault::None {
+        if let Some(e) = victim(inner) {
+            e.inject_crash();
+        }
+    }
+    if faults.roll("replica.wedge") != Fault::None {
+        if let Some(e) = victim(inner) {
+            e.inject_wedge();
+        }
+    }
+}
+
+/// Drop a lost session's route, count it, and reply `SessionLost`.
+fn lost(inner: &Inner, session: u64) -> ServeError {
+    inner.sessions.lock().unwrap().remove(&session);
+    inner.metrics.record_session_lost();
+    ServeError::SessionLost { session }
+}
+
+/// Supervisor loop: watch heartbeats, tear down crashed/wedged replicas,
+/// respawn, and keep the alive gauge fresh.
+fn supervise(inner: Arc<Inner>) {
+    let watchdog = inner.cfg.watchdog;
+    let poll = (watchdog / 4).clamp(Duration::from_millis(5), Duration::from_millis(50));
+    let n = inner.cfg.replicas;
+    let now = Instant::now();
+    let mut seen: Vec<(u64, Instant)> = {
+        let slots = inner.slots.lock().unwrap();
+        slots.iter().map(|s| (s.engine.tick(), now)).collect()
+    };
+    // Which incarnation's death was already counted per slot, so a failed
+    // respawn (corpse lingers, retried next sweep) counts one crash.
+    let mut counted: Vec<Option<u64>> = vec![None; n];
+    while inner.running.load(Ordering::SeqCst) {
+        std::thread::sleep(poll);
+        if !inner.running.load(Ordering::SeqCst) {
+            break;
+        }
+        let mut alive = 0usize;
+        for i in 0..n {
+            let (engine, incarnation) = {
+                let slots = inner.slots.lock().unwrap();
+                (slots[i].engine.clone(), slots[i].incarnation)
+            };
+            let tick = engine.tick();
+            let now = Instant::now();
+            if tick != seen[i].0 {
+                seen[i] = (tick, now);
+            }
+            let dead = !engine.alive();
+            let wedged = !dead && now.duration_since(seen[i].1) > watchdog;
+            if !(dead || wedged) {
+                alive += 1;
+                continue;
+            }
+            if counted[i] != Some(incarnation) {
+                counted[i] = Some(incarnation);
+                inner.metrics.record_replica_crash();
+                crate::log_error!(
+                    "replica {i} (incarnation {incarnation}) {}; tearing down",
+                    if dead { "crashed" } else { "wedged" }
+                );
+            }
+            // Tear down: joins the worker (a wedged one exits on the
+            // running flip inside shutdown), dropping every parked reply
+            // channel — waiting clients fail over or see `session_lost`
+            // instead of hanging. Sessions routed to this incarnation
+            // convert lazily: the bumped incarnation makes their next op
+            // answer `SessionLost`.
+            engine.shutdown();
+            match spawn_replica(&inner.factory, &inner.engine_cfg) {
+                Ok(fresh) => {
+                    let mut slots = inner.slots.lock().unwrap();
+                    seen[i] = (fresh.tick(), Instant::now());
+                    slots[i] = Slot {
+                        engine: fresh,
+                        incarnation: incarnation + 1,
+                        breaker: Breaker::new(),
+                    };
+                    drop(slots);
+                    inner.metrics.record_replica_respawn();
+                    alive += 1;
+                }
+                Err(e) => {
+                    // Leave the corpse; the next sweep retries the respawn
+                    // (its crash is already counted).
+                    crate::log_error!("respawning replica {i}: {e}");
+                }
+            }
+        }
+        inner.metrics.set_replica_gauges(alive, n);
+    }
+}
+
+/// An accepted one-shot dispatch: hold it and [`PendingInfer::wait`] for
+/// the typed outcome. Submissions stay pipelined (submit a burst, then
+/// wait each); the failover retry runs inside `wait`.
+pub struct PendingInfer<'a> {
+    inner: &'a Inner,
+    rx: std::sync::mpsc::Receiver<ServeResult<InferResponse>>,
+    slot: usize,
+    incarnation: u64,
+    resubmit: Option<Resubmit>,
+}
+
+/// What a retry needs to re-dispatch the request on a sibling.
+struct Resubmit {
+    tokens: Vec<i32>,
+    variant: Option<Variant>,
+    deadline: Option<Duration>,
+    t0: Instant,
+    attempts: usize,
+}
+
+impl PendingInfer<'_> {
+    /// Block for the typed outcome. A reply channel that drops without an
+    /// answer means the replica died mid-flight: the request is
+    /// re-dispatched on a healthy sibling (up to the retry budget, with
+    /// the original deadline budget spanning attempts, each retry counted
+    /// under `retried`) — the served reply still counts exactly once.
+    pub fn wait(mut self) -> ServeResult<InferResponse> {
+        loop {
+            match self.rx.recv() {
+                Ok(Ok(resp)) => {
+                    note(self.inner, self.slot, self.incarnation, true);
+                    return Ok(resp);
+                }
+                Ok(Err(e)) => {
+                    if matches!(e, ServeError::Failed(_)) {
+                        note(self.inner, self.slot, self.incarnation, false);
+                    }
+                    return Err(e);
+                }
+                Err(_) => {
+                    note(self.inner, self.slot, self.incarnation, false);
+                    let Some(r) = self.resubmit.as_mut() else {
+                        return Err(ServeError::Failed(err!(
+                            "replica died before replying (no failover sibling)"
+                        )));
+                    };
+                    if r.attempts >= self.inner.cfg.retry_budget {
+                        return Err(ServeError::Failed(err!(
+                            "replica died before replying; retry budget ({}) exhausted",
+                            self.inner.cfg.retry_budget
+                        )));
+                    }
+                    r.attempts += 1;
+                    let deadline = match r.deadline {
+                        Some(budget) => {
+                            let remaining = budget.saturating_sub(r.t0.elapsed());
+                            if remaining.is_zero() {
+                                return Err(ServeError::Expired {
+                                    waited_ms: r.t0.elapsed().as_millis() as u64,
+                                });
+                            }
+                            Some(remaining)
+                        }
+                        None => None,
+                    };
+                    let (slot, incarnation, engine) = pick(self.inner, Some(self.slot))?;
+                    match engine.submit(r.tokens.clone(), r.variant, deadline) {
+                        Ok(rx) => {
+                            self.inner.metrics.record_retried();
+                            self.rx = rx;
+                            self.slot = slot;
+                            self.incarnation = incarnation;
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl ReplicaSet {
+    /// Start `cfg.replicas` engines over a backend factory — `Fn`, not
+    /// `FnOnce`, because the supervisor re-invokes it to respawn a dead
+    /// replica with the same registry/spec preload.
+    pub fn start_with<F>(
+        factory: F,
+        engine_cfg: EngineConfig,
+        mut cfg: ReplicaConfig,
+    ) -> Result<ReplicaSet>
+    where
+        F: Fn() -> Result<Box<dyn InferBackend>> + Send + Sync + 'static,
+    {
+        cfg.replicas = cfg.replicas.max(1);
+        cfg.watchdog = cfg.watchdog.max(Duration::from_millis(100));
+        let factory: Arc<dyn Fn() -> Result<Box<dyn InferBackend>> + Send + Sync> =
+            Arc::new(factory);
+        let mut slots = Vec::with_capacity(cfg.replicas);
+        let mut shape = (0usize, 0usize);
+        for i in 0..cfg.replicas {
+            match spawn_replica(&factory, &engine_cfg) {
+                Ok(engine) => {
+                    shape = (engine.seq_len(), engine.classes());
+                    slots.push(Slot { engine, incarnation: 0, breaker: Breaker::new() });
+                }
+                Err(e) => {
+                    for s in &slots {
+                        s.engine.shutdown();
+                    }
+                    return Err(e.context(format!("starting replica {i}")));
+                }
+            }
+        }
+        let inner = Arc::new(Inner {
+            slots: Mutex::new(slots),
+            sessions: Mutex::new(HashMap::new()),
+            factory,
+            engine_cfg,
+            cfg,
+            metrics: Arc::new(Metrics::new()),
+            rr: AtomicUsize::new(0),
+            next_session: AtomicU64::new(0),
+            running: AtomicBool::new(true),
+            accepting: AtomicBool::new(true),
+            seq_len: shape.0,
+            classes: shape.1,
+        });
+        inner
+            .metrics
+            .set_replica_gauges(inner.cfg.replicas, inner.cfg.replicas);
+        let supervisor = {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name("dsa-replica-supervisor".to_string())
+                .spawn(move || supervise(inner))
+                .map_err(|e| err!("spawning replica supervisor: {e}"))?
+        };
+        Ok(ReplicaSet { inner, supervisor: Mutex::new(Some(supervisor)) })
+    }
+
+    /// Start a replicated set of hermetic native-kernel engines.
+    pub fn start_native(
+        model: NativeModelConfig,
+        engine_cfg: EngineConfig,
+        cfg: ReplicaConfig,
+    ) -> Result<ReplicaSet> {
+        ReplicaSet::start_with(move || NativeBackend::boxed(model.clone()), engine_cfg, cfg)
+    }
+
+    /// Expected token-sequence length for requests.
+    pub fn seq_len(&self) -> usize {
+        self.inner.seq_len
+    }
+
+    /// Logits per response.
+    pub fn classes(&self) -> usize {
+        self.inner.classes
+    }
+
+    /// Configured replica count.
+    pub fn replicas(&self) -> usize {
+        self.inner.cfg.replicas
+    }
+
+    /// Replicas whose worker is currently running.
+    pub fn alive_replicas(&self) -> usize {
+        self.inner
+            .slots
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.engine.alive())
+            .count()
+    }
+
+    /// Replica-level metrics (the `replicas` section plus set-level
+    /// refusals); per-replica shards ride under `shards` in
+    /// [`ReplicaSet::metrics_to_json`].
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.inner.metrics
+    }
+
+    /// Dispatch one one-shot request to a healthy replica; call
+    /// [`PendingInfer::wait`] for the outcome (failover retries happen
+    /// there). The chaos sites roll here, once per dispatch.
+    pub fn submit(
+        &self,
+        mut tokens: Vec<i32>,
+        variant: Option<Variant>,
+        deadline: Option<Duration>,
+    ) -> ServeResult<PendingInfer<'_>> {
+        let inner = &*self.inner;
+        if !inner.accepting.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
+        }
+        chaos_roll(inner);
+        // Failover needs its own copy of the tokens (the engine consumes
+        // them); skip the clone when no retry could ever use it.
+        let mut resubmit = if inner.cfg.retry_budget > 0 && inner.cfg.replicas > 1 {
+            Some(Resubmit {
+                tokens: tokens.clone(),
+                variant,
+                deadline,
+                t0: Instant::now(),
+                attempts: 0,
+            })
+        } else {
+            None
+        };
+        let mut exclude = None;
+        let mut tries = 0usize;
+        loop {
+            let (slot, incarnation, engine) = pick(inner, exclude)?;
+            let payload = match &resubmit {
+                Some(r) => r.tokens.clone(),
+                None => std::mem::take(&mut tokens),
+            };
+            match engine.submit(payload, variant, deadline) {
+                Ok(rx) => {
+                    return Ok(PendingInfer {
+                        inner,
+                        rx,
+                        slot,
+                        incarnation,
+                        resubmit: resubmit.take(),
+                    })
+                }
+                // The replica's channel died under us (crash racing the
+                // dispatch) while the set is still accepting: fail over
+                // pre-acceptance — not counted as `retried`, the request
+                // was never accepted anywhere.
+                Err(ServeError::ShuttingDown)
+                    if inner.accepting.load(Ordering::SeqCst)
+                        && resubmit.is_some()
+                        && tries + 1 < inner.cfg.replicas =>
+                {
+                    note(inner, slot, incarnation, false);
+                    exclude = Some(slot);
+                    tries += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Blocking one-shot inference (submit + wait, including failover).
+    pub fn infer(&self, tokens: Vec<i32>, variant: Option<Variant>) -> ServeResult<InferResponse> {
+        self.submit(tokens, variant, None)?.wait()
+    }
+
+    /// Open a decode session on a healthy replica (blocking); returns
+    /// `(global session id, resident tokens, pinned variant)`. The
+    /// session is sticky: every later op routes to the opening replica,
+    /// and dies with it as a structured `session_lost`.
+    pub fn open_session(
+        &self,
+        prompt: Vec<i32>,
+        variant: Option<Variant>,
+    ) -> ServeResult<(u64, usize, Variant)> {
+        match self.session_impl(SessionOp::Open { prompt, variant }, None)? {
+            SessionReply::Opened { session, resident, variant } => {
+                Ok((session, resident, variant))
+            }
+            other => Err(ServeError::Failed(err!(
+                "replica returned mismatched session reply {other:?}"
+            ))),
+        }
+    }
+
+    /// Run one decode step on an open session (blocking).
+    pub fn decode(&self, session: u64, token: i32) -> ServeResult<DecodeResponse> {
+        match self.session_impl(SessionOp::Decode { session, token }, None)? {
+            SessionReply::Decoded(resp) => Ok(resp),
+            other => Err(ServeError::Failed(err!(
+                "replica returned mismatched session reply {other:?}"
+            ))),
+        }
+    }
+
+    /// Close a session (blocking), releasing its replica-side cache.
+    pub fn close_session(&self, session: u64) -> ServeResult<usize> {
+        match self.session_impl(SessionOp::Close { session }, None)? {
+            SessionReply::Closed { released, .. } => Ok(released),
+            other => Err(ServeError::Failed(err!(
+                "replica returned mismatched session reply {other:?}"
+            ))),
+        }
+    }
+
+    /// Session dispatch: translate global ↔ engine-local ids, keep the
+    /// route table honest, and convert replica deaths into `SessionLost`.
+    fn session_impl(
+        &self,
+        op: SessionOp,
+        deadline: Option<Duration>,
+    ) -> ServeResult<SessionReply> {
+        let inner = &*self.inner;
+        if !inner.accepting.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
+        }
+        chaos_roll(inner);
+        match op {
+            SessionOp::Open { prompt, variant } => {
+                let (slot, incarnation, engine) = pick(inner, None)?;
+                let op = SessionOp::Open { prompt, variant };
+                let reply = forward(inner, &engine, slot, incarnation, op, deadline)
+                    .ok_or_else(|| {
+                        // Died during open: no session was established,
+                        // so this is a plain structured failure, not a
+                        // lost session.
+                        ServeError::Failed(err!("replica died during session open"))
+                    })?;
+                match reply {
+                    Ok(SessionReply::Opened { session: local, resident, variant }) => {
+                        let global = inner.next_session.fetch_add(1, Ordering::Relaxed) + 1;
+                        inner.sessions.lock().unwrap().insert(global, SessionRoute {
+                            slot,
+                            incarnation,
+                            inner: local,
+                        });
+                        Ok(SessionReply::Opened { session: global, resident, variant })
+                    }
+                    other => other,
+                }
+            }
+            SessionOp::Decode { session, token } => {
+                let (engine, slot, incarnation, local) = self.route(session)?;
+                let op = SessionOp::Decode { session: local, token };
+                let reply = forward(inner, &engine, slot, incarnation, op, deadline)
+                    .ok_or_else(|| lost(inner, session))?;
+                match reply {
+                    Ok(SessionReply::Decoded(mut resp)) => {
+                        resp.session = session;
+                        Ok(SessionReply::Decoded(resp))
+                    }
+                    other => other,
+                }
+            }
+            SessionOp::Close { session } => {
+                let (engine, slot, incarnation, local) = self.route(session)?;
+                let op = SessionOp::Close { session: local };
+                let reply = forward(inner, &engine, slot, incarnation, op, deadline)
+                    .ok_or_else(|| lost(inner, session))?;
+                // Served or engine-side error: the client relinquished the
+                // id either way — the route is gone.
+                inner.sessions.lock().unwrap().remove(&session);
+                match reply {
+                    Ok(SessionReply::Closed { released, .. }) => {
+                        Ok(SessionReply::Closed { session, released })
+                    }
+                    other => other,
+                }
+            }
+        }
+    }
+
+    /// Resolve a global session id to its live replica, or answer
+    /// `SessionLost` (incarnation bumped / replica dead) or a structured
+    /// "unknown session" failure (never routed).
+    fn route(&self, session: u64) -> ServeResult<(Arc<Engine>, usize, u64, u64)> {
+        let inner = &*self.inner;
+        let (slot_idx, incarnation, local) = {
+            let sessions = inner.sessions.lock().unwrap();
+            match sessions.get(&session) {
+                Some(r) => (r.slot, r.incarnation, r.inner),
+                None => {
+                    return Err(ServeError::Failed(err!("unknown session {session}")));
+                }
+            }
+        };
+        let stale = {
+            let slots = inner.slots.lock().unwrap();
+            match slots.get(slot_idx) {
+                Some(s) if s.incarnation == incarnation && s.engine.alive() => {
+                    return Ok((s.engine.clone(), slot_idx, incarnation, local));
+                }
+                _ => true,
+            }
+        };
+        debug_assert!(stale);
+        Err(lost(inner, session))
+    }
+
+    /// Stop admitting new work across the set (and on every replica).
+    pub fn stop_admissions(&self) {
+        self.inner.accepting.store(false, Ordering::SeqCst);
+        for s in self.inner.slots.lock().unwrap().iter() {
+            s.engine.stop_admissions();
+        }
+    }
+
+    /// Whether the set still admits new work.
+    pub fn accepting(&self) -> bool {
+        self.inner.accepting.load(Ordering::SeqCst)
+    }
+
+    /// Chaos/test hook: crash replica `idx` (worker exits without
+    /// draining). The supervisor detects and respawns it.
+    pub fn inject_crash(&self, idx: usize) {
+        let slots = self.inner.slots.lock().unwrap();
+        if !slots.is_empty() {
+            slots[idx % slots.len()].engine.inject_crash();
+        }
+    }
+
+    /// Chaos/test hook: wedge replica `idx` (heartbeat freezes until the
+    /// watchdog tears it down).
+    pub fn inject_wedge(&self, idx: usize) {
+        let slots = self.inner.slots.lock().unwrap();
+        if !slots.is_empty() {
+            slots[idx % slots.len()].engine.inject_wedge();
+        }
+    }
+
+    /// Set-level metrics snapshot with per-replica `shards` attached.
+    pub fn metrics_to_json(&self) -> Json {
+        let mut doc = self.inner.metrics.to_json();
+        let shards: Vec<Json> = self
+            .inner
+            .slots
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.engine.metrics.to_json())
+            .collect();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("shards".into(), Json::Arr(shards));
+        }
+        doc
+    }
+
+    /// Human-readable report: the set-level counters, then each shard.
+    pub fn report(&self) -> String {
+        let mut s = self.inner.metrics.report();
+        let shards: Vec<(usize, String)> = self
+            .inner
+            .slots
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(i, slot)| (i, slot.engine.metrics.report()))
+            .collect();
+        for (i, shard) in shards {
+            s.push_str(&format!("replica {i}:\n{shard}"));
+        }
+        s
+    }
+
+    /// Drain-then-shutdown: stop admissions, stop the supervisor (so it
+    /// never respawns a draining replica), then drain every replica —
+    /// each answers its queued work before exiting. Idempotent.
+    pub fn shutdown(&self) {
+        self.inner.accepting.store(false, Ordering::SeqCst);
+        self.inner.running.store(false, Ordering::SeqCst);
+        if let Some(h) = self.supervisor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let engines: Vec<Arc<Engine>> = self
+            .inner
+            .slots
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.engine.clone())
+            .collect();
+        for e in &engines {
+            e.stop_admissions();
+        }
+        for e in &engines {
+            e.shutdown();
+        }
+        self.inner
+            .metrics
+            .set_replica_gauges(0, self.inner.cfg.replicas);
+    }
+}
+
+/// Forward one (already id-translated) session op to a replica and wait.
+/// `None` means the replica died before answering (channel dropped or
+/// refused while the set still accepts) — the caller converts that to
+/// `SessionLost` / a structured open failure.
+#[allow(clippy::type_complexity)]
+fn forward(
+    inner: &Inner,
+    engine: &Engine,
+    slot: usize,
+    incarnation: u64,
+    op: SessionOp,
+    deadline: Option<Duration>,
+) -> Option<ServeResult<SessionReply>> {
+    let rx = match engine.submit_session(op, deadline) {
+        Ok(rx) => rx,
+        Err(ServeError::ShuttingDown) if inner.accepting.load(Ordering::SeqCst) => {
+            note(inner, slot, incarnation, false);
+            return None;
+        }
+        Err(e) => return Some(Err(e)),
+    };
+    match rx.recv() {
+        Ok(Ok(reply)) => {
+            note(inner, slot, incarnation, true);
+            Some(Ok(reply))
+        }
+        Ok(Err(e)) => {
+            if matches!(e, ServeError::Failed(_)) {
+                note(inner, slot, incarnation, false);
+            }
+            Some(Err(e))
+        }
+        Err(_) => {
+            note(inner, slot, incarnation, false);
+            None
+        }
+    }
+}
+
+impl Drop for ReplicaSet {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl Serving for ReplicaSet {
+    fn seq_len(&self) -> usize {
+        ReplicaSet::seq_len(self)
+    }
+
+    fn classes(&self) -> usize {
+        ReplicaSet::classes(self)
+    }
+
+    fn infer_with(
+        &self,
+        tokens: Vec<i32>,
+        variant: Option<Variant>,
+        deadline: Option<Duration>,
+    ) -> ServeResult<InferResponse> {
+        self.submit(tokens, variant, deadline)?.wait()
+    }
+
+    fn session(&self, op: SessionOp, deadline: Option<Duration>) -> ServeResult<SessionReply> {
+        self.session_impl(op, deadline)
+    }
+
+    fn metrics_json(&self) -> Json {
+        self.metrics_to_json()
+    }
+
+    fn metrics_report(&self) -> String {
+        self.report()
+    }
+
+    fn note_quota_rejected(&self) {
+        self.inner.metrics.record_quota_rejected();
+    }
+
+    fn stop_admissions(&self) {
+        ReplicaSet::stop_admissions(self);
+    }
+
+    fn drain(&self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The breaker's full state machine: Closed survives sub-threshold
+    /// failures, opens at the threshold, blocks while cooling, admits one
+    /// half-open probe after the cooldown, and the probe's outcome closes
+    /// or re-opens it.
+    #[test]
+    fn breaker_state_machine() {
+        let cooldown = Duration::from_millis(20);
+        let mut b = Breaker::new();
+        assert!(b.admit(cooldown));
+        b.failure(3);
+        b.failure(3);
+        assert!(b.admit(cooldown), "below threshold stays closed");
+        b.failure(3);
+        assert!(!b.admit(cooldown), "third consecutive failure opens");
+        std::thread::sleep(cooldown + Duration::from_millis(5));
+        assert!(b.admit(cooldown), "cooldown admits the half-open probe");
+        assert!(!b.admit(cooldown), "only one probe at a time");
+        b.failure(3);
+        assert!(!b.admit(cooldown), "failed probe re-opens immediately");
+        std::thread::sleep(cooldown + Duration::from_millis(5));
+        assert!(b.admit(cooldown));
+        b.success();
+        assert!(b.admit(cooldown), "successful probe closes");
+        assert!(b.admit(cooldown), "closed admits freely");
+    }
+
+    #[test]
+    fn breaker_success_resets_consecutive_count() {
+        let cooldown = Duration::from_millis(10);
+        let mut b = Breaker::new();
+        for _ in 0..10 {
+            b.failure(3);
+            b.success();
+        }
+        assert!(b.admit(cooldown), "interleaved successes never open");
+    }
+}

@@ -15,8 +15,8 @@
 use std::sync::Arc;
 
 use dsa_serve::coordinator::{
-    AdaptiveRouter, BatchPolicy, Engine, EngineConfig, NativeModelConfig, ServeError,
-    SessionPolicy,
+    AdaptiveRouter, BatchPolicy, EngineConfig, NativeModelConfig, ReplicaConfig, ReplicaSet,
+    ServeError, SessionPolicy,
 };
 use dsa_serve::kernels::{Tile, TilePlan, Variant};
 use dsa_serve::util::error::{bail, err, Result};
@@ -68,7 +68,7 @@ fn usage() -> String {
     "dsa-serve — Dynamic Sparse Attention serving stack\n\
      \n\
      Commands:\n\
-       serve          start the TCP server     (--addr, --artifacts, --variant)\n\
+       serve          start the TCP server     (--addr, --variant, --replicas, --idle-timeout-ms)\n\
        infer          one-shot inference       (--artifacts, --variant, --label)\n\
        bench-serve    serving benchmark        (--requests, --rate|--rates, --decode, --out)\n\
        bench-compare  perf gate vs committed   (--baseline, --fresh, --max-regress)\n\
@@ -120,9 +120,23 @@ fn engine_args(program: &str) -> Args {
             "64",
             "decode-session capacity; opening past the cap LRU-evicts",
         )
+        .opt(
+            "replicas",
+            "1",
+            "independent engine replicas behind the supervisor: crashed or \
+             wedged replicas respawn, accepted one-shots fail over to a \
+             sibling, sessions stick to their replica (lost with it as a \
+             structured \"session_lost\")",
+        )
+        .opt(
+            "watchdog-ms",
+            "500",
+            "supervisor watchdog: a replica whose heartbeat stalls this \
+             long is torn down and respawned (min 100)",
+        )
 }
 
-fn start_engine(a: &Args) -> Result<Engine> {
+fn build_engine_config(a: &Args) -> Result<EngineConfig> {
     let queue_cap = a.get_usize("queue-cap").max(1);
     let router = match a.get("adaptive").as_str() {
         "off" => None,
@@ -151,7 +165,7 @@ fn start_engine(a: &Args) -> Result<Engine> {
         0 => None,
         ms => Some(std::time::Duration::from_millis(ms as u64)),
     };
-    let cfg = EngineConfig {
+    Ok(EngineConfig {
         default_variant: variant,
         policy: BatchPolicy {
             max_batch: a.get_usize("max-batch"),
@@ -164,7 +178,26 @@ fn start_engine(a: &Args) -> Result<Engine> {
         sessions: SessionPolicy {
             max_sessions: a.get_usize("max-sessions").max(1),
         },
-    };
+    })
+}
+
+/// Replication policy from the shared engine flags. The watchdog floor
+/// (100ms) is enforced again inside `ReplicaSet`.
+fn replica_config(a: &Args) -> ReplicaConfig {
+    ReplicaConfig {
+        replicas: a.get_usize("replicas").max(1),
+        watchdog: std::time::Duration::from_millis(a.get_usize("watchdog-ms").max(1) as u64),
+        ..Default::default()
+    }
+}
+
+/// Start the supervised replica set every serving subcommand runs on
+/// (`--replicas 1` is a single supervised engine — still auto-respawned
+/// on crash). The backend factory is re-invocable: the supervisor calls
+/// it again to respawn a dead replica with the same kernel preload.
+fn start_replica_set(a: &Args) -> Result<ReplicaSet> {
+    let cfg = build_engine_config(a)?;
+    let rcfg = replica_config(a);
     let artifacts = a.get("artifacts");
     let use_artifacts = match a.get("backend").as_str() {
         "native" => false,
@@ -178,19 +211,30 @@ fn start_engine(a: &Args) -> Result<Engine> {
     if use_artifacts {
         #[cfg(feature = "xla")]
         {
-            let manifest = Manifest::open(&artifacts)?;
-            return Engine::start(manifest, cfg);
+            // Validate the manifest once up front (fail at startup, not on
+            // first respawn); the factory reopens it per replica spawn.
+            Manifest::open(&artifacts)?;
+            let dir = artifacts.clone();
+            return ReplicaSet::start_with(
+                move || {
+                    let manifest = Manifest::open(&dir)?;
+                    dsa_serve::coordinator::backend::ArtifactBackend::boxed(manifest)
+                },
+                cfg,
+                rcfg,
+            );
         }
         #[cfg(not(feature = "xla"))]
         bail!("--backend artifacts needs --features xla (and a vendored xla crate)");
     }
     println!("using hermetic native-kernel backend (no artifacts)");
-    Engine::start_native(
+    ReplicaSet::start_native(
         NativeModelConfig {
             seq_len: a.get_usize("seq-len"),
             ..Default::default()
         },
         cfg,
+        rcfg,
     )
 }
 
@@ -209,6 +253,13 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             "0",
             "open decode sessions each connection may hold; 0 = unlimited",
         )
+        .opt(
+            "idle-timeout-ms",
+            "0",
+            "close a connection that completes no request for this long, \
+             after one final {\"ok\":false,\"error\":\"timeout\"} reply; \
+             0 = never",
+        )
         .parse(rest)
         .map_err(|u| err!("{u}"))?;
     let quota = server::QuotaConfig {
@@ -219,13 +270,18 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     if !quota.rps.is_finite() || quota.rps < 0.0 {
         bail!("--quota-rps must be a finite rate >= 0");
     }
-    let engine = Arc::new(start_engine(&a)?);
+    let idle_timeout = match a.get_usize("idle-timeout-ms") {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms as u64)),
+    };
+    let set = Arc::new(start_replica_set(&a)?);
     println!(
-        "engine up: variant={} seq_len={}",
+        "engine up: variant={} seq_len={} replicas={}",
         a.get("variant"),
-        engine.seq_len()
+        set.seq_len(),
+        set.replicas()
     );
-    server::serve(engine, &a.get("addr"), quota)
+    server::serve(set, &a.get("addr"), server::ServerConfig { quota, idle_timeout })
 }
 
 fn cmd_infer(rest: &[String]) -> Result<()> {
@@ -234,7 +290,7 @@ fn cmd_infer(rest: &[String]) -> Result<()> {
         .opt("seed", "0", "workload seed")
         .parse(rest)
         .map_err(|u| err!("{u}"))?;
-    let engine = start_engine(&a)?;
+    let engine = start_replica_set(&a)?;
     let mut wl = Workload::new(WorkloadConfig {
         seq_len: engine.seq_len(),
         seed: a.get_usize("seed") as u64,
@@ -295,10 +351,18 @@ fn cmd_bench_serve(rest: &[String]) -> Result<()> {
             "decode point: decode steps per session; 0 = stream to seq-len \
              (final-step accuracy then matches one-shot)",
         )
+        .opt(
+            "kill-after",
+            "0",
+            "chaos: crash one replica after the n-th submission of each \
+             rate point (needs --replicas >= 2 for failover; 0 = off) — \
+             proves retried > 0 with the accounting identity intact",
+        )
         .parse(rest)
         .map_err(|u| err!("{u}"))?;
-    let engine = Arc::new(start_engine(&a)?);
+    let engine = Arc::new(start_replica_set(&a)?);
     let n = a.get_usize("requests");
+    let kill_after = a.get_usize("kill-after");
     let rates: Vec<f64> = {
         let sweep = a.get("rates");
         if sweep.trim().is_empty() {
@@ -310,7 +374,7 @@ fn cmd_bench_serve(rest: &[String]) -> Result<()> {
     let mut rows: Vec<Json> = Vec::with_capacity(rates.len());
     for &rate in &rates {
         let (mut lat, correct, outcomes, wall) =
-            run_rate_point(&engine, n, rate, a.get_usize("seed"))?;
+            run_rate_point(&engine, n, rate, a.get_usize("seed"), kill_after)?;
         let name = if rate > 0.0 {
             format!("serve/native/rate{rate:.0}")
         } else {
@@ -334,6 +398,8 @@ fn cmd_bench_serve(rest: &[String]) -> Result<()> {
             ("overloaded", Json::num(outcomes.overloaded as f64)),
             ("expired", Json::num(outcomes.expired as f64)),
             ("errored", Json::num(outcomes.errored as f64)),
+            ("session_lost", Json::num(outcomes.session_lost as f64)),
+            ("retried", Json::num(outcomes.retried as f64)),
             ("throughput_rps", Json::num(outcomes.served as f64 / wall)),
             ("accuracy", Json::num(correct as f64 / served as f64)),
             ("mean_s", Json::num(lat.mean())),
@@ -379,7 +445,7 @@ fn cmd_bench_serve(rest: &[String]) -> Result<()> {
             ("itl_p99_s", Json::num(itl.percentile(99.0))),
         ]));
     }
-    println!("{}", engine.metrics.report());
+    println!("{}", engine.report());
     let out = a.get("out");
     if !out.trim().is_empty() {
         // "auto" anchors on the repo-root results/ directory (see
@@ -429,15 +495,19 @@ fn parse_rates(sweep: &str) -> Result<Vec<f64>> {
 }
 
 /// Typed serving outcomes of one bench point: every submission lands in
-/// exactly one bucket, so `served + overloaded + expired + errored`
-/// always equals the submissions made — the bench reports overload
-/// behavior instead of aborting on the first structured rejection.
+/// exactly one bucket, so `served + overloaded + expired + errored +
+/// session_lost` always equals the submissions made — the bench reports
+/// overload/failover behavior instead of aborting on the first structured
+/// rejection. `retried` is informational (failover re-dispatches; a
+/// retried-then-served request still counts once, as served).
 #[derive(Default)]
 struct ServeOutcomes {
     served: usize,
     overloaded: usize,
     expired: usize,
     errored: usize,
+    session_lost: usize,
+    retried: u64,
 }
 
 impl ServeOutcomes {
@@ -445,69 +515,82 @@ impl ServeOutcomes {
         match e {
             ServeError::Overloaded { .. } => self.overloaded += 1,
             ServeError::Expired { .. } => self.expired += 1,
+            ServeError::SessionLost { .. } => self.session_lost += 1,
             _ => self.errored += 1,
         }
     }
 
     fn total(&self) -> usize {
-        self.served + self.overloaded + self.expired + self.errored
+        self.served + self.overloaded + self.expired + self.errored + self.session_lost
     }
 
     fn line(&self) -> String {
         format!(
-            "outcomes: served={} overloaded={} expired={} errored={}",
-            self.served, self.overloaded, self.expired, self.errored
+            "outcomes: served={} overloaded={} expired={} errored={} session_lost={} retried={}",
+            self.served,
+            self.overloaded,
+            self.expired,
+            self.errored,
+            self.session_lost,
+            self.retried
         )
     }
 }
 
-/// One open/closed-loop rate point against a running engine: returns the
-/// latency summary (served requests only), correct predictions, the
-/// typed outcome counts, and wall seconds.
+/// One open/closed-loop rate point against a running replica set: returns
+/// the latency summary (served requests only), correct predictions, the
+/// typed outcome counts, and wall seconds. With `kill_after > 0`, replica
+/// 0 is crashed right after the n-th submission — in-flight requests fail
+/// over to siblings (`retried`), and the supervisor respawns it.
 fn run_rate_point(
-    engine: &Engine,
+    set: &ReplicaSet,
     n: usize,
     rate: f64,
     seed: usize,
+    kill_after: usize,
 ) -> Result<(Summary, usize, ServeOutcomes, f64)> {
     let mut wl = Workload::new(WorkloadConfig {
-        seq_len: engine.seq_len(),
+        seq_len: set.seq_len(),
         rate_rps: if rate > 0.0 { rate } else { 1.0 },
         arrival: if rate > 0.0 { Arrival::Poisson } else { Arrival::Closed },
         seed: seed as u64,
     });
     let trace = wl.trace(n);
+    let retried_before = set.metrics().retried();
     let t0 = std::time::Instant::now();
-    let mut rxs = Vec::with_capacity(n);
+    let mut pending = Vec::with_capacity(n);
     let mut correct = 0usize;
     let mut labels = Vec::with_capacity(n);
     let mut outcomes = ServeOutcomes::default();
-    for r in trace {
+    for (i, r) in trace.into_iter().enumerate() {
         if rate > 0.0 {
             std::thread::sleep(r.delay);
         }
-        match engine.submit(r.tokens, None, None) {
-            Ok(rx) => {
+        match set.submit(r.tokens, None, None) {
+            Ok(p) => {
                 labels.push(r.label);
-                rxs.push(rx);
+                pending.push(p);
             }
             Err(e) => outcomes.count(&e),
         }
+        if kill_after > 0 && i + 1 == kill_after {
+            set.inject_crash(0);
+        }
     }
     let mut lat = Summary::new();
-    for (rx, label) in rxs.into_iter().zip(labels) {
-        match rx.recv() {
-            Ok(Ok(resp)) => {
+    for (p, label) in pending.into_iter().zip(labels) {
+        match p.wait() {
+            Ok(resp) => {
                 outcomes.served += 1;
                 lat.add(resp.latency.as_secs_f64());
                 if resp.pred as i32 == label {
                     correct += 1;
                 }
             }
-            Ok(Err(e)) => outcomes.count(&e),
-            Err(_) => outcomes.count(&ServeError::ShuttingDown),
+            Err(e) => outcomes.count(&e),
         }
     }
+    outcomes.retried = set.metrics().retried().saturating_sub(retried_before);
     debug_assert_eq!(outcomes.total(), n, "every submission must land in one bucket");
     Ok((lat, correct, outcomes, t0.elapsed().as_secs_f64()))
 }
@@ -521,7 +604,7 @@ fn run_rate_point(
 /// one-shot request and the final-step accuracy is the one-shot accuracy.
 /// Returns (ttft, itl, correct, scored sessions, decoded tokens, wall s).
 fn run_decode_point(
-    engine: &Engine,
+    engine: &ReplicaSet,
     n: usize,
     prefill: usize,
     steps: usize,

@@ -37,6 +37,13 @@
 //! * `"quota_exceeded"` — this connection exceeded its request-rate
 //!   token bucket or its open-session cap; carries `limit`.
 //! * `"shutting_down"` — admissions are stopped (drain in progress).
+//! * `"session_lost"` — the replica holding this decode session crashed
+//!   (or was torn down as wedged); its cache is gone and the id will
+//!   never serve again — reopen to continue. Carries `session`. The
+//!   connection's quota slot for that session is released.
+//! * `"timeout"` — the connection sat idle past the server's
+//!   `--idle-timeout-ms`; the reply is `{"ok":false,"error":"timeout"}`
+//!   and the connection closes.
 //! * `"invalid"` — malformed request (bad JSON, non-numeric
 //!   `deadline_ms`, unknown variant, wrong token count, unknown op).
 //! * `"error"` — engine-side failure (unknown/evicted session ids,
@@ -46,6 +53,17 @@
 //! `deadline_ms` is accepted on `infer`/`open`/`decode` (a positive
 //! number of milliseconds, clamped to 10 minutes); `close` never expires —
 //! expiring a close would leak the session's cache.
+//!
+//! **Replication.** The front end serves from anything implementing
+//! [`Serving`] — a bare [`Engine`](crate::coordinator::Engine) or a
+//! [`ReplicaSet`](crate::coordinator::ReplicaSet) (`--replicas N`), where
+//! replica crashes surface only as `session_lost` replies and transparent
+//! one-shot retries, never as hung or dropped lines.
+//!
+//! **Abandoned connections.** A connection that drops (EOF, error, idle
+//! timeout) without closing its sessions has them closed server-side and
+//! its quota slots released — a flapping client cannot leak cache
+//! residency or pin its session quota.
 //!
 //! `{"op":"shutdown"}` initiates drain-then-shutdown: admissions stop,
 //! the accept loop is woken by a self-connection (no waiting for the next
@@ -60,7 +78,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{DecodeResponse, Engine, ServeError, ServeResult, SessionOp, SessionReply};
+use crate::coordinator::{DecodeResponse, ServeError, ServeResult, Serving, SessionOp, SessionReply};
 use crate::kernels::Variant;
 use crate::util::error::{bail, err, Context, Result};
 use crate::util::json::{self, Json};
@@ -89,6 +107,18 @@ impl Default for QuotaConfig {
     fn default() -> Self {
         QuotaConfig { rps: 0.0, burst: 8.0, max_sessions: 0 }
     }
+}
+
+/// Server-level knobs beyond per-client quotas.
+#[derive(Debug, Clone, Default)]
+pub struct ServerConfig {
+    /// Per-connection admission limits.
+    pub quota: QuotaConfig,
+    /// Close a connection that completes no request line for this long
+    /// (`None` = never): the client gets one final
+    /// `{"ok":false,"error":"timeout"}` reply, abandoned sessions are
+    /// closed and their quota slots released.
+    pub idle_timeout: Option<Duration>,
 }
 
 /// Token-bucket + session-set state of one connection.
@@ -182,21 +212,22 @@ impl ServerState {
     }
 }
 
-/// Serve `engine` on `addr` until a client sends `{"op":"shutdown"}`,
-/// then drain: stop admissions, finish in-flight lines, flush every
-/// engine lane, and return with zero admitted work dropped.
-pub fn serve(engine: Arc<Engine>, addr: &str, quota: QuotaConfig) -> Result<()> {
+/// Serve `engine` (a bare `Engine` or a `ReplicaSet`) on `addr` until a
+/// client sends `{"op":"shutdown"}`, then drain: stop admissions, finish
+/// in-flight lines, flush every engine lane, and return with zero
+/// admitted work dropped.
+pub fn serve(engine: Arc<dyn Serving>, addr: &str, cfg: ServerConfig) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     println!("dsa-serve listening on {addr}");
-    serve_listener(engine, listener, quota)
+    serve_listener(engine, listener, cfg)
 }
 
 /// [`serve`] over an already-bound listener (tests bind `127.0.0.1:0` and
 /// pass the listener in, so the port is known without a race).
 pub fn serve_listener(
-    engine: Arc<Engine>,
+    engine: Arc<dyn Serving>,
     listener: TcpListener,
-    quota: QuotaConfig,
+    cfg: ServerConfig,
 ) -> Result<()> {
     let state = Arc::new(ServerState::new());
     state.set_addr(listener.local_addr()?);
@@ -212,11 +243,16 @@ pub fn serve_listener(
                 continue;
             }
         };
-        let mut conn = Conn::new(engine.clone(), state.clone(), quota.clone());
+        let mut conn = Conn::new(engine.clone(), state.clone(), cfg.quota.clone())
+            .with_idle_timeout(cfg.idle_timeout);
         handles.push(std::thread::spawn(move || {
             if let Err(e) = handle_conn(stream, &mut conn) {
                 crate::log_debug!("connection ended: {e}");
             }
+            // Whatever ended the connection — clean close, EOF, error or
+            // idle timeout — its abandoned sessions must not leak cache
+            // residency or quota slots.
+            conn.release_abandoned();
         }));
     }
     // Drain: connection threads notice the stop flag within one read
@@ -225,24 +261,44 @@ pub fn serve_listener(
     for h in handles {
         let _ = h.join();
     }
-    engine.shutdown();
-    println!("{}", engine.metrics.report());
+    engine.drain();
+    println!("{}", engine.metrics_report());
     Ok(())
 }
 
-/// One client connection: the engine handle, the server's stop signal,
+/// One client connection: the serving handle, the server's stop signal,
 /// and this connection's quota state. Public so tests can drive the full
 /// protocol (including quotas and structured overload replies) without
 /// sockets.
 pub struct Conn {
-    engine: Arc<Engine>,
+    engine: Arc<dyn Serving>,
     state: Arc<ServerState>,
     quota: ClientQuota,
+    idle_timeout: Option<Duration>,
 }
 
 impl Conn {
-    pub fn new(engine: Arc<Engine>, state: Arc<ServerState>, quota: QuotaConfig) -> Conn {
-        Conn { engine, state, quota: ClientQuota::new(quota) }
+    pub fn new(engine: Arc<dyn Serving>, state: Arc<ServerState>, quota: QuotaConfig) -> Conn {
+        Conn { engine, state, quota: ClientQuota::new(quota), idle_timeout: None }
+    }
+
+    /// Builder: close the connection after this long without a completed
+    /// request line (`None` = never).
+    pub fn with_idle_timeout(mut self, idle_timeout: Option<Duration>) -> Conn {
+        self.idle_timeout = idle_timeout;
+        self
+    }
+
+    /// Close every session this connection still holds (disconnect
+    /// cleanup): each is closed engine-side — releasing its cache — and
+    /// its quota slot freed. Idempotent; an engine-side miss (already
+    /// evicted or lost with its replica) still frees the slot.
+    pub fn release_abandoned(&mut self) {
+        for session in std::mem::take(&mut self.quota.sessions) {
+            if let Err(e) = self.engine.session(SessionOp::Close { session }, None) {
+                crate::log_debug!("closing abandoned session {session}: {e}");
+            }
+        }
     }
 
     /// Dispatch one request line into a reply document. `Err` means the
@@ -258,7 +314,7 @@ impl Conn {
                 ("pong", Json::Bool(true)),
             ])),
             "metrics" => {
-                let mut m = self.engine.metrics.to_json();
+                let mut m = self.engine.metrics_json();
                 if let Json::Obj(map) = &mut m {
                     map.insert("ok".into(), Json::Bool(true));
                 }
@@ -274,20 +330,13 @@ impl Conn {
             }
             "infer" => {
                 if let Err(e) = self.quota.admit() {
-                    self.engine.metrics.record_quota_rejected();
+                    self.engine.note_quota_rejected();
                     return Ok(e.to_json());
                 }
                 let tokens = parse_tokens(&req)?;
                 let variant = parse_variant(&req)?;
                 let deadline = parse_deadline(&req)?;
-                let outcome = match self.engine.submit(tokens, variant, deadline) {
-                    Ok(rx) => match rx.recv() {
-                        Ok(outcome) => outcome,
-                        Err(_) => Err(ServeError::ShuttingDown),
-                    },
-                    Err(e) => Err(e),
-                };
-                match outcome {
+                match self.engine.infer_with(tokens, variant, deadline) {
                     Ok(resp) => Ok(Json::obj(vec![
                         ("ok", Json::Bool(true)),
                         ("id", Json::num(resp.id as f64)),
@@ -309,7 +358,7 @@ impl Conn {
             // requests die at the boundary as structured errors.
             "open" => {
                 if let Err(e) = self.quota.admit().and_then(|()| self.quota.admit_open()) {
-                    self.engine.metrics.record_quota_rejected();
+                    self.engine.note_quota_rejected();
                     return Ok(e.to_json());
                 }
                 let prompt = parse_tokens(&req)?;
@@ -331,7 +380,7 @@ impl Conn {
             }
             "decode" => {
                 if let Err(e) = self.quota.admit() {
-                    self.engine.metrics.record_quota_rejected();
+                    self.engine.note_quota_rejected();
                     return Ok(e.to_json());
                 }
                 let session = parse_session(&req)?;
@@ -343,12 +392,20 @@ impl Conn {
                 match self.session_call(SessionOp::Decode { session, token }, deadline) {
                     Ok(SessionReply::Decoded(resp)) => Ok(decode_reply(&resp)),
                     Ok(other) => Ok(mismatch_reply(&other)),
-                    Err(e) => Ok(e.to_json()),
+                    Err(e) => {
+                        // A session lost to a replica crash will never
+                        // serve again: free its quota slot so the client
+                        // can reopen without leaking capacity.
+                        if let ServeError::SessionLost { session } = e {
+                            self.quota.sessions.remove(&session);
+                        }
+                        Ok(e.to_json())
+                    }
                 }
             }
             "close" => {
                 if let Err(e) = self.quota.admit() {
-                    self.engine.metrics.record_quota_rejected();
+                    self.engine.note_quota_rejected();
                     return Ok(e.to_json());
                 }
                 let session = parse_session(&req)?;
@@ -370,22 +427,20 @@ impl Conn {
         }
     }
 
-    /// Blocking session op with a deadline budget; a worker that drained
-    /// away mid-wait reads as `ShuttingDown` (admitted work is always
-    /// answered, so a closed channel can only mean shutdown raced us).
+    /// Blocking session op with a deadline budget (failover/session-lost
+    /// semantics live behind the [`Serving`] impl).
     fn session_call(&self, op: SessionOp, deadline: Option<Duration>) -> ServeResult<SessionReply> {
-        let rx = self.engine.submit_session(op, deadline)?;
-        match rx.recv() {
-            Ok(outcome) => outcome,
-            Err(_) => Err(ServeError::ShuttingDown),
-        }
+        self.engine.session(op, deadline)
     }
 }
 
 /// Connection loop: a manual line splitter over a read-timeout socket, so
 /// an idle connection still notices drain within one [`READ_TICK`].
 /// Partial lines survive timeouts — bytes buffer until their newline
-/// arrives.
+/// arrives. With an idle timeout configured, a connection that completes
+/// no request line for that long (a trickled partial line does not
+/// count — slow-drip clients don't get to pin a thread) receives one
+/// final `{"ok":false,"error":"timeout"}` reply and is closed.
 fn handle_conn(stream: TcpStream, conn: &mut Conn) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
@@ -393,6 +448,7 @@ fn handle_conn(stream: TcpStream, conn: &mut Conn) -> Result<()> {
     let mut reader = stream;
     let mut buf: Vec<u8> = Vec::new();
     let mut chunk = [0u8; 4096];
+    let mut last_line = Instant::now();
     'conn: loop {
         match reader.read(&mut chunk) {
             Ok(0) => break, // EOF
@@ -405,6 +461,7 @@ fn handle_conn(stream: TcpStream, conn: &mut Conn) -> Result<()> {
                     if line.is_empty() {
                         continue;
                     }
+                    last_line = Instant::now();
                     let reply = match conn.handle_line(line) {
                         Ok(j) => j,
                         Err(e) => ServeError::Invalid(format!("{e:#}")).to_json(),
@@ -419,6 +476,20 @@ fn handle_conn(stream: TcpStream, conn: &mut Conn) -> Result<()> {
             Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
                 if conn.state.stopping() {
                     break;
+                }
+                if let Some(limit) = conn.idle_timeout {
+                    if last_line.elapsed() >= limit {
+                        let reply = Json::obj(vec![
+                            ("ok", Json::Bool(false)),
+                            ("error", Json::str("timeout")),
+                        ]);
+                        // Best-effort goodbye; the close (and session
+                        // cleanup in the caller) happens regardless.
+                        let _ = writer.write_all(reply.to_string().as_bytes());
+                        let _ = writer.write_all(b"\n");
+                        crate::log_debug!("peer {peer} idle past {limit:?}; closing");
+                        break;
+                    }
                 }
             }
             Err(e) if e.kind() == ErrorKind::Interrupted => {}

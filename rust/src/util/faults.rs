@@ -8,6 +8,13 @@
 //!   `backend.decode` before executing a batch, prefill or decode step.
 //! * `WorkerPool::with_faults` polls at `pool.task` inside each worker's
 //!   panic shield, so pool-level panics are exercised too.
+//! * `ReplicaSet` polls at `replica.crash` / `replica.wedge` once per
+//!   dispatch: **any** injected fault at `replica.crash` kills the replica
+//!   the round-robin cursor points at (its worker exits without draining,
+//!   as if a panic escaped the pool shield), and any injected fault at
+//!   `replica.wedge` wedges it (the worker stops heartbeating until the
+//!   supervisor's watchdog tears it down) — so chaos tests kill replicas
+//!   deterministically by seed.
 //!
 //! Rolls are seed-keyed and per-site counted: the k-th roll at a given
 //! site always yields the same [`Fault`] for a given seed, regardless of
@@ -215,6 +222,20 @@ mod tests {
         let sa: Vec<Fault> = (0..200).map(|_| f.roll("backend.run")).collect();
         let sb: Vec<Fault> = (0..200).map(|_| f.roll("backend.decode")).collect();
         assert_ne!(sa, sb);
+    }
+
+    /// The replica kill/wedge sites are ordinary seed-keyed sites: same
+    /// seed → same schedule, and the two sites draw independent streams
+    /// (a kill schedule never aliases a wedge schedule).
+    #[test]
+    fn replica_sites_are_deterministic_and_independent() {
+        let a = chaotic(42);
+        let b = chaotic(42);
+        let crash_a: Vec<Fault> = (0..200).map(|_| a.roll("replica.crash")).collect();
+        let crash_b: Vec<Fault> = (0..200).map(|_| b.roll("replica.crash")).collect();
+        assert_eq!(crash_a, crash_b);
+        let wedge_a: Vec<Fault> = (0..200).map(|_| a.roll("replica.wedge")).collect();
+        assert_ne!(crash_a, wedge_a);
     }
 
     #[test]

@@ -721,3 +721,164 @@ fn per_connection_quotas_reject_with_structured_replies() {
         "closing a session must free its quota slot: {reopened:?}"
     );
 }
+
+/// Abnormal disconnect: a client that vanishes without closing its
+/// sessions must leak neither engine-side cache nor quota slots. The
+/// server's connection loop runs [`Conn::release_abandoned`] on the way
+/// out; here it's driven directly against an engine capped at 2 live
+/// sessions — if cleanup leaked, the reconnect's opens would evict the
+/// stale pair instead of landing in free slots.
+#[test]
+fn abnormal_disconnect_releases_sessions_and_quota_slots() {
+    let engine = Arc::new(
+        Engine::start_native(
+            NativeModelConfig { seq_len: SEQ_LEN, ..Default::default() },
+            EngineConfig {
+                default_variant: Variant::Dense,
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(2),
+                    queue_cap: 128,
+                    default_deadline: None,
+                },
+                preload: true,
+                router: None,
+                sessions: SessionPolicy { max_sessions: 2 },
+            },
+        )
+        .expect("native engine"),
+    );
+    let toks = join_tokens(&[1i32; SEQ_LEN]);
+    let open = format!(r#"{{"op":"open","tokens":[{toks}]}}"#);
+    let quota = || QuotaConfig { rps: 0.0, burst: 32.0, max_sessions: 2 };
+
+    let mut c = Conn::new(engine.clone(), Arc::new(ServerState::new()), quota());
+    for _ in 0..2 {
+        let reply = c.handle_line(&open).expect("open within quota");
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply:?}");
+    }
+    let reply = c.handle_line(&open).expect("structured cap rejection");
+    assert_eq!(
+        reply.get("error").and_then(|v| v.as_str()),
+        Some("quota_exceeded")
+    );
+
+    // The client vanishes mid-session: disconnect cleanup closes
+    // everything the connection still held (idempotently).
+    c.release_abandoned();
+    c.release_abandoned();
+    drop(c);
+    let sessions = engine.metrics.to_json();
+    let sessions = sessions.get("sessions").expect("sessions section");
+    assert_eq!(
+        sessions.get("active").and_then(|v| v.as_f64()),
+        Some(0.0),
+        "abandoned sessions must be closed engine-side"
+    );
+
+    // A reconnect gets a fresh quota and truly free engine slots.
+    let mut c = Conn::new(engine.clone(), Arc::new(ServerState::new()), quota());
+    for _ in 0..2 {
+        let reply = c.handle_line(&open).expect("reopen after disconnect");
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply:?}");
+    }
+    let sessions = engine.metrics.to_json();
+    let sessions = sessions.get("sessions").expect("sessions section");
+    assert_eq!(
+        sessions.get("evicted").and_then(|v| v.as_f64()),
+        Some(0.0),
+        "released slots must be reused without LRU eviction"
+    );
+    c.release_abandoned();
+}
+
+/// The idle-timeout satellite, over a real socket: a connection that
+/// completes no request line within the limit gets one final structured
+/// `{"ok":false,"error":"timeout"}` reply, then the server closes it and
+/// disconnect cleanup releases the sessions it abandoned.
+#[test]
+fn idle_connections_time_out_with_a_structured_reply() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    use dsa_serve::server::{serve_listener, ServerConfig};
+    use dsa_serve::util::json;
+
+    let engine = Arc::new(engine("dense"));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let srv = {
+        let engine = engine.clone();
+        std::thread::spawn(move || {
+            serve_listener(
+                engine,
+                listener,
+                ServerConfig {
+                    quota: QuotaConfig::default(),
+                    idle_timeout: Some(Duration::from_millis(300)),
+                },
+            )
+            .expect("serve_listener")
+        })
+    };
+
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    // An active request works normally (and resets the idle clock).
+    let toks = join_tokens(&[1i32; SEQ_LEN]);
+    writeln!(writer, r#"{{"op":"open","tokens":[{toks}]}}"#).expect("send open");
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("open reply");
+    let reply = json::parse(&line).expect("reply json");
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply:?}");
+
+    // Then silence: the next bytes on the wire are the final timeout
+    // reply, followed by EOF.
+    line.clear();
+    reader.read_line(&mut line).expect("timeout reply");
+    let reply = json::parse(&line).expect("timeout json");
+    assert_eq!(
+        reply.get("error").and_then(|v| v.as_str()),
+        Some("timeout"),
+        "{reply:?}"
+    );
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)));
+    line.clear();
+    assert_eq!(
+        reader.read_line(&mut line).expect("eof"),
+        0,
+        "server must close the connection after the timeout reply"
+    );
+
+    // Disconnect cleanup ran: the abandoned session is closed
+    // engine-side (the connection thread finishes asynchronously).
+    let t0 = std::time::Instant::now();
+    loop {
+        let m = engine.metrics.to_json();
+        let active = m
+            .get("sessions")
+            .and_then(|s| s.get("active"))
+            .and_then(|v| v.as_f64());
+        if active == Some(0.0) {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "abandoned session not released: active={active:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // A second client shuts the server down cleanly.
+    let stream = TcpStream::connect(addr).expect("connect 2");
+    let mut writer = stream.try_clone().expect("clone 2");
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, r#"{{"op":"shutdown"}}"#).expect("send shutdown");
+    line.clear();
+    reader.read_line(&mut line).expect("shutdown reply");
+    drop(writer);
+    drop(reader);
+    srv.join().expect("server thread");
+}

@@ -1,0 +1,476 @@
+//! Replicated-serving tests: crash isolation, supervised respawn, and
+//! failover through [`ReplicaSet`].
+//!
+//! The invariant under test extends the chaos suite's accounting
+//! identity with the replica-death outcome —
+//!
+//! ```text
+//! submitted == served + overloaded + expired + errored + session_lost
+//! ```
+//!
+//! — under deterministic replica kills (`inject_crash`/`inject_wedge`)
+//! and seeded chaos at the `replica.crash`/`replica.wedge` sites. Every
+//! client gets exactly one structured reply (a hang fails the test by
+//! timeout), accepted one-shots whose replica dies retry on a sibling
+//! (`retried` counted exactly once as served), sessions die as
+//! structured `session_lost` that frees both the global route and the
+//! connection quota slot, the supervisor respawns killed replicas, and
+//! a respawned replica serves bit-identical logits (same backend
+//! factory, same kernel registry).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dsa_serve::coordinator::{
+    BatchPolicy, EngineConfig, NativeModelConfig, ReplicaConfig, ReplicaSet, ServeError,
+    SessionPolicy,
+};
+use dsa_serve::kernels::Variant;
+use dsa_serve::server::{Conn, QuotaConfig, ServerState};
+use dsa_serve::util::faults::{FaultConfig, FaultInjector};
+use dsa_serve::util::prop::{forall, Config as PropConfig};
+use dsa_serve::workload::{Workload, WorkloadConfig};
+
+const SEQ_LEN: usize = 64;
+
+/// One structured outcome per submission, keyed by wire code. `total()`
+/// must equal the number of submissions — the extended identity.
+#[derive(Debug, Default)]
+struct Tally {
+    served: usize,
+    overloaded: usize,
+    expired: usize,
+    errored: usize,
+    session_lost: usize,
+}
+
+impl Tally {
+    fn count_err(&mut self, e: &ServeError) {
+        match e.code() {
+            "overloaded" => self.overloaded += 1,
+            "expired" => self.expired += 1,
+            "session_lost" => self.session_lost += 1,
+            _ => self.errored += 1,
+        }
+    }
+
+    fn total(&self) -> usize {
+        self.served + self.overloaded + self.expired + self.errored + self.session_lost
+    }
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        default_variant: Variant::Dense,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 256,
+            default_deadline: None,
+        },
+        preload: true,
+        router: None,
+        sessions: SessionPolicy { max_sessions: 8 },
+    }
+}
+
+/// A replica set with a fast watchdog so respawn tests stay quick.
+fn set(replicas: usize) -> ReplicaSet {
+    ReplicaSet::start_native(
+        NativeModelConfig { seq_len: SEQ_LEN, ..Default::default() },
+        engine_cfg(),
+        ReplicaConfig {
+            replicas,
+            watchdog: Duration::from_millis(150),
+            ..Default::default()
+        },
+    )
+    .expect("replica set boots")
+}
+
+fn workload(seed: u64) -> Workload {
+    Workload::new(WorkloadConfig { seq_len: SEQ_LEN, seed, ..Default::default() })
+}
+
+/// Poll `cond` until it holds or `timeout` elapses.
+fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cond()
+}
+
+/// Infer with bounded retries across the respawn window (transient
+/// `overloaded` refusals while no replica is healthy are expected).
+fn infer_eventually(set: &ReplicaSet, tokens: Vec<i32>) -> Vec<f32> {
+    let t0 = Instant::now();
+    loop {
+        match set.infer(tokens.clone(), None) {
+            Ok(resp) => return resp.logits,
+            Err(_) if t0.elapsed() < Duration::from_secs(5) => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => panic!("replica set never recovered: {e}"),
+        }
+    }
+}
+
+/// The tentpole: kill a replica under a pipelined one-shot burst. The
+/// extended identity holds, at least one accepted request fails over to
+/// a sibling (counted `retried`, served exactly once), the supervisor
+/// respawns the corpse back to full strength, and the respawned replica
+/// serves bit-identical logits.
+#[test]
+fn replica_kill_mid_traffic_fails_over_and_respawns() {
+    let set = set(3);
+    let reference = set
+        .infer(vec![1i32; SEQ_LEN], None)
+        .expect("healthy set serves")
+        .logits;
+
+    let mut wl = workload(7);
+    let n = 60;
+    let mut tally = Tally::default();
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        match set.submit(wl.next_request().tokens, None, None) {
+            Ok(p) => pending.push(p),
+            Err(e) => tally.count_err(&e),
+        }
+    }
+    // Kill replica 0 with roughly a third of the burst parked on it; its
+    // reply channels drop and `wait` retries each on a sibling.
+    set.inject_crash(0);
+    for p in pending {
+        match p.wait() {
+            Ok(_) => tally.served += 1,
+            Err(e) => tally.count_err(&e),
+        }
+    }
+
+    assert_eq!(tally.total(), n, "extended accounting identity violated: {tally:?}");
+    assert!(tally.served > 0, "siblings must keep serving through the kill: {tally:?}");
+    let m = set.metrics();
+    assert!(m.retried() >= 1, "at least one accepted request must fail over");
+    assert!(
+        m.retried() as usize <= tally.served,
+        "a retried request is served exactly once (retried {} vs served {})",
+        m.retried(),
+        tally.served
+    );
+
+    // Supervisor: crash detected, corpse torn down, fresh replica up.
+    assert!(
+        wait_until(Duration::from_secs(5), || set.alive_replicas() == 3),
+        "supervisor must respawn back to 3 replicas"
+    );
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            m.replica_crashes() >= 1 && m.replica_respawns() >= 1 && m.replicas_alive() == 3
+        }),
+        "replica metrics must record the crash, the respawn, and full strength"
+    );
+
+    // Same factory, same registry: every slot (the respawn included, via
+    // round-robin) serves bit-identical logits for the same tokens.
+    for _ in 0..6 {
+        let logits = infer_eventually(&set, vec![1i32; SEQ_LEN]);
+        assert_eq!(logits, reference, "respawned replica must serve bit-identical logits");
+    }
+    set.shutdown();
+}
+
+/// A wedged replica (alive thread, dead heartbeat) trips the watchdog:
+/// torn down, counted as a crash, respawned, and the set keeps serving.
+#[test]
+fn wedged_replica_trips_the_watchdog_and_respawns() {
+    let set = set(2);
+    set.inject_wedge(0);
+    let m = set.metrics();
+    assert!(
+        wait_until(Duration::from_secs(5), || m.replica_crashes() >= 1),
+        "watchdog must flag the silent replica"
+    );
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            m.replica_respawns() >= 1 && set.alive_replicas() == 2
+        }),
+        "wedged replica must be torn down and respawned"
+    );
+    infer_eventually(&set, vec![1i32; SEQ_LEN]);
+    set.shutdown();
+}
+
+/// With a single replica there is no failover sibling: a kill answers
+/// every parked client with a structured error (never a hang, never a
+/// `retried` count), and the supervisor still restores service.
+#[test]
+fn single_replica_death_answers_every_client_without_retries() {
+    let set = set(1);
+    let mut wl = workload(11);
+    let n = 24;
+    let mut tally = Tally::default();
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        match set.submit(wl.next_request().tokens, None, None) {
+            Ok(p) => pending.push(p),
+            Err(e) => tally.count_err(&e),
+        }
+    }
+    set.inject_crash(0);
+    for p in pending {
+        match p.wait() {
+            Ok(_) => tally.served += 1,
+            Err(e) => tally.count_err(&e),
+        }
+    }
+    assert_eq!(tally.total(), n, "identity must hold with no sibling: {tally:?}");
+    assert_eq!(set.metrics().retried(), 0, "nothing to retry onto — retried must stay 0");
+    assert!(
+        wait_until(Duration::from_secs(5), || set.alive_replicas() == 1),
+        "supervisor must respawn the only replica"
+    );
+    infer_eventually(&set, vec![1i32; SEQ_LEN]);
+    set.shutdown();
+}
+
+/// Sticky sessions die with their replica as structured `session_lost`
+/// replies carrying the session id; the global route is freed (a second
+/// op on the same id is an ordinary unknown-session error) and reopening
+/// on the respawned replicas works.
+#[test]
+fn session_death_converts_to_structured_session_lost() {
+    let set = set(2);
+    let mut wl = workload(13);
+    let (sid1, _, _) = set
+        .open_session(wl.next_session(SEQ_LEN / 2).prompt, None)
+        .expect("open 1");
+    let (sid2, _, _) = set
+        .open_session(wl.next_session(SEQ_LEN / 2).prompt, None)
+        .expect("open 2");
+    assert_ne!(sid1, sid2, "global session ids must be distinct across replicas");
+
+    set.inject_crash(0);
+    set.inject_crash(1);
+    assert!(
+        wait_until(Duration::from_secs(5), || set.alive_replicas() == 2),
+        "both replicas must respawn"
+    );
+
+    for sid in [sid1, sid2] {
+        match set.decode(sid, 3) {
+            Err(ServeError::SessionLost { session }) => {
+                assert_eq!(session, sid, "session_lost must name the lost session");
+            }
+            other => panic!("expected session_lost for {sid}, got {other:?}"),
+        }
+    }
+    assert_eq!(set.metrics().session_lost(), 2);
+    // The route was freed with the first conversion: the id is now
+    // simply unknown, not lost again.
+    assert_eq!(set.decode(sid1, 3).unwrap_err().code(), "error");
+
+    // Respawned replicas accept fresh sessions and decode.
+    let (sid3, _, _) = set
+        .open_session(wl.next_session(SEQ_LEN / 2).prompt, None)
+        .expect("reopen on respawned replicas");
+    assert!(sid3 > sid2, "global ids keep monotonically increasing");
+    set.decode(sid3, 5).expect("decode on the reopened session");
+    set.shutdown();
+}
+
+/// Wire-level: through a server [`Conn`] the lost session renders as a
+/// structured `{"ok":false,"error":"session_lost"}` reply AND frees the
+/// connection's quota slot — the client reopens without leaking
+/// capacity.
+#[test]
+fn server_reply_carries_session_lost_and_frees_the_quota_slot() {
+    let set = Arc::new(set(2));
+    let state = Arc::new(ServerState::new());
+    let mut conn = Conn::new(
+        set.clone(),
+        state,
+        QuotaConfig { max_sessions: 1, ..Default::default() },
+    );
+    let tokens: Vec<String> = (0..SEQ_LEN / 2).map(|i| (i as i32 % 50).to_string()).collect();
+    let open = format!(r#"{{"op":"open","tokens":[{}]}}"#, tokens.join(","));
+
+    let reply = conn.handle_line(&open).expect("open parses");
+    assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(true), "{reply:?}");
+    let sid = reply.get("session").and_then(|v| v.as_f64()).expect("session id") as u64;
+
+    set.inject_crash(0);
+    set.inject_crash(1);
+    assert!(wait_until(Duration::from_secs(5), || set.alive_replicas() == 2));
+
+    let reply = conn
+        .handle_line(&format!(r#"{{"op":"decode","session":{sid},"token":3}}"#))
+        .expect("decode parses");
+    assert_eq!(
+        reply.get("error").and_then(|v| v.as_str()),
+        Some("session_lost"),
+        "{reply:?}"
+    );
+    assert_eq!(
+        reply.get("session").and_then(|v| v.as_f64()).map(|s| s as u64),
+        Some(sid),
+        "the reply names the lost session"
+    );
+
+    // The quota slot (max_sessions = 1) came back with the loss: a fresh
+    // open on the same connection is admitted, not quota_exceeded.
+    let reply = conn.handle_line(&open).expect("reopen parses");
+    assert_eq!(
+        reply.get("ok").and_then(|v| v.as_bool()),
+        Some(true),
+        "lost session must free its quota slot: {reply:?}"
+    );
+    set.shutdown();
+}
+
+/// Seeded chaos at the replica sites: `replica.crash`/`replica.wedge`
+/// fire from the dispatch path itself under mixed traffic (every third
+/// one-shot carries a tight deadline, plus a decode session). The
+/// extended identity holds, kills actually happened, and the set serves
+/// once the injector is disarmed. `DSA_CHAOS_SEED` overrides the seed so
+/// CI can run a matrix.
+#[test]
+fn seeded_replica_chaos_holds_the_extended_identity() {
+    let seed = std::env::var("DSA_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(101);
+    let faults = Arc::new(FaultInjector::new(FaultConfig {
+        // High enough that a kill is overwhelmingly likely within the
+        // run's ~260 site rolls, for any seed CI picks.
+        error_rate: 0.08,
+        ..FaultConfig::quiet(seed)
+    }));
+    faults.set_armed(false);
+    let set = ReplicaSet::start_native(
+        NativeModelConfig { seq_len: SEQ_LEN, ..Default::default() },
+        engine_cfg(),
+        ReplicaConfig {
+            replicas: 3,
+            watchdog: Duration::from_millis(150),
+            faults: Some(faults.clone()),
+            ..Default::default()
+        },
+    )
+    .expect("replica set boots with the injector disarmed");
+    faults.set_armed(true);
+
+    let mut wl = workload(seed);
+    let n = 120;
+    let mut tally = Tally::default();
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let deadline =
+            if i % 3 == 0 { Some(Duration::from_millis(50)) } else { None };
+        match set.submit(wl.next_request().tokens, None, deadline) {
+            Ok(p) => pending.push(p),
+            Err(e) => tally.count_err(&e),
+        }
+    }
+    for p in pending {
+        match p.wait() {
+            Ok(_) => tally.served += 1,
+            Err(e) => tally.count_err(&e),
+        }
+    }
+    let mut submitted = n;
+
+    // Session traffic through the same chaos: each blocking call is one
+    // submission with exactly one structured outcome.
+    let s = wl.next_session(SEQ_LEN / 2);
+    submitted += 1;
+    match set.open_session(s.prompt, None) {
+        Err(e) => tally.count_err(&e),
+        Ok((sid, _, _)) => {
+            tally.served += 1;
+            for &tok in s.steps.iter().take(4) {
+                submitted += 1;
+                match set.decode(sid, tok) {
+                    Ok(_) => tally.served += 1,
+                    Err(e) => tally.count_err(&e),
+                }
+            }
+            submitted += 1;
+            match set.close_session(sid) {
+                Ok(_) => tally.served += 1,
+                Err(e) => tally.count_err(&e),
+            }
+        }
+    }
+
+    assert_eq!(
+        tally.total(),
+        submitted,
+        "extended identity violated under seeded kills (seed {seed}): {tally:?}"
+    );
+    assert!(
+        faults.injected_total() > 0,
+        "chaos run must actually kill replicas (seed {seed})"
+    );
+    // Disarm and prove the supervisor restored service.
+    faults.set_armed(false);
+    infer_eventually(&set, vec![1i32; SEQ_LEN]);
+    set.shutdown();
+}
+
+/// Property: the extended identity, zero client hangs (exactly one
+/// outcome per submission — a hang times the test out), supervised
+/// recovery to full strength, and bit-identical logits after respawn
+/// hold across random workload seeds × replica counts {1,2,4} × kill
+/// schedules.
+#[test]
+fn identity_and_determinism_hold_for_random_kill_schedules() {
+    forall(
+        &PropConfig { cases: 5, seed: 0x5E7_CA11 },
+        |rng, _size| {
+            let replicas = [1usize, 2, 4][rng.below(3) as usize];
+            (
+                rng.below(1 << 32),                  // workload seed
+                replicas,                            // replica count
+                1 + rng.below(20) as usize,          // kill after this many submissions
+                rng.below(replicas as u64) as usize, // victim slot
+            )
+        },
+        |&(seed, replicas, kill_after, victim)| {
+            let set = set(replicas);
+            let reference = set
+                .infer(vec![1i32; SEQ_LEN], None)
+                .expect("healthy set serves")
+                .logits;
+            let mut wl = workload(seed);
+            let n = 30;
+            let mut tally = Tally::default();
+            let mut pending = Vec::new();
+            for i in 0..n {
+                if i == kill_after {
+                    set.inject_crash(victim);
+                }
+                match set.submit(wl.next_request().tokens, None, None) {
+                    Ok(p) => pending.push(p),
+                    Err(e) => tally.count_err(&e),
+                }
+            }
+            for p in pending {
+                match p.wait() {
+                    Ok(_) => tally.served += 1,
+                    Err(e) => tally.count_err(&e),
+                }
+            }
+            let identity = tally.total() == n;
+            let recovered =
+                wait_until(Duration::from_secs(5), || set.alive_replicas() == replicas);
+            let logits = infer_eventually(&set, vec![1i32; SEQ_LEN]);
+            set.shutdown();
+            identity && recovered && logits == reference
+        },
+    );
+}
