@@ -45,7 +45,9 @@ help:
 	@echo "                 served/overloaded/expired/errored/session_lost always"
 	@echo "                 sum to requests; --kill-after N crashes replica 0 after"
 	@echo "                 the N-th submission to demo failover, retried shows in"
-	@echo "                 the outcomes line)"
+	@echo "                 the outcomes line — with --decode the kill lands mid-"
+	@echo "                 stream and the decode outcomes line proves the sessions"
+	@echo "                 migrated instead of dying: decoded/migrated/session_lost)"
 	@echo "  (serving)      dsa-serve serve is overload-safe: --deadline-ms N sets a"
 	@echo "                 server-side default deadline (0 = none), --queue-cap N"
 	@echo "                 bounds admissions (past it -> structured 'overloaded'"
@@ -59,10 +61,18 @@ help:
 	@echo "  (replication)  --replicas N serves through N supervised engine replicas"
 	@echo "                 (crash/wedge detection via heartbeat watchdog, tuned with"
 	@echo "                 --watchdog-ms; killed replicas respawn, accepted one-shots"
-	@echo "                 fail over to siblings, sessions on a dead replica answer"
-	@echo "                 structured 'session_lost'); --idle-timeout-ms N closes"
-	@echo "                 connections idle past N ms with a structured 'timeout'"
-	@echo "                 reply and releases their abandoned sessions"
+	@echo "                 fail over to siblings); decode sessions are durable: each"
+	@echo "                 one's journal replays onto a sibling when its replica dies,"
+	@echo "                 bounded by --replay-budget-tokens N (0 = never migrate;"
+	@echo "                 exhausted migrations answer structured 'session_lost');"
+	@echo "                 --max-resident-tokens N refuses opens past a global"
+	@echo "                 journal-token budget ('quota_exceeded'); {\"op\":\"health\"}"
+	@echo "                 reports per-replica liveness/breaker/resident tokens and"
+	@echo "                 {\"op\":\"drain_replica\",\"slot\":i} migrates a replica's"
+	@echo "                 sessions off then swaps in a fresh engine (rolling-restart"
+	@echo "                 building block); --idle-timeout-ms N closes connections"
+	@echo "                 idle past N ms with a structured 'timeout' reply and"
+	@echo "                 releases their abandoned sessions"
 	@echo "  tile-plan      regenerate results/TILE_PLAN.json from the in-source"
 	@echo "                 kernels::tiles::TILE_TABLE (tune entries with the"
 	@echo "                 bench_kernels tile sweep; CI gates drift via --check)"

@@ -81,6 +81,23 @@ pub trait InferBackend {
         bail!("backend does not support decode sessions")
     }
 
+    /// Rebuild session `id` from a journal: prefill `prompt`, then
+    /// append `decoded` without running the decode kernel. Because the
+    /// kernel never mutates the cache, the resulting state is bitwise-
+    /// identical to having decoded the same tokens step by step — this
+    /// is the migration path for sessions replayed off a dead replica.
+    /// Returns the resident token count (`prompt.len() + decoded.len()`).
+    fn reopen_session(
+        &mut self,
+        id: u64,
+        variant: Variant,
+        prompt: &[i32],
+        decoded: &[i32],
+    ) -> Result<usize> {
+        let _ = (id, variant, prompt, decoded);
+        bail!("backend does not support decode sessions")
+    }
+
     /// Append `token` to session `id` and run one decode step, writing
     /// `classes()` logits into `logits` (cleared first; the engine worker
     /// owns one warm buffer, so steady-state decode performs no per-step
@@ -316,6 +333,37 @@ impl InferBackend for NativeBackend {
         }
         let cache = self.cache_pool.take();
         let sess = self.model.open_session(prompt, cache, &mut self.onehot);
+        let resident = sess.len();
+        self.sessions.insert(id, NativeSession { sess, variant });
+        Ok(resident)
+    }
+
+    fn reopen_session(
+        &mut self,
+        id: u64,
+        variant: Variant,
+        prompt: &[i32],
+        decoded: &[i32],
+    ) -> Result<usize> {
+        // Same chaos site as open: a reopen is an open from the backend's
+        // point of view, so fault matrices cover both with one knob.
+        self.fire("backend.open")?;
+        self.ensure_kernel(variant)?;
+        if self.sessions.contains_key(&id) {
+            bail!("session {id} already open");
+        }
+        let sl = self.model.seq_len();
+        let total = prompt.len() + decoded.len();
+        if prompt.is_empty() || total > sl {
+            bail!(
+                "replay length {total} (prompt {} + decoded {}) out of range 1..={sl} \
+                 for session {id}",
+                prompt.len(),
+                decoded.len()
+            );
+        }
+        let cache = self.cache_pool.take();
+        let sess = self.model.reopen_session(prompt, decoded, cache, &mut self.onehot);
         let resident = sess.len();
         self.sessions.insert(id, NativeSession { sess, variant });
         Ok(resident)

@@ -154,7 +154,7 @@ impl Batcher {
             return Err(job);
         }
         match job.op {
-            SessionOp::Open { .. } => self.open_q.push_back(job),
+            SessionOp::Open { .. } | SessionOp::Reopen { .. } => self.open_q.push_back(job),
             SessionOp::Decode { .. } | SessionOp::Close { .. } => self.decode_q.push_back(job),
         }
         Ok(())

@@ -309,14 +309,26 @@ impl Engine {
         if !self.accepting.load(Ordering::SeqCst) {
             return Err(ServeError::ShuttingDown);
         }
-        if let SessionOp::Open { prompt, .. } = &op {
-            if prompt.is_empty() || prompt.len() > self.seq_len {
-                return Err(ServeError::Invalid(format!(
-                    "session prompt length {} out of range 1..={}",
-                    prompt.len(),
-                    self.seq_len
-                )));
+        match &op {
+            SessionOp::Open { prompt, .. } => {
+                if prompt.is_empty() || prompt.len() > self.seq_len {
+                    return Err(ServeError::Invalid(format!(
+                        "session prompt length {} out of range 1..={}",
+                        prompt.len(),
+                        self.seq_len
+                    )));
+                }
             }
+            SessionOp::Reopen { prompt, decoded, .. } => {
+                let total = prompt.len() + decoded.len();
+                if prompt.is_empty() || total > self.seq_len {
+                    return Err(ServeError::Invalid(format!(
+                        "session replay length {total} out of range 1..={}",
+                        self.seq_len
+                    )));
+                }
+            }
+            _ => {}
         }
         let (rtx, rrx) = mpsc::channel();
         let enqueued = Instant::now();
@@ -726,6 +738,7 @@ fn handle_session_job(
         if now >= d && !matches!(op, SessionOp::Close { .. }) {
             let variant = match &op {
                 SessionOp::Open { variant, .. } => (*variant).unwrap_or(cfg.default_variant),
+                SessionOp::Reopen { variant, .. } => *variant,
                 SessionOp::Decode { session, .. } => table
                     .live
                     .get(session)
@@ -833,6 +846,38 @@ fn session_op_body(
             table.next_id += 1;
             let id = table.next_id;
             match backend.open_session(id, variant, &prompt) {
+                Ok(resident) => {
+                    table.tick += 1;
+                    table.live.insert(id, (table.tick, variant));
+                    metrics.record_session_opened();
+                    Ok(SessionReply::Opened { session: id, resident, variant })
+                }
+                Err(e) => Err(e),
+            }
+        }
+        SessionOp::Reopen { prompt, decoded, variant } => {
+            // Journal replay for a migrated session: the variant is
+            // already pinned (no router consult — masks must not shift
+            // across a migration), but eviction and accounting mirror a
+            // fresh open: the rebuilt session IS a new session on this
+            // replica, with a new local id.
+            let max = cfg.sessions.max_sessions.max(1);
+            while table.live.len() >= max {
+                let lru = table
+                    .live
+                    .iter()
+                    .min_by_key(|(_, (tick, _))| *tick)
+                    .map(|(&id, _)| id)
+                    .expect("capacity implies a non-empty table");
+                table.live.remove(&lru);
+                if let Err(e) = backend.close_session(lru) {
+                    crate::log_error!("evicting session {lru}: {e}");
+                }
+                metrics.record_session_evicted();
+            }
+            table.next_id += 1;
+            let id = table.next_id;
+            match backend.reopen_session(id, variant, &prompt, &decoded) {
                 Ok(resident) => {
                     table.tick += 1;
                     table.live.insert(id, (table.tick, variant));

@@ -32,9 +32,13 @@ pub enum ServeError {
     QuotaExceeded { what: &'static str, limit: u64 },
     /// Admissions are stopped; the engine is draining toward exit.
     ShuttingDown,
-    /// The replica holding this decode session crashed (or was torn down
-    /// as wedged) before the op could run: the session's KV cache is gone
-    /// and the id will never serve again — reopen to continue.
+    /// The replica holding this decode session died AND migration could
+    /// not rebuild it on a sibling — replay budget exhausted, no healthy
+    /// sibling, or the resident-token budget would be breached. With
+    /// journaled replay in place this is the *failure* path, never the
+    /// default: a recoverable session is migrated transparently and the
+    /// caller sees nothing. The id will never serve again — reopen to
+    /// continue.
     SessionLost { session: u64 },
     /// The request itself is malformed (bad length, bad field value).
     Invalid(String),
@@ -96,7 +100,11 @@ impl fmt::Display for ServeError {
             }
             ServeError::ShuttingDown => write!(f, "server is shutting down"),
             ServeError::SessionLost { session } => {
-                write!(f, "session {session} lost: its replica crashed; reopen to continue")
+                write!(
+                    f,
+                    "session {session} lost: its replica died and migration was \
+                     exhausted (budget/siblings/memory); reopen to continue"
+                )
             }
             ServeError::Invalid(msg) => f.write_str(msg),
             // util::Error's Display already prints the full context chain.

@@ -71,7 +71,28 @@ struct Inner {
     /// their replica died mid-flight (each still counts once as served).
     retried: u64,
     /// Session ops answered `session_lost` because their replica died.
+    /// With durable sessions this only counts **failed migrations**
+    /// (replay budget / siblings / memory exhausted) — a successful
+    /// migration is counted under `sessions_migrated` instead.
     session_lost: u64,
+    // --- durable sessions (journaled replay / migration) ---
+    /// Sessions transparently migrated onto a healthy sibling by
+    /// replaying their token journal after their replica died or was
+    /// drained.
+    sessions_migrated: u64,
+    /// Tokens replayed (prompt + decoded history) across all migrations.
+    replayed_tokens: u64,
+    /// Migration attempts that fell back to `session_lost` because the
+    /// replay budget, healthy siblings or the resident-token budget were
+    /// exhausted.
+    migration_failed: u64,
+    /// Session opens refused by the global `--max-resident-tokens`
+    /// memory budget.
+    resident_budget_rejected: u64,
+    /// One-shots that failed over to a sibling *before* acceptance (a
+    /// replica crash raced the dispatch) — distinct from `retried`,
+    /// which counts post-acceptance failovers.
+    failover_races: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -185,6 +206,32 @@ impl Metrics {
         self.inner.lock().unwrap().session_lost += 1;
     }
 
+    /// Record one session migrated onto a sibling replica, with the token
+    /// count (prompt + decoded history) its journal replayed.
+    pub fn record_session_migrated(&self, replayed_tokens: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.sessions_migrated += 1;
+        g.replayed_tokens += replayed_tokens;
+    }
+
+    /// Record one migration attempt that fell back to `session_lost`.
+    pub fn record_migration_failed(&self) {
+        self.inner.lock().unwrap().migration_failed += 1;
+    }
+
+    /// Record one session open refused by the global resident-token
+    /// memory budget.
+    pub fn record_resident_budget_rejected(&self) {
+        self.inner.lock().unwrap().resident_budget_rejected += 1;
+    }
+
+    /// Record one pre-acceptance failover race: a replica crash raced the
+    /// dispatch, and the request was re-picked onto a sibling without
+    /// ever having been accepted (so it is not a `retried`).
+    pub fn record_failover_race(&self) {
+        self.inner.lock().unwrap().failover_races += 1;
+    }
+
     /// Replicas currently healthy, as last gauged by the supervisor.
     pub fn replicas_alive(&self) -> u64 {
         self.inner.lock().unwrap().replicas_alive
@@ -208,6 +255,36 @@ impl Metrics {
     /// Session ops answered `session_lost` so far.
     pub fn session_lost(&self) -> u64 {
         self.inner.lock().unwrap().session_lost
+    }
+
+    /// Sessions migrated onto a sibling so far.
+    pub fn sessions_migrated(&self) -> u64 {
+        self.inner.lock().unwrap().sessions_migrated
+    }
+
+    /// Tokens replayed across all migrations so far.
+    pub fn replayed_tokens(&self) -> u64 {
+        self.inner.lock().unwrap().replayed_tokens
+    }
+
+    /// Migration attempts that fell back to `session_lost` so far.
+    pub fn migration_failed(&self) -> u64 {
+        self.inner.lock().unwrap().migration_failed
+    }
+
+    /// Session opens refused by the resident-token budget so far.
+    pub fn resident_budget_rejected(&self) -> u64 {
+        self.inner.lock().unwrap().resident_budget_rejected
+    }
+
+    /// Pre-acceptance failover races counted so far.
+    pub fn failover_races(&self) -> u64 {
+        self.inner.lock().unwrap().failover_races
+    }
+
+    /// Tokens resident across live session caches, as last gauged.
+    pub fn resident_tokens(&self) -> u64 {
+        self.inner.lock().unwrap().resident_tokens
     }
 
     /// Record one decode step under the session's variant; `latency_s` is
@@ -304,6 +381,13 @@ impl Metrics {
                 g.cache_grows
             ));
         }
+        if g.sessions_migrated + g.migration_failed + g.resident_budget_rejected > 0 {
+            s.push_str(&format!(
+                "  sessions migrated={} replayed_tokens={} migration_failed={} resident_budget={}\n",
+                g.sessions_migrated, g.replayed_tokens, g.migration_failed,
+                g.resident_budget_rejected
+            ));
+        }
         if g.decode_steps > 0 {
             s.push_str(&format!("  decode steps={}\n", g.decode_steps));
             let variants: Vec<Variant> = g.decode_latency.keys().copied().collect();
@@ -340,12 +424,13 @@ impl Metrics {
         }
         if g.replicas_configured > 0 {
             s.push_str(&format!(
-                "  replicas alive={}/{} crashes={} respawns={} retried={} session_lost={}\n",
+                "  replicas alive={}/{} crashes={} respawns={} retried={} failover_races={} session_lost={}\n",
                 g.replicas_alive,
                 g.replicas_configured,
                 g.replica_crashes,
                 g.replica_respawns,
                 g.retried,
+                g.failover_races,
                 g.session_lost
             ));
         }
@@ -402,7 +487,10 @@ impl Metrics {
                 ("errored", Json::num(g.errored as f64)),
             ]),
         ));
-        if g.sessions_opened > 0 {
+        if g.sessions_opened + g.sessions_migrated + g.migration_failed
+            + g.resident_budget_rejected
+            > 0
+        {
             obj.push((
                 "sessions",
                 Json::obj(vec![
@@ -412,6 +500,10 @@ impl Metrics {
                     ("evicted", Json::num(g.sessions_evicted as f64)),
                     ("resident_tokens", Json::num(g.resident_tokens as f64)),
                     ("cache_grows", Json::num(g.cache_grows as f64)),
+                    ("migrated", Json::num(g.sessions_migrated as f64)),
+                    ("replayed_tokens", Json::num(g.replayed_tokens as f64)),
+                    ("migration_failed", Json::num(g.migration_failed as f64)),
+                    ("resident_budget", Json::num(g.resident_budget_rejected as f64)),
                 ]),
             ));
         }
@@ -461,6 +553,7 @@ impl Metrics {
                     ("crashes", Json::num(g.replica_crashes as f64)),
                     ("respawns", Json::num(g.replica_respawns as f64)),
                     ("retried", Json::num(g.retried as f64)),
+                    ("failover_races", Json::num(g.failover_races as f64)),
                     ("session_lost", Json::num(g.session_lost as f64)),
                 ]),
             ));
@@ -595,8 +688,42 @@ mod tests {
         assert_eq!(r.get("crashes").and_then(|v| v.as_f64()), Some(1.0));
         assert_eq!(r.get("respawns").and_then(|v| v.as_f64()), Some(1.0));
         assert_eq!(r.get("retried").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(r.get("failover_races").and_then(|v| v.as_f64()), Some(0.0));
         assert_eq!(r.get("session_lost").and_then(|v| v.as_f64()), Some(1.0));
         assert!(m.report().contains("replicas alive=2/3 crashes=1 respawns=1"));
+    }
+
+    /// The durable-session counters surface the sessions section on their
+    /// own (a migration can happen on a set whose shard-level `opened`
+    /// counters live elsewhere) and the pre-acceptance `failover_races`
+    /// counter rides in the replicas section — so the accounting identity
+    /// has no invisible path.
+    #[test]
+    fn migration_and_failover_race_counters_surface() {
+        let m = Metrics::new();
+        assert!(m.to_json().get("sessions").is_none());
+        m.record_session_migrated(96);
+        m.record_session_migrated(32);
+        m.record_migration_failed();
+        m.record_resident_budget_rejected();
+        m.record_failover_race();
+        m.set_replica_gauges(2, 2);
+        assert_eq!(m.sessions_migrated(), 2);
+        assert_eq!(m.replayed_tokens(), 128);
+        assert_eq!(m.migration_failed(), 1);
+        assert_eq!(m.resident_budget_rejected(), 1);
+        assert_eq!(m.failover_races(), 1);
+        let j = m.to_json();
+        let s = j.get("sessions").expect("sessions section via migration");
+        assert_eq!(s.get("migrated").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(s.get("replayed_tokens").and_then(|v| v.as_f64()), Some(128.0));
+        assert_eq!(s.get("migration_failed").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(s.get("resident_budget").and_then(|v| v.as_f64()), Some(1.0));
+        let r = j.get("replicas").expect("replicas section");
+        assert_eq!(r.get("failover_races").and_then(|v| v.as_f64()), Some(1.0));
+        let report = m.report();
+        assert!(report.contains("sessions migrated=2 replayed_tokens=128"));
+        assert!(report.contains("failover_races=1"));
     }
 
     #[test]

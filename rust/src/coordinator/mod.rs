@@ -31,9 +31,17 @@
 //!   (crashed/wedged replicas torn down and respawned with the same
 //!   kernel registry preload), a failover dispatcher (accepted one-shots
 //!   whose replica dies mid-flight retry on a sibling within a bounded
-//!   budget), per-replica circuit breakers, and sticky sessions whose
-//!   replica death answers structured `session_lost`. The [`Serving`]
-//!   trait abstracts the TCP front end over `Engine` vs `ReplicaSet`.
+//!   budget), per-replica circuit breakers, and **durable decode
+//!   sessions**: every session's journal (prompt + decoded tokens) lives
+//!   in the replica-independent route table and replays onto a healthy
+//!   sibling when its replica dies or drains — bitwise-identical by
+//!   decode determinism, bounded by `replay_budget_tokens` — so
+//!   structured `session_lost` is reserved for exhausted migrations. A
+//!   global `max_resident_tokens` ledger budget refuses opens past
+//!   memory pressure, `drain_replica` migrates-then-swaps a slot (the
+//!   rolling-restart building block), and `health_json` reports
+//!   per-replica liveness. The [`Serving`] trait abstracts the TCP
+//!   front end over `Engine` vs `ReplicaSet`.
 //! * [`router`] — queue-depth-driven variant ladder (dense → dsa90 →
 //!   dsa95) the engine worker consults per dispatch; typed rungs,
 //!   `AdaptiveRouter::from_pairs` validates names at construction; the

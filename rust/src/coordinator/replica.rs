@@ -29,14 +29,35 @@
 //!   [`ReplicaConfig::breaker_cooldown`] it admits one half-open probe,
 //!   and the probe's outcome closes or re-opens it — a flapping replica
 //!   is never fed sustained traffic.
-//! * **Sticky sessions.** Decode sessions pin to the replica that opened
-//!   them (a KV cache cannot migrate); the set hands out *global* session
-//!   ids and routes ops to the owning replica's inner id. When a replica
-//!   dies, ops on its sessions answer a structured
-//!   [`ServeError::SessionLost`] — never a hang — and the extended
-//!   accounting identity
+//! * **Durable sticky sessions.** Decode sessions pin to the replica
+//!   that opened them; the set hands out *global* session ids and routes
+//!   ops to the owning replica's inner id. Each route carries a
+//!   [`SessionJournal`] — the prompt plus every decoded token, appended
+//!   on each successful decode reply (cheap: tokens, not KV state).
+//!   Because every replica preloads the same `KernelRegistry`, a
+//!   session's KV cache is a deterministic function of its token
+//!   history — so when the owning replica dies, the dispatcher
+//!   transparently **migrates** the session: it replays the journal on a
+//!   healthy sibling through the kernel-free `Reopen` path
+//!   (bitwise-identical cache reconstruction) and the op proceeds as if
+//!   nothing happened. Migration is bounded by
+//!   [`ReplicaConfig::replay_budget_tokens`] and the op's deadline;
+//!   budget exhaustion, no healthy sibling, or memory pressure falls
+//!   back to a structured [`ServeError::SessionLost`] — never a hang —
+//!   so under the extended accounting identity
 //!   `submitted == served + overloaded + expired + errored + session_lost`
-//!   holds under replica kills.
+//!   the `session_lost` term counts **only** exhausted migrations.
+//! * **Drain-and-rebalance.** The same replay machinery powers
+//!   [`ReplicaSet::drain_replica`]: proactively migrate every live
+//!   session off a replica, then swap in a fresh engine — the building
+//!   block for live reconfig and rolling kernel swaps. Wedge/crash
+//!   teardown in the supervisor migrates proactively too, so sessions
+//!   survive even when no op happens to touch them mid-failure.
+//! * **Resident-token budget.** [`ReplicaConfig::max_resident_tokens`]
+//!   caps journal-tracked resident tokens across all replicas: `open`
+//!   past the budget gets a structured `quota_exceeded` refusal (with
+//!   the limit as the hint), and migration consults the same ledger so
+//!   replay cannot OOM a survivor.
 //! * **Chaos sites.** With [`ReplicaConfig::faults`] set, every dispatch
 //!   rolls the seeded `replica.crash` / `replica.wedge` sites: any
 //!   injected fault kills (resp. wedges) the replica the round-robin
@@ -83,6 +104,17 @@ pub trait Serving: Send + Sync {
     fn session(&self, op: SessionOp, deadline: Option<Duration>) -> ServeResult<SessionReply>;
     /// Machine-readable metrics snapshot (the `{"op":"metrics"}` body).
     fn metrics_json(&self) -> Json;
+    /// Readiness probe (the `{"op":"health"}` body): alive/configured
+    /// counts plus per-replica
+    /// `{slot, incarnation, alive, breaker_state, resident_tokens}` —
+    /// cheap enough for load balancers to poll without parsing the full
+    /// metrics report.
+    fn health_json(&self) -> Json;
+    /// Admin surface (the `{"op":"drain_replica"}` body): proactively
+    /// migrate every live session off replica `slot`, then replace it
+    /// with a fresh engine. Returns the number of sessions migrated;
+    /// `Invalid` on a single-engine server or a bad slot.
+    fn drain_replica(&self, slot: usize) -> ServeResult<usize>;
     /// Human-readable metrics report (printed at server exit).
     fn metrics_report(&self) -> String;
     /// Count one submission refused by a per-client quota.
@@ -129,6 +161,35 @@ impl Serving for Engine {
         self.metrics.to_json()
     }
 
+    fn health_json(&self) -> Json {
+        // A bare engine is one permanent pseudo-replica: incarnation 0,
+        // breaker always closed (there is no dispatcher to trip one).
+        let alive = self.alive();
+        let resident = self.metrics.resident_tokens();
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("alive", Json::num(if alive { 1.0 } else { 0.0 })),
+            ("configured", Json::num(1.0)),
+            ("resident_tokens", Json::num(resident as f64)),
+            (
+                "replicas",
+                Json::Arr(vec![Json::obj(vec![
+                    ("slot", Json::num(0.0)),
+                    ("incarnation", Json::num(0.0)),
+                    ("alive", Json::Bool(alive)),
+                    ("breaker_state", Json::str("closed")),
+                    ("resident_tokens", Json::num(resident as f64)),
+                ])]),
+            ),
+        ])
+    }
+
+    fn drain_replica(&self, slot: usize) -> ServeResult<usize> {
+        Err(ServeError::Invalid(format!(
+            "cannot drain replica {slot}: single-engine server (run with --replicas > 1)"
+        )))
+    }
+
     fn metrics_report(&self) -> String {
         self.metrics.report()
     }
@@ -168,6 +229,15 @@ pub struct ReplicaConfig {
     /// How long an open breaker blocks dispatch before admitting one
     /// half-open probe.
     pub breaker_cooldown: Duration,
+    /// Longest journal (prompt + decoded tokens) a dead replica's session
+    /// may replay onto a sibling; a longer journal makes its session
+    /// answer `session_lost` instead of migrating (0 disables migration
+    /// outright — the earlier lazy-loss behaviour).
+    pub replay_budget_tokens: usize,
+    /// Global memory backpressure: journal-tracked resident tokens across
+    /// all replicas past which `open` is refused with a structured
+    /// `quota_exceeded` (and migration declines to replay). 0 = unlimited.
+    pub max_resident_tokens: usize,
     /// Chaos hook: when set, every dispatch rolls the `replica.crash` /
     /// `replica.wedge` sites and any injected fault kills (resp. wedges)
     /// the replica under the round-robin cursor.
@@ -182,6 +252,8 @@ impl Default for ReplicaConfig {
             retry_budget: 2,
             breaker_threshold: 3,
             breaker_cooldown: Duration::from_millis(250),
+            replay_budget_tokens: 4096,
+            max_resident_tokens: 0,
             faults: None,
         }
     }
@@ -239,6 +311,16 @@ impl Breaker {
             self.state = BreakerState::Open { since: Instant::now() };
         }
     }
+
+    /// Stable wire name of the current state (the health probe's
+    /// `breaker_state` field).
+    fn state_name(&self) -> &'static str {
+        match self.state {
+            BreakerState::Closed => "closed",
+            BreakerState::Open { .. } => "open",
+            BreakerState::HalfOpen { .. } => "half_open",
+        }
+    }
 }
 
 /// One replica slot: the live engine, its incarnation (bumped per
@@ -250,18 +332,76 @@ struct Slot {
     breaker: Breaker,
 }
 
+/// Replica-independent record of everything needed to rebuild a decode
+/// session's KV cache from scratch: the prompt, every token decoded so
+/// far (appended on each successful decode reply), and the pinned
+/// variant. By the determinism guarantee (same `KernelRegistry` preload
+/// on every replica) replaying these tokens through the kernel-free
+/// `Reopen` path reconstructs the cache **bitwise** — the journal is the
+/// session's durable identity, the cache just a materialization.
+#[derive(Debug, Clone)]
+pub struct SessionJournal {
+    prompt: Vec<i32>,
+    decoded: Vec<i32>,
+    variant: Variant,
+}
+
+impl SessionJournal {
+    /// Tokens a replay of this journal would make resident.
+    fn tokens(&self) -> usize {
+        self.prompt.len() + self.decoded.len()
+    }
+}
+
 /// Where a global session id lives: which slot, which incarnation of it,
-/// and the engine-local session id.
+/// the engine-local session id, and the journal that can rebuild it
+/// anywhere.
 struct SessionRoute {
     slot: usize,
     incarnation: u64,
     inner: u64,
+    journal: SessionJournal,
+}
+
+/// The global route table plus a running resident-token ledger (the sum
+/// of every route's journal length), maintained on insert/append/remove
+/// so budget checks never walk the map.
+struct RouteTable {
+    map: HashMap<u64, SessionRoute>,
+    resident: u64,
+}
+
+impl RouteTable {
+    fn new() -> RouteTable {
+        RouteTable { map: HashMap::new(), resident: 0 }
+    }
+
+    fn insert(&mut self, global: u64, route: SessionRoute) {
+        self.resident += route.journal.tokens() as u64;
+        self.map.insert(global, route);
+    }
+
+    fn remove(&mut self, global: u64) -> Option<SessionRoute> {
+        let route = self.map.remove(&global);
+        if let Some(r) = &route {
+            self.resident -= r.journal.tokens() as u64;
+        }
+        route
+    }
+
+    /// Journal one successfully decoded token.
+    fn append_decoded(&mut self, global: u64, token: i32) {
+        if let Some(r) = self.map.get_mut(&global) {
+            r.journal.decoded.push(token);
+            self.resident += 1;
+        }
+    }
 }
 
 /// State shared between the handle, the dispatcher and the supervisor.
 struct Inner {
     slots: Mutex<Vec<Slot>>,
-    sessions: Mutex<HashMap<u64, SessionRoute>>,
+    sessions: Mutex<RouteTable>,
     factory: Arc<dyn Fn() -> Result<Box<dyn InferBackend>> + Send + Sync>,
     engine_cfg: EngineConfig,
     cfg: ReplicaConfig,
@@ -281,6 +421,13 @@ struct Inner {
 pub struct ReplicaSet {
     inner: Arc<Inner>,
     supervisor: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// A route-table lookup's outcome: a live target to forward to, or the
+/// dead/respawned owner a migration (or a local close) must deal with.
+enum Routed {
+    Live(Arc<Engine>, usize, u64, u64),
+    Dead { slot: usize, incarnation: u64 },
 }
 
 /// Spawn one replica from the shared factory (same registry/spec preload
@@ -366,11 +513,201 @@ fn chaos_roll(inner: &Inner) {
     }
 }
 
-/// Drop a lost session's route, count it, and reply `SessionLost`.
+/// Drop a lost session's route (releasing its ledger tokens), count it,
+/// and reply `SessionLost`.
 fn lost(inner: &Inner, session: u64) -> ServeError {
-    inner.sessions.lock().unwrap().remove(&session);
+    inner.sessions.lock().unwrap().remove(session);
     inner.metrics.record_session_lost();
+    refresh_session_gauges(inner);
     ServeError::SessionLost { session }
+}
+
+/// A migration that could not complete: counted under `migration_failed`,
+/// then the session converts to the structured loss — the **only** path
+/// that records `session_lost` now that recoverable sessions migrate.
+fn lost_migration(inner: &Inner, session: u64) -> ServeError {
+    inner.metrics.record_migration_failed();
+    lost(inner, session)
+}
+
+/// Refresh the set-level session gauges (live routes, journal-resident
+/// tokens) from the route-table ledger.
+fn refresh_session_gauges(inner: &Inner) {
+    let routes = inner.sessions.lock().unwrap();
+    let (active, resident) = (routes.map.len(), routes.resident as usize);
+    drop(routes);
+    inner.metrics.set_session_gauges(active, resident, 0);
+}
+
+/// Rebuild session `session` — whose owner `(slot, incarnation)` in
+/// `from` is dead or being drained — on a healthy sibling by replaying
+/// its journal through the kernel-free `Reopen` path. On success the
+/// route is updated in place and the new `(engine, slot, incarnation,
+/// local id)` target is returned; the caller re-issues its op there.
+/// Refused (→ `migration_failed` + `session_lost`) when the journal
+/// exceeds [`ReplicaConfig::replay_budget_tokens`], the resident-token
+/// ledger is past [`ReplicaConfig::max_resident_tokens`], no healthy
+/// sibling admits the replay, or the replay itself dies. `deadline` is
+/// the op's remaining budget, so a migration can never outlive the op
+/// that triggered it.
+///
+/// With `defer_loss` (the proactive teardown/drain path) a refusal
+/// leaves the route and counters untouched: the session stays parked on
+/// the dead incarnation and the *client's* next op retries the
+/// migration lazily — by then a sibling may have respawned — or
+/// converts it, so the `session_lost` count always matches a structured
+/// reply some client actually received.
+fn migrate(
+    inner: &Inner,
+    session: u64,
+    from: (usize, u64),
+    deadline: Option<Duration>,
+    defer_loss: bool,
+) -> ServeResult<(Arc<Engine>, usize, u64, u64)> {
+    let fail = || {
+        if defer_loss {
+            ServeError::SessionLost { session }
+        } else {
+            lost_migration(inner, session)
+        }
+    };
+    let journal = {
+        let routes = inner.sessions.lock().unwrap();
+        match routes.map.get(&session) {
+            Some(r) if (r.slot, r.incarnation) == from => r.journal.clone(),
+            // A concurrent migration already moved it: hand back the
+            // fresh route if it is live, else convert.
+            Some(r) => {
+                let (slot, incarnation, local) = (r.slot, r.incarnation, r.inner);
+                drop(routes);
+                let slots = inner.slots.lock().unwrap();
+                return match slots.get(slot) {
+                    Some(s) if s.incarnation == incarnation && s.engine.alive() => {
+                        Ok((s.engine.clone(), slot, incarnation, local))
+                    }
+                    _ => {
+                        drop(slots);
+                        Err(fail())
+                    }
+                };
+            }
+            None => return Err(ServeError::Failed(err!("unknown session {session}"))),
+        }
+    };
+    let replay = journal.tokens();
+    if replay > inner.cfg.replay_budget_tokens {
+        crate::log_error!(
+            "session {session}: journal of {replay} tokens exceeds the replay budget ({}); lost",
+            inner.cfg.replay_budget_tokens
+        );
+        return Err(fail());
+    }
+    // Memory pressure: the ledger still counts this session (its route is
+    // intact), so being past the budget means the survivors are already
+    // over-committed — replaying onto one would deepen the overshoot.
+    if inner.cfg.max_resident_tokens > 0 {
+        let resident = inner.sessions.lock().unwrap().resident;
+        if resident > inner.cfg.max_resident_tokens as u64 {
+            crate::log_error!(
+                "session {session}: resident ledger {resident} past budget ({}); not replaying",
+                inner.cfg.max_resident_tokens
+            );
+            return Err(fail());
+        }
+    }
+    // `pick` skips dead/draining/breaker-blocked replicas on its own; the
+    // explicit exclude covers a *wedged* owner (alive but frozen), which
+    // would otherwise swallow the replay until its teardown.
+    let (slot, incarnation, engine) = match pick(inner, Some(from.0)) {
+        // `pick` ignores the exclude on a single-slot set: landing back
+        // on the dead/wedged incarnation itself means there is no
+        // sibling to migrate to (a *respawned* same slot — bumped
+        // incarnation — is a legitimate target).
+        Ok(t) if (t.0, t.1) == from => return Err(fail()),
+        Ok(t) => t,
+        Err(_) => return Err(fail()),
+    };
+    let op = SessionOp::Reopen {
+        prompt: journal.prompt.clone(),
+        decoded: journal.decoded.clone(),
+        variant: journal.variant,
+    };
+    match forward(inner, &engine, slot, incarnation, op, deadline) {
+        Some(Ok(SessionReply::Opened { session: local, .. })) => {
+            let mut routes = inner.sessions.lock().unwrap();
+            match routes.map.get_mut(&session) {
+                Some(r) if (r.slot, r.incarnation) == from => {
+                    r.slot = slot;
+                    r.incarnation = incarnation;
+                    r.inner = local;
+                    drop(routes);
+                    inner.metrics.record_session_migrated(replay as u64);
+                    Ok((engine, slot, incarnation, local))
+                }
+                _ => {
+                    // Closed or re-migrated while we replayed (the
+                    // supervisor's proactive sweep can race a client's
+                    // lazy migration of the same session): this copy is
+                    // an orphan — release it and hand back the table's
+                    // current truth so the race stays invisible.
+                    let current =
+                        routes.map.get(&session).map(|r| (r.slot, r.incarnation, r.inner));
+                    drop(routes);
+                    let close = SessionOp::Close { session: local };
+                    let _ = forward(inner, &engine, slot, incarnation, close, None);
+                    match current {
+                        Some((s2, i2, l2)) => {
+                            let slots = inner.slots.lock().unwrap();
+                            match slots.get(s2) {
+                                Some(sl) if sl.incarnation == i2 && sl.engine.alive() => {
+                                    Ok((sl.engine.clone(), s2, i2, l2))
+                                }
+                                _ => {
+                                    drop(slots);
+                                    Err(fail())
+                                }
+                            }
+                        }
+                        None => Err(ServeError::Failed(err!(
+                            "session {session} closed during migration"
+                        ))),
+                    }
+                }
+            }
+        }
+        _ => Err(fail()),
+    }
+}
+
+/// Proactively migrate every session routed to `(slot, incarnation)` —
+/// the supervisor's teardown path and [`ReplicaSet::drain_replica`]'s
+/// workhorse. Returns how many sessions moved. Failures defer: the
+/// route stays parked on the dead incarnation and converts (or retries
+/// the migration) on the client's next op, so no session is counted
+/// lost without a client receiving the structured reply.
+fn migrate_all(inner: &Inner, slot: usize, incarnation: u64) -> usize {
+    // Migration disabled: skip the scan (and its per-session logging)
+    // entirely — every route converts lazily, the pre-durability
+    // behaviour.
+    if inner.cfg.replay_budget_tokens == 0 {
+        return 0;
+    }
+    let victims: Vec<u64> = {
+        let routes = inner.sessions.lock().unwrap();
+        routes
+            .map
+            .iter()
+            .filter(|(_, r)| r.slot == slot && r.incarnation == incarnation)
+            .map(|(&g, _)| g)
+            .collect()
+    };
+    let mut moved = 0usize;
+    for session in victims {
+        if migrate(inner, session, (slot, incarnation), None, true).is_ok() {
+            moved += 1;
+        }
+    }
+    moved
 }
 
 /// Supervisor loop: watch heartbeats, tear down crashed/wedged replicas,
@@ -417,12 +754,23 @@ fn supervise(inner: Arc<Inner>) {
                     if dead { "crashed" } else { "wedged" }
                 );
             }
+            // Proactive migration BEFORE teardown: every session routed
+            // to the dying incarnation is rebuilt on a healthy sibling
+            // from its journal, so sessions survive even when no op
+            // happens to touch them mid-failure. Refusals (budget, no
+            // sibling) defer: the route stays parked and the client's
+            // next op retries or converts it. Any route that races past
+            // this sweep migrates lazily the same way.
+            let moved = migrate_all(&inner, i, incarnation);
+            if moved > 0 {
+                crate::log_error!(
+                    "replica {i} (incarnation {incarnation}): migrated {moved} session(s) to siblings"
+                );
+            }
             // Tear down: joins the worker (a wedged one exits on the
             // running flip inside shutdown), dropping every parked reply
-            // channel — waiting clients fail over or see `session_lost`
-            // instead of hanging. Sessions routed to this incarnation
-            // convert lazily: the bumped incarnation makes their next op
-            // answer `SessionLost`.
+            // channel — waiting clients fail over or migrate instead of
+            // hanging.
             engine.shutdown();
             match spawn_replica(&inner.factory, &inner.engine_cfg) {
                 Ok(fresh) => {
@@ -563,7 +911,7 @@ impl ReplicaSet {
         }
         let inner = Arc::new(Inner {
             slots: Mutex::new(slots),
-            sessions: Mutex::new(HashMap::new()),
+            sessions: Mutex::new(RouteTable::new()),
             factory,
             engine_cfg,
             cfg,
@@ -677,13 +1025,16 @@ impl ReplicaSet {
                 }
                 // The replica's channel died under us (crash racing the
                 // dispatch) while the set is still accepting: fail over
-                // pre-acceptance — not counted as `retried`, the request
-                // was never accepted anywhere.
+                // pre-acceptance — not counted as `retried` (the request
+                // was never accepted anywhere) but under
+                // `failover_races`, so the accounting identity has no
+                // invisible path.
                 Err(ServeError::ShuttingDown)
                     if inner.accepting.load(Ordering::SeqCst)
                         && resubmit.is_some()
                         && tries + 1 < inner.cfg.replicas =>
                 {
+                    inner.metrics.record_failover_race();
                     note(inner, slot, incarnation, false);
                     exclude = Some(slot);
                     tries += 1;
@@ -700,8 +1051,10 @@ impl ReplicaSet {
 
     /// Open a decode session on a healthy replica (blocking); returns
     /// `(global session id, resident tokens, pinned variant)`. The
-    /// session is sticky: every later op routes to the opening replica,
-    /// and dies with it as a structured `session_lost`.
+    /// session is sticky but durable: ops route to the owning replica,
+    /// and if that replica dies the session migrates to a sibling by
+    /// journal replay (falling back to `session_lost` only when the
+    /// replay budget, siblings, or the memory budget are exhausted).
     pub fn open_session(
         &self,
         prompt: Vec<i32>,
@@ -738,7 +1091,9 @@ impl ReplicaSet {
     }
 
     /// Session dispatch: translate global ↔ engine-local ids, keep the
-    /// route table honest, and convert replica deaths into `SessionLost`.
+    /// route table (and its journal/ledger) honest, and convert replica
+    /// deaths into transparent migration — falling back to `SessionLost`
+    /// only when migration is exhausted.
     fn session_impl(
         &self,
         op: SessionOp,
@@ -751,7 +1106,21 @@ impl ReplicaSet {
         chaos_roll(inner);
         match op {
             SessionOp::Open { prompt, variant } => {
+                // Global memory backpressure first: admitting past the
+                // resident-token budget is refused with the limit as the
+                // hint, before any replica does prefill work.
+                if inner.cfg.max_resident_tokens > 0 {
+                    let resident = inner.sessions.lock().unwrap().resident;
+                    if resident + prompt.len() as u64 > inner.cfg.max_resident_tokens as u64 {
+                        inner.metrics.record_resident_budget_rejected();
+                        return Err(ServeError::QuotaExceeded {
+                            what: "resident tokens",
+                            limit: inner.cfg.max_resident_tokens as u64,
+                        });
+                    }
+                }
                 let (slot, incarnation, engine) = pick(inner, None)?;
+                let journal_prompt = prompt.clone();
                 let op = SessionOp::Open { prompt, variant };
                 let reply = forward(inner, &engine, slot, incarnation, op, deadline)
                     .ok_or_else(|| {
@@ -767,68 +1136,136 @@ impl ReplicaSet {
                             slot,
                             incarnation,
                             inner: local,
+                            journal: SessionJournal {
+                                prompt: journal_prompt,
+                                decoded: Vec::new(),
+                                variant,
+                            },
                         });
+                        refresh_session_gauges(inner);
                         Ok(SessionReply::Opened { session: global, resident, variant })
                     }
                     other => other,
                 }
             }
             SessionOp::Decode { session, token } => {
-                let (engine, slot, incarnation, local) = self.route(session)?;
+                // route() migrates a dead owner before returning, so the
+                // target here is always live (or the `?` already answered
+                // a structured error).
+                let Routed::Live(engine, slot, incarnation, local) =
+                    self.route(session, deadline)?
+                else {
+                    return Err(ServeError::Failed(err!(
+                        "session {session}: route() returned a dead target"
+                    )));
+                };
                 let op = SessionOp::Decode { session: local, token };
-                let reply = forward(inner, &engine, slot, incarnation, op, deadline)
-                    .ok_or_else(|| lost(inner, session))?;
+                let reply = match forward(inner, &engine, slot, incarnation, op, deadline) {
+                    Some(r) => r,
+                    // The owner died with the step in flight: migrate
+                    // (replaying the journal, which does NOT yet contain
+                    // this token) and re-issue the step exactly once on
+                    // the new owner.
+                    None => {
+                        let (engine, slot, incarnation, local) =
+                            migrate(inner, session, (slot, incarnation), deadline, false)?;
+                        let op = SessionOp::Decode { session: local, token };
+                        forward(inner, &engine, slot, incarnation, op, deadline)
+                            .ok_or_else(|| lost_migration(inner, session))?
+                    }
+                };
                 match reply {
                     Ok(SessionReply::Decoded(mut resp)) => {
                         resp.session = session;
+                        // Journal the token only after the step served:
+                        // a refused/failed step must not pollute replay.
+                        inner.sessions.lock().unwrap().append_decoded(session, token);
+                        refresh_session_gauges(inner);
                         Ok(SessionReply::Decoded(resp))
                     }
                     other => other,
                 }
             }
             SessionOp::Close { session } => {
-                let (engine, slot, incarnation, local) = self.route(session)?;
-                let op = SessionOp::Close { session: local };
-                let reply = forward(inner, &engine, slot, incarnation, op, deadline)
-                    .ok_or_else(|| lost(inner, session))?;
-                // Served or engine-side error: the client relinquished the
-                // id either way — the route is gone.
-                inner.sessions.lock().unwrap().remove(&session);
+                let routed = self.route_for_close(session)?;
+                let reply = match routed {
+                    Routed::Live(engine, slot, incarnation, local) => {
+                        let op = SessionOp::Close { session: local };
+                        forward(inner, &engine, slot, incarnation, op, deadline)
+                    }
+                    // Dead owner: nothing to release remotely — the cache
+                    // died with the replica. Closing is journal removal.
+                    Routed::Dead { .. } => None,
+                };
+                // Served, refused, or died mid-close: the client
+                // relinquished the id either way — drop the route and
+                // release its ledger tokens.
+                let journaled = inner
+                    .sessions
+                    .lock()
+                    .unwrap()
+                    .remove(session)
+                    .map(|r| r.journal.tokens())
+                    .unwrap_or(0);
+                refresh_session_gauges(inner);
                 match reply {
-                    Ok(SessionReply::Closed { released, .. }) => {
+                    Some(Ok(SessionReply::Closed { released, .. })) => {
                         Ok(SessionReply::Closed { session, released })
                     }
-                    other => other,
+                    Some(other) => other,
+                    // No live owner answered; the journal is the releasable
+                    // truth. Never `session_lost`: the client asked for the
+                    // session to end, and it did.
+                    None => Ok(SessionReply::Closed { session, released: journaled }),
                 }
+            }
+            // Reopen is the dispatcher's own migration vehicle; clients
+            // re-establish state by opening a fresh session.
+            SessionOp::Reopen { .. } => Err(ServeError::Invalid(
+                "reopen is internal to session migration".to_string(),
+            )),
+        }
+    }
+
+    /// Resolve a global session id to its live replica; a dead or
+    /// respawned owner triggers transparent migration (bounded by the
+    /// replay budget and `deadline`), so the caller only ever sees a live
+    /// target or a structured error (`SessionLost` when migration is
+    /// exhausted, "unknown session" when never routed).
+    fn route(&self, session: u64, deadline: Option<Duration>) -> ServeResult<Routed> {
+        match self.route_for_close(session)? {
+            live @ Routed::Live(..) => Ok(live),
+            Routed::Dead { slot, incarnation } => {
+                let (engine, slot, incarnation, local) =
+                    migrate(&self.inner, session, (slot, incarnation), deadline, false)?;
+                Ok(Routed::Live(engine, slot, incarnation, local))
             }
         }
     }
 
-    /// Resolve a global session id to its live replica, or answer
-    /// `SessionLost` (incarnation bumped / replica dead) or a structured
-    /// "unknown session" failure (never routed).
-    fn route(&self, session: u64) -> ServeResult<(Arc<Engine>, usize, u64, u64)> {
+    /// Route lookup without the migration side effect: `Close` wants a
+    /// dead owner reported as-is (closing a dead session succeeds locally
+    /// off the journal; replaying it just to close it would be absurd).
+    fn route_for_close(&self, session: u64) -> ServeResult<Routed> {
         let inner = &*self.inner;
         let (slot_idx, incarnation, local) = {
             let sessions = inner.sessions.lock().unwrap();
-            match sessions.get(&session) {
+            match sessions.map.get(&session) {
                 Some(r) => (r.slot, r.incarnation, r.inner),
                 None => {
                     return Err(ServeError::Failed(err!("unknown session {session}")));
                 }
             }
         };
-        let stale = {
+        {
             let slots = inner.slots.lock().unwrap();
-            match slots.get(slot_idx) {
-                Some(s) if s.incarnation == incarnation && s.engine.alive() => {
-                    return Ok((s.engine.clone(), slot_idx, incarnation, local));
+            if let Some(s) = slots.get(slot_idx) {
+                if s.incarnation == incarnation && s.engine.alive() {
+                    return Ok(Routed::Live(s.engine.clone(), slot_idx, incarnation, local));
                 }
-                _ => true,
             }
-        };
-        debug_assert!(stale);
-        Err(lost(inner, session))
+        }
+        Ok(Routed::Dead { slot: slot_idx, incarnation })
     }
 
     /// Stop admitting new work across the set (and on every replica).
@@ -860,6 +1297,114 @@ impl ReplicaSet {
         if !slots.is_empty() {
             slots[idx % slots.len()].engine.inject_wedge();
         }
+    }
+
+    /// Graceful drain-and-rebalance: stop replica `idx` from accepting,
+    /// migrate every session it owns onto siblings (journal replay —
+    /// bitwise-identical caches), then swap in a fresh engine from the
+    /// factory and retire the old one. The building block for live
+    /// reconfig and rolling kernel swaps: sessions and in-flight work
+    /// survive, and the swap is counted as a `respawn`, not a crash.
+    /// Returns the number of sessions migrated.
+    pub fn drain_replica(&self, idx: usize) -> ServeResult<usize> {
+        let inner = &*self.inner;
+        if !inner.accepting.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
+        }
+        let n = inner.slots.lock().unwrap().len();
+        if idx >= n {
+            return Err(ServeError::Invalid(format!(
+                "no replica slot {idx} (configured {n})"
+            )));
+        }
+        if n == 1 {
+            return Err(ServeError::Invalid(
+                "cannot drain the only replica (sessions would have no sibling)".to_string(),
+            ));
+        }
+        let (old, incarnation) = {
+            let slots = inner.slots.lock().unwrap();
+            (slots[idx].engine.clone(), slots[idx].incarnation)
+        };
+        // Admissions off first so the dispatcher stops routing new opens
+        // here, then move the live sessions while the old engine still
+        // answers its accepted work.
+        old.stop_admissions();
+        let moved = migrate_all(inner, idx, incarnation);
+        match spawn_replica(&inner.factory, &inner.engine_cfg) {
+            Ok(fresh) => {
+                {
+                    let mut slots = inner.slots.lock().unwrap();
+                    // The supervisor may have raced a teardown of the
+                    // draining replica; incarnation-gate the swap so two
+                    // replacements never fight over the slot.
+                    if slots[idx].incarnation == incarnation {
+                        slots[idx] = Slot {
+                            engine: fresh,
+                            incarnation: incarnation + 1,
+                            breaker: Breaker::new(),
+                        };
+                    } else {
+                        fresh.shutdown();
+                    }
+                }
+                inner.metrics.record_replica_respawn();
+                // Drain outside the slots lock: answers queued work, then
+                // joins the worker.
+                old.shutdown();
+                Ok(moved)
+            }
+            Err(e) => {
+                // The drain itself happened; make the corpse visibly dead
+                // so the supervisor's next sweep replaces it.
+                old.shutdown();
+                Err(ServeError::Failed(
+                    e.context(format!("respawning drained replica {idx}")),
+                ))
+            }
+        }
+    }
+
+    /// Readiness probe: alive/configured counts, the resident-token
+    /// ledger against its budget, and per-replica slot state — the
+    /// `{"op":"health"}` body, cheap enough for load balancers to poll.
+    pub fn health_json(&self) -> Json {
+        let inner = &*self.inner;
+        let (replicas, alive) = {
+            let slots = inner.slots.lock().unwrap();
+            let replicas: Vec<Json> = slots
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    Json::obj(vec![
+                        ("slot", Json::num(i as f64)),
+                        ("incarnation", Json::num(s.incarnation as f64)),
+                        ("alive", Json::Bool(s.engine.alive())),
+                        ("breaker_state", Json::str(s.breaker.state_name())),
+                        (
+                            "resident_tokens",
+                            Json::num(s.engine.metrics.resident_tokens() as f64),
+                        ),
+                    ])
+                })
+                .collect();
+            let alive = slots.iter().filter(|s| s.engine.alive()).count();
+            (replicas, alive)
+        };
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("alive", Json::num(alive as f64)),
+            ("configured", Json::num(inner.cfg.replicas as f64)),
+            (
+                "resident_tokens",
+                Json::num(inner.sessions.lock().unwrap().resident as f64),
+            ),
+            (
+                "max_resident_tokens",
+                Json::num(inner.cfg.max_resident_tokens as f64),
+            ),
+            ("replicas", Json::Arr(replicas)),
+        ])
     }
 
     /// Set-level metrics snapshot with per-replica `shards` attached.
@@ -995,6 +1540,14 @@ impl Serving for ReplicaSet {
 
     fn metrics_json(&self) -> Json {
         self.metrics_to_json()
+    }
+
+    fn health_json(&self) -> Json {
+        ReplicaSet::health_json(self)
+    }
+
+    fn drain_replica(&self, slot: usize) -> ServeResult<usize> {
+        ReplicaSet::drain_replica(self, slot)
     }
 
     fn metrics_report(&self) -> String {

@@ -62,6 +62,17 @@ pub enum SessionOp {
     Decode { session: u64, token: i32 },
     /// Close session `session`, releasing its cache for reuse.
     Close { session: u64 },
+    /// Rebuild a session from its journal on this replica: prefill
+    /// `prompt` and append `decoded` without re-running the decode
+    /// kernel. The cache state is bitwise-identical to having decoded
+    /// the same tokens step by step (the kernel never writes to the
+    /// cache), so migration preserves determinism. The variant is
+    /// already pinned — no router consult.
+    Reopen {
+        prompt: Vec<i32>,
+        decoded: Vec<i32>,
+        variant: Variant,
+    },
 }
 
 /// Successful reply to a [`SessionOp`] (errors travel as the engine's

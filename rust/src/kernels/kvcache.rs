@@ -131,6 +131,23 @@ impl KvCache {
         self.ki8.clear();
     }
 
+    /// Pre-reserve capacity for `rows` total rows (rounded up to a
+    /// bucket multiple) as **one** grow event, so a journal replay of a
+    /// known length pays a single allocation instead of one per bucket.
+    /// No-op when the cache already holds enough capacity — recycled
+    /// pool caches replay entirely allocation-free.
+    pub fn reserve_rows(&mut self, rows: usize) {
+        let want = rows.div_ceil(BUCKET_ROWS) * BUCKET_ROWS;
+        if want <= self.cap_rows {
+            return;
+        }
+        self.cap_rows = want;
+        self.k.reserve_exact(self.cap_rows * self.dk - self.k.len());
+        self.v.reserve_exact(self.cap_rows * self.dv - self.v.len());
+        self.ki8.reserve_exact(self.cap_rows * self.dk - self.ki8.len());
+        self.grows += 1;
+    }
+
     /// Append one token's key/value row, maintaining the int8 mirror.
     pub fn append(&mut self, krow: &[f32], vrow: &[f32]) {
         assert_eq!(krow.len(), self.dk, "k row shape");
@@ -292,6 +309,28 @@ mod tests {
                 i + 1
             );
         }
+    }
+
+    /// A replay-sized reservation is one grow event (not one per
+    /// bucket), rounds up to the bucket multiple, and is a no-op on a
+    /// cache that already has the capacity — so a recycled pool cache
+    /// replays a journal with zero new grow events.
+    #[test]
+    fn reserve_rows_is_one_grow_event() {
+        let mut c = KvCache::new(4, 3);
+        c.reserve_rows(BUCKET_ROWS + 1);
+        assert_eq!(c.grow_events(), 1);
+        assert_eq!(c.capacity_rows(), 2 * BUCKET_ROWS);
+        let (k, v) = ([1.0f32; 4], [2.0f32; 3]);
+        for _ in 0..(2 * BUCKET_ROWS) {
+            c.append(&k, &v);
+        }
+        assert_eq!(c.grow_events(), 1, "appends within the reservation grew");
+        c.reset();
+        c.reserve_rows(BUCKET_ROWS);
+        assert_eq!(c.grow_events(), 1, "no-op reservation counted a grow");
+        c.reserve_rows(0);
+        assert_eq!(c.capacity_rows(), 2 * BUCKET_ROWS);
     }
 
     #[test]

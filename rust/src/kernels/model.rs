@@ -269,6 +269,30 @@ impl NativeClassifier {
         DecodeSession { cache, needle, qrow }
     }
 
+    /// Rebuild a session from its token journal: open on `prompt`, then
+    /// append every `decoded` token **without** running the decode
+    /// kernel. A decode step is `append_token` + a kernel read of the
+    /// cache — the kernel never writes session state — so the rebuilt
+    /// cache (rows, int8 mirror, scale) is **bitwise-identical** to one
+    /// that decoded the same tokens step by step, in O(tokens) instead
+    /// of O(tokens x cache_len). This is the replica-migration replay
+    /// path; the full replay length is reserved up front as one cache
+    /// grow event.
+    pub fn reopen_session(
+        &self,
+        prompt: &[i32],
+        decoded: &[i32],
+        mut cache: KvCache,
+        onehot: &mut Vec<f32>,
+    ) -> DecodeSession {
+        cache.reserve_rows(prompt.len() + decoded.len());
+        let mut sess = self.open_session(prompt, cache, onehot);
+        for &t in decoded {
+            self.append_token(&mut sess.cache, t, onehot);
+        }
+        sess
+    }
+
     /// Append `token` to the session's cache and re-run the needle query
     /// against the whole cache through `kernel`'s decode path, returning
     /// `[logit_0, logit_1]`. At `len == seq_len` this is **bitwise equal**
@@ -490,6 +514,82 @@ mod tests {
                     [oneshot[0].to_bits(), oneshot[1].to_bits()],
                     "{variant}: decode diverged from one-shot"
                 );
+            }
+        }
+    }
+
+    /// Journal replay reconstructs session state **bitwise**: reopening
+    /// from (prompt, decoded-so-far) at any split point yields a cache
+    /// whose rows, int8 mirror and scale equal the stepped session's,
+    /// and whose subsequent decode steps produce bit-identical logits —
+    /// the determinism contract replica migration rides on. Also pins
+    /// the single-grow reservation.
+    #[test]
+    fn reopened_session_matches_stepped_session_bitwise() {
+        let model = NativeClassifier::new(256, 0xD5A);
+        let mut wl = Workload::new(WorkloadConfig {
+            seq_len: 256,
+            seed: 31337,
+            ..Default::default()
+        });
+        let (dk, dv) = model.cache_dims();
+        for variant in ["dense", "dsa90"] {
+            let kernel = for_variant(variant, 0).unwrap();
+            let tokens = wl.next_request().tokens;
+            let prompt = &tokens[..128];
+            for kill_at in [0usize, 1, 7, 64] {
+                // Stepped reference: open + decode every token to the end.
+                let (mut onehot, mut ctx) = (Vec::new(), Vec::new());
+                let mut scratch = Scratch::new();
+                let mut stepped =
+                    model.open_session(prompt, KvCache::new(dk, dv), &mut onehot);
+                let mut want = Vec::new();
+                for &t in &tokens[128..] {
+                    want.push(model.decode_step(
+                        &mut stepped,
+                        t,
+                        kernel.as_ref(),
+                        &mut scratch,
+                        &mut onehot,
+                        &mut ctx,
+                    ));
+                }
+                // Migrated run: decode `kill_at` steps, reopen from the
+                // journal on a fresh cache, decode the rest.
+                let decoded = &tokens[128..128 + kill_at];
+                let reopened = model.reopen_session(
+                    prompt,
+                    decoded,
+                    KvCache::new(dk, dv),
+                    &mut onehot,
+                );
+                assert_eq!(reopened.len(), 128 + kill_at);
+                assert_eq!(
+                    reopened.cache().grow_events(),
+                    1,
+                    "{variant}: replay reservation must be one grow"
+                );
+                let s = stepped.cache();
+                let r = reopened.cache();
+                assert_eq!(&s.k()[..r.k().len()], r.k(), "{variant}@{kill_at}: K rows");
+                assert_eq!(&s.v()[..r.v().len()], r.v(), "{variant}@{kill_at}: V rows");
+                let mut sess = reopened;
+                for (i, &t) in tokens[128 + kill_at..].iter().enumerate() {
+                    let got = model.decode_step(
+                        &mut sess,
+                        t,
+                        kernel.as_ref(),
+                        &mut scratch,
+                        &mut onehot,
+                        &mut ctx,
+                    );
+                    let w = want[kill_at + i];
+                    assert_eq!(
+                        [got[0].to_bits(), got[1].to_bits()],
+                        [w[0].to_bits(), w[1].to_bits()],
+                        "{variant}@{kill_at}: step {i} diverged after reopen"
+                    );
+                }
             }
         }
     }

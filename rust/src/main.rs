@@ -125,14 +125,28 @@ fn engine_args(program: &str) -> Args {
             "1",
             "independent engine replicas behind the supervisor: crashed or \
              wedged replicas respawn, accepted one-shots fail over to a \
-             sibling, sessions stick to their replica (lost with it as a \
-             structured \"session_lost\")",
+             sibling, and decode sessions migrate to a sibling by journal \
+             replay (exhausted migrations answer \"session_lost\")",
         )
         .opt(
             "watchdog-ms",
             "500",
             "supervisor watchdog: a replica whose heartbeat stalls this \
              long is torn down and respawned (min 100)",
+        )
+        .opt(
+            "replay-budget-tokens",
+            "4096",
+            "longest session journal (prompt + decoded tokens) migration \
+             will replay onto a sibling after a replica death; longer \
+             sessions answer \"session_lost\" (0 = never migrate)",
+        )
+        .opt(
+            "max-resident-tokens",
+            "0",
+            "global memory backpressure: journal-tracked resident tokens \
+             across all replicas past which \"open\" is refused with a \
+             structured \"quota_exceeded\" (0 = unlimited)",
         )
 }
 
@@ -187,6 +201,8 @@ fn replica_config(a: &Args) -> ReplicaConfig {
     ReplicaConfig {
         replicas: a.get_usize("replicas").max(1),
         watchdog: std::time::Duration::from_millis(a.get_usize("watchdog-ms").max(1) as u64),
+        replay_budget_tokens: a.get_usize("replay-budget-tokens"),
+        max_resident_tokens: a.get_usize("max-resident-tokens"),
         ..Default::default()
     }
 }
@@ -355,8 +371,9 @@ fn cmd_bench_serve(rest: &[String]) -> Result<()> {
             "kill-after",
             "0",
             "chaos: crash one replica after the n-th submission of each \
-             rate point (needs --replicas >= 2 for failover; 0 = off) — \
-             proves retried > 0 with the accounting identity intact",
+             rate point — and, with --decode, after the n-th decode step \
+             (needs --replicas >= 2 for failover/migration; 0 = off) — \
+             proves retried/migrated > 0 with the accounting identity intact",
         )
         .parse(rest)
         .map_err(|u| err!("{u}"))?;
@@ -414,24 +431,34 @@ fn cmd_bench_serve(rest: &[String]) -> Result<()> {
             p => p,
         };
         let steps = a.get_usize("steps");
-        let (mut ttft, mut itl, correct, scored, decoded, wall) =
-            run_decode_point(&engine, sessions, prefill, steps, a.get_usize("seed"))?;
+        let (mut ttft, mut itl, correct, scored, dec, wall) = run_decode_point(
+            &engine,
+            sessions,
+            prefill,
+            steps,
+            a.get_usize("seed"),
+            a.get_usize("kill-after"),
+        )?;
         let name = format!("serve/native/decode/s{sessions}/p{prefill}");
         println!("== {name} ==");
         println!("{}", ttft.report_ms("ttft"));
         println!("{}", itl.report_ms("itl "));
         println!(
             "decode throughput={:.1} tok/s accuracy={:.3} ({scored} sessions scored) wall={:.2}s",
-            decoded as f64 / wall,
+            dec.decoded as f64 / wall,
             if scored > 0 { correct as f64 / scored as f64 } else { f64::NAN },
             wall
         );
+        println!("{}", dec.line());
         rows.push(Json::obj(vec![
             ("name", Json::str(name)),
             ("sessions", Json::num(sessions as f64)),
             ("prefill", Json::num(prefill as f64)),
-            ("decoded_tokens", Json::num(decoded as f64)),
-            ("decode_tok_per_s", Json::num(decoded as f64 / wall)),
+            ("decoded_tokens", Json::num(dec.decoded as f64)),
+            ("decode_tok_per_s", Json::num(dec.decoded as f64 / wall)),
+            ("migrated", Json::num(dec.migrated as f64)),
+            ("decode_session_lost", Json::num(dec.session_lost as f64)),
+            ("decode_errored", Json::num(dec.errored as f64)),
             (
                 "accuracy",
                 Json::num(if scored > 0 { correct as f64 / scored as f64 } else { f64::NAN }),
@@ -595,6 +622,27 @@ fn run_rate_point(
     Ok((lat, correct, outcomes, t0.elapsed().as_secs_f64()))
 }
 
+/// Per-step decode outcomes of one [`run_decode_point`]. `decoded` is
+/// successfully served steps; `session_lost`/`errored` are steps that
+/// answered a structured failure; `migrated` is the set-level count of
+/// sessions transparently rebuilt on a sibling during the point.
+#[derive(Default)]
+struct DecodeOutcomes {
+    decoded: usize,
+    session_lost: usize,
+    errored: usize,
+    migrated: u64,
+}
+
+impl DecodeOutcomes {
+    fn line(&self) -> String {
+        format!(
+            "decode outcomes: decoded={} migrated={} session_lost={} errored={}",
+            self.decoded, self.migrated, self.session_lost, self.errored
+        )
+    }
+}
+
 /// One streamed-decode point against a running engine: open `n` sessions
 /// (TTFT = blocking open latency, i.e. prefill + queueing), round-robin
 /// one token at a time through all of them (ITL = the engine's per-step
@@ -602,14 +650,21 @@ fn run_rate_point(
 /// prediction against the generated label. With `steps == 0` every
 /// session streams its full tail, so `prompt ∥ steps` is exactly a
 /// one-shot request and the final-step accuracy is the one-shot accuracy.
-/// Returns (ttft, itl, correct, scored sessions, decoded tokens, wall s).
+///
+/// With `kill_after > 0`, replica 0 is crashed right after the n-th
+/// decode submission: resident sessions migrate to siblings by journal
+/// replay and keep streaming (counted in `DecodeOutcomes::migrated`),
+/// while exhausted migrations surface as per-step `session_lost` and the
+/// session drops out of the round-robin.
+/// Returns (ttft, itl, correct, scored sessions, outcomes, wall s).
 fn run_decode_point(
     engine: &ReplicaSet,
     n: usize,
     prefill: usize,
     steps: usize,
     seed: usize,
-) -> Result<(Summary, Summary, usize, usize, usize, f64)> {
+    kill_after: usize,
+) -> Result<(Summary, Summary, usize, usize, DecodeOutcomes, f64)> {
     let mut wl = Workload::new(WorkloadConfig {
         seq_len: engine.seq_len(),
         arrival: Arrival::Closed,
@@ -635,19 +690,39 @@ fn run_decode_point(
     // Round-robin across all resident sessions — one token each per pass —
     // so the cache working set and the decode lane see `n` interleaved
     // streams, not `n` sequential ones.
-    let mut decoded = 0usize;
+    let migrated_before = engine.metrics().sessions_migrated();
+    let mut out = DecodeOutcomes::default();
     let mut last_pred: Vec<Option<usize>> = vec![None; n];
+    let mut lost: Vec<bool> = vec![false; n];
+    let mut submitted = 0usize;
     let max_steps = trace.iter().map(|s| s.steps.len()).max().unwrap_or(0);
     for step in 0..max_steps {
         for (i, s) in trace.iter().enumerate() {
-            if let Some(&tok) = s.steps.get(step) {
-                let resp = engine.decode(ids[i], tok)?;
-                itl.add(resp.latency.as_secs_f64());
-                last_pred[i] = Some(resp.pred);
-                decoded += 1;
+            let Some(&tok) = s.steps.get(step) else { continue };
+            if lost[i] {
+                continue;
+            }
+            match engine.decode(ids[i], tok) {
+                Ok(resp) => {
+                    itl.add(resp.latency.as_secs_f64());
+                    last_pred[i] = Some(resp.pred);
+                    out.decoded += 1;
+                }
+                // A lost session's id will never serve again — drop it
+                // from the round-robin; other errors keep streaming.
+                Err(ServeError::SessionLost { .. }) => {
+                    out.session_lost += 1;
+                    lost[i] = true;
+                }
+                Err(_) => out.errored += 1,
+            }
+            submitted += 1;
+            if kill_after > 0 && submitted == kill_after {
+                engine.inject_crash(0);
             }
         }
     }
+    out.migrated = engine.metrics().sessions_migrated().saturating_sub(migrated_before);
     let (mut correct, mut scored) = (0usize, 0usize);
     for (i, s) in trace.iter().enumerate() {
         if let Some(p) = last_pred[i] {
@@ -656,9 +731,11 @@ fn run_decode_point(
                 correct += 1;
             }
         }
-        engine.close_session(ids[i])?;
+        if !lost[i] {
+            engine.close_session(ids[i])?;
+        }
     }
-    Ok((ttft, itl, correct, scored, decoded, t0.elapsed().as_secs_f64()))
+    Ok((ttft, itl, correct, scored, out, t0.elapsed().as_secs_f64()))
 }
 
 /// Perf gate: diff a fresh `results/BENCH_kernels.json` against the

@@ -16,6 +16,12 @@
 //! <- {"ok":true,"session":3,"released":193}
 //! -> {"op":"metrics"}
 //! <- {"ok":true, ...metrics json... including the "overload" section}
+//! -> {"op":"health"}
+//! <- {"ok":true,"alive":3,"configured":3,"resident_tokens":512,
+//!     "replicas":[{"slot":0,"incarnation":1,"alive":true,
+//!                  "breaker_state":"closed","resident_tokens":256}, ...]}
+//! -> {"op":"drain_replica","slot":1}
+//! <- {"ok":true,"slot":1,"migrated":4}
 //! -> {"op":"ping"} / {"op":"shutdown"}
 //! ```
 //!
@@ -37,10 +43,12 @@
 //! * `"quota_exceeded"` — this connection exceeded its request-rate
 //!   token bucket or its open-session cap; carries `limit`.
 //! * `"shutting_down"` — admissions are stopped (drain in progress).
-//! * `"session_lost"` — the replica holding this decode session crashed
-//!   (or was torn down as wedged); its cache is gone and the id will
-//!   never serve again — reopen to continue. Carries `session`. The
-//!   connection's quota slot for that session is released.
+//! * `"session_lost"` — the replica holding this decode session died AND
+//!   the set could not migrate it to a sibling (replay budget, healthy
+//!   siblings, or the resident-token budget exhausted — a recoverable
+//!   session migrates transparently and the client never notices). The
+//!   id will never serve again — reopen to continue. Carries `session`.
+//!   The connection's quota slot for that session is released.
 //! * `"timeout"` — the connection sat idle past the server's
 //!   `--idle-timeout-ms`; the reply is `{"ok":false,"error":"timeout"}`
 //!   and the connection closes.
@@ -56,9 +64,15 @@
 //!
 //! **Replication.** The front end serves from anything implementing
 //! [`Serving`] — a bare [`Engine`](crate::coordinator::Engine) or a
-//! [`ReplicaSet`](crate::coordinator::ReplicaSet) (`--replicas N`), where
-//! replica crashes surface only as `session_lost` replies and transparent
-//! one-shot retries, never as hung or dropped lines.
+//! [`ReplicaSet`](crate::coordinator::ReplicaSet) (`--replicas N`). One-
+//! shot requests retry transparently across a crash; decode sessions
+//! migrate to a sibling by journal replay (bitwise-identical caches) and
+//! only answer `session_lost` when migration is exhausted — never a hung
+//! or dropped line. `{"op":"health"}` exposes per-replica readiness
+//! (slot, incarnation, liveness, breaker state, resident tokens) for
+//! load balancers, and `{"op":"drain_replica","slot":N}` proactively
+//! migrates a replica's sessions off and swaps in a fresh engine — the
+//! rolling-restart building block.
 //!
 //! **Abandoned connections.** A connection that drops (EOF, error, idle
 //! timeout) without closing its sessions has them closed server-side and
@@ -319,6 +333,21 @@ impl Conn {
                     map.insert("ok".into(), Json::Bool(true));
                 }
                 Ok(m)
+            }
+            "health" => Ok(self.engine.health_json()),
+            "drain_replica" => {
+                let slot = req
+                    .get("slot")
+                    .and_then(|v| v.as_f64())
+                    .context("missing slot")? as usize;
+                match self.engine.drain_replica(slot) {
+                    Ok(migrated) => Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("slot", Json::num(slot as f64)),
+                        ("migrated", Json::num(migrated as f64)),
+                    ])),
+                    Err(e) => Ok(e.to_json()),
+                }
             }
             "shutdown" => {
                 self.engine.stop_admissions();
@@ -644,6 +673,20 @@ impl Client {
         self.call(&Json::obj(vec![
             ("op", Json::str("close")),
             ("session", Json::num(session as f64)),
+        ]))
+    }
+
+    /// Per-replica readiness probe.
+    pub fn health(&mut self) -> Result<Json> {
+        self.call(&Json::obj(vec![("op", Json::str("health"))]))
+    }
+
+    /// Drain replica `slot`: migrate its sessions off and swap in a
+    /// fresh engine.
+    pub fn drain_replica(&mut self, slot: usize) -> Result<Json> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("drain_replica")),
+            ("slot", Json::num(slot as f64)),
         ]))
     }
 }

@@ -15,6 +15,13 @@
 //! disarmed), and drain-then-shutdown exits cleanly. Failures reproduce
 //! from their seed; `DSA_CHAOS_SEED` overrides the default so CI can run
 //! a seed matrix.
+//!
+//! The replicated suite (`tests/replica.rs`) extends this identity with
+//! the `session_lost` outcome under replica kills, and pins the
+//! durability contract on top of it: resident sessions migrate to
+//! siblings by journal replay (`migrated > 0`, bitwise-identical
+//! streams), so `session_lost` appears only when a migration is
+//! exhausted — replay budget, sibling availability, or memory pressure.
 
 use std::sync::Arc;
 use std::time::Duration;

@@ -1,5 +1,5 @@
-//! Replicated-serving tests: crash isolation, supervised respawn, and
-//! failover through [`ReplicaSet`].
+//! Replicated-serving tests: crash isolation, supervised respawn,
+//! failover, and durable decode sessions through [`ReplicaSet`].
 //!
 //! The invariant under test extends the chaos suite's accounting
 //! identity with the replica-death outcome —
@@ -12,11 +12,18 @@
 //! and seeded chaos at the `replica.crash`/`replica.wedge` sites. Every
 //! client gets exactly one structured reply (a hang fails the test by
 //! timeout), accepted one-shots whose replica dies retry on a sibling
-//! (`retried` counted exactly once as served), sessions die as
-//! structured `session_lost` that frees both the global route and the
-//! connection quota slot, the supervisor respawns killed replicas, and
-//! a respawned replica serves bit-identical logits (same backend
-//! factory, same kernel registry).
+//! (`retried` counted exactly once as served), the supervisor respawns
+//! killed replicas, and a respawned replica serves bit-identical logits
+//! (same backend factory, same kernel registry).
+//!
+//! Decode sessions are *durable*: each one's journal (prompt + decoded
+//! tokens) lives in the replica-independent route table, and a session
+//! whose replica dies is rebuilt on a sibling by replaying the journal
+//! — bitwise-identical logits afterwards, by the same determinism the
+//! respawn tests pin. `session_lost` is reserved for *exhausted*
+//! migrations (replay budget, no sibling, memory pressure), exercised
+//! here with `replay_budget_tokens: 0`, which restores the old
+//! lazy-loss behaviour.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -75,15 +82,21 @@ fn engine_cfg() -> EngineConfig {
 }
 
 /// A replica set with a fast watchdog so respawn tests stay quick.
+/// Migration is on at the default replay budget — ample for `SEQ_LEN`.
 fn set(replicas: usize) -> ReplicaSet {
+    set_with(ReplicaConfig {
+        replicas,
+        watchdog: Duration::from_millis(150),
+        ..Default::default()
+    })
+}
+
+/// A replica set with full control over the replication policy.
+fn set_with(cfg: ReplicaConfig) -> ReplicaSet {
     ReplicaSet::start_native(
         NativeModelConfig { seq_len: SEQ_LEN, ..Default::default() },
         engine_cfg(),
-        ReplicaConfig {
-            replicas,
-            watchdog: Duration::from_millis(150),
-            ..Default::default()
-        },
+        cfg,
     )
     .expect("replica set boots")
 }
@@ -238,13 +251,22 @@ fn single_replica_death_answers_every_client_without_retries() {
     set.shutdown();
 }
 
-/// Sticky sessions die with their replica as structured `session_lost`
-/// replies carrying the session id; the global route is freed (a second
-/// op on the same id is an ordinary unknown-session error) and reopening
-/// on the respawned replicas works.
+/// With migration disabled (`replay_budget_tokens: 0` — every journal
+/// exceeds the budget), sessions die with their replica as structured
+/// `session_lost` replies carrying the session id: the exhausted-budget
+/// path, counted under both `session_lost` and `migration_failed`. The
+/// global route is freed (a second op on the same id is an ordinary
+/// unknown-session error), a close on a dead route still succeeds
+/// locally off the journal, and reopening on the respawned replicas
+/// works.
 #[test]
 fn session_death_converts_to_structured_session_lost() {
-    let set = set(2);
+    let set = set_with(ReplicaConfig {
+        replicas: 2,
+        watchdog: Duration::from_millis(150),
+        replay_budget_tokens: 0,
+        ..Default::default()
+    });
     let mut wl = workload(13);
     let (sid1, _, _) = set
         .open_session(wl.next_session(SEQ_LEN / 2).prompt, None)
@@ -253,6 +275,9 @@ fn session_death_converts_to_structured_session_lost() {
         .open_session(wl.next_session(SEQ_LEN / 2).prompt, None)
         .expect("open 2");
     assert_ne!(sid1, sid2, "global session ids must be distinct across replicas");
+    let (closer, _, _) = set
+        .open_session(wl.next_session(SEQ_LEN / 2).prompt, None)
+        .expect("open 3");
 
     set.inject_crash(0);
     set.inject_crash(1);
@@ -270,6 +295,16 @@ fn session_death_converts_to_structured_session_lost() {
         }
     }
     assert_eq!(set.metrics().session_lost(), 2);
+    assert_eq!(
+        set.metrics().migration_failed(),
+        2,
+        "budget-0 losses are exhausted migrations"
+    );
+    // A close on a dead route is not a loss: the client is relinquishing
+    // the id anyway, so it resolves locally off the journal.
+    let released = set.close_session(closer).expect("close on a dead route succeeds");
+    assert_eq!(released, SEQ_LEN / 2, "released count comes from the journal");
+    assert_eq!(set.metrics().session_lost(), 2, "a close never counts as a loss");
     // The route was freed with the first conversion: the id is now
     // simply unknown, not lost again.
     assert_eq!(set.decode(sid1, 3).unwrap_err().code(), "error");
@@ -283,13 +318,19 @@ fn session_death_converts_to_structured_session_lost() {
     set.shutdown();
 }
 
-/// Wire-level: through a server [`Conn`] the lost session renders as a
-/// structured `{"ok":false,"error":"session_lost"}` reply AND frees the
+/// Wire-level: through a server [`Conn`], a session whose migration is
+/// exhausted (budget 0 here) renders as a structured
+/// `{"ok":false,"error":"session_lost"}` reply AND frees the
 /// connection's quota slot — the client reopens without leaking
 /// capacity.
 #[test]
 fn server_reply_carries_session_lost_and_frees_the_quota_slot() {
-    let set = Arc::new(set(2));
+    let set = Arc::new(set_with(ReplicaConfig {
+        replicas: 2,
+        watchdog: Duration::from_millis(150),
+        replay_budget_tokens: 0,
+        ..Default::default()
+    }));
     let state = Arc::new(ServerState::new());
     let mut conn = Conn::new(
         set.clone(),
@@ -329,6 +370,307 @@ fn server_reply_carries_session_lost_and_frees_the_quota_slot() {
         Some(true),
         "lost session must free its quota slot: {reply:?}"
     );
+    set.shutdown();
+}
+
+/// The tentpole: a decode session survives its replica's death. The
+/// dispatcher replays the journal onto a sibling and the stream
+/// continues bitwise-identically to an uninterrupted single-engine run
+/// — the client never sees an error, and `session_lost` stays 0 under
+/// the default (ample) replay budget.
+#[test]
+fn decode_survives_replica_death_by_journal_replay() {
+    let s = workload(17).next_session(SEQ_LEN / 2);
+    // Uninterrupted reference stream: same model config, one replica,
+    // never killed.
+    let reference: Vec<Vec<f32>> = {
+        let set = set(1);
+        let (sid, _, _) = set.open_session(s.prompt.clone(), None).expect("reference open");
+        let logits = s
+            .steps
+            .iter()
+            .map(|&t| set.decode(sid, t).expect("reference decode").logits)
+            .collect();
+        set.shutdown();
+        logits
+    };
+
+    let set = set(2);
+    // Two sessions: round-robin puts one on each replica, so slot 0
+    // owns one of them wherever the cursor started.
+    let (sid_a, _, _) = set.open_session(s.prompt.clone(), None).expect("open a");
+    let (sid_b, _, _) = set.open_session(s.prompt.clone(), None).expect("open b");
+    let kill_at = s.steps.len() / 2;
+    let (mut got_a, mut got_b) = (Vec::new(), Vec::new());
+    for (i, &tok) in s.steps.iter().enumerate() {
+        if i == kill_at {
+            set.inject_crash(0);
+        }
+        got_a.push(set.decode(sid_a, tok).expect("stream a survives the kill").logits);
+        got_b.push(set.decode(sid_b, tok).expect("stream b survives the kill").logits);
+    }
+    assert_eq!(got_a, reference, "migrated stream a must be bitwise-identical");
+    assert_eq!(got_b, reference, "migrated stream b must be bitwise-identical");
+
+    let m = set.metrics();
+    assert!(m.sessions_migrated() >= 1, "the kill must migrate at least one session");
+    assert!(
+        m.replayed_tokens() >= (SEQ_LEN / 2) as u64,
+        "replay covers at least the migrated session's prompt"
+    );
+    assert_eq!(m.session_lost(), 0, "an ample budget loses nothing");
+    assert_eq!(m.migration_failed(), 0);
+    set.close_session(sid_a).expect("close a");
+    set.close_session(sid_b).expect("close b");
+    set.shutdown();
+}
+
+/// Property: migrated decode streams are bitwise-identical to an
+/// uninterrupted run across workload seeds × replica counts {2,4} ×
+/// kill points × victim slots, with no client-visible error and no
+/// `session_lost` (ample budget, siblings always available).
+#[test]
+fn migration_replay_is_bitwise_identical_for_random_kill_points() {
+    forall(
+        &PropConfig { cases: 4, seed: 0xD04_A11 },
+        |rng, _size| {
+            let replicas = [2usize, 4][rng.below(2) as usize];
+            (
+                rng.below(1 << 32),                  // workload seed
+                replicas,                            // replica count
+                1 + rng.below(16) as usize,          // kill after this many steps
+                rng.below(replicas as u64) as usize, // victim slot
+            )
+        },
+        |&(seed, replicas, kill_at, victim)| {
+            let s = workload(seed).next_session(SEQ_LEN / 2);
+            let reference: Vec<Vec<f32>> = {
+                let set = set(1);
+                let (sid, _, _) =
+                    set.open_session(s.prompt.clone(), None).expect("reference open");
+                let logits = s
+                    .steps
+                    .iter()
+                    .map(|&t| set.decode(sid, t).expect("reference decode").logits)
+                    .collect();
+                set.shutdown();
+                logits
+            };
+
+            let set = set(replicas);
+            // One session per replica: the victim owns at least one.
+            let sids: Vec<u64> = (0..replicas)
+                .map(|_| set.open_session(s.prompt.clone(), None).expect("open").0)
+                .collect();
+            let mut streams: Vec<Vec<Vec<f32>>> = vec![Vec::new(); replicas];
+            let mut clean = true;
+            for (i, &tok) in s.steps.iter().enumerate() {
+                if i == kill_at {
+                    set.inject_crash(victim);
+                }
+                for (j, &sid) in sids.iter().enumerate() {
+                    match set.decode(sid, tok) {
+                        Ok(r) => streams[j].push(r.logits),
+                        Err(_) => clean = false,
+                    }
+                }
+            }
+            let migrated = set.metrics().sessions_migrated() >= 1;
+            let no_losses = set.metrics().session_lost() == 0;
+            set.shutdown();
+            clean && migrated && no_losses && streams.iter().all(|st| *st == reference)
+        },
+    );
+}
+
+/// `max_resident_tokens` is enforced at open admission: a prompt that
+/// would push the journal ledger past the budget answers a structured
+/// `quota_exceeded` naming the limit, the refusal is counted, and
+/// closing a session releases its tokens back to the budget.
+#[test]
+fn resident_token_budget_refuses_opens_with_a_structured_quota_reply() {
+    let set = set_with(ReplicaConfig {
+        replicas: 2,
+        watchdog: Duration::from_millis(150),
+        max_resident_tokens: SEQ_LEN, // room for exactly two half-length prompts
+        ..Default::default()
+    });
+    let mut wl = workload(23);
+    let (sid, _, _) = set
+        .open_session(wl.next_session(SEQ_LEN / 2).prompt, None)
+        .expect("first open fits the budget");
+    set.open_session(wl.next_session(SEQ_LEN / 2).prompt, None)
+        .expect("second open exactly fills the budget");
+    match set.open_session(wl.next_session(SEQ_LEN / 2).prompt, None) {
+        Err(ServeError::QuotaExceeded { what, limit }) => {
+            assert_eq!(what, "resident tokens");
+            assert_eq!(limit, SEQ_LEN as u64);
+        }
+        other => panic!("expected quota_exceeded past the budget, got {other:?}"),
+    }
+    assert_eq!(set.metrics().resident_budget_rejected(), 1);
+    // Close releases the ledger tokens: the same open now fits.
+    set.close_session(sid).expect("close");
+    set.open_session(wl.next_session(SEQ_LEN / 2).prompt, None)
+        .expect("open fits again after a close released its tokens");
+    set.shutdown();
+}
+
+/// `{"op":"health"}` reports per-replica liveness: slot, incarnation,
+/// breaker state, and resident tokens, plus set-level alive/configured
+/// counts and the journal ledger.
+#[test]
+fn health_op_reports_per_replica_state() {
+    let set = Arc::new(set(2));
+    let state = Arc::new(ServerState::new());
+    let mut conn = Conn::new(set.clone(), state, QuotaConfig::default());
+    let (sid, _, _) = set
+        .open_session(workload(31).next_session(SEQ_LEN / 2).prompt, None)
+        .expect("open");
+
+    let reply = conn.handle_line(r#"{"op":"health"}"#).expect("health parses");
+    assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(true), "{reply:?}");
+    assert_eq!(reply.get("alive").and_then(|v| v.as_f64()), Some(2.0), "{reply:?}");
+    assert_eq!(reply.get("configured").and_then(|v| v.as_f64()), Some(2.0));
+    assert_eq!(
+        reply.get("resident_tokens").and_then(|v| v.as_f64()),
+        Some((SEQ_LEN / 2) as f64),
+        "the ledger counts the open session's journal"
+    );
+    let replicas = reply.get("replicas").and_then(|v| v.as_arr()).expect("replicas array");
+    assert_eq!(replicas.len(), 2);
+    for (slot, r) in replicas.iter().enumerate() {
+        assert_eq!(r.get("slot").and_then(|v| v.as_f64()), Some(slot as f64));
+        assert_eq!(r.get("alive").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(r.get("breaker_state").and_then(|v| v.as_str()), Some("closed"));
+        assert!(r.get("incarnation").and_then(|v| v.as_f64()).is_some());
+        assert!(r.get("resident_tokens").and_then(|v| v.as_f64()).is_some());
+    }
+    set.close_session(sid).expect("close");
+    set.shutdown();
+}
+
+/// `{"op":"drain_replica"}`: the slot's sessions move to siblings by
+/// journal replay (no losses), the reply reports how many moved, the
+/// drained engine is replaced by a fresh one (counted as a respawn, not
+/// a crash), and every session keeps decoding afterwards.
+#[test]
+fn drain_replica_migrates_sessions_and_swaps_in_a_fresh_engine() {
+    let set = Arc::new(set(2));
+    let mut wl = workload(37);
+    // Three sessions across two replicas: slot 0 owns at least one
+    // wherever the round-robin cursor started.
+    let sessions: Vec<(u64, Vec<i32>)> = (0..3)
+        .map(|_| {
+            let s = wl.next_session(SEQ_LEN / 2);
+            let (sid, _, _) = set.open_session(s.prompt.clone(), None).expect("open");
+            (sid, s.steps)
+        })
+        .collect();
+
+    let state = Arc::new(ServerState::new());
+    let mut conn = Conn::new(set.clone(), state, QuotaConfig::default());
+    let reply =
+        conn.handle_line(r#"{"op":"drain_replica","slot":0}"#).expect("drain parses");
+    assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(true), "{reply:?}");
+    assert_eq!(reply.get("slot").and_then(|v| v.as_f64()), Some(0.0));
+    let moved = reply.get("migrated").and_then(|v| v.as_f64()).expect("migrated count");
+    assert!(moved >= 1.0, "slot 0 owned at least one session: {reply:?}");
+
+    // Every session survives the drain and keeps decoding.
+    for (sid, steps) in &sessions {
+        set.decode(*sid, steps[0]).expect("session survives the drain");
+    }
+    let m = set.metrics();
+    assert!(m.sessions_migrated() >= moved as u64);
+    assert_eq!(m.session_lost(), 0, "drain must not lose sessions");
+    assert_eq!(m.replica_crashes(), 0, "a drain is not a crash");
+    assert!(m.replica_respawns() >= 1, "the drained slot got a fresh engine");
+    assert!(
+        wait_until(Duration::from_secs(5), || set.alive_replicas() == 2),
+        "set returns to full strength after the drain"
+    );
+    for (sid, _) in &sessions {
+        set.close_session(*sid).expect("close");
+    }
+    set.shutdown();
+}
+
+/// Deterministic kill schedule under mixed one-shot + session traffic
+/// with migration on: the extended accounting identity holds, resident
+/// sessions migrate rather than convert (`migrated > 0` and zero
+/// `session_lost` under the ample default budget), and the supervisor
+/// still restores full strength.
+#[test]
+fn kill_schedule_holds_identity_with_migration_and_no_losses() {
+    let set = set(3);
+    let mut wl = workload(29);
+    let mut tally = Tally::default();
+    let mut submitted = 0usize;
+
+    // One session per replica: both victims own one.
+    let mut sessions = Vec::new();
+    for _ in 0..3 {
+        let s = wl.next_session(SEQ_LEN / 2);
+        submitted += 1;
+        match set.open_session(s.prompt.clone(), None) {
+            Ok((sid, _, _)) => {
+                tally.served += 1;
+                sessions.push((sid, s.steps));
+            }
+            Err(e) => tally.count_err(&e),
+        }
+    }
+
+    // A one-shot burst with two kills inside it.
+    let n = 30;
+    let mut pending = Vec::new();
+    for i in 0..n {
+        if i == 10 {
+            set.inject_crash(0);
+        }
+        if i == 20 {
+            set.inject_crash(1);
+        }
+        submitted += 1;
+        match set.submit(wl.next_request().tokens, None, None) {
+            Ok(p) => pending.push(p),
+            Err(e) => tally.count_err(&e),
+        }
+    }
+    for p in pending {
+        match p.wait() {
+            Ok(_) => tally.served += 1,
+            Err(e) => tally.count_err(&e),
+        }
+    }
+
+    // The sessions stream on across both kills, then close.
+    for (sid, steps) in &sessions {
+        for &tok in steps.iter().take(4) {
+            submitted += 1;
+            match set.decode(*sid, tok) {
+                Ok(_) => tally.served += 1,
+                Err(e) => tally.count_err(&e),
+            }
+        }
+        submitted += 1;
+        match set.close_session(*sid) {
+            Ok(_) => tally.served += 1,
+            Err(e) => tally.count_err(&e),
+        }
+    }
+
+    assert_eq!(tally.total(), submitted, "extended identity violated: {tally:?}");
+    assert_eq!(tally.session_lost, 0, "ample budget: no client may see a loss: {tally:?}");
+    let m = set.metrics();
+    assert!(m.sessions_migrated() >= 1, "the kills must migrate resident sessions");
+    assert_eq!(m.session_lost(), 0, "session_lost is reserved for exhausted migrations");
+    assert!(
+        wait_until(Duration::from_secs(5), || set.alive_replicas() == 3),
+        "supervisor restores full strength"
+    );
+    infer_eventually(&set, vec![1i32; SEQ_LEN]);
     set.shutdown();
 }
 
