@@ -15,7 +15,7 @@
 CARGO_MANIFEST := rust/Cargo.toml
 BENCH_BASELINE := results/BENCH_kernels.baseline.json
 
-.PHONY: help verify build test bench bench-baseline bench-compare bench-serve tile-plan fmt clippy pytest artifacts clean
+.PHONY: help verify build test lint bench bench-baseline bench-compare bench-serve tile-plan fmt clippy pytest artifacts clean
 
 help:
 	@echo "Targets:"
@@ -73,6 +73,11 @@ help:
 	@echo "                 building block); --idle-timeout-ms N closes connections"
 	@echo "                 idle past N ms with a structured 'timeout' reply and"
 	@echo "                 releases their abandoned sessions"
+	@echo "  lint           repo-native static analysis (dsa-serve lint --check):"
+	@echo "                 SAFETY comments on unsafe, no panics on serving paths,"
+	@echo "                 rank-ascending lock order, allocation-free hot paths,"
+	@echo "                 probe-guarded target_feature calls, documented+tested"
+	@echo "                 wire codes; rules + pragma syntax in LINTS.md"
 	@echo "  tile-plan      regenerate results/TILE_PLAN.json from the in-source"
 	@echo "                 kernels::tiles::TILE_TABLE (tune entries with the"
 	@echo "                 bench_kernels tile sweep; CI gates drift via --check)"
@@ -90,6 +95,12 @@ build:
 
 test:
 	cargo test -q --manifest-path $(CARGO_MANIFEST)
+
+## repo-native static analysis over src+tests+benches (rules: LINTS.md);
+## exits nonzero on any finding — same invocation as the CI lint job and
+## the hermetic tests/lint_self.rs twin
+lint:
+	cargo run --release --manifest-path $(CARGO_MANIFEST) --bin dsa-serve -- lint --check
 
 ## native kernel/cost-model/dataflow benches; appends results/bench.jsonl
 ## and writes results/BENCH_kernels.json

@@ -300,6 +300,7 @@ impl InferBackend for NativeBackend {
     ) -> Result<()> {
         self.fire("backend.run")?;
         self.ensure_kernel(variant)?;
+        // lint: allow(panic, ensure_kernel on the line above inserted this entry)
         let kernel = self.kernels.get(&variant).expect("just inserted").as_ref();
         let sl = self.model.seq_len();
         if tokens.len() != bucket * sl {
@@ -379,6 +380,7 @@ impl InferBackend for NativeBackend {
         if ns.sess.len() >= sl {
             bail!("session {id} at the model's sequence capacity ({sl} tokens)");
         }
+        // lint: allow(panic, open_session preloads the kernel for every live session)
         let kernel = self.kernels.get(&ns.variant).expect("ensured at open").as_ref();
         let out = self.model.decode_step(
             &mut ns.sess,

@@ -228,6 +228,7 @@ impl Batcher {
         let mut i = 0;
         while i < self.queue.len() && batch.len() < self.policy.max_batch {
             if self.queue[i].variant == variant {
+                // lint: allow(panic, the while guard bounds i inside the queue)
                 batch.push(self.queue.remove(i).unwrap());
             } else {
                 i += 1;

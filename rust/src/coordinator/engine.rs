@@ -57,6 +57,7 @@ use super::request::{DecodeResponse, InferRequest, InferResponse, SessionOp, Ses
 use super::router::{AdaptiveRouter, QueueLoad};
 use crate::kernels::Variant;
 use crate::util::error::{err, Context, Result};
+use crate::util::sync::lock_recover;
 
 /// Capacity bound on live decode sessions.
 #[derive(Debug, Clone)]
@@ -404,9 +405,7 @@ impl Engine {
     /// reads as dead here while its clients' reply channels read as
     /// disconnected.
     pub fn alive(&self) -> bool {
-        self.worker
-            .lock()
-            .unwrap()
+        lock_recover(&self.worker)
             .as_ref()
             .map(|h| !h.is_finished())
             .unwrap_or(false)
@@ -451,7 +450,7 @@ impl Engine {
         }
         // Outside the `running` guard: if two threads race, the loser
         // still waits for the worker to finish draining.
-        if let Some(h) = self.worker.lock().unwrap().take() {
+        if let Some(h) = lock_recover(&self.worker).take() {
             let _ = h.join();
         }
     }
@@ -744,6 +743,7 @@ fn handle_session_job(
                     .get(session)
                     .map(|(_, v)| *v)
                     .unwrap_or(cfg.default_variant),
+                // lint: allow(panic, the expiry scan never sees Close ops by construction)
                 SessionOp::Close { .. } => unreachable!("close ops are exempt from expiry"),
             };
             metrics.record_expired(variant, 1);
@@ -836,6 +836,7 @@ fn session_op_body(
                     .iter()
                     .min_by_key(|(_, (tick, _))| *tick)
                     .map(|(&id, _)| id)
+                    // lint: allow(panic, the loop guard proves the table is non-empty)
                     .expect("capacity implies a non-empty table");
                 table.live.remove(&lru);
                 if let Err(e) = backend.close_session(lru) {
@@ -868,6 +869,7 @@ fn session_op_body(
                     .iter()
                     .min_by_key(|(_, (tick, _))| *tick)
                     .map(|(&id, _)| id)
+                    // lint: allow(panic, the loop guard proves the table is non-empty)
                     .expect("capacity implies a non-empty table");
                 table.live.remove(&lru);
                 if let Err(e) = backend.close_session(lru) {

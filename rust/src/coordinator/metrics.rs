@@ -11,6 +11,7 @@ use crate::kernels::pool::PoolStats;
 use crate::kernels::Variant;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+use crate::util::sync::lock_recover;
 
 #[derive(Default)]
 struct Inner {
@@ -104,7 +105,7 @@ pub struct Metrics {
 impl Metrics {
     pub fn new() -> Self {
         let m = Metrics::default();
-        m.inner.lock().unwrap().started = Some(Instant::now());
+        lock_recover(&m.inner).started = Some(Instant::now());
         m
     }
 
@@ -112,7 +113,7 @@ impl Metrics {
     /// allocation-free: the `Variant` key is `Copy`, so nothing is
     /// heap-allocated inside the metrics mutex on the per-batch path.
     pub fn record_batch(&self, variant: Variant, occupancy: usize, latencies_s: &[(f64, f64)]) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.batches += 1;
         g.batch_occupancy.add(occupancy as f64);
         g.completed += latencies_s.len() as u64;
@@ -127,170 +128,170 @@ impl Metrics {
     }
 
     pub fn record_rejected(&self, n: u64) {
-        self.inner.lock().unwrap().rejected += n;
+        lock_recover(&self.inner).rejected += n;
     }
 
     /// Record `n` requests shed because their deadline expired while
     /// queued, under the variant they would have run as.
     pub fn record_expired(&self, variant: Variant, n: u64) {
-        *self.inner.lock().unwrap().expired.entry(variant).or_insert(0) += n;
+        *lock_recover(&self.inner).expired.entry(variant).or_insert(0) += n;
     }
 
     /// Record one batch degraded to the sparsest rung by the shed ladder
     /// (also counted in `routed` by the caller's `record_routed`).
     pub fn record_degraded(&self, variant: Variant) {
-        *self.inner.lock().unwrap().degraded.entry(variant).or_insert(0) += 1;
+        *lock_recover(&self.inner).degraded.entry(variant).or_insert(0) += 1;
     }
 
     /// Record `n` requests answered with a structured execution error.
     pub fn record_errored(&self, n: u64) {
-        self.inner.lock().unwrap().errored += n;
+        lock_recover(&self.inner).errored += n;
     }
 
     /// Record one submission refused by a per-client quota.
     pub fn record_quota_rejected(&self) {
-        self.inner.lock().unwrap().quota_rejected += 1;
+        lock_recover(&self.inner).quota_rejected += 1;
     }
 
     /// Record an adaptive-router decision: one batch routed to `variant`.
     pub fn record_routed(&self, variant: Variant) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         *g.routed.entry(variant).or_insert(0) += 1;
         g.router_rung = Some(variant);
     }
 
     /// Record the latest worker-pool counters (taken after each batch).
     pub fn record_pool(&self, stats: PoolStats) {
-        self.inner.lock().unwrap().pool = Some(stats);
+        lock_recover(&self.inner).pool = Some(stats);
     }
 
     pub fn record_session_opened(&self) {
-        self.inner.lock().unwrap().sessions_opened += 1;
+        lock_recover(&self.inner).sessions_opened += 1;
     }
 
     pub fn record_session_closed(&self) {
-        self.inner.lock().unwrap().sessions_closed += 1;
+        lock_recover(&self.inner).sessions_closed += 1;
     }
 
     /// Record an LRU eviction (the engine also records the implied close).
     pub fn record_session_evicted(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.sessions_evicted += 1;
         g.sessions_closed += 1;
     }
 
     /// Refresh the replica-health gauges (supervisor sweep / startup).
     pub fn set_replica_gauges(&self, alive: usize, configured: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.replicas_alive = alive as u64;
         g.replicas_configured = configured as u64;
     }
 
     /// Record one replica torn down as crashed or wedged.
     pub fn record_replica_crash(&self) {
-        self.inner.lock().unwrap().replica_crashes += 1;
+        lock_recover(&self.inner).replica_crashes += 1;
     }
 
     /// Record one fresh replica spawned to replace a torn-down one.
     pub fn record_replica_respawn(&self) {
-        self.inner.lock().unwrap().replica_respawns += 1;
+        lock_recover(&self.inner).replica_respawns += 1;
     }
 
     /// Record one one-shot request re-dispatched onto a sibling replica.
     pub fn record_retried(&self) {
-        self.inner.lock().unwrap().retried += 1;
+        lock_recover(&self.inner).retried += 1;
     }
 
     /// Record one session op answered `session_lost`.
     pub fn record_session_lost(&self) {
-        self.inner.lock().unwrap().session_lost += 1;
+        lock_recover(&self.inner).session_lost += 1;
     }
 
     /// Record one session migrated onto a sibling replica, with the token
     /// count (prompt + decoded history) its journal replayed.
     pub fn record_session_migrated(&self, replayed_tokens: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.sessions_migrated += 1;
         g.replayed_tokens += replayed_tokens;
     }
 
     /// Record one migration attempt that fell back to `session_lost`.
     pub fn record_migration_failed(&self) {
-        self.inner.lock().unwrap().migration_failed += 1;
+        lock_recover(&self.inner).migration_failed += 1;
     }
 
     /// Record one session open refused by the global resident-token
     /// memory budget.
     pub fn record_resident_budget_rejected(&self) {
-        self.inner.lock().unwrap().resident_budget_rejected += 1;
+        lock_recover(&self.inner).resident_budget_rejected += 1;
     }
 
     /// Record one pre-acceptance failover race: a replica crash raced the
     /// dispatch, and the request was re-picked onto a sibling without
     /// ever having been accepted (so it is not a `retried`).
     pub fn record_failover_race(&self) {
-        self.inner.lock().unwrap().failover_races += 1;
+        lock_recover(&self.inner).failover_races += 1;
     }
 
     /// Replicas currently healthy, as last gauged by the supervisor.
     pub fn replicas_alive(&self) -> u64 {
-        self.inner.lock().unwrap().replicas_alive
+        lock_recover(&self.inner).replicas_alive
     }
 
     /// Crashed/wedged replicas torn down so far.
     pub fn replica_crashes(&self) -> u64 {
-        self.inner.lock().unwrap().replica_crashes
+        lock_recover(&self.inner).replica_crashes
     }
 
     /// Replicas respawned so far.
     pub fn replica_respawns(&self) -> u64 {
-        self.inner.lock().unwrap().replica_respawns
+        lock_recover(&self.inner).replica_respawns
     }
 
     /// One-shot requests retried onto a sibling so far.
     pub fn retried(&self) -> u64 {
-        self.inner.lock().unwrap().retried
+        lock_recover(&self.inner).retried
     }
 
     /// Session ops answered `session_lost` so far.
     pub fn session_lost(&self) -> u64 {
-        self.inner.lock().unwrap().session_lost
+        lock_recover(&self.inner).session_lost
     }
 
     /// Sessions migrated onto a sibling so far.
     pub fn sessions_migrated(&self) -> u64 {
-        self.inner.lock().unwrap().sessions_migrated
+        lock_recover(&self.inner).sessions_migrated
     }
 
     /// Tokens replayed across all migrations so far.
     pub fn replayed_tokens(&self) -> u64 {
-        self.inner.lock().unwrap().replayed_tokens
+        lock_recover(&self.inner).replayed_tokens
     }
 
     /// Migration attempts that fell back to `session_lost` so far.
     pub fn migration_failed(&self) -> u64 {
-        self.inner.lock().unwrap().migration_failed
+        lock_recover(&self.inner).migration_failed
     }
 
     /// Session opens refused by the resident-token budget so far.
     pub fn resident_budget_rejected(&self) -> u64 {
-        self.inner.lock().unwrap().resident_budget_rejected
+        lock_recover(&self.inner).resident_budget_rejected
     }
 
     /// Pre-acceptance failover races counted so far.
     pub fn failover_races(&self) -> u64 {
-        self.inner.lock().unwrap().failover_races
+        lock_recover(&self.inner).failover_races
     }
 
     /// Tokens resident across live session caches, as last gauged.
     pub fn resident_tokens(&self) -> u64 {
-        self.inner.lock().unwrap().resident_tokens
+        lock_recover(&self.inner).resident_tokens
     }
 
     /// Record one decode step under the session's variant; `latency_s` is
     /// enqueue-to-reply (the serving inter-token latency).
     pub fn record_decode(&self, variant: Variant, latency_s: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.decode_steps += 1;
         g.decode_latency.entry(variant).or_default().add(latency_s);
     }
@@ -299,7 +300,7 @@ impl Metrics {
     /// work): active session count, cache-resident tokens and cumulative
     /// KV-cache grow events.
     pub fn set_session_gauges(&self, active: usize, resident_tokens: usize, cache_grows: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.active_sessions = active as u64;
         g.resident_tokens = resident_tokens as u64;
         g.cache_grows = cache_grows;
@@ -308,32 +309,32 @@ impl Metrics {
     /// Cumulative KV-cache grow events as last gauged (e2e warm-cache
     /// assertions read this back through the protocol).
     pub fn cache_grows(&self) -> u64 {
-        self.inner.lock().unwrap().cache_grows
+        lock_recover(&self.inner).cache_grows
     }
 
     pub fn completed(&self) -> u64 {
-        self.inner.lock().unwrap().completed
+        lock_recover(&self.inner).completed
     }
 
     pub fn rejected(&self) -> u64 {
-        self.inner.lock().unwrap().rejected
+        lock_recover(&self.inner).rejected
     }
 
     pub fn errored(&self) -> u64 {
-        self.inner.lock().unwrap().errored
+        lock_recover(&self.inner).errored
     }
 
     pub fn expired_total(&self) -> u64 {
-        self.inner.lock().unwrap().expired.values().sum()
+        lock_recover(&self.inner).expired.values().sum()
     }
 
     pub fn quota_rejected(&self) -> u64 {
-        self.inner.lock().unwrap().quota_rejected
+        lock_recover(&self.inner).quota_rejected
     }
 
     /// Requests/second since start.
     pub fn throughput(&self) -> f64 {
-        let g = self.inner.lock().unwrap();
+        let g = lock_recover(&self.inner);
         match g.started {
             Some(t0) => g.completed as f64 / t0.elapsed().as_secs_f64().max(1e-9),
             None => 0.0,
@@ -342,7 +343,7 @@ impl Metrics {
 
     /// Human-readable multi-line report.
     pub fn report(&self) -> String {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         let mut s = format!(
             "completed={} rejected={} batches={} mean_occupancy={:.2} throughput={:.1} req/s\n",
             g.completed,
@@ -359,16 +360,16 @@ impl Metrics {
         );
         let variants: Vec<Variant> = g.latency.keys().copied().collect();
         for v in variants {
-            let line = g.latency.get_mut(&v).unwrap().report_ms(&format!("  {v} latency"));
-            s.push_str(&line);
-            s.push('\n');
-            let line = g
-                .queue_time
-                .get_mut(&v)
-                .unwrap()
-                .report_ms(&format!("  {v} queue  "));
-            s.push_str(&line);
-            s.push('\n');
+            if let Some(sum) = g.latency.get_mut(&v) {
+                let line = sum.report_ms(&format!("  {v} latency"));
+                s.push_str(&line);
+                s.push('\n');
+            }
+            if let Some(sum) = g.queue_time.get_mut(&v) {
+                let line = sum.report_ms(&format!("  {v} queue  "));
+                s.push_str(&line);
+                s.push('\n');
+            }
         }
         if g.sessions_opened > 0 {
             s.push_str(&format!(
@@ -392,13 +393,11 @@ impl Metrics {
             s.push_str(&format!("  decode steps={}\n", g.decode_steps));
             let variants: Vec<Variant> = g.decode_latency.keys().copied().collect();
             for v in variants {
-                let line = g
-                    .decode_latency
-                    .get_mut(&v)
-                    .unwrap()
-                    .report_ms(&format!("  {v} decode "));
-                s.push_str(&line);
-                s.push('\n');
+                if let Some(sum) = g.decode_latency.get_mut(&v) {
+                    let line = sum.report_ms(&format!("  {v} decode "));
+                    s.push_str(&line);
+                    s.push('\n');
+                }
             }
         }
         if let Some(rung) = &g.router_rung {
@@ -439,7 +438,7 @@ impl Metrics {
 
     /// Machine-readable snapshot.
     pub fn to_json(&self) -> Json {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         let mut obj = vec![
             ("completed", Json::num(g.completed as f64)),
             ("rejected", Json::num(g.rejected as f64)),
@@ -455,7 +454,7 @@ impl Metrics {
         let variants: Vec<Variant> = g.latency.keys().copied().collect();
         let mut per_variant = Vec::new();
         for v in variants {
-            let lat = g.latency.get_mut(&v).unwrap();
+            let Some(lat) = g.latency.get_mut(&v) else { continue };
             per_variant.push(Json::obj(vec![
                 ("variant", Json::str(v.to_string())),
                 ("n", Json::num(lat.len() as f64)),
@@ -511,7 +510,7 @@ impl Metrics {
             let variants: Vec<Variant> = g.decode_latency.keys().copied().collect();
             let mut per_variant = Vec::new();
             for v in variants {
-                let lat = g.decode_latency.get_mut(&v).unwrap();
+                let Some(lat) = g.decode_latency.get_mut(&v) else { continue };
                 per_variant.push(Json::obj(vec![
                     ("variant", Json::str(v.to_string())),
                     ("n", Json::num(lat.len() as f64)),

@@ -83,6 +83,7 @@ use crate::kernels::Variant;
 use crate::util::error::{err, Result};
 use crate::util::faults::{Fault, FaultInjector};
 use crate::util::json::Json;
+use crate::util::sync::lock_recover;
 
 /// Anything the serving front end can drive: blocking one-shot inference,
 /// blocking session ops, metrics snapshots, and drain-then-shutdown.
@@ -444,7 +445,7 @@ fn spawn_replica(
 /// accepting, and admitted by their breaker. `exclude` skips the replica
 /// a retry just died on (ignored when it is the only slot).
 fn pick(inner: &Inner, exclude: Option<usize>) -> ServeResult<(usize, u64, Arc<Engine>)> {
-    let mut slots = inner.slots.lock().unwrap();
+    let mut slots = lock_recover(&inner.slots);
     let n = slots.len();
     let start = inner.rr.fetch_add(1, Ordering::Relaxed);
     for k in 0..n {
@@ -474,7 +475,7 @@ fn pick(inner: &Inner, exclude: Option<usize>) -> ServeResult<(usize, u64, Arc<E
 /// holds the incarnation the dispatch went to (a respawned replica must
 /// not inherit its predecessor's failures).
 fn note(inner: &Inner, slot: usize, incarnation: u64, ok: bool) {
-    let mut slots = inner.slots.lock().unwrap();
+    let mut slots = lock_recover(&inner.slots);
     if let Some(s) = slots.get_mut(slot) {
         if s.incarnation == incarnation {
             if ok {
@@ -494,7 +495,7 @@ fn chaos_roll(inner: &Inner) {
         return;
     };
     let victim = |inner: &Inner| -> Option<Arc<Engine>> {
-        let slots = inner.slots.lock().unwrap();
+        let slots = lock_recover(&inner.slots);
         if slots.is_empty() {
             return None;
         }
@@ -516,7 +517,7 @@ fn chaos_roll(inner: &Inner) {
 /// Drop a lost session's route (releasing its ledger tokens), count it,
 /// and reply `SessionLost`.
 fn lost(inner: &Inner, session: u64) -> ServeError {
-    inner.sessions.lock().unwrap().remove(session);
+    lock_recover(&inner.sessions).remove(session);
     inner.metrics.record_session_lost();
     refresh_session_gauges(inner);
     ServeError::SessionLost { session }
@@ -533,7 +534,7 @@ fn lost_migration(inner: &Inner, session: u64) -> ServeError {
 /// Refresh the set-level session gauges (live routes, journal-resident
 /// tokens) from the route-table ledger.
 fn refresh_session_gauges(inner: &Inner) {
-    let routes = inner.sessions.lock().unwrap();
+    let routes = lock_recover(&inner.sessions);
     let (active, resident) = (routes.map.len(), routes.resident as usize);
     drop(routes);
     inner.metrics.set_session_gauges(active, resident, 0);
@@ -572,7 +573,7 @@ fn migrate(
         }
     };
     let journal = {
-        let routes = inner.sessions.lock().unwrap();
+        let routes = lock_recover(&inner.sessions);
         match routes.map.get(&session) {
             Some(r) if (r.slot, r.incarnation) == from => r.journal.clone(),
             // A concurrent migration already moved it: hand back the
@@ -580,7 +581,7 @@ fn migrate(
             Some(r) => {
                 let (slot, incarnation, local) = (r.slot, r.incarnation, r.inner);
                 drop(routes);
-                let slots = inner.slots.lock().unwrap();
+                let slots = lock_recover(&inner.slots);
                 return match slots.get(slot) {
                     Some(s) if s.incarnation == incarnation && s.engine.alive() => {
                         Ok((s.engine.clone(), slot, incarnation, local))
@@ -606,7 +607,7 @@ fn migrate(
     // intact), so being past the budget means the survivors are already
     // over-committed — replaying onto one would deepen the overshoot.
     if inner.cfg.max_resident_tokens > 0 {
-        let resident = inner.sessions.lock().unwrap().resident;
+        let resident = lock_recover(&inner.sessions).resident;
         if resident > inner.cfg.max_resident_tokens as u64 {
             crate::log_error!(
                 "session {session}: resident ledger {resident} past budget ({}); not replaying",
@@ -634,7 +635,7 @@ fn migrate(
     };
     match forward(inner, &engine, slot, incarnation, op, deadline) {
         Some(Ok(SessionReply::Opened { session: local, .. })) => {
-            let mut routes = inner.sessions.lock().unwrap();
+            let mut routes = lock_recover(&inner.sessions);
             match routes.map.get_mut(&session) {
                 Some(r) if (r.slot, r.incarnation) == from => {
                     r.slot = slot;
@@ -657,7 +658,7 @@ fn migrate(
                     let _ = forward(inner, &engine, slot, incarnation, close, None);
                     match current {
                         Some((s2, i2, l2)) => {
-                            let slots = inner.slots.lock().unwrap();
+                            let slots = lock_recover(&inner.slots);
                             match slots.get(s2) {
                                 Some(sl) if sl.incarnation == i2 && sl.engine.alive() => {
                                     Ok((sl.engine.clone(), s2, i2, l2))
@@ -693,7 +694,7 @@ fn migrate_all(inner: &Inner, slot: usize, incarnation: u64) -> usize {
         return 0;
     }
     let victims: Vec<u64> = {
-        let routes = inner.sessions.lock().unwrap();
+        let routes = lock_recover(&inner.sessions);
         routes
             .map
             .iter()
@@ -718,7 +719,7 @@ fn supervise(inner: Arc<Inner>) {
     let n = inner.cfg.replicas;
     let now = Instant::now();
     let mut seen: Vec<(u64, Instant)> = {
-        let slots = inner.slots.lock().unwrap();
+        let slots = lock_recover(&inner.slots);
         slots.iter().map(|s| (s.engine.tick(), now)).collect()
     };
     // Which incarnation's death was already counted per slot, so a failed
@@ -732,7 +733,7 @@ fn supervise(inner: Arc<Inner>) {
         let mut alive = 0usize;
         for i in 0..n {
             let (engine, incarnation) = {
-                let slots = inner.slots.lock().unwrap();
+                let slots = lock_recover(&inner.slots);
                 (slots[i].engine.clone(), slots[i].incarnation)
             };
             let tick = engine.tick();
@@ -774,7 +775,7 @@ fn supervise(inner: Arc<Inner>) {
             engine.shutdown();
             match spawn_replica(&inner.factory, &inner.engine_cfg) {
                 Ok(fresh) => {
-                    let mut slots = inner.slots.lock().unwrap();
+                    let mut slots = lock_recover(&inner.slots);
                     seen[i] = (fresh.tick(), Instant::now());
                     slots[i] = Slot {
                         engine: fresh,
@@ -962,10 +963,7 @@ impl ReplicaSet {
 
     /// Replicas whose worker is currently running.
     pub fn alive_replicas(&self) -> usize {
-        self.inner
-            .slots
-            .lock()
-            .unwrap()
+        lock_recover(&self.inner.slots)
             .iter()
             .filter(|s| s.engine.alive())
             .count()
@@ -1110,7 +1108,7 @@ impl ReplicaSet {
                 // resident-token budget is refused with the limit as the
                 // hint, before any replica does prefill work.
                 if inner.cfg.max_resident_tokens > 0 {
-                    let resident = inner.sessions.lock().unwrap().resident;
+                    let resident = lock_recover(&inner.sessions).resident;
                     if resident + prompt.len() as u64 > inner.cfg.max_resident_tokens as u64 {
                         inner.metrics.record_resident_budget_rejected();
                         return Err(ServeError::QuotaExceeded {
@@ -1132,7 +1130,7 @@ impl ReplicaSet {
                 match reply {
                     Ok(SessionReply::Opened { session: local, resident, variant }) => {
                         let global = inner.next_session.fetch_add(1, Ordering::Relaxed) + 1;
-                        inner.sessions.lock().unwrap().insert(global, SessionRoute {
+                        lock_recover(&inner.sessions).insert(global, SessionRoute {
                             slot,
                             incarnation,
                             inner: local,
@@ -1179,7 +1177,7 @@ impl ReplicaSet {
                         resp.session = session;
                         // Journal the token only after the step served:
                         // a refused/failed step must not pollute replay.
-                        inner.sessions.lock().unwrap().append_decoded(session, token);
+                        lock_recover(&inner.sessions).append_decoded(session, token);
                         refresh_session_gauges(inner);
                         Ok(SessionReply::Decoded(resp))
                     }
@@ -1200,10 +1198,7 @@ impl ReplicaSet {
                 // Served, refused, or died mid-close: the client
                 // relinquished the id either way — drop the route and
                 // release its ledger tokens.
-                let journaled = inner
-                    .sessions
-                    .lock()
-                    .unwrap()
+                let journaled = lock_recover(&inner.sessions)
                     .remove(session)
                     .map(|r| r.journal.tokens())
                     .unwrap_or(0);
@@ -1249,7 +1244,7 @@ impl ReplicaSet {
     fn route_for_close(&self, session: u64) -> ServeResult<Routed> {
         let inner = &*self.inner;
         let (slot_idx, incarnation, local) = {
-            let sessions = inner.sessions.lock().unwrap();
+            let sessions = lock_recover(&inner.sessions);
             match sessions.map.get(&session) {
                 Some(r) => (r.slot, r.incarnation, r.inner),
                 None => {
@@ -1258,7 +1253,7 @@ impl ReplicaSet {
             }
         };
         {
-            let slots = inner.slots.lock().unwrap();
+            let slots = lock_recover(&inner.slots);
             if let Some(s) = slots.get(slot_idx) {
                 if s.incarnation == incarnation && s.engine.alive() {
                     return Ok(Routed::Live(s.engine.clone(), slot_idx, incarnation, local));
@@ -1271,7 +1266,7 @@ impl ReplicaSet {
     /// Stop admitting new work across the set (and on every replica).
     pub fn stop_admissions(&self) {
         self.inner.accepting.store(false, Ordering::SeqCst);
-        for s in self.inner.slots.lock().unwrap().iter() {
+        for s in lock_recover(&self.inner.slots).iter() {
             s.engine.stop_admissions();
         }
     }
@@ -1284,7 +1279,7 @@ impl ReplicaSet {
     /// Chaos/test hook: crash replica `idx` (worker exits without
     /// draining). The supervisor detects and respawns it.
     pub fn inject_crash(&self, idx: usize) {
-        let slots = self.inner.slots.lock().unwrap();
+        let slots = lock_recover(&self.inner.slots);
         if !slots.is_empty() {
             slots[idx % slots.len()].engine.inject_crash();
         }
@@ -1293,7 +1288,7 @@ impl ReplicaSet {
     /// Chaos/test hook: wedge replica `idx` (heartbeat freezes until the
     /// watchdog tears it down).
     pub fn inject_wedge(&self, idx: usize) {
-        let slots = self.inner.slots.lock().unwrap();
+        let slots = lock_recover(&self.inner.slots);
         if !slots.is_empty() {
             slots[idx % slots.len()].engine.inject_wedge();
         }
@@ -1311,7 +1306,7 @@ impl ReplicaSet {
         if !inner.accepting.load(Ordering::SeqCst) {
             return Err(ServeError::ShuttingDown);
         }
-        let n = inner.slots.lock().unwrap().len();
+        let n = lock_recover(&inner.slots).len();
         if idx >= n {
             return Err(ServeError::Invalid(format!(
                 "no replica slot {idx} (configured {n})"
@@ -1323,7 +1318,7 @@ impl ReplicaSet {
             ));
         }
         let (old, incarnation) = {
-            let slots = inner.slots.lock().unwrap();
+            let slots = lock_recover(&inner.slots);
             (slots[idx].engine.clone(), slots[idx].incarnation)
         };
         // Admissions off first so the dispatcher stops routing new opens
@@ -1334,7 +1329,7 @@ impl ReplicaSet {
         match spawn_replica(&inner.factory, &inner.engine_cfg) {
             Ok(fresh) => {
                 {
-                    let mut slots = inner.slots.lock().unwrap();
+                    let mut slots = lock_recover(&inner.slots);
                     // The supervisor may have raced a teardown of the
                     // draining replica; incarnation-gate the swap so two
                     // replacements never fight over the slot.
@@ -1371,7 +1366,7 @@ impl ReplicaSet {
     pub fn health_json(&self) -> Json {
         let inner = &*self.inner;
         let (replicas, alive) = {
-            let slots = inner.slots.lock().unwrap();
+            let slots = lock_recover(&inner.slots);
             let replicas: Vec<Json> = slots
                 .iter()
                 .enumerate()
@@ -1397,7 +1392,7 @@ impl ReplicaSet {
             ("configured", Json::num(inner.cfg.replicas as f64)),
             (
                 "resident_tokens",
-                Json::num(inner.sessions.lock().unwrap().resident as f64),
+                Json::num(lock_recover(&inner.sessions).resident as f64),
             ),
             (
                 "max_resident_tokens",
@@ -1410,11 +1405,7 @@ impl ReplicaSet {
     /// Set-level metrics snapshot with per-replica `shards` attached.
     pub fn metrics_to_json(&self) -> Json {
         let mut doc = self.inner.metrics.to_json();
-        let shards: Vec<Json> = self
-            .inner
-            .slots
-            .lock()
-            .unwrap()
+        let shards: Vec<Json> = lock_recover(&self.inner.slots)
             .iter()
             .map(|s| s.engine.metrics.to_json())
             .collect();
@@ -1427,11 +1418,7 @@ impl ReplicaSet {
     /// Human-readable report: the set-level counters, then each shard.
     pub fn report(&self) -> String {
         let mut s = self.inner.metrics.report();
-        let shards: Vec<(usize, String)> = self
-            .inner
-            .slots
-            .lock()
-            .unwrap()
+        let shards: Vec<(usize, String)> = lock_recover(&self.inner.slots)
             .iter()
             .enumerate()
             .map(|(i, slot)| (i, slot.engine.metrics.report()))
@@ -1448,14 +1435,10 @@ impl ReplicaSet {
     pub fn shutdown(&self) {
         self.inner.accepting.store(false, Ordering::SeqCst);
         self.inner.running.store(false, Ordering::SeqCst);
-        if let Some(h) = self.supervisor.lock().unwrap().take() {
+        if let Some(h) = lock_recover(&self.supervisor).take() {
             let _ = h.join();
         }
-        let engines: Vec<Arc<Engine>> = self
-            .inner
-            .slots
-            .lock()
-            .unwrap()
+        let engines: Vec<Arc<Engine>> = lock_recover(&self.inner.slots)
             .iter()
             .map(|s| s.engine.clone())
             .collect();

@@ -89,6 +89,7 @@ impl AdaptiveRouter {
     /// `Err` instead). Both paths share [`AdaptiveRouter::from_rungs`],
     /// so the two construction routes can never enforce different rules.
     pub fn new(rungs: Vec<Rung>, hysteresis: usize) -> Self {
+        // lint: allow(panic, documented contract - malformed code-constructed ladders are programmer error)
         AdaptiveRouter::from_rungs(rungs, hysteresis).unwrap_or_else(|e| panic!("{e}"))
     }
 

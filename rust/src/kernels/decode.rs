@@ -40,6 +40,7 @@ use crate::sparse::topk;
 /// query row `q` (`dk` entries) over every cached row, written into
 /// `out` (`dv` entries, fully overwritten). An empty cache yields zeros
 /// (the fused kernel's empty-key-set semantics).
+// lint: hot-path
 pub fn decode_dense_tiled_scratch(
     q: &[f32],
     cache: &KvCache,
@@ -62,6 +63,7 @@ pub fn decode_dense_scratch(q: &[f32], cache: &KvCache, out: &mut [f32], scratch
 /// scores against the cached key mirror, top-k select cached columns,
 /// then fused exact SDDMM + online softmax + SpMM over the kept columns
 /// in `tile`-sized chunks. `out` (`dv` entries) is fully overwritten.
+// lint: hot-path
 pub fn decode_dsa_tiled_scratch(
     q: &[f32],
     cache: &KvCache,

@@ -192,6 +192,7 @@ pub fn attention_rows_fused_tile_scratch(
 /// allocation-free; per-row running state lives in
 /// [`MAX_QUERY_BLOCK`]-sized stack arrays (the `query_block` cap).
 #[allow(clippy::too_many_arguments)]
+// lint: hot-path
 pub fn attention_rows_fused_tiled_scratch(
     q: &[f32],
     k: &[f32],

@@ -357,6 +357,7 @@ impl KernelDispatch for DenseKernel {
         None
     }
 
+    // lint: hot-path
     fn forward_into(&self, x: &AttnInput, out: &mut [f32]) {
         x.validate();
         let tile = self.spec.tiles.lookup(x.l, x.dk);
@@ -374,6 +375,7 @@ impl KernelDispatch for DenseKernel {
         );
     }
 
+    // lint: hot-path
     fn forward_batch_into(&self, x: &AttnBatch, out: &mut [f32]) {
         x.validate();
         let tile = self.spec.tiles.lookup(x.l, x.dk);
@@ -393,6 +395,7 @@ impl KernelDispatch for DenseKernel {
         );
     }
 
+    // lint: hot-path
     fn decode_into(&self, q: &[f32], cache: &KvCache, scratch: &mut Scratch, out: &mut [f32]) {
         // Same per-shape tile the full forward resolves at this (l, dk),
         // so a decode step stays bitwise-equal to its forward row even
@@ -447,6 +450,7 @@ impl KernelDispatch for SparseKernel {
         Some(self.keep_for(l))
     }
 
+    // lint: hot-path
     fn forward_into(&self, x: &AttnInput, out: &mut [f32]) {
         x.validate();
         let keep = self.keep_for(x.l);
@@ -466,6 +470,7 @@ impl KernelDispatch for SparseKernel {
         );
     }
 
+    // lint: hot-path
     fn forward_batch_into(&self, x: &AttnBatch, out: &mut [f32]) {
         x.validate();
         let tile = self.spec.tiles.lookup(x.l, x.dk);
@@ -486,6 +491,7 @@ impl KernelDispatch for SparseKernel {
         );
     }
 
+    // lint: hot-path
     fn decode_into(&self, q: &[f32], cache: &KvCache, scratch: &mut Scratch, out: &mut [f32]) {
         let l = cache.len();
         let tile = self.spec.tiles.lookup(l, cache.dk());

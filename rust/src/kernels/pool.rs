@@ -49,6 +49,7 @@ use std::thread::JoinHandle;
 
 use super::scratch::Scratch;
 use crate::util::faults::FaultInjector;
+use crate::util::sync::{lock_recover, wait_recover};
 
 /// A unit of work handed to one worker: runs once with that worker's
 /// persistent scratch. The `'env` lifetime lets tasks borrow the caller's
@@ -96,7 +97,7 @@ impl Latch {
     }
 
     fn complete(&self, panicked: Option<Payload>) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_recover(&self.state);
         g.0 -= 1;
         if let Some(p) = panicked {
             g.1.get_or_insert(p);
@@ -108,9 +109,9 @@ impl Latch {
 
     /// Block until every task completed; the first panic payload, if any.
     fn wait(&self) -> Option<Payload> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_recover(&self.state);
         while g.0 > 0 {
-            g = self.cv.wait(g).unwrap();
+            g = wait_recover(&self.cv, g);
         }
         g.1.take()
     }
@@ -246,7 +247,7 @@ impl WorkerPool {
         }
         let latch = Arc::new(Latch::new(tasks.len()));
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_recover(&self.shared.queue);
             for t in tasks {
                 // SAFETY: erasing `'env` to `'static` is sound because
                 // this function does not return until `latch.wait()`
@@ -304,7 +305,7 @@ fn worker_loop(shared: &Shared) {
     let mut grows_seen = 0u64;
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock_recover(&shared.queue);
             loop {
                 if let Some(j) = q.pop_front() {
                     break Some(j);
@@ -312,7 +313,7 @@ fn worker_loop(shared: &Shared) {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     break None;
                 }
-                q = shared.available.wait(q).unwrap(); // parked
+                q = wait_recover(&shared.available, q); // parked
             }
         };
         let Some((task, latch)) = job else { return };

@@ -485,6 +485,8 @@ mod x86 {
     /// The host CPU must support AVX2 and FMA.
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
+    // SAFETY: delegated to callers — only reachable through the
+    // `avx2_fma()`-guarded dispatch arms above.
     pub unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
         super::lanes::dot_f32(a, b)
     }
@@ -493,6 +495,8 @@ mod x86 {
     /// The host CPU must support AVX2 and FMA.
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
+    // SAFETY: delegated to callers — only reachable through the
+    // `avx2_fma()`-guarded dispatch arms above.
     pub unsafe fn axpy_f32_avx2(out: &mut [f32], w: f32, x: &[f32]) {
         super::lanes::axpy_f32(out, w, x)
     }
@@ -501,6 +505,8 @@ mod x86 {
     /// The host CPU must support AVX2 and FMA.
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
+    // SAFETY: delegated to callers — only reachable through the
+    // `avx2_fma()`-guarded dispatch arms above.
     pub unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
         super::lanes::dot_i8(a, b)
     }
@@ -509,6 +515,8 @@ mod x86 {
     /// The host CPU must support AVX2 and FMA.
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
+    // SAFETY: delegated to callers — only reachable through the
+    // `avx2_fma()`-guarded dispatch arms above.
     pub unsafe fn max_f32_avx2(x: &[f32]) -> f32 {
         super::lanes::max_f32(x)
     }
@@ -517,6 +525,8 @@ mod x86 {
     /// The host CPU must support AVX2 and FMA.
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
+    // SAFETY: delegated to callers — only reachable through the
+    // `avx2_fma()`-guarded dispatch arms above.
     pub unsafe fn scale_f32_avx2(x: &mut [f32], s: f32) {
         super::lanes::scale_f32(x, s)
     }
@@ -531,6 +541,8 @@ mod x86_512 {
     /// # Safety
     /// The host CPU must support AVX-512F.
     #[target_feature(enable = "avx512f")]
+    // SAFETY: delegated to callers — only reachable through the
+    // `avx512()`-guarded dispatch arms above.
     pub unsafe fn dot_f32_avx512(a: &[f32], b: &[f32]) -> f32 {
         super::lanes16::dot_f32(a, b)
     }
@@ -538,6 +550,8 @@ mod x86_512 {
     /// # Safety
     /// The host CPU must support AVX-512F.
     #[target_feature(enable = "avx512f")]
+    // SAFETY: delegated to callers — only reachable through the
+    // `avx512()`-guarded dispatch arms above.
     pub unsafe fn axpy_f32_avx512(out: &mut [f32], w: f32, x: &[f32]) {
         super::lanes16::axpy_f32(out, w, x)
     }
@@ -546,6 +560,8 @@ mod x86_512 {
     /// The host CPU must support AVX-512F and AVX-512BW (the widened
     /// int8 -> i32 body needs the byte/word instructions).
     #[target_feature(enable = "avx512f,avx512bw")]
+    // SAFETY: delegated to callers — only reachable through the
+    // `avx512()`-guarded dispatch arms above.
     pub unsafe fn dot_i8_avx512(a: &[i8], b: &[i8]) -> i32 {
         super::lanes16::dot_i8(a, b)
     }
@@ -553,6 +569,8 @@ mod x86_512 {
     /// # Safety
     /// The host CPU must support AVX-512F.
     #[target_feature(enable = "avx512f")]
+    // SAFETY: delegated to callers — only reachable through the
+    // `avx512()`-guarded dispatch arms above.
     pub unsafe fn max_f32_avx512(x: &[f32]) -> f32 {
         super::lanes16::max_f32(x)
     }
@@ -560,6 +578,8 @@ mod x86_512 {
     /// # Safety
     /// The host CPU must support AVX-512F.
     #[target_feature(enable = "avx512f")]
+    // SAFETY: delegated to callers — only reachable through the
+    // `avx512()`-guarded dispatch arms above.
     pub unsafe fn scale_f32_avx512(x: &mut [f32], s: f32) {
         super::lanes16::scale_f32(x, s)
     }

@@ -306,6 +306,7 @@ pub fn dsa_attention_rows_fused_scratch(
 /// indices `scratch.kept` and the per-chunk exact scores `scratch.vals`,
 /// so a warm scratch runs the whole loop allocation-free.
 #[allow(clippy::too_many_arguments)]
+// lint: hot-path
 pub fn dsa_attention_rows_fused_tile_scratch(
     q: &[f32],
     k: &[f32],

@@ -26,15 +26,17 @@
 //! | [`runtime`] | artifact manifest (always) + PJRT client/registry (`xla` feature) |
 //! | [`coordinator`] | dynamic batcher (one-shot queue + two session lanes: decode/close drains before opens so prefill backlogs never stall live streams), backends (warm per-bucket batch buffers — zero per-batch output allocations at steady state; `InferBackend` is decode-aware with bailing defaults, the native backend holds the session table + recycled cache pool and optional fault-injection hooks), engine worker (session lifecycle: open/decode/close with an LRU session cap; **overload-safe**: every request carries an enqueue time + optional deadline, the queue caps with typed `Overloaded{retry_after_ms}` refusals, expired work is shed with `Expired` replies, and `stop_admissions` + drain-then-`shutdown` answers every in-flight job before the worker exits), queue-depth adaptive variant router (typed rungs, validated at construction via `AdaptiveRouter::from_pairs`; two-lane `QueueLoad` weighs decode steps cheaper than prefills; `with_degrade_depth` adds the shed ladder that rides default traffic to the sparsest rung under sustained backlog), typed [`coordinator::ServeError`] (machine-readable codes `overloaded`/`expired`/`quota_exceeded`/`shutting_down`/`session_lost`/`invalid`/`error`, JSON-rendered at the protocol boundary), metrics (incl. router decisions, pool counters, session gauges + per-variant decode latency, the always-present overload section: shed/expired/degraded/quota counts, and the replica section: alive gauge, crashes, respawns, retried, failover races, session_lost, plus the migration counters: sessions migrated, replayed tokens, migration failures, resident-budget refusals), and replicated serving ([`coordinator::ReplicaSet`]: N engines from one backend factory behind a heartbeat/watchdog supervisor that tears down and respawns crashed or wedged replicas, bounded failover retry for accepted one-shots, per-replica circuit breakers, **durable decode sessions** — every session's journal (prompt + decoded tokens) lives in the replica-independent route table and replays onto a healthy sibling when its replica dies, kernel-free via `SessionOp::Reopen`, bounded by `replay_budget_tokens`, so `session_lost` is reserved for *exhausted* migrations — a global `max_resident_tokens` journal-ledger budget refusing opens with `quota_exceeded`, `drain_replica` (migrate-then-swap, the rolling-restart building block), per-replica `health_json`, and seeded `replica.crash`/`replica.wedge` chaos sites; the [`coordinator::Serving`] trait abstracts the front end over `Engine` vs `ReplicaSet`) |
 //! | [`server`] | line-JSON TCP front end + client over the `Serving` trait (a single `Engine` or a `ReplicaSet`): `infer`, `metrics`, and the session ops `open`/`decode`/`close` — parsed once at the boundary with `deadline_ms` validation, structured `ServeError` replies; per-connection quotas (token-bucket request rate + open-session cap), an optional idle read timeout (`--idle-timeout-ms`: one final structured `timeout` reply, then close), disconnect cleanup that closes abandoned sessions and frees their quota slots (a `session_lost` reply frees the slot too), admin ops `health` (per-replica liveness/breaker/resident tokens) and `drain_replica` (migrate a slot's sessions off, swap in a fresh engine), and a `shutdown` op that stops admissions, wakes the accept loop via self-connect, joins connections and drains the engine |
+//! | [`lint`] | repo-native static analysis (`dsa-serve lint`): a zero-dependency source scanner enforcing the crate's unchecked invariants — `// SAFETY:` on every `unsafe`, no panics on serving paths, rank-ascending lock order, allocation-free `lint: hot-path` fns, probe-guarded `#[target_feature]` calls, documented+tested wire codes — with validated `// lint:` pragmas (see LINTS.md) |
 //! | [`sparse`] | mask / CSR / column-vector formats, top-k |
 //! | [`sim`] | PE-array dataflow + multi-precision simulators (Sec. 5.2) |
 //! | [`costmodel`] | MAC / energy / V100-roofline models (Fig. 7/8/10, Table 4) |
 //! | [`workload`] | synthetic serving workload generators, incl. long-lived decode-session traces (prompt ∥ streamed steps ≡ a one-shot request, so decode accuracy is directly comparable) |
-//! | [`util`] | offline substrates: json, cli, rng, stats, bench, prop, error, logging, tensorio, faults (seeded fault injection for chaos tests) |
+//! | [`util`] | offline substrates: json, cli, rng, stats, bench, prop, error, logging, tensorio, faults (seeded fault injection for chaos tests), sync (poison-tolerant `lock_recover`/`wait_recover` — the only sanctioned way to take a serving-path lock) |
 
 pub mod coordinator;
 pub mod costmodel;
 pub mod kernels;
+pub mod lint;
 pub mod runtime;
 pub mod server;
 pub mod sim;

@@ -1,0 +1,166 @@
+//! `dsa-lint` — a repo-native static-analysis pass over the crate's own
+//! sources, exposed as `dsa-serve lint [--check] [paths…]`.
+//!
+//! The crate's correctness rests on invariants no compiler checks: every
+//! `unsafe` needs a written justification, serving paths must refuse
+//! rather than die, the `RouteTable` → `Engine` → `Metrics` →
+//! `WorkerPool` lock graph must stay acyclic, the fused serving loops
+//! must stay allocation-free, `#[target_feature]` code must stay behind
+//! runtime probes, and the wire-protocol error codes must stay
+//! documented and tested. This module enforces all six statically — a
+//! zero-dependency, hand-rolled scanner in the house style of
+//! `util/json.rs`, because the toolchain may not be available where the
+//! code is authored but the rules must still run in CI.
+//!
+//! Rules (ids are stable; see LINTS.md for rationale and examples):
+//!
+//! * `safety`         — every `unsafe` carries a `// SAFETY:` comment
+//! * `panic`          — no `.unwrap()`/`.expect(`/`panic!` on serving
+//!   paths (`coordinator/`, `server/`) outside `#[cfg(test)]`
+//! * `lock-order`     — nested ranked-lock acquisitions must ascend the
+//!   declared partial order
+//! * `hot-path-alloc` — no `Vec::new`/`vec![`/`.to_vec()`/`.clone()` in
+//!   fns tagged `lint: hot-path`
+//! * `target-feature` — `#[target_feature]` fns are only called behind
+//!   `is_x86_feature_detected!` (directly or via a probe fn)
+//! * `wire-code`      — every `ServeError::code()` string appears in the
+//!   server protocol docs and in at least one test
+//! * `pragma`         — the pragma vocabulary itself is validated
+//!
+//! Pragmas (line comments, validated — a typo is a finding):
+//!
+//! `// lint: allow(<rule>, <reason>)` suppresses `<rule>` on the next
+//! code line (or its own line as a trailing comment);
+//! `// lint: hot-path` subjects the next `fn` to the allocation ban.
+//!
+//! The API is hermetic by design: [`lint_files`] takes `(path, source)`
+//! pairs so the fixture tests in `rules` never touch the filesystem,
+//! while [`lint_paths`] wraps it with a directory walk for the CLI and
+//! the self-lint test in `tests/lint_self.rs`.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{err, Result};
+
+mod rules;
+mod scan;
+
+/// One rule violation: `path:line: rule-id message`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    fn new(path: &str, line: usize, rule: &'static str, message: &str) -> Finding {
+        Finding { path: path.to_string(), line, rule, message: message.to_string() }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {} {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// Lint in-memory `(path, source)` pairs — the hermetic core. Paths
+/// matter: `panic` scopes itself to `coordinator/`/`server/` components
+/// and `wire-code` looks for the `server/mod.rs` protocol docs.
+pub fn lint_files(files: &[(String, String)]) -> Vec<Finding> {
+    let parsed: Vec<scan::SourceFile> =
+        files.iter().map(|(p, s)| scan::SourceFile::parse(p, s)).collect();
+    rules::check_all(&parsed)
+}
+
+/// Lint `.rs` files on disk: files are taken as-is, directories are
+/// walked recursively (skipping `target/`), and the union is scanned as
+/// one file set so the cross-file rules see everything at once.
+pub fn lint_paths(paths: &[PathBuf]) -> Result<Vec<Finding>> {
+    let mut rs_files = Vec::new();
+    for p in paths {
+        collect_rs(p, &mut rs_files)?;
+    }
+    rs_files.sort();
+    rs_files.dedup();
+    let mut loaded = Vec::with_capacity(rs_files.len());
+    for p in &rs_files {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| err!("lint: reading {}: {e}", p.display()))?;
+        loaded.push((p.display().to_string(), text));
+    }
+    Ok(lint_files(&loaded))
+}
+
+/// The default scan set when the CLI gets no path arguments: the crate's
+/// `src/`, `tests/` and `benches/` trees, anchored to the manifest dir
+/// baked in at compile time so `dsa-serve lint` works from any CWD.
+pub fn default_paths() -> Vec<PathBuf> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    ["src", "tests", "benches"]
+        .iter()
+        .map(|d| root.join(d))
+        .filter(|p| p.is_dir())
+        .collect()
+}
+
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if path.is_dir() {
+        if path.file_name().is_some_and(|n| n == "target") {
+            return Ok(());
+        }
+        let entries = std::fs::read_dir(path)
+            .map_err(|e| err!("lint: reading dir {}: {e}", path.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| err!("lint: walking {}: {e}", path.display()))?;
+            collect_rs(&entry.path(), out)?;
+        }
+        Ok(())
+    } else if path.is_file() {
+        if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path.to_path_buf());
+        }
+        Ok(())
+    } else {
+        Err(err!("lint: no such path {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_files_is_hermetic_and_multi_file() {
+        let files = vec![
+            ("coordinator/a.rs".to_string(), "fn f(x: Option<u32>) { x.unwrap(); }\n".to_string()),
+            ("kernels/b.rs".to_string(), "fn g() { unsafe { op() } }\n".to_string()),
+        ];
+        let findings = lint_files(&files);
+        assert_eq!(findings.len(), 2);
+        assert_eq!(findings[0].rule, "panic");
+        assert_eq!(findings[1].rule, "safety");
+    }
+
+    #[test]
+    fn findings_render_as_path_line_rule_message() {
+        let f = Finding::new("src/x.rs", 7, "panic", "`.unwrap()` on a serving path");
+        assert_eq!(f.to_string(), "src/x.rs:7: panic `.unwrap()` on a serving path");
+    }
+
+    #[test]
+    fn lint_paths_rejects_missing_paths() {
+        let missing = PathBuf::from("/nonexistent/definitely/not/here");
+        assert!(lint_paths(&[missing]).is_err());
+    }
+
+    #[test]
+    fn default_paths_exist_and_include_src() {
+        let paths = default_paths();
+        assert!(paths.iter().any(|p| p.ends_with("src")));
+        assert!(paths.iter().all(|p| p.is_dir()));
+    }
+}

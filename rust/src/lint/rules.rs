@@ -1,0 +1,798 @@
+//! The six lint rules plus pragma validation. Every rule walks the
+//! [`SourceFile`] model from `scan` — sanitized code for code-shaped
+//! checks, comment lines for comment-shaped checks — and emits
+//! [`Finding`]s keyed by a stable kebab-case rule id. LINTS.md documents
+//! each rule's rationale; the fixture tests at the bottom pin each
+//! rule's violating and clean shapes.
+
+use std::collections::BTreeSet;
+
+use super::scan::{PragmaKind, SourceFile};
+use super::Finding;
+
+/// The rule vocabulary — also the set of names `allow(<rule>, …)`
+/// accepts. `pragma` findings themselves cannot be allowed away.
+pub const RULES: &[&str] =
+    &["safety", "panic", "lock-order", "hot-path-alloc", "target-feature", "wire-code"];
+
+/// Declared lock partial order (R3): a thread may acquire a
+/// higher-ranked lock while holding a lower-ranked one, never the
+/// reverse. Receivers are matched by field name at the `.lock()` /
+/// `lock_recover(&…)` site.
+///
+/// rank 0: `sessions` — the `ReplicaSet` route table (`RouteTable`)
+/// rank 1: `slots`, `worker` — per-replica engine state
+/// rank 2: `inner` — `Metrics`
+/// rank 3: `queue`, `state` — `WorkerPool` queue + latch
+const LOCK_RANKS: &[(&str, u32)] =
+    &[("sessions", 0), ("slots", 1), ("worker", 1), ("inner", 2), ("queue", 3), ("state", 3)];
+
+fn lock_rank(receiver: &str) -> Option<u32> {
+    LOCK_RANKS.iter().find(|(n, _)| *n == receiver).map(|&(_, r)| r)
+}
+
+/// Run every rule over the parsed file set.
+pub fn check_all(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        check_pragmas(f, &mut out);
+        check_safety(f, &mut out);
+        check_panic(f, &mut out);
+        check_lock_order(f, &mut out);
+        check_hot_path_alloc(f, &mut out);
+    }
+    check_target_feature(files, &mut out);
+    check_wire_codes(files, &mut out);
+    out.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    out
+}
+
+/// Whether an `allow(<rule>, …)` pragma covers `line`: the pragma sits
+/// on the line itself (trailing comment) or the line is the next code
+/// line after a standalone pragma comment.
+fn allowed(f: &SourceFile, rule: &str, line: usize) -> bool {
+    f.pragmas.iter().any(|p| match &p.kind {
+        PragmaKind::Allow { rule: r, .. } if r == rule => {
+            p.line == line || f.next_code_line(p.line + 1) == Some(line)
+        }
+        _ => false,
+    })
+}
+
+/// Find `needle` in `code` at a word boundary — the boundary applies
+/// only on needle ends that are themselves identifier characters, so
+/// `fast(` demands a boundary before `fast` but accepts anything after
+/// the paren.
+fn word_at(code: &str, needle: &str, from: usize) -> Option<usize> {
+    let is_ident_byte = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let bytes = code.as_bytes();
+    let nb = needle.as_bytes();
+    let head_ident = nb.first().copied().is_some_and(is_ident_byte);
+    let tail_ident = nb.last().copied().is_some_and(is_ident_byte);
+    let mut start = from;
+    while let Some(pos) = code[start..].find(needle) {
+        let at = start + pos;
+        let end = at + needle.len();
+        let pre_ok = !head_ident || at == 0 || !is_ident_byte(bytes[at - 1]);
+        let post_ok = !tail_ident || end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if pre_ok && post_ok {
+            return Some(at);
+        }
+        start = at + 1;
+    }
+    None
+}
+
+/// R1 `safety`: every `unsafe` token is preceded (same line, or walking
+/// up through contiguous comment/attribute/blank lines) by a comment
+/// mentioning safety — `// SAFETY: …` or a `/// # Safety` doc section.
+/// Applies to tests too: an unjustified `unsafe` is never fine.
+fn check_safety(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (idx, code) in f.code.iter().enumerate() {
+        let line = idx + 1;
+        if word_at(code, "unsafe", 0).is_none() {
+            continue;
+        }
+        let mut ok = f.safety_comment(line);
+        let mut l = line;
+        while !ok && l > 1 {
+            l -= 1;
+            let t = f.code[l - 1].trim();
+            if t.is_empty() || t.starts_with("#[") {
+                ok = f.safety_comment(l);
+            } else {
+                break;
+            }
+        }
+        if !ok && !allowed(f, "safety", line) {
+            out.push(Finding::new(
+                &f.path,
+                line,
+                "safety",
+                "`unsafe` without a `// SAFETY:` comment immediately above",
+            ));
+        }
+    }
+}
+
+/// R2 `panic`: serving code under `coordinator/` and `server/` must
+/// return typed `ServeError`s, not die — `.unwrap()` / `.expect(` /
+/// `panic!` / `unreachable!` / `todo!` / `unimplemented!` are banned
+/// outside `#[cfg(test)]` unless carrying `// lint: allow(panic, …)`.
+fn check_panic(f: &SourceFile, out: &mut Vec<Finding>) {
+    let scoped =
+        f.path.split('/').any(|component| component == "coordinator" || component == "server");
+    if !scoped {
+        return;
+    }
+    const TOKENS: &[&str] =
+        &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+    for (idx, code) in f.code.iter().enumerate() {
+        let line = idx + 1;
+        if f.in_test[idx] {
+            continue;
+        }
+        for tok in TOKENS {
+            if code.contains(tok) && !allowed(f, "panic", line) {
+                out.push(Finding::new(
+                    &f.path,
+                    line,
+                    "panic",
+                    &format!("`{tok}` on a serving path — return a `ServeError` instead"),
+                ));
+                break;
+            }
+        }
+    }
+}
+
+/// One lock acquisition found on a line.
+struct Acq {
+    receiver: String,
+    rank: u32,
+    bound: Option<String>,
+}
+
+/// Extract the lock acquisitions on one sanitized code line: both the
+/// raw `….lock()` form and the sanctioned `lock_recover(&…)` /
+/// `wait_recover` forms (the latter re-acquires a lock already ranked,
+/// so it is not a new acquisition).
+fn lock_acqs(code: &str) -> Vec<Acq> {
+    let mut acqs = Vec::new();
+    let bytes = code.as_bytes();
+    let bound_name = code.trim_start().strip_prefix("let ").map(|rest| {
+        let rest = rest.trim_start().strip_prefix("mut ").unwrap_or(rest.trim_start());
+        rest.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect::<String>()
+    });
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(".lock()") {
+        let at = start + pos;
+        let mut b = at;
+        while b > 0 && (bytes[b - 1].is_ascii_alphanumeric() || bytes[b - 1] == b'_') {
+            b -= 1;
+        }
+        let receiver = &code[b..at];
+        if let Some(rank) = lock_rank(receiver) {
+            acqs.push(Acq { receiver: receiver.to_string(), rank, bound: bound_name.clone() });
+        }
+        start = at + 1;
+    }
+    start = 0;
+    while let Some(pos) = code[start..].find("lock_recover(&") {
+        let at = start + pos;
+        let path_start = at + "lock_recover(&".len();
+        let path: String = code[path_start..]
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_' || *c == '.')
+            .collect();
+        let receiver = path.rsplit('.').next().unwrap_or("").to_string();
+        if let Some(rank) = lock_rank(&receiver) {
+            acqs.push(Acq { receiver, rank, bound: bound_name.clone() });
+        }
+        start = at + 1;
+    }
+    acqs
+}
+
+/// R3 `lock-order`: within one function, flag a ranked-lock acquisition
+/// made while a strictly higher-ranked guard is still held. Guard
+/// lifetimes are tracked conservatively: a `let`-bound guard dies at
+/// `drop(name)` or when its block closes; an unbound (temporary) guard
+/// dies at the end of its statement.
+fn check_lock_order(f: &SourceFile, out: &mut Vec<Finding>) {
+    struct Hold {
+        receiver: String,
+        rank: u32,
+        bound: Option<String>,
+        depth: i32,
+    }
+    for span in &f.fns {
+        let mut holds: Vec<Hold> = Vec::new();
+        let mut depth = 0i32;
+        for line in span.body_start..=span.body_end {
+            let code = &f.code[line - 1];
+            for acq in lock_acqs(code) {
+                if let Some(worst) =
+                    holds.iter().filter(|h| h.rank > acq.rank).max_by_key(|h| h.rank)
+                {
+                    if !allowed(f, "lock-order", line) {
+                        out.push(Finding::new(
+                            &f.path,
+                            line,
+                            "lock-order",
+                            &format!(
+                                "acquires `{}` (rank {}) while holding `{}` (rank {}) — \
+                                 declared order is rank-ascending",
+                                acq.receiver, acq.rank, worst.receiver, worst.rank
+                            ),
+                        ));
+                    }
+                }
+                holds.push(Hold {
+                    receiver: acq.receiver,
+                    rank: acq.rank,
+                    bound: acq.bound,
+                    depth,
+                });
+            }
+            // Releases: explicit `drop(name)` of a bound guard.
+            let mut start = 0usize;
+            while let Some(pos) = word_at(code, "drop", start) {
+                let rest = &code[pos + 4..];
+                if let Some(arg) = rest.strip_prefix('(') {
+                    let name: String = arg
+                        .chars()
+                        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                        .collect();
+                    holds.retain(|h| h.bound.as_deref() != Some(name.as_str()));
+                }
+                start = pos + 4;
+            }
+            for c in code.chars() {
+                match c {
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            // A statement boundary ends temporary guards from this depth;
+            // a block close ends `let`-bound guards from deeper blocks.
+            let stmt_end = code.trim_end().ends_with(';');
+            holds.retain(|h| {
+                if h.bound.is_some() {
+                    depth >= h.depth
+                } else {
+                    !(stmt_end && depth <= h.depth)
+                }
+            });
+        }
+    }
+}
+
+/// R4 `hot-path-alloc`: inside a fn tagged `// lint: hot-path`, the
+/// steady-state allocation ban is enforced textually — `Vec::new`,
+/// `vec![`, `.to_vec()` and `.clone()` are all flagged. Scratch reuse
+/// (`clear()` + `push` into preallocated buffers) is the sanctioned
+/// pattern; see `kernels/scratch.rs`.
+fn check_hot_path_alloc(f: &SourceFile, out: &mut Vec<Finding>) {
+    const TOKENS: &[&str] = &["Vec::new", "vec![", ".to_vec()", ".clone()"];
+    for p in &f.pragmas {
+        if !matches!(p.kind, PragmaKind::HotPath) {
+            continue;
+        }
+        let Some(span) = f.fns.iter().filter(|s| s.sig_line > p.line).min_by_key(|s| s.sig_line)
+        else {
+            out.push(Finding::new(
+                &f.path,
+                p.line,
+                "pragma",
+                "`lint: hot-path` with no following fn",
+            ));
+            continue;
+        };
+        for line in span.body_start..=span.body_end {
+            let code = &f.code[line - 1];
+            for tok in TOKENS {
+                if code.contains(tok) && !allowed(f, "hot-path-alloc", line) {
+                    out.push(Finding::new(
+                        &f.path,
+                        line,
+                        "hot-path-alloc",
+                        &format!("`{tok}` inside hot-path fn `{}`", span.name),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// R5 `target-feature`: a `#[target_feature]` fn must only be called
+/// from (a) another `#[target_feature]` fn, or (b) a function that has
+/// already consulted `is_x86_feature_detected!` — directly or through a
+/// probe helper (a fn whose body contains the macro) — on a line at or
+/// before the call. Anything else risks executing illegal instructions
+/// on older silicon.
+fn check_target_feature(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let mut tf_fns: BTreeSet<String> = BTreeSet::new();
+    let mut probe_fns: BTreeSet<String> = BTreeSet::new();
+    for f in files {
+        for span in &f.fns {
+            if span.has_target_feature {
+                tf_fns.insert(span.name.clone());
+            }
+            let probes = (span.body_start..=span.body_end)
+                .any(|l| f.code[l - 1].contains("is_x86_feature_detected!"));
+            if probes {
+                probe_fns.insert(span.name.clone());
+            }
+        }
+    }
+    let guard_hit = |code: &str| {
+        code.contains("is_x86_feature_detected!")
+            || probe_fns.iter().any(|p| {
+                let needle = format!("{p}(");
+                match word_at(code, &needle, 0) {
+                    Some(at) => !code[..at].trim_end().ends_with("fn"),
+                    None => false,
+                }
+            })
+    };
+    for f in files {
+        for name in &tf_fns {
+            let needle = format!("{name}(");
+            for (idx, code) in f.code.iter().enumerate() {
+                let line = idx + 1;
+                let Some(at) = word_at(code, &needle, 0) else { continue };
+                if code[..at].trim_end().ends_with("fn") {
+                    continue; // the definition, not a call
+                }
+                let Some(caller) = f.enclosing_fn(line) else { continue };
+                if caller.has_target_feature {
+                    continue;
+                }
+                let guarded = (caller.body_start..=line).any(|l| guard_hit(&f.code[l - 1]));
+                if !guarded && !allowed(f, "target-feature", line) {
+                    out.push(Finding::new(
+                        &f.path,
+                        line,
+                        "target-feature",
+                        &format!(
+                            "call to `#[target_feature]` fn `{name}` without an \
+                             `is_x86_feature_detected!` guard in `{}`",
+                            caller.name
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// R6 `wire-code`: every string returned by `ServeError::code()` is part
+/// of the wire protocol — it must appear (quoted) in the server protocol
+/// docs (`//!` lines of `server/mod.rs`) and in at least one test, so a
+/// renamed code can never silently break clients.
+fn check_wire_codes(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let Some(error_file) =
+        files.iter().find(|f| f.code.iter().any(|c| c.contains("enum ServeError")))
+    else {
+        return;
+    };
+    let Some(code_fn) = error_file.fns.iter().find(|s| s.name == "code") else {
+        return;
+    };
+    let codes: Vec<(usize, String)> = error_file
+        .strings
+        .iter()
+        .filter(|(l, _)| *l >= code_fn.body_start && *l <= code_fn.body_end)
+        .cloned()
+        .collect();
+    let doc_has = |code: &str| {
+        let quoted = format!("\"{code}\"");
+        files.iter().any(|f| {
+            f.path.ends_with("server/mod.rs")
+                && f.comment
+                    .iter()
+                    .any(|c| c.trim_start().starts_with("//!") && c.contains(&quoted))
+        })
+    };
+    let test_has = |code: &str| {
+        files.iter().any(|f| {
+            let whole_file_is_tests = f.path.split('/').any(|component| component == "tests");
+            f.strings
+                .iter()
+                .any(|(l, s)| s.as_str() == code && (whole_file_is_tests || f.in_test[*l - 1]))
+        })
+    };
+    for (line, code) in &codes {
+        if !doc_has(code) && !allowed(error_file, "wire-code", *line) {
+            out.push(Finding::new(
+                &error_file.path,
+                *line,
+                "wire-code",
+                &format!("wire code \"{code}\" is not documented in server/mod.rs protocol docs"),
+            ));
+        }
+        if !test_has(code) && !allowed(error_file, "wire-code", *line) {
+            out.push(Finding::new(
+                &error_file.path,
+                *line,
+                "wire-code",
+                &format!("wire code \"{code}\" never appears in a test"),
+            ));
+        }
+    }
+}
+
+/// Pragma validation: malformed `// lint:` directives and `allow` of an
+/// unknown rule are findings themselves — a typo must fail loudly, not
+/// silently stop suppressing (or never start).
+fn check_pragmas(f: &SourceFile, out: &mut Vec<Finding>) {
+    for p in &f.pragmas {
+        match &p.kind {
+            PragmaKind::Bad { msg } => {
+                out.push(Finding::new(&f.path, p.line, "pragma", msg));
+            }
+            PragmaKind::Allow { rule, .. } if !RULES.contains(&rule.as_str()) => {
+                out.push(Finding::new(
+                    &f.path,
+                    p.line,
+                    "pragma",
+                    &format!("allow of unknown rule `{rule}` (known: {})", RULES.join(", ")),
+                ));
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint::lint_files;
+
+    fn findings_for(path: &str, src: &str) -> Vec<String> {
+        lint_files(&[(path.to_string(), src.to_string())])
+            .into_iter()
+            .map(|f| format!("{}:{} {}", f.line, f.rule, f.message))
+            .collect()
+    }
+
+    fn rules_hit(path: &str, src: &str) -> Vec<String> {
+        lint_files(&[(path.to_string(), src.to_string())])
+            .into_iter()
+            .map(|f| f.rule.to_string())
+            .collect()
+    }
+
+    // ---- R1 safety ----
+
+    #[test]
+    fn safety_flags_bare_unsafe() {
+        let src = "fn f() {\n    unsafe { core::hint::unreachable_unchecked() }\n}\n";
+        let hits = rules_hit("kernels/x.rs", src);
+        assert_eq!(hits, vec!["safety"]);
+    }
+
+    #[test]
+    fn safety_accepts_comment_and_doc_section() {
+        let src = "\
+// SAFETY: caller checked the invariant.
+fn f() { unsafe { op() } }
+
+/// # Safety
+/// The host CPU must support AVX2.
+#[target_feature(enable = \"avx2\")]
+pub unsafe fn g() {}
+";
+        assert!(findings_for("kernels/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_reaches_through_attributes() {
+        let src = "\
+// SAFETY: sound per the dispatch contract.
+#[inline]
+#[target_feature(enable = \"avx2\")]
+pub unsafe fn g() {}
+";
+        assert!(findings_for("kernels/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_in_string_or_comment_is_not_code() {
+        let src = "fn f() {\n    let s = \"unsafe\"; // unsafe mentioned in prose\n}\n";
+        assert!(findings_for("kernels/x.rs", src).is_empty());
+    }
+
+    // ---- R2 panic ----
+
+    #[test]
+    fn panic_flags_unwrap_in_serving_scope() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        assert_eq!(rules_hit("coordinator/x.rs", src), vec!["panic"]);
+        assert_eq!(rules_hit("server/x.rs", src), vec!["panic"]);
+    }
+
+    #[test]
+    fn panic_ignores_out_of_scope_and_tests() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        assert!(findings_for("kernels/x.rs", src).is_empty(), "kernels/ is out of scope");
+        let test_src = "#[cfg(test)]\nmod tests {\n    fn t() { None::<u32>.unwrap(); }\n}\n";
+        assert!(findings_for("coordinator/x.rs", test_src).is_empty());
+    }
+
+    #[test]
+    fn panic_allow_pragma_suppresses_with_reason() {
+        let src = "\
+fn f(v: &[u32], i: usize) -> u32 {
+    // lint: allow(panic, the caller bounds i)
+    *v.get(i).unwrap()
+}
+";
+        assert!(findings_for("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_trailing_allow_pragma_suppresses_same_line() {
+        let src =
+            "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // lint: allow(panic, startup only)\n}\n";
+        assert!(findings_for("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_catches_every_token() {
+        for tok in ["x.expect(\"y\")", "panic!(\"y\")", "unreachable!()", "todo!()"] {
+            let src = format!("fn f(x: Option<u32>) {{\n    {tok};\n}}\n");
+            assert_eq!(rules_hit("server/x.rs", &src), vec!["panic"], "token {tok}");
+        }
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap_or(0)\n}\n";
+        assert!(findings_for("server/x.rs", src).is_empty(), "unwrap_or is fine");
+    }
+
+    // ---- R3 lock-order ----
+
+    #[test]
+    fn lock_order_flags_descending_acquisition() {
+        let src = "\
+fn f(pool: &P, table: &T) {
+    let q = pool.queue.lock();
+    let s = table.sessions.lock();
+    drop(s);
+    drop(q);
+}
+";
+        let hits = findings_for("coordinator/x.rs", src);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert!(hits[0].contains("lock-order"));
+        assert!(hits[0].contains("`sessions` (rank 0) while holding `queue` (rank 3)"));
+    }
+
+    #[test]
+    fn lock_order_accepts_ascending_and_drop_first() {
+        let src = "\
+fn ascending(t: &T, p: &P) {
+    let s = lock_recover(&t.sessions);
+    let q = lock_recover(&p.queue);
+    drop(q);
+    drop(s);
+}
+fn drop_first(t: &T, p: &P) {
+    let q = lock_recover(&p.queue);
+    drop(q);
+    let s = lock_recover(&t.sessions);
+    drop(s);
+}
+fn temporary_then_lower(m: &M, t: &T) {
+    lock_recover(&m.inner).bump();
+    let s = lock_recover(&t.sessions);
+    drop(s);
+}
+";
+        assert!(findings_for("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_order_sees_block_scoped_release() {
+        let src = "\
+fn f(m: &M, t: &T) {
+    {
+        let g = lock_recover(&m.inner);
+    }
+    let s = lock_recover(&t.sessions);
+    drop(s);
+}
+";
+        assert!(findings_for("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_order_allow_pragma() {
+        let src = "\
+fn f(pool: &P, table: &T) {
+    let q = pool.queue.lock();
+    // lint: allow(lock-order, shutdown path - pool is quiesced here)
+    let s = table.sessions.lock();
+    drop(s);
+    drop(q);
+}
+";
+        assert!(findings_for("coordinator/x.rs", src).is_empty());
+    }
+
+    // ---- R4 hot-path-alloc ----
+
+    #[test]
+    fn hot_path_flags_allocation() {
+        let src = "\
+// lint: hot-path
+fn step(out: &mut Vec<f32>, x: &[f32]) {
+    let copy = x.to_vec();
+    out.extend(copy.clone());
+}
+fn cold(x: &[f32]) -> Vec<f32> {
+    x.to_vec()
+}
+";
+        let hits = findings_for("kernels/x.rs", src);
+        assert_eq!(hits.len(), 2, "to_vec + clone, cold fn untouched: {hits:?}");
+        assert!(hits.iter().all(|h| h.contains("hot-path-alloc")));
+    }
+
+    #[test]
+    fn hot_path_clean_scratch_reuse_passes() {
+        let src = "\
+// lint: hot-path
+fn step(scratch: &mut Scratch, x: &[f32]) {
+    scratch.vals.clear();
+    for &v in x {
+        scratch.vals.push(v);
+    }
+}
+";
+        assert!(findings_for("kernels/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hot_path_allow_pragma_and_vec_macro() {
+        let flagged = "// lint: hot-path\nfn f() {\n    let v = vec![0u8; 16];\n}\n";
+        assert_eq!(rules_hit("kernels/x.rs", flagged), vec!["hot-path-alloc"]);
+        let allowed = "\
+// lint: hot-path
+fn f() {
+    // lint: allow(hot-path-alloc, one-time warmup before the loop)
+    let v = vec![0u8; 16];
+}
+";
+        assert!(findings_for("kernels/x.rs", allowed).is_empty());
+    }
+
+    // ---- R5 target-feature ----
+
+    #[test]
+    fn target_feature_flags_unguarded_call() {
+        let src = "\
+#[target_feature(enable = \"avx2\")]
+// SAFETY: callers hold the probe result.
+pub unsafe fn fast(x: &[f32]) -> f32 { 0.0 }
+
+fn dispatch(x: &[f32]) -> f32 {
+    // SAFETY: WRONG - no probe consulted.
+    unsafe { fast(x) }
+}
+";
+        assert_eq!(rules_hit("kernels/x.rs", src), vec!["target-feature"]);
+    }
+
+    #[test]
+    fn target_feature_accepts_guard_probe_and_tf_caller() {
+        let src = "\
+fn have_avx2() -> bool {
+    is_x86_feature_detected!(\"avx2\")
+}
+
+#[target_feature(enable = \"avx2\")]
+// SAFETY: callers hold the probe result.
+pub unsafe fn fast(x: &[f32]) -> f32 { 0.0 }
+
+#[target_feature(enable = \"avx2\")]
+// SAFETY: same target-feature context as `fast`.
+pub unsafe fn fast2(x: &[f32]) -> f32 { fast(x) }
+
+fn dispatch(x: &[f32]) -> f32 {
+    if have_avx2() {
+        // SAFETY: probe checked above.
+        return unsafe { fast(x) };
+    }
+    0.0
+}
+
+fn early_return_guard(x: &[f32]) -> f32 {
+    if !have_avx2() {
+        return 0.0;
+    }
+    // SAFETY: probe checked above.
+    unsafe { fast(x) }
+}
+";
+        assert!(findings_for("kernels/x.rs", src).is_empty());
+    }
+
+    // ---- R6 wire-code ----
+
+    fn wire_fixture(docs: &str, test_body: &str) -> Vec<(String, String)> {
+        let error_rs = format!(
+            "pub enum ServeError {{ Overloaded }}\n\
+             impl ServeError {{\n\
+             \x20   pub fn code(&self) -> &'static str {{\n\
+             \x20       match self {{ ServeError::Overloaded => \"overloaded\" }}\n\
+             \x20   }}\n\
+             }}\n\
+             #[cfg(test)]\n\
+             mod tests {{\n\
+             \x20   fn t() {{ {test_body} }}\n\
+             }}\n"
+        );
+        vec![
+            ("coordinator/error.rs".to_string(), error_rs),
+            ("server/mod.rs".to_string(), format!("//! Protocol docs: {docs}\n")),
+        ]
+    }
+
+    #[test]
+    fn wire_code_passes_when_documented_and_tested() {
+        let files = wire_fixture("`\"overloaded\"`", "assert_eq!(x.code(), \"overloaded\");");
+        assert!(crate::lint::lint_files(&files).is_empty());
+    }
+
+    #[test]
+    fn wire_code_flags_missing_doc_and_missing_test() {
+        let undocumented = wire_fixture("nothing here", "assert_eq!(x.code(), \"overloaded\");");
+        let hits = crate::lint::lint_files(&undocumented);
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].message.contains("not documented"));
+
+        let untested = wire_fixture("`\"overloaded\"`", "nothing_to_see();");
+        let hits = crate::lint::lint_files(&untested);
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].message.contains("never appears in a test"), "{}", hits[0].message);
+    }
+
+    // ---- pragma validation ----
+
+    #[test]
+    fn pragma_unknown_rule_and_malformed_directive_fail() {
+        let src = "\
+fn f(x: Option<u32>) -> u32 {
+    // lint: allow(bogus-rule, because)
+    x.unwrap_or(0)
+}
+";
+        assert_eq!(rules_hit("kernels/x.rs", src), vec!["pragma"]);
+        let src = "// lint: allwo(panic, typo)\nfn f() {}\n";
+        assert_eq!(rules_hit("kernels/x.rs", src), vec!["pragma"]);
+        let src = "// lint: allow(panic)\nfn f() {}\n";
+        assert_eq!(rules_hit("kernels/x.rs", src), vec!["pragma"], "reason is mandatory");
+    }
+
+    #[test]
+    fn pragma_hot_path_without_fn_fails() {
+        let src = "fn f() {}\n// lint: hot-path\n";
+        assert_eq!(rules_hit("kernels/x.rs", src), vec!["pragma"]);
+    }
+
+    #[test]
+    fn findings_are_sorted_and_formatted() {
+        let src = "\
+fn b(x: Option<u32>) -> u32 { x.unwrap() }
+fn a() { unsafe { op() } }
+";
+        let all = crate::lint::lint_files(&[("coordinator/x.rs".to_string(), src.to_string())]);
+        assert_eq!(all.len(), 2);
+        assert!(all[0].line < all[1].line);
+        let rendered = all[0].to_string();
+        assert!(
+            rendered.starts_with("coordinator/x.rs:1: panic "),
+            "render shape `file:line: rule message`: {rendered}"
+        );
+    }
+}

@@ -1,0 +1,587 @@
+//! Source model for the repo linter: a hand-rolled lexer-lite that
+//! splits Rust source into code, comments and string literals without a
+//! real parser (house style of `util/json.rs` — a char-level state
+//! machine, zero dependencies).
+//!
+//! The split is the foundation every rule builds on: rules that inspect
+//! *code* (lock acquisitions, `unsafe`, panic tokens) scan the sanitized
+//! code lines where comment text and string contents are blanked out —
+//! so a fixture snippet embedded in a test's raw string, or the word
+//! `unsafe` in a doc comment, can never trip a rule. Rules that inspect
+//! *comments* (`// SAFETY:`, `// lint:` pragmas) scan the comment lines,
+//! where code and strings are blanked instead.
+//!
+//! On top of the split this module derives the structure the rules need:
+//! `#[cfg(test)]` line regions (brace-matched), `fn` spans with their
+//! `#[target_feature]` attribute flag, `// lint:` pragmas, and every
+//! string literal with its line number.
+
+/// One parsed source file. All line numbers are 1-based; the `code` and
+/// `comment` vectors are parallel to the file's physical lines.
+pub struct SourceFile {
+    pub path: String,
+    /// Code with comment text and string/char-literal contents blanked
+    /// (string delimiters survive, so `.expect("` stays recognizable).
+    pub code: Vec<String>,
+    /// Comment text (including the `//` marker) with code blanked.
+    pub comment: Vec<String>,
+    /// Whether the line sits inside a `#[cfg(test)]` item.
+    pub in_test: Vec<bool>,
+    /// Every `fn` item with a body, in source order.
+    pub fns: Vec<FnSpan>,
+    /// Every `// lint:` pragma comment.
+    pub pragmas: Vec<Pragma>,
+    /// Every string literal: (line of the opening quote, contents).
+    pub strings: Vec<(usize, String)>,
+}
+
+/// A `fn` item: signature line, brace-matched body range, and whether a
+/// `#[target_feature]` attribute precedes it.
+pub struct FnSpan {
+    pub name: String,
+    pub sig_line: usize,
+    pub body_start: usize,
+    pub body_end: usize,
+    pub has_target_feature: bool,
+}
+
+/// A parsed `// lint:` comment.
+pub struct Pragma {
+    pub line: usize,
+    pub kind: PragmaKind,
+}
+
+pub enum PragmaKind {
+    /// `// lint: hot-path` — the next `fn` is allocation-banned (R4).
+    HotPath,
+    /// `// lint: allow(<rule>, <reason>)` — suppress `<rule>` on the
+    /// next code line (or this line, for trailing comments).
+    Allow { rule: String, reason: String },
+    /// Anything else after `// lint:` — itself a finding (the pragma
+    /// vocabulary is validated, a typo must not silently disable a rule).
+    Bad { msg: String },
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let (code_buf, comment_buf, strings) = sanitize(text);
+        let code: Vec<String> = code_buf.split('\n').map(str::to_string).collect();
+        let comment: Vec<String> = comment_buf.split('\n').map(str::to_string).collect();
+        let in_test = mark_test_regions(&code_buf, code.len());
+        let fns = find_fns(&code_buf, &code);
+        let pragmas = find_pragmas(&comment);
+        SourceFile { path: path.to_string(), code, comment, in_test, fns, pragmas, strings }
+    }
+
+    /// Whether the line's sanitized code is blank (comment/blank line).
+    pub fn code_blank(&self, line: usize) -> bool {
+        self.code[line - 1].trim().is_empty()
+    }
+
+    /// Whether the line's comment mentions safety (matches `// SAFETY:`
+    /// prose comments and `/// # Safety` doc sections alike).
+    pub fn safety_comment(&self, line: usize) -> bool {
+        let c = &self.comment[line - 1];
+        c.to_ascii_lowercase().contains("safety")
+    }
+
+    /// The first line at or after `from` whose sanitized code is
+    /// non-blank — where a standalone pragma comment lands.
+    pub fn next_code_line(&self, from: usize) -> Option<usize> {
+        (from..=self.code.len()).find(|&l| !self.code_blank(l))
+    }
+
+    /// The innermost `fn` whose body contains `line`.
+    pub fn enclosing_fn(&self, line: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.body_start <= line && line <= f.body_end)
+            .min_by_key(|f| f.body_end - f.body_start)
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// If a raw-string head (`r"`, `r#"`, `br##"`, …) starts at `i`, return
+/// (index of the opening quote, hash count). The char before `i` must
+/// not be an identifier char, so `for r` or `var` never probe true.
+fn raw_string_head(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    if i > 0 && is_ident(chars[i - 1]) {
+        return None;
+    }
+    let mut j = i;
+    if *chars.get(j)? == 'b' {
+        j += 1;
+    }
+    if *chars.get(j)? != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while *chars.get(j)? == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if *chars.get(j)? == '"' {
+        Some((j, hashes))
+    } else {
+        None
+    }
+}
+
+/// The char-level pass: walk the file once, routing every char into the
+/// code buffer or the comment buffer (blanking it in the other), eliding
+/// string/char-literal contents from both, and collecting the literals.
+/// Newlines go to both buffers so the line structure stays parallel.
+fn sanitize(text: &str) -> (String, String, Vec<(usize, String)>) {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut code = String::with_capacity(n);
+    let mut com = String::with_capacity(n);
+    let mut strings = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            code.push('\n');
+            com.push('\n');
+            line += 1;
+            i += 1;
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            // Line comment: text to the comment buffer until EOL.
+            code.push_str("  ");
+            com.push_str("//");
+            i += 2;
+            while i < n && chars[i] != '\n' {
+                code.push(' ');
+                com.push(chars[i]);
+                i += 1;
+            }
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            // Block comment; Rust block comments nest.
+            let mut depth = 1usize;
+            code.push_str("  ");
+            com.push_str("/*");
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    code.push('\n');
+                    com.push('\n');
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    code.push_str("  ");
+                    com.push_str("/*");
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    code.push_str("  ");
+                    com.push_str("*/");
+                    i += 2;
+                } else {
+                    code.push(' ');
+                    com.push(chars[i]);
+                    i += 1;
+                }
+            }
+        } else if c == '"' {
+            // Plain string literal; contents blanked from both buffers,
+            // delimiting quotes kept in the code buffer.
+            code.push('"');
+            com.push(' ');
+            i += 1;
+            let start = line;
+            let mut lit = String::new();
+            while i < n {
+                let d = chars[i];
+                if d == '\\' && i + 1 < n {
+                    lit.push(d);
+                    lit.push(chars[i + 1]);
+                    for &e in &chars[i..i + 2] {
+                        if e == '\n' {
+                            code.push('\n');
+                            com.push('\n');
+                            line += 1;
+                        } else {
+                            code.push(' ');
+                            com.push(' ');
+                        }
+                    }
+                    i += 2;
+                } else if d == '"' {
+                    code.push('"');
+                    com.push(' ');
+                    i += 1;
+                    break;
+                } else if d == '\n' {
+                    code.push('\n');
+                    com.push('\n');
+                    line += 1;
+                    i += 1;
+                } else {
+                    lit.push(d);
+                    code.push(' ');
+                    com.push(' ');
+                    i += 1;
+                }
+            }
+            strings.push((start, lit));
+        } else if let Some((quote, hashes)) = raw_string_head(&chars, i) {
+            // Raw string literal r"…", r#"…"#, br#"…"# — no escapes;
+            // it closes at `"` followed by the same number of hashes.
+            let j = quote;
+            // j is the opening quote; blank the whole head.
+            for _ in i..=j {
+                code.push(' ');
+                com.push(' ');
+            }
+            i = j + 1;
+            let start = line;
+            let mut lit = String::new();
+            while i < n {
+                if chars[i] == '"' {
+                    let mut k = i + 1;
+                    let mut seen = 0usize;
+                    while k < n && seen < hashes && chars[k] == '#' {
+                        seen += 1;
+                        k += 1;
+                    }
+                    if seen == hashes {
+                        for _ in i..k {
+                            code.push(' ');
+                            com.push(' ');
+                        }
+                        i = k;
+                        break;
+                    }
+                }
+                if chars[i] == '\n' {
+                    code.push('\n');
+                    com.push('\n');
+                    line += 1;
+                } else {
+                    lit.push(chars[i]);
+                    code.push(' ');
+                    com.push(' ');
+                }
+                i += 1;
+            }
+            strings.push((start, lit));
+        } else if c == '\'' {
+            // Char literal vs lifetime: `'\…'` and `'x'` are literals,
+            // anything else (`'a`, `'static`, `'env`) is a lifetime.
+            if i + 1 < n && chars[i + 1] == '\\' {
+                code.push('\'');
+                com.push(' ');
+                i += 1;
+                while i < n && chars[i] != '\'' {
+                    if chars[i] == '\n' {
+                        code.push('\n');
+                        com.push('\n');
+                        line += 1;
+                    } else {
+                        code.push(' ');
+                        com.push(' ');
+                    }
+                    i += 1;
+                }
+                if i < n {
+                    code.push('\'');
+                    com.push(' ');
+                    i += 1;
+                }
+            } else if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                code.push('\'');
+                code.push(' ');
+                code.push('\'');
+                com.push_str("   ");
+                i += 3;
+            } else {
+                code.push('\'');
+                com.push(' ');
+                i += 1;
+            }
+        } else {
+            code.push(c);
+            com.push(' ');
+            i += 1;
+        }
+    }
+    (code, com, strings)
+}
+
+/// Mark the line range of every `#[cfg(test)]` item by brace-matching
+/// the item body in the flattened code buffer. An attribute whose item
+/// ends at `;` before any `{` (e.g. `#[cfg(test)] use …;`) marks only
+/// its own line.
+fn mark_test_regions(code_buf: &str, nlines: usize) -> Vec<bool> {
+    let chars: Vec<char> = code_buf.chars().collect();
+    let mut in_test = vec![false; nlines];
+    let needle: Vec<char> = "#[cfg(test)]".chars().collect();
+    let mut line_of = Vec::with_capacity(chars.len() + 1);
+    let mut l = 1usize;
+    for &c in &chars {
+        line_of.push(l);
+        if c == '\n' {
+            l += 1;
+        }
+    }
+    line_of.push(l);
+    let mut i = 0usize;
+    while i + needle.len() <= chars.len() {
+        if chars[i..i + needle.len()] != needle[..] {
+            i += 1;
+            continue;
+        }
+        let attr_line = line_of[i];
+        in_test[attr_line - 1] = true;
+        let mut j = i + needle.len();
+        // Find the item's opening brace; a `;` first means no body.
+        while j < chars.len() && chars[j] != '{' && chars[j] != ';' {
+            j += 1;
+        }
+        if j < chars.len() && chars[j] == '{' {
+            let mut depth = 1usize;
+            let mut k = j + 1;
+            while k < chars.len() && depth > 0 {
+                match chars[k] {
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+                k += 1;
+            }
+            let end_line = line_of[k.min(chars.len())];
+            for item in in_test
+                .iter_mut()
+                .take(end_line.min(nlines))
+                .skip(attr_line - 1)
+            {
+                *item = true;
+            }
+            i = k;
+        } else {
+            i = j;
+        }
+    }
+    in_test
+}
+
+/// Find every `fn` item with a body by scanning the flattened code
+/// buffer: `fn` keyword → name → first `{` (a `;` first means a bodyless
+/// trait method; `fn(` with no name is a fn-pointer type) → brace match.
+fn find_fns(code_buf: &str, code_lines: &[String]) -> Vec<FnSpan> {
+    let chars: Vec<char> = code_buf.chars().collect();
+    let mut line_of = Vec::with_capacity(chars.len() + 1);
+    let mut l = 1usize;
+    for &c in &chars {
+        line_of.push(l);
+        if c == '\n' {
+            l += 1;
+        }
+    }
+    line_of.push(l);
+    let mut fns = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < chars.len() {
+        let word_start = i == 0 || !is_ident(chars[i - 1]);
+        if !(word_start && chars[i] == 'f' && chars[i + 1] == 'n' && !is_ident(chars[i + 2])) {
+            i += 1;
+            continue;
+        }
+        let sig_line = line_of[i];
+        let mut j = i + 2;
+        while j < chars.len() && chars[j].is_whitespace() {
+            j += 1;
+        }
+        let name_start = j;
+        while j < chars.len() && is_ident(chars[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            // `fn(` — a fn-pointer type, not an item.
+            i += 2;
+            continue;
+        }
+        let name: String = chars[name_start..j].iter().collect();
+        let mut k = j;
+        while k < chars.len() && chars[k] != '{' && chars[k] != ';' {
+            k += 1;
+        }
+        if k < chars.len() && chars[k] == '{' {
+            let body_start = line_of[k];
+            let mut depth = 1usize;
+            let mut e = k + 1;
+            while e < chars.len() && depth > 0 {
+                match chars[e] {
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+                e += 1;
+            }
+            let body_end = line_of[e.min(chars.len())];
+            fns.push(FnSpan {
+                name,
+                sig_line,
+                body_start,
+                body_end,
+                has_target_feature: attr_has_target_feature(code_lines, sig_line),
+            });
+        }
+        i = j;
+    }
+    fns
+}
+
+/// Walk upward from a `fn` signature through its contiguous attribute,
+/// comment and blank lines looking for `#[target_feature`.
+fn attr_has_target_feature(code_lines: &[String], sig_line: usize) -> bool {
+    let mut l = sig_line - 1;
+    while l >= 1 {
+        let t = code_lines[l - 1].trim();
+        if t.is_empty() || t.starts_with("#[") {
+            if t.starts_with("#[target_feature") {
+                return true;
+            }
+            l -= 1;
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+/// Parse `// lint:` pragmas out of the comment lines. Doc comments
+/// (`///`, `//!`) are excluded so that documentation *describing* the
+/// pragma syntax never registers as a pragma.
+fn find_pragmas(comment_lines: &[String]) -> Vec<Pragma> {
+    let mut pragmas = Vec::new();
+    for (idx, com) in comment_lines.iter().enumerate() {
+        let line = idx + 1;
+        let t = com.trim_start();
+        let Some(rest) = t.strip_prefix("//") else { continue };
+        if rest.starts_with('/') || rest.starts_with('!') {
+            continue;
+        }
+        let Some(body) = rest.trim().strip_prefix("lint:") else { continue };
+        let body = body.trim();
+        let kind = if body == "hot-path" {
+            PragmaKind::HotPath
+        } else if let Some(inner) = body.strip_prefix("allow(").and_then(|s| s.strip_suffix(')')) {
+            match inner.split_once(',') {
+                Some((rule, reason)) if !reason.trim().is_empty() => PragmaKind::Allow {
+                    rule: rule.trim().to_string(),
+                    reason: reason.trim().to_string(),
+                },
+                _ => PragmaKind::Bad {
+                    msg: "allow pragma needs `allow(<rule>, <reason>)`".to_string(),
+                },
+            }
+        } else {
+            PragmaKind::Bad { msg: format!("unknown lint directive `{body}`") }
+        };
+        pragmas.push(Pragma { line, kind });
+    }
+    pragmas
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_splits_code_comments_and_strings() {
+        let src = "let x = \"unsafe in a string\"; // unsafe in a comment\nunsafe { op() }\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(!f.code[0].contains("unsafe"), "string contents must be blanked");
+        assert!(f.code[0].starts_with("let x = \""), "quotes survive: {}", f.code[0]);
+        assert!(f.comment[0].contains("unsafe in a comment"));
+        assert!(f.code[1].contains("unsafe { op() }"));
+        assert_eq!(f.strings.len(), 1);
+        assert_eq!(f.strings[0], (1, "unsafe in a string".to_string()));
+    }
+
+    #[test]
+    fn sanitize_handles_raw_strings_and_lifetimes() {
+        let src = "fn f<'env>(s: &'env str) { let r = r#\"vec![in raw]\"#; let c = 'x'; }\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(!f.code[0].contains("vec!["), "raw string contents blanked: {}", f.code[0]);
+        assert!(f.code[0].contains("<'env>"), "lifetimes survive as code");
+        assert_eq!(f.strings[0].1, "vec![in raw]");
+        assert_eq!(f.fns.len(), 1);
+        assert_eq!(f.fns[0].name, "f");
+    }
+
+    #[test]
+    fn nested_block_comments_and_escapes() {
+        let src = "/* outer /* inner */ still comment */ code();\nlet s = \"a\\\"b\";\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(f.code[0].contains("code();"));
+        assert!(!f.code[0].contains("outer"));
+        assert_eq!(f.strings[0].1, "a\\\"b");
+    }
+
+    #[test]
+    fn test_regions_are_brace_matched() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(!f.in_test[0]);
+        assert!(f.in_test[1] && f.in_test[2] && f.in_test[3] && f.in_test[4]);
+        assert!(!f.in_test[5]);
+    }
+
+    #[test]
+    fn cfg_test_on_a_bodyless_item_marks_one_line() {
+        let src = "#[cfg(test)]\nuse std::fmt;\nfn live() { real(); }\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(f.in_test[0]);
+        assert!(!f.in_test[2], "the brace search must stop at the `;`");
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies_and_skip_fn_pointers() {
+        let src = "fn outer(cb: fn(i32) -> i32) -> i32 {\n    cb(1)\n}\ntrait T { fn decl(&self); }\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert_eq!(f.fns.len(), 1, "fn-pointer type and bodyless decl are not items");
+        assert_eq!(f.fns[0].name, "outer");
+        assert_eq!((f.fns[0].body_start, f.fns[0].body_end), (1, 3));
+    }
+
+    #[test]
+    fn target_feature_attr_is_attached_through_attr_stack() {
+        let src = "#[target_feature(enable = \"avx2\")]\n#[inline]\npub unsafe fn fast() {}\nfn slow() {}\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(f.fns.iter().find(|s| s.name == "fast").unwrap().has_target_feature);
+        assert!(!f.fns.iter().find(|s| s.name == "slow").unwrap().has_target_feature);
+    }
+
+    #[test]
+    fn pragmas_parse_and_doc_comments_are_excluded() {
+        let src = "\
+// lint: hot-path
+fn hot() {}
+// lint: allow(panic, index proven in bounds)
+let x = v[0];
+//! docs may show `// lint: hot-path` without registering
+// lint: allow(panic)
+// lint: frobnicate
+";
+        let f = SourceFile::parse("a.rs", src);
+        assert_eq!(f.pragmas.len(), 4, "doc-comment mention is not a pragma");
+        assert!(matches!(f.pragmas[0].kind, PragmaKind::HotPath));
+        match &f.pragmas[1].kind {
+            PragmaKind::Allow { rule, reason } => {
+                assert_eq!(rule, "panic");
+                assert_eq!(reason, "index proven in bounds");
+            }
+            _ => panic!("expected Allow"),
+        }
+        assert!(matches!(f.pragmas[2].kind, PragmaKind::Bad { .. }), "allow without reason");
+        assert!(matches!(f.pragmas[3].kind, PragmaKind::Bad { .. }), "unknown directive");
+    }
+}

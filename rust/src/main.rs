@@ -11,6 +11,8 @@
 //! * `simulate`  — PE-array dataflow simulation on real predicted masks
 //! * `costmodel` — print the MAC/energy/GPU-kernel model tables
 //! * `report`    — summarize results/bench.jsonl
+//! * `lint`      — repo-native static analysis (see LINTS.md); `--check`
+//!   exits nonzero on findings, so CI can gate on it
 
 use std::sync::Arc;
 
@@ -49,6 +51,7 @@ fn main() {
         "simulate" => cmd_simulate(&rest),
         "costmodel" => cmd_costmodel(&rest),
         "report" => cmd_report(&rest),
+        "lint" => cmd_lint(&rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -76,6 +79,7 @@ fn usage() -> String {
        simulate       PE dataflow simulation   (--artifacts, --pes)\n\
        costmodel      print cost-model tables  (--task)\n\
        report         summarize results/bench.jsonl\n\
+       lint           repo-native static analysis (--check; positional paths override src+tests+benches)\n\
      \n\
      Run `dsa-serve <command> --help` for options."
         .to_string()
@@ -1139,6 +1143,37 @@ fn cmd_report(rest: &[String]) -> Result<()> {
         for (name, mean) in rows {
             println!("  {:<48} {:>12.3} us", name, mean * 1e6);
         }
+    }
+    Ok(())
+}
+
+fn cmd_lint(rest: &[String]) -> Result<()> {
+    let a = Args::new(
+        "dsa-serve lint",
+        "repo-native static analysis over the crate's sources (rules + pragmas: LINTS.md). \
+         Positional paths (files or directories) override the default src+tests+benches scan.",
+    )
+    .flag("check", "exit nonzero when any finding is emitted (the CI gate)")
+    .parse(rest)
+    .map_err(|u| err!("{u}"))?;
+    let paths: Vec<std::path::PathBuf> = if a.positionals().is_empty() {
+        dsa_serve::lint::default_paths()
+    } else {
+        a.positionals().iter().map(std::path::PathBuf::from).collect()
+    };
+    let findings = dsa_serve::lint::lint_paths(&paths)?;
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        eprintln!(
+            "lint OK: 0 findings across {}",
+            paths.iter().map(|p| p.display().to_string()).collect::<Vec<_>>().join(", ")
+        );
+    } else if a.get_flag("check") {
+        bail!("lint: {} finding(s)", findings.len());
+    } else {
+        eprintln!("lint: {} finding(s) (run with --check to gate)", findings.len());
     }
     Ok(())
 }

@@ -11,6 +11,7 @@ use std::sync::Mutex;
 use crate::runtime::client::{Client, Executable};
 use crate::util::error::{bail, Context, Result};
 use crate::util::json::{self, Json};
+use crate::util::sync::lock_recover;
 use crate::util::tensorio::Tensor;
 
 /// Metadata of one HLO module from the manifest.
@@ -210,7 +211,7 @@ impl Registry {
 
     /// Compile (or fetch cached) executable by module name.
     pub fn load(&self, name: &str) -> Result<Executable> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
+        if let Some(e) = lock_recover(&self.cache).get(name) {
             return Ok(e.clone());
         }
         let info = self
@@ -220,10 +221,7 @@ impl Registry {
         let exe = self
             .client
             .compile_hlo_file(self.manifest.root.join(&info.file))?;
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), exe.clone());
+        lock_recover(&self.cache).insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 

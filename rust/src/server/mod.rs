@@ -96,6 +96,7 @@ use crate::coordinator::{DecodeResponse, ServeError, ServeResult, Serving, Sessi
 use crate::kernels::Variant;
 use crate::util::error::{bail, err, Context, Result};
 use crate::util::json::{self, Json};
+use crate::util::sync::lock_recover;
 
 /// How long a connection thread blocks in `read` before re-checking the
 /// server's stop flag — the upper bound on how stale a drain can find an
@@ -213,7 +214,7 @@ impl ServerState {
     /// Flip the stop flag and wake the accept loop. Idempotent.
     pub fn begin_shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(addr) = *self.addr.lock().unwrap() {
+        if let Some(addr) = *lock_recover(&self.addr) {
             // The listener blocks in accept(); connecting to ourselves is
             // the portable way to make it return so it can observe the
             // flag (std has no non-blocking accept + poll offline).
@@ -222,7 +223,7 @@ impl ServerState {
     }
 
     fn set_addr(&self, addr: SocketAddr) {
-        *self.addr.lock().unwrap() = Some(addr);
+        *lock_recover(&self.addr) = Some(addr);
     }
 }
 

@@ -29,6 +29,7 @@ use std::time::Duration;
 
 use crate::util::error::{bail, Result};
 use crate::util::rng::Rng;
+use crate::util::sync::lock_recover;
 
 /// Per-site fault rates (each in [0, 1]; they are tried in the order
 /// panic → error → delay against one uniform draw, so their sum should
@@ -129,7 +130,7 @@ impl FaultInjector {
         if !self.armed() {
             return Fault::None;
         }
-        let mut sites = self.sites.lock().unwrap();
+        let mut sites = lock_recover(&self.sites);
         let stats = sites.entry(site).or_default();
         stats.rolls += 1;
         let k = stats.rolls;
@@ -174,9 +175,7 @@ impl FaultInjector {
 
     /// Stats for one site (zeroes if the site never rolled).
     pub fn site(&self, site: &str) -> SiteStats {
-        self.sites
-            .lock()
-            .unwrap()
+        lock_recover(&self.sites)
             .get(site)
             .copied()
             .unwrap_or_default()
@@ -184,9 +183,7 @@ impl FaultInjector {
 
     /// Total faults injected across all sites.
     pub fn injected_total(&self) -> u64 {
-        self.sites
-            .lock()
-            .unwrap()
+        lock_recover(&self.sites)
             .values()
             .map(|s| s.injected())
             .sum()

@@ -1,6 +1,7 @@
 //! Dependency-free substrates: JSON, CLI parsing, PRNG, statistics, a
 //! micro-bench harness, a property-test helper, seeded fault injection
-//! for chaos tests, error/logging plumbing and the `.tns` tensor reader.
+//! for chaos tests, poison-tolerant lock helpers, error/logging plumbing
+//! and the `.tns` tensor reader.
 //!
 //! The default build is fully hermetic (zero external crates), so the
 //! conventional crates (serde, clap, rand, criterion, proptest, anyhow,
@@ -15,4 +16,5 @@ pub mod logging;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod tensorio;

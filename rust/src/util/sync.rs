@@ -1,0 +1,98 @@
+//! Poison-tolerant lock primitives for the serving path.
+//!
+//! A thread that panics while holding a `std::sync::Mutex` poisons it;
+//! every later `.lock().unwrap()` then panics too, turning one contained
+//! failure into a crash of whatever unlucky thread touches the lock next
+//! — the replica supervisor, the dispatcher, or a metrics reader. The
+//! serving stack already contains panics behind blast shields
+//! (`catch_unwind` in the engine worker and the kernel pool), so the
+//! state under these locks is counters, route tables and join handles
+//! whose invariants hold between individual mutations: recovering the
+//! guard is strictly better than dying.
+//!
+//! [`lock_recover`] and [`wait_recover`] are therefore the **only**
+//! sanctioned way to take a serving-path lock: they return the guard
+//! whether or not the mutex is poisoned. The repo linter
+//! (`dsa-serve lint`, rules `panic` and `lock-order` — see LINTS.md)
+//! enforces the pattern by flagging raw `.lock().unwrap()` in
+//! `coordinator/` and `server/`.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard from a poisoned mutex instead of
+/// panicking. Poison only records that *some* holder panicked mid-hold;
+/// for the serving stack's lock-protected state (metrics counters,
+/// session route tables, worker handles, pool queues) every individual
+/// mutation is atomic with respect to its invariants, so the data is
+/// still usable and refusing it would just spread the crash.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// [`Condvar::wait`] with the same poison recovery as [`lock_recover`]:
+/// re-acquires the guard whether or not a holder panicked while we were
+/// parked.
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Arc, Mutex};
+    use std::time::Duration;
+
+    #[test]
+    fn lock_recover_on_healthy_mutex_behaves_like_lock() {
+        let m = Mutex::new(41);
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 42);
+    }
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(vec![1, 2, 3]));
+        let m2 = m.clone();
+        // Poison the mutex: panic while holding the guard.
+        let _ = catch_unwind(AssertUnwindSafe(move || {
+            let _g = m2.lock().unwrap();
+            panic!("holder dies mid-hold");
+        }));
+        assert!(m.is_poisoned(), "the panic above must have poisoned it");
+        // A raw unwrap would crash here; recovery hands back the data.
+        let g = lock_recover(&m);
+        assert_eq!(*g, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn wait_recover_wakes_through_poison() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = pair.clone();
+        let waiter = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut done = lock_recover(m);
+            while !*done {
+                done = wait_recover(cv, done);
+            }
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        {
+            let (m, cv) = &*pair;
+            // Poison first, then flip the flag through recovery and wake.
+            let _ = catch_unwind(AssertUnwindSafe(|| {
+                let _g = m.lock().unwrap();
+                panic!("poison the wait mutex");
+            }));
+            *lock_recover(m) = true;
+            cv.notify_all();
+        }
+        waiter.join().expect("waiter must wake despite the poison");
+    }
+}

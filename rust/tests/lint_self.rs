@@ -1,0 +1,27 @@
+//! Self-lint: the repo must be clean under its own static-analysis pass.
+//!
+//! This is the hermetic twin of the CI `lint` job (`dsa-serve lint
+//! --check`): it runs the same scanner over the same default path set
+//! (`src/`, `tests/`, `benches/`, anchored to the manifest dir), so a
+//! rule violation introduced anywhere in the crate fails `cargo test`
+//! locally before CI ever sees it. The failure message carries every
+//! finding verbatim — `file:line: rule-id message` — so the fix is one
+//! click away.
+
+use dsa_serve::lint;
+
+#[test]
+fn repo_is_lint_clean() {
+    let paths = lint::default_paths();
+    assert!(
+        paths.iter().any(|p| p.ends_with("src")),
+        "default lint paths must include the crate's src/ tree"
+    );
+    let findings = lint::lint_paths(&paths).expect("lint scan over the repo must not error");
+    assert!(
+        findings.is_empty(),
+        "repo is not lint-clean — {} finding(s):\n{}",
+        findings.len(),
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
